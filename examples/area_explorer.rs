@@ -1,0 +1,61 @@
+//! Fig 1(a) area explorer: silicon-area estimation across models and
+//! nodes, plus the §V-B Falcon3-1B deployment point (ROM + DR eDRAM).
+//!
+//!   cargo run --release --example area_explorer
+
+use bitrom::config::{EdramParams, HardwareConfig, ModelConfig, TechNode};
+use bitrom::energy::{area_estimate, EnergyModel, ModelPoint};
+use bitrom::report::fig1a_report;
+use bitrom::util::args::ArgParser;
+
+fn main() -> anyhow::Result<()> {
+    let args = ArgParser::new("area_explorer", "Fig 1(a) + §V-B area study")
+        .opt("sparsity", "0.30", "ROM sparsity for the energy point")
+        .parse_env();
+
+    let hw = HardwareConfig::default();
+    println!("{}", fig1a_report(&hw));
+
+    // §V-B deployment point: Falcon3-1B on BitROM at 14nm
+    let cfg = ModelConfig::falcon3_1b();
+    let rom_pt = ModelPoint::ternary("falcon3-1b (ROM weights)", cfg.rom_param_count());
+    println!("== §V-B deployment: Falcon3-1B on BitROM ==");
+    for node in [TechNode::N65, TechNode::N28, TechNode::N14] {
+        let a = area_estimate(&hw, &rom_pt, node);
+        // eDRAM macro area: 13.5 MB at an eDRAM cell density scaled from
+        // the same fabric constants (2T-gain-cell ≈ 2x ROM cell area).
+        let edram_bits = EdramParams::default().capacity_bytes as f64 * 8.0;
+        let edram_mm2 = edram_bits * 2.0 * hw.geometry.cell_area_um2 * 1e-6
+            / node.density_scale_vs_65();
+        println!(
+            "{:>5}nm: ROM {:.1} mm² ({} macros) + DR eDRAM {:.1} mm²  => total {:.1} mm²",
+            node.nm(),
+            a.rom_mm2,
+            a.n_macros,
+            edram_mm2,
+            a.rom_mm2 + edram_mm2
+        );
+    }
+
+    // the energy side of Table III at both voltages
+    let sparsity = args.f64("sparsity");
+    println!("\n== energy design points (sparsity {:.2}) ==", sparsity);
+    for vdd in [0.6, 1.2] {
+        let m = EnergyModel::new(HardwareConfig::default().at_voltage(vdd));
+        println!(
+            "  {vdd} V: {:>5.1} TOPS/W (4b acts)  {:>5.1} TOPS/W (8b bit-serial)",
+            m.tops_per_watt_analytic(sparsity, 4),
+            m.tops_per_watt_analytic(sparsity, 8),
+        );
+        let p = m.per_token(&ModelConfig::falcon3_1b(), sparsity);
+        println!(
+            "       falcon3-1b: {:.2} ms/token, {:.1} µJ/token, {:.2} W avg, {} macros",
+            p.latency_per_token_s * 1e3,
+            p.energy_per_token_j * 1e6,
+            p.avg_power_w,
+            p.n_macros
+        );
+    }
+    println!("area_explorer OK");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! KV-cache study (paper §IV, Fig 5): per-step access analysis, the
+//! reduction grid, and a live DR-eDRAM retention demonstration.
+//!
+//!   cargo run --release --example kvcache_study -- --per-step
+
+use bitrom::config::{EdramParams, ModelConfig, ServeConfig};
+use bitrom::kvcache::{simulate_reduction, KvCacheManager};
+use bitrom::report::{fig5a_report, fig5b_report};
+use bitrom::util::args::ArgParser;
+use bitrom::util::table::fmt_pct;
+
+fn main() -> anyhow::Result<()> {
+    let args = ArgParser::new("kvcache_study", "Fig 5 KV-cache experiments")
+        .opt("seq", "128", "sequence length")
+        .opt("buffer", "32", "on-die early tokens")
+        .opt("tbt", "0.005", "simulated token-between-token time (s)")
+        .flag("per-step", "print the Fig 5(a) per-step table")
+        .parse_env();
+
+    if args.flag("per-step") {
+        println!("{}", fig5a_report(16));
+    }
+
+    println!("{}", fig5b_report());
+
+    // live manager run: the actual serving accounting, with the eDRAM
+    // retention clock advanced by the requested TBT
+    let (s, b, tbt) = (args.usize("seq"), args.usize("buffer"), args.f64("tbt"));
+    let model = ModelConfig::sim_tiny();
+    let serve = ServeConfig {
+        ondie_tokens: b,
+        max_seq: s.max(1),
+        prefill_len: 1,
+        ..ServeConfig::default()
+    };
+    let mut kv = KvCacheManager::new(&model, &serve, EdramParams::default());
+    kv.start_seq(0);
+    kv.prefill(0, 1, 0.0);
+    for step in 1..s {
+        let now = step as f64 * tbt;
+        kv.write_token(0, now);
+        kv.read_context(0, now)?;
+    }
+    println!("live run: seq {s}, {b} on-die tokens, TBT {:.1} ms", tbt * 1e3);
+    println!(
+        "  external reduction (manager): {}   closed form: {}",
+        fmt_pct(kv.stats.external_reduction()),
+        fmt_pct(simulate_reduction(s, b)),
+    );
+    println!(
+        "  eDRAM: {} reads, {} writes, {} explicit refreshes, {} retention failures",
+        kv.edram().reads,
+        kv.edram().writes,
+        kv.edram().explicit_refreshes,
+        kv.edram().retention_failures,
+    );
+    println!(
+        "  external DRAM: {} accesses, {:.2} µJ",
+        kv.dram().accesses(),
+        kv.external_energy_j() * 1e6
+    );
+    assert_eq!(kv.edram().explicit_refreshes, 0);
+    assert!(
+        (kv.stats.external_reduction() - simulate_reduction(s, b)).abs() < 1e-9,
+        "manager accounting must equal the closed form"
+    );
+    println!("kvcache_study OK");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: load the AOT artifacts, verify against the python golden
+//! trace, and generate a few tokens — the 60-second tour of the stack.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use bitrom::runtime::{Manifest, ModelExecutor};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    println!("== BitROM quickstart ==");
+    println!("loading artifacts from {} ...", dir.display());
+    let exec = ModelExecutor::load(&dir)?;
+    let m = &exec.manifest;
+    println!(
+        "model {} — {} params, {} partitions x {} layers, ROM sparsity {:.1}%",
+        m.model.name,
+        m.model.param_count(),
+        m.model.n_partitions,
+        m.model.layers_per_partition(),
+        m.rom_sparsity * 100.0
+    );
+    println!(
+        "compiled {} executables in {:.2}s (weights are HLO constants — \
+         nothing will ever be reloaded)",
+        m.artifacts.len(),
+        exec.load_time_s
+    );
+
+    // 1. cross-language check: replay the python golden trace
+    if let Some(g) = m.golden.clone() {
+        let got = exec.generate_greedy(&g.prompt, g.generated.len())?;
+        assert_eq!(got, g.generated, "rust must match python exactly");
+        println!("golden trace: OK ({} tokens match python)", got.len());
+    }
+
+    // 2. generate from a fresh prompt
+    let prompt = vec![2, 71, 82, 33];
+    let out = exec.generate_greedy(&prompt, 12)?;
+    println!("prompt {prompt:?} -> {out:?}");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,275 @@
+"""AOT compilation: lower the partitioned BitNet model to HLO text.
+
+This is the "fabrication" step of the CiROM deployment model: weights
+are quantized to ternary, baked into the lowered HLO as *constants*, and
+the rust runtime loads the resulting executables once at startup. Python
+never runs again after this step (``make artifacts`` is a no-op while
+inputs are unchanged).
+
+Interchange format is HLO **text** — the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized HloModuleProtos (64-bit instruction ids);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Exported executables (for config ``sim-tiny``, prefill bucket P, max_seq
+T, L = layers per partition):
+
+  embed_prefill    : tokens i32[P]                         -> (h f32[P,d],)
+  embed_decode     : tokens i32[1]                         -> (h f32[1,d],)
+  part{p}_prefill  : h[P,d], k[L,T,KV,hd], v[...]          -> (h, k, v)
+  part{p}_decode   : h[1,d], k[L,T,KV,hd], v[...], pos i32 -> (h, k, v)
+  head_prefill     : h[P,d], idx i32                       -> (logits f32[V],)
+  head_decode      : h[1,d]                                -> (logits f32[V],)
+
+plus ``manifest.json`` describing shapes, the weight seed, ROM sparsity
+and per-artifact metadata the rust loader validates against.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import get_config
+
+DEFAULT_PREFILL = 64
+WEIGHT_SEED = 20260710  # the "mask set": deterministic ROM contents
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so every
+    entry point yields a tuple the rust side unpacks uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer elides big
+    # constants as `{...}`, which would destroy the baked ROM weights in
+    # the text round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_rom(cfg, seed: int = WEIGHT_SEED, trained_npz: str | None = None):
+    """Produce the ROM image — from a trained checkpoint if provided,
+    otherwise from the deterministic random init (serving/perf studies
+    don't need a trained model; the adaptation experiments save one)."""
+    if trained_npz and os.path.exists(trained_npz):
+        import numpy as np
+
+        data = np.load(trained_npz)
+        params = unflatten_params(cfg, data)
+    else:
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    return M.rom_image(params, cfg)
+
+
+def flatten_params(params):
+    flat = {"embed": params["embed"], "final_norm": params["final_norm"],
+            "lm_head": params["lm_head"]}
+    for i, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            flat[f"layers.{i}.{k}"] = v
+    return flat
+
+
+def unflatten_params(cfg, data):
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(
+            {k: jnp.asarray(data[f"layers.{i}.{k}"]) for k in
+             ("attn_norm", "q", "k", "v", "o", "mlp_norm", "gate", "up", "down")}
+        )
+    return {
+        "embed": jnp.asarray(data["embed"]),
+        "layers": layers,
+        "final_norm": jnp.asarray(data["final_norm"]),
+        "lm_head": jnp.asarray(data["lm_head"]),
+    }
+
+
+def lower_all(cfg, rom, prefill: int, use_kernel: bool):
+    """Lower every entry point; returns {name: hlo_text}."""
+    d = cfg.d_model
+    L = cfg.layers_per_partition
+    T, KV, hd, V = cfg.max_seq, cfg.n_kv_heads, cfg.head_dim, cfg.vocab_size
+    P = prefill
+
+    f32, i32 = jnp.float32, jnp.int32
+    h_p = jax.ShapeDtypeStruct((P, d), f32)
+    h_d = jax.ShapeDtypeStruct((1, d), f32)
+    cache = jax.ShapeDtypeStruct((L, T, KV, hd), f32)
+    tok_p = jax.ShapeDtypeStruct((P,), i32)
+    tok_d = jax.ShapeDtypeStruct((1,), i32)
+    scalar = jax.ShapeDtypeStruct((), i32)
+
+    out = {}
+
+    out["embed_prefill"] = to_hlo_text(
+        jax.jit(lambda t: (M.embed_fwd(rom, t),)).lower(tok_p)
+    )
+    out["embed_decode"] = to_hlo_text(
+        jax.jit(lambda t: (M.embed_fwd(rom, t),)).lower(tok_d)
+    )
+
+    prefill_positions = jnp.arange(P)
+
+    for p in range(cfg.n_partitions):
+
+        def part_prefill(h, kc, vc, _p=p):
+            return M.partition_fwd(
+                rom, _p, cfg, h, kc, vc, prefill_positions, use_kernel=use_kernel
+            )
+
+        def part_decode(h, kc, vc, pos, _p=p):
+            return M.partition_fwd(
+                rom, _p, cfg, h, kc, vc, pos[None], use_kernel=use_kernel
+            )
+
+        out[f"part{p}_prefill"] = to_hlo_text(
+            jax.jit(part_prefill).lower(h_p, cache, cache)
+        )
+        out[f"part{p}_decode"] = to_hlo_text(
+            jax.jit(part_decode).lower(h_d, cache, cache, scalar)
+        )
+
+    out["head_prefill"] = to_hlo_text(
+        jax.jit(lambda h, idx: (M.head_fwd(rom, cfg, h, idx),)).lower(h_p, scalar)
+    )
+    out["head_decode"] = to_hlo_text(
+        jax.jit(lambda h: (M.head_fwd(rom, cfg, h, 0),)).lower(h_d)
+    )
+
+    # Fused whole-model entry points (perf fast path, EXPERIMENTS.md
+    # §Perf L3): one PJRT dispatch per token instead of 8. The
+    # partitioned executables above remain the pipeline's unit of
+    # scheduling; the fused ones serve single-stream generation.
+    full_cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, T, KV, hd), f32
+    )
+
+    def full_decode(t, kc, vc, pos):
+        logits, kc, vc = M.full_fwd(
+            rom, cfg, t, pos[None], kc, vc, use_kernel=use_kernel
+        )
+        return logits[0], kc, vc
+
+    def full_prefill(t, kc, vc, idx):
+        logits, kc, vc = M.full_fwd(
+            rom, cfg, t, prefill_positions, kc, vc, use_kernel=use_kernel
+        )
+        return jax.lax.dynamic_slice_in_dim(logits, idx, 1, axis=0)[0], kc, vc
+
+    out["full_decode"] = to_hlo_text(
+        jax.jit(full_decode).lower(tok_d, full_cache, full_cache, scalar)
+    )
+    out["full_prefill"] = to_hlo_text(
+        jax.jit(full_prefill).lower(tok_p, full_cache, full_cache, scalar)
+    )
+    return out
+
+
+GOLDEN_PROMPT = [1, 5, 17, 42, 99, 7, 3, 250]
+GOLDEN_NEW_TOKENS = 16
+
+
+def golden_trace(cfg, rom):
+    """Greedy-decode a fixed prompt through the python model (kernel
+    path). The rust runtime must reproduce the exact token sequence and
+    near-exact logits — this is the cross-language integration oracle."""
+    toks = M.generate_greedy(rom, cfg, GOLDEN_PROMPT, GOLDEN_NEW_TOKENS)
+    # Also record the prefill logits row for a tighter numeric check.
+    kc, vc = M.empty_caches(cfg)
+    logits, _, _ = M.full_fwd(
+        rom,
+        cfg,
+        jnp.asarray(GOLDEN_PROMPT, jnp.int32),
+        jnp.arange(len(GOLDEN_PROMPT)),
+        kc,
+        vc,
+        use_kernel=True,
+    )
+    last = logits[len(GOLDEN_PROMPT) - 1]
+    return {
+        "prompt": GOLDEN_PROMPT,
+        "generated": [int(t) for t in toks],
+        "prefill_last_logits": [float(x) for x in last],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default="sim-tiny")
+    ap.add_argument("--prefill", type=int, default=DEFAULT_PREFILL)
+    ap.add_argument("--seed", type=int, default=WEIGHT_SEED)
+    ap.add_argument(
+        "--trained",
+        default="../results/base_model.npz",
+        help="use this trained checkpoint as ROM contents if it exists",
+    )
+    ap.add_argument(
+        "--no-kernel",
+        action="store_true",
+        help="lower the pure-jnp path instead of the Pallas kernel path",
+    )
+    args = ap.parse_args()
+
+    cfg = get_config(args.config)
+    rom = build_rom(cfg, args.seed, args.trained)
+    sparsity = M.rom_sparsity(rom)
+    use_kernel = not args.no_kernel
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    texts = lower_all(cfg, rom, args.prefill, use_kernel)
+
+    artifacts = {}
+    for name, text in texts.items():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "vocab_size": cfg.vocab_size,
+            "max_seq": cfg.max_seq,
+            "n_partitions": cfg.n_partitions,
+            "layers_per_partition": cfg.layers_per_partition,
+            "act_bits": cfg.act_bits,
+        },
+        "prefill_len": args.prefill,
+        "weight_seed": args.seed,
+        "trained_checkpoint": bool(
+            args.trained and os.path.exists(args.trained)
+        ),
+        "rom_sparsity": float(sparsity),
+        "pallas_kernel": use_kernel,
+        "artifacts": artifacts,
+    }
+    manifest["golden"] = golden_trace(cfg, rom)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json (sparsity={sparsity:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Model configurations for the BitROM reproduction.
+
+Three tiers (see DESIGN.md §6):
+
+* ``falcon3-1b``   — the paper's deployment target. Used ONLY by the
+  analytical area/energy model on the rust side; never instantiated as
+  actual arrays here (1.6B params would defeat the point of a CPU repro).
+* ``sim-small``    — trainable-in-minutes config used by the adaptation
+  experiments (Table I / Table II / Fig 6).
+* ``sim-tiny``     — the AOT/serving config: 6 macro partitions (the
+  paper's partition count for Falcon3-1B), 1 transformer layer per
+  partition, compiled to HLO artifacts executed by the rust coordinator.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of a BitNet (Falcon3-style) decoder-only transformer."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int  # grouped-query attention (paper: 4 KV heads)
+    d_ff: int
+    vocab_size: int
+    max_seq: int
+    n_partitions: int  # independent BitROM macro partitions (paper: 6)
+    rope_theta: float = 10000.0
+    # Activation quantization (BitNet a4.8-style hybrid): "int8" or "int4".
+    act_bits: int = 8
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def layers_per_partition(self) -> int:
+        assert self.n_layers % self.n_partitions == 0
+        return self.n_layers // self.n_partitions
+
+    @property
+    def gqa_group(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        """Total weight parameters (embeddings + blocks + head)."""
+        d, f = self.d_model, self.d_ff
+        kv_dim = self.n_kv_heads * self.head_dim
+        attn = d * d + 2 * d * kv_dim + d * d  # Q, K, V, O
+        mlp = 3 * d * f  # gate, up, down
+        block = attn + mlp + 2 * d  # + two RMSNorm gains
+        return self.vocab_size * d * 2 + self.n_layers * block + d
+
+
+SIM_TINY = ModelConfig(
+    name="sim-tiny",
+    n_layers=6,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=384,
+    vocab_size=256,
+    max_seq=128,
+    n_partitions=6,
+)
+
+SIM_SMALL = ModelConfig(
+    name="sim-small",
+    n_layers=6,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=768,
+    vocab_size=512,
+    max_seq=256,
+    n_partitions=6,
+)
+
+# Analytical reference only — never materialized as arrays in python.
+FALCON3_1B = ModelConfig(
+    name="falcon3-1b",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=8192,
+    vocab_size=131072,
+    max_seq=4096,
+    n_partitions=6,
+)
+
+CONFIGS = {c.name: c for c in (SIM_TINY, SIM_SMALL, FALCON3_1B)}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(CONFIGS)}")

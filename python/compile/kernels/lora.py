@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: the LoRA domain-adapter MAC.
+
+The paper attaches a "simple 4-input multiplier-and-adder unit" to each
+BitROM macro (§III-C): a tiny dense MAC is enough because the adapter is
+rank-16 against channel dimensions of 2048–8192 (0.7% of the projection's
+ops). The kernel computes the low-rank delta
+
+    dy = (x @ A) @ B * (alpha / rank)
+
+with A, B held in k-bit quantized form (paper: 6-bit) — dequantized on
+the fly, exactly like the digital adapter reads its small SRAM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+
+
+def _kernel(x_ref, a_ref, b_ref, sc_ref, o_ref, *, alpha_over_rank: float):
+    x = x_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32) * sc_ref[0, 0]  # dequant A
+    b = b_ref[...].astype(jnp.float32) * sc_ref[0, 1]  # dequant B
+    xa = jax.lax.dot(x, a, preferred_element_type=jnp.float32)
+    o_ref[...] = (
+        jax.lax.dot(xa, b, preferred_element_type=jnp.float32) * alpha_over_rank
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "rank", "block_m", "interpret")
+)
+def lora_delta(
+    x,
+    a_q,
+    b_q,
+    a_scale,
+    b_scale,
+    *,
+    alpha: float,
+    rank: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+):
+    """LoRA delta with quantized adapters.
+
+    Args:
+      x: [m, k] activations (already int8-fake-quantized upstream — the
+        paper keeps adapter activations at 8 bits).
+      a_q: [k, r] quantized A (exact integers, float container).
+      b_q: [r, n] quantized B.
+      a_scale, b_scale: per-tensor dequant scales.
+
+    Returns: [m, n] f32 delta to add to the frozen BitLinear output.
+    """
+    m, k = x.shape
+    k2, r = a_q.shape
+    r2, n = b_q.shape
+    assert k == k2 and r == r2 == rank, (x.shape, a_q.shape, b_q.shape, rank)
+
+    scales = jnp.array(
+        [[jnp.float32(a_scale), jnp.float32(b_scale)]], jnp.float32
+    ).reshape(1, 2)
+
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pad), (0, 0))) if pad else x.astype(jnp.float32)
+    mp = xp.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, alpha_over_rank=alpha / rank),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=interpret,
+    )(xp, a_q.astype(jnp.float32), b_q.astype(jnp.float32), scales)
+    return out[:m]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its oracle bit-for-bit in f32 (the hypothesis sweeps
+in ``python/tests/test_kernels.py`` enforce allclose at tight tolerance
+across shapes, sparsities and activation bit-widths).
+"""
+
+import jax.numpy as jnp
+
+
+def ternary_matmul_ref(x_q, w_q, x_scale, w_scale):
+    """Reference for the BitROM macro MAC: ``y = (x_q @ w_q) * scales``.
+
+    ``x_q``: [m, k] exact integers (float container), per-row scales
+    ``x_scale``: [m, 1]; ``w_q``: [k, n] exact {-1,0,+1}; ``w_scale``:
+    scalar. Accumulation in f32 (exact for the integer ranges involved:
+    |acc| <= k * 127 < 2^24 for k < 2^17).
+    """
+    acc = jnp.dot(x_q.astype(jnp.float32), w_q.astype(jnp.float32))
+    return acc * x_scale * w_scale
+
+
+def ternary_matmul_local_global_ref(x_q, w_q, x_scale, w_scale, group: int = 8):
+    """Local-then-global accumulation order (paper Fig 3): columns of the
+    BiROMA are processed in groups of ``group`` by a TriMLA (local,
+    sequential adds/subs with zero-skip), then a single adder-tree pass
+    sums the TriMLA partials. Numerically identical to
+    :func:`ternary_matmul_ref` in exact integer arithmetic — this oracle
+    exists to pin the *associativity order* the hardware uses, so the
+    rust `ciROM::Macro` and the Pallas kernel can both be checked against
+    the same grouping.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    pad = (-k) % group
+    if pad:
+        x_q = jnp.pad(x_q, ((0, 0), (0, pad)))
+        w_q = jnp.pad(w_q, ((0, pad), (0, 0)))
+        k += pad
+    xg = x_q.reshape(m, k // group, group).astype(jnp.float32)
+    wg = w_q.reshape(k // group, group, n).astype(jnp.float32)
+    # local: per-group partial sums (TriMLA outputs) …
+    partial = jnp.einsum("mgc,gcn->mgn", xg, wg)
+    # … global: one-shot adder tree across groups.
+    acc = jnp.sum(partial, axis=1)
+    return acc * x_scale * w_scale
+
+
+def bit_serial_split(x_q):
+    """Split int8 integer values (float container) into two 4-bit digits:
+    ``x = 16*hi + lo`` with ``lo`` in [0, 15] and ``hi`` in [-8, 8].
+
+    This is TriMLA's two-cycle bit-serial mode for 8-bit activations
+    (paper §III-B3): 4-bit datapath, shift-and-accumulate across cycles.
+    """
+    hi = jnp.floor(x_q / 16.0)
+    lo = x_q - hi * 16.0
+    return hi, lo
+
+
+def ternary_matmul_bitserial_ref(x_q, w_q, x_scale, w_scale):
+    """Two-cycle bit-serial reference: y = (16*(hi@W) + lo@W) * scales."""
+    hi, lo = bit_serial_split(x_q)
+    w = w_q.astype(jnp.float32)
+    acc = 16.0 * jnp.dot(hi, w) + jnp.dot(lo, w)
+    return acc * x_scale * w_scale
+
+
+def lora_ref(x, a, b, alpha: float, rank: int):
+    """Reference LoRA delta: ``dy = (x @ A) @ B * (alpha / rank)``.
+
+    ``a``: [k, r], ``b``: [r, n]. The hardware realization is the paper's
+    4-input multiplier-adder unit attached to each BitROM macro — a tiny
+    dense MAC since r=16 << k.
+    """
+    return jnp.dot(jnp.dot(x, a), b) * (alpha / rank)

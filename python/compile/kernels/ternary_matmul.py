@@ -1,0 +1,162 @@
+"""L1 Pallas kernel: the BitROM macro MAC (ternary-weight matmul).
+
+Hardware mapping (DESIGN.md §2 — Hardware-Adaptation):
+
+* The BiROMA weight block for the current grid step is resident in VMEM —
+  VMEM plays the role of the precharged bitlines feeding the TriMLAs.
+* TriMLA's three modes (add / subtract / skip, selected by the two
+  comparator bits in paper Fig 4) appear as the positive/negative weight
+  masks: the positive lane *adds* the activation, the negative lane
+  *subtracts* it, and the zero lane contributes nothing. The datapath is
+  adder-only — no multiplier is ever applied to a weight, exactly like
+  the silicon.
+* The local-then-global accumulation schedule is the grid's k-loop: each
+  k-step produces a local partial (TriMLA outputs for one column group),
+  accumulated into the output block; the final k-step applies the scales
+  — the "one-shot global adder tree" pass.
+* 8-bit activations use the two-cycle bit-serial mode: the int8 value is
+  split into 4-bit digits processed through the same 4-bit datapath with
+  shift-and-accumulate (``bit_serial=True``).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO. Real-TPU expectations
+(VMEM footprint, MXU utilization) are estimated in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes — chosen for TPU VMEM budget (see EXPERIMENTS.md
+# §Perf L1): (128, 128, 128) f32 blocks = 3 * 64 KiB << 16 MiB VMEM,
+# MXU-aligned (128 lanes).
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, *, n_k: int, bit_serial: bool):
+    """One (m, n, k) grid step of the macro MAC."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+
+    # TriMLA mode decode (paper Fig 4 truth table): MSB comparator != 0
+    # gates the accumulator (zero-skip); LSB comparator picks add vs sub.
+    w_pos = (w > 0.0).astype(jnp.float32)
+    w_neg = (w < 0.0).astype(jnp.float32)
+
+    def adder_pass(act):
+        # adder-only datapath: + for '+1' cells, - for '-1' cells, zero
+        # cells are skipped (contribute no energy, no term).
+        pos = jax.lax.dot(act, w_pos, preferred_element_type=jnp.float32)
+        neg = jax.lax.dot(act, w_neg, preferred_element_type=jnp.float32)
+        return pos - neg
+
+    if bit_serial:
+        # two-cycle 4-bit bit-serial processing of int8 activations
+        hi = jnp.floor(x / 16.0)
+        lo = x - hi * 16.0
+        local = 16.0 * adder_pass(hi) + adder_pass(lo)
+    else:
+        local = adder_pass(x)
+
+    o_ref[...] += local
+
+    @pl.when(k_idx == n_k - 1)
+    def _dequant():
+        # global pass complete: apply activation (per-row) and weight
+        # (per-tensor) scales to leave f32 results.
+        o_ref[...] *= xs_ref[...] * ws_ref[0, 0]
+
+
+def _pad_to(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "bit_serial", "interpret"),
+)
+def ternary_matmul(
+    x_q,
+    w_q,
+    x_scale,
+    w_scale,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    bit_serial: bool = False,
+    interpret: bool = True,
+):
+    """``y = (x_q @ w_q) * x_scale * w_scale`` with ternary ``w_q``.
+
+    Args:
+      x_q: [m, k] quantized activations — exact integers in a float
+        container (int8 range, or int4 for the a4.8 hybrid).
+      w_q: [k, n] ternary weights, exact {-1, 0, +1} in a float container
+        (the ROM contents).
+      x_scale: [m, 1] per-token activation scales.
+      w_scale: scalar (or [1, 1]) per-tensor weight scale.
+      bit_serial: process int8 activations as two 4-bit digits (the
+        hardware's two-cycle mode). Numerically identical; exercised by
+        tests to pin the digit decomposition.
+
+    Returns: [m, n] f32.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+
+    w_scale = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
+    x_scale = jnp.asarray(x_scale, jnp.float32).reshape(m, 1)
+
+    block_m = min(block_m, m) if m % block_m else block_m
+    xp = _pad_to(_pad_to(x_q.astype(jnp.float32), block_m, 0), block_k, 1)
+    sp = _pad_to(x_scale, block_m, 0)
+    wp = _pad_to(_pad_to(w_q.astype(jnp.float32), block_k, 0), block_n, 1)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    n_k = kp // block_k
+
+    grid = (mp // block_m, np_ // block_n, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, bit_serial=bit_serial),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, sp, w_scale)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM working set for one grid step (f32): x block +
+    w block + output block + the two weight masks the compiler
+    materializes. Used by the L1 perf study (EXPERIMENTS.md §Perf)."""
+    f = 4
+    return f * (
+        block_m * block_k  # x
+        + 3 * block_k * block_n  # w + two masks
+        + block_m * block_n  # out
+        + block_m  # scales
+    )

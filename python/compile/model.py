@@ -1,0 +1,412 @@
+"""L2: BitNet (Falcon3-style) decoder-only transformer in JAX.
+
+Two execution paths share one set of shapes:
+
+* **Inference / ROM path** (``use_kernel=True``): weights are the baked
+  ternary ROM image (exact {-1,0,+1} + per-tensor scale), every linear
+  projection goes through the L1 Pallas ``ternary_matmul`` kernel, and
+  activations are absmax-int8 quantized per token. This is what
+  ``aot.py`` lowers to HLO — weights become constants in the executable,
+  which is the CiROM "fused at fabrication" property.
+* **Training / QAT path** (``bit_linear_train``): straight-through
+  fake-quant on weights and activations, pure-jnp so autodiff is cheap.
+  Used by ``train_lora.py`` for the adaptation experiments.
+
+The module also provides the partitioned entry points the rust
+coordinator executes: the model is split into ``cfg.n_partitions``
+macro partitions of ``cfg.layers_per_partition`` layers each (paper
+§V-B: Falcon3-1B → 6 partitions × 3 layers, pipelined over 6 batches).
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import quant
+from .kernels.ternary_matmul import ternary_matmul
+from .kernels.lora import lora_delta
+
+# Projections that can carry a LoRA adapter (paper Table II columns).
+PROJS = ("q", "k", "v", "o", "gate", "up", "down")
+# The paper's chosen placement: Value + Output + Down (Table II row 4).
+PAPER_PLACEMENT = ("v", "o", "down")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (float master weights)
+# ---------------------------------------------------------------------------
+
+
+def init_layer(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 7)
+
+    def dense(k, fan_in, fan_out):
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) * (
+            fan_in**-0.5
+        )
+
+    return {
+        "attn_norm": jnp.ones((d,), jnp.float32),
+        "q": dense(ks[0], d, d),
+        "k": dense(ks[1], d, kv_dim),
+        "v": dense(ks[2], d, kv_dim),
+        "o": dense(ks[3], d, d),
+        "mlp_norm": jnp.ones((d,), jnp.float32),
+        "gate": dense(ks[4], d, f),
+        "up": dense(ks[5], d, f),
+        "down": dense(ks[6], f, d),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "embed": jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32
+        )
+        * 0.02,
+        "layers": [init_layer(cfg, keys[1 + i]) for i in range(cfg.n_layers)],
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab_size), jnp.float32
+        )
+        * (cfg.d_model**-0.5),
+    }
+
+
+LINEAR_KEYS = ("q", "k", "v", "o", "gate", "up", "down")
+
+
+def rom_image(params, cfg: ModelConfig):
+    """Bake the float master weights into the ternary ROM image.
+
+    Every linear projection becomes ``(w_q ∈ {-1,0,+1}, scale)`` — the
+    contents of the BiROMA arrays. Norm gains, embeddings and the LM head
+    stay full precision (the paper's auxiliary arithmetic processor
+    handles those)."""
+    layers = []
+    for lp in params["layers"]:
+        lq = {"attn_norm": lp["attn_norm"], "mlp_norm": lp["mlp_norm"]}
+        for name in LINEAR_KEYS:
+            w_q, scale = quant.absmean_ternary(lp[name])
+            lq[name] = {"w_q": w_q, "scale": scale}
+        layers.append(lq)
+    return {
+        "embed": params["embed"],
+        "layers": layers,
+        "final_norm": params["final_norm"],
+        "lm_head": params["lm_head"],
+    }
+
+
+def rom_sparsity(rom) -> float:
+    """Overall zero-weight fraction of the ROM image (TriMLA skip rate)."""
+    total, zeros = 0, 0
+    for lq in rom["layers"]:
+        for name in LINEAR_KEYS:
+            w = lq[name]["w_q"]
+            total += w.size
+            zeros += int(jnp.sum(w == 0.0))
+    return zeros / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gain, eps: float):
+    x32 = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 / rms) * gain
+
+
+def rope_freqs(cfg: ModelConfig):
+    hd = cfg.head_dim
+    inv = 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    )
+    return inv  # [hd/2]
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x: [S, H, hd]; positions: [S] absolute token positions."""
+    inv = rope_freqs(cfg)
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]  # [S, hd/2]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def bit_linear(x, w_rom, cfg: ModelConfig, use_kernel: bool):
+    """Frozen ternary projection through the macro MAC.
+
+    x: [S, fan_in]; returns [S, fan_out] f32."""
+    x_q, x_scale = quant.absmax_quantize(x, cfg.act_bits)
+    if use_kernel:
+        return ternary_matmul(x_q, w_rom["w_q"], x_scale, w_rom["scale"])
+    return (
+        jnp.dot(x_q, w_rom["w_q"], preferred_element_type=jnp.float32)
+        * x_scale
+        * w_rom["scale"]
+    )
+
+
+def _ste(x, qx):
+    """Straight-through estimator: forward qx, backward identity."""
+    return x + jax.lax.stop_gradient(qx - x)
+
+
+def bit_linear_train(x, w, cfg: ModelConfig):
+    """QAT path: fake-quant weights (absmean ternary) and activations
+    (absmax int-``act_bits``) with STE gradients."""
+    w_q, w_scale = quant.absmean_ternary(w)
+    w_fq = _ste(w, w_q * w_scale)
+    x_q, x_scale = quant.absmax_quantize(x, cfg.act_bits)
+    x_fq = _ste(x, x_q * x_scale)
+    return jnp.dot(x_fq, w_fq)
+
+
+def lora_apply(x, adapter, cfg: ModelConfig, use_kernel: bool, train: bool):
+    """Adapter delta for one projection. ``adapter`` holds float A
+    ([fan_in, r]) and B ([r, fan_out]) plus (alpha, rank, weight bits).
+
+    Inference quantizes A/B to ``bits`` (paper: 6) and activations to 8b;
+    training fake-quants both with STE."""
+    alpha, rank, bits = adapter["alpha"], adapter["rank"], adapter["bits"]
+    if train:
+        a = _ste(adapter["a"], quant.fake_quant_tensor(adapter["a"], bits))
+        b = _ste(adapter["b"], quant.fake_quant_tensor(adapter["b"], bits))
+        x8 = _ste(x, quant.fake_quant(x, 8))
+        return jnp.dot(jnp.dot(x8, a), b) * (alpha / rank)
+    a_q, a_s = quant.quantize_kbit(adapter["a"], bits)
+    b_q, b_s = quant.quantize_kbit(adapter["b"], bits)
+    x8 = quant.fake_quant(x, 8)
+    if use_kernel:
+        return lora_delta(x8, a_q, b_q, a_s, b_s, alpha=alpha, rank=rank)
+    return jnp.dot(jnp.dot(x8, a_q * a_s), b_q * b_s) * (alpha / rank)
+
+
+def proj(x, layer, name, cfg, use_kernel, lora_layer=None, train=False, qat=True):
+    """One projection = frozen BitLinear + optional LoRA delta.
+
+    Dispatch on the weight container: a ROM entry (dict with ``w_q``)
+    always goes through the quantized macro path; a raw float matrix is
+    either QAT-fake-quantized (``qat=True``, the BitNet training path)
+    or a plain dense projection (``qat=False``, the full-precision
+    comparator of Fig 6(b))."""
+    w = layer[name]
+    if isinstance(w, dict):
+        y = bit_linear(x, w, cfg, use_kernel)
+    elif qat:
+        y = bit_linear_train(x, w, cfg)
+    else:
+        y = jnp.dot(x, w)
+    if lora_layer is not None and name in lora_layer:
+        y = y + lora_apply(x, lora_layer[name], cfg, use_kernel, train)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Transformer block with KV cache
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q, k_cache, v_cache, q_positions, cfg: ModelConfig
+):
+    """GQA attention over the (fixed-size) KV cache.
+
+    q: [S, n_heads, hd]; caches: [max_seq, n_kv_heads, hd];
+    q_positions: [S] absolute positions. A cache slot ``t`` is visible to
+    the query at position ``p`` iff ``t <= p`` — this single causal rule
+    also guarantees that stale/padded cache slots are never read (they
+    are always overwritten before becoming visible; see DESIGN.md §7.4).
+    """
+    S, H, hd = q.shape
+    G = cfg.gqa_group
+    k = jnp.repeat(k_cache, G, axis=1)  # [T, H, hd]
+    v = jnp.repeat(v_cache, G, axis=1)
+    scores = jnp.einsum("shd,thd->hst", q, k) / jnp.sqrt(float(hd))
+    t_idx = jnp.arange(cfg.max_seq)[None, None, :]
+    mask = t_idx <= q_positions[None, :, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hst,thd->shd", probs, v)
+    return out.reshape(S, H * hd)
+
+
+def block_fwd(
+    h,
+    layer,
+    k_cache,
+    v_cache,
+    positions,
+    cfg: ModelConfig,
+    use_kernel: bool = False,
+    lora_layer=None,
+    train: bool = False,
+    qat: bool = True,
+):
+    """One transformer block. h: [S, d]; caches [max_seq, kv, hd];
+    positions: [S] absolute. Returns (h, k_cache, v_cache)."""
+    S = h.shape[0]
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    x = rms_norm(h, layer["attn_norm"], cfg.norm_eps)
+    q = proj(x, layer, "q", cfg, use_kernel, lora_layer, train, qat).reshape(S, H, hd)
+    k = proj(x, layer, "k", cfg, use_kernel, lora_layer, train, qat).reshape(S, KV, hd)
+    v = proj(x, layer, "v", cfg, use_kernel, lora_layer, train, qat).reshape(S, KV, hd)
+
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+
+    # Scatter the new K/V rows into the cache at their absolute positions.
+    k_cache = k_cache.at[positions].set(k)
+    v_cache = v_cache.at[positions].set(v)
+
+    attn = attention(q, k_cache, v_cache, positions, cfg)
+    h = h + proj(attn, layer, "o", cfg, use_kernel, lora_layer, train, qat)
+
+    x = rms_norm(h, layer["mlp_norm"], cfg.norm_eps)
+    g = proj(x, layer, "gate", cfg, use_kernel, lora_layer, train, qat)
+    u = proj(x, layer, "up", cfg, use_kernel, lora_layer, train, qat)
+    ff = jax.nn.silu(g) * u  # SwiGLU (Falcon3 family)
+    h = h + proj(ff, layer, "down", cfg, use_kernel, lora_layer, train, qat)
+    return h, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Partitioned entry points (what aot.py lowers, what rust executes)
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(rom, tokens):
+    """tokens: [S] i32 → h [S, d]."""
+    return rom["embed"][tokens]
+
+
+def partition_fwd(
+    rom,
+    part_idx: int,
+    cfg: ModelConfig,
+    h,
+    k_caches,
+    v_caches,
+    positions,
+    use_kernel: bool = False,
+    lora=None,
+    train: bool = False,
+    qat: bool = True,
+):
+    """Run partition ``part_idx`` (``layers_per_partition`` consecutive
+    layers). caches: [L_p, max_seq, kv, hd]. Returns (h, k_caches,
+    v_caches)."""
+    L = cfg.layers_per_partition
+    base = part_idx * L
+    new_k, new_v = [], []
+    for i in range(L):
+        layer = rom["layers"][base + i]
+        lora_layer = None if lora is None else lora["layers"][base + i]
+        h, kc, vc = block_fwd(
+            h,
+            layer,
+            k_caches[i],
+            v_caches[i],
+            positions,
+            cfg,
+            use_kernel,
+            lora_layer,
+            train,
+            qat,
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+    return h, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def head_fwd(rom, cfg: ModelConfig, h, idx):
+    """Final RMSNorm + LM head at row ``idx`` of h. Returns [vocab]."""
+    row = jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=0)
+    x = rms_norm(row, rom["final_norm"], cfg.norm_eps)
+    return jnp.dot(x, rom["lm_head"])[0]
+
+
+def full_fwd(
+    rom,
+    cfg: ModelConfig,
+    tokens,
+    positions,
+    k_caches,
+    v_caches,
+    use_kernel: bool = False,
+    lora=None,
+    train: bool = False,
+    qat: bool = True,
+):
+    """Whole-model forward (all partitions) — used by tests and the
+    adaptation experiments. caches: [n_layers, max_seq, kv, hd].
+    Returns (logits [S, vocab], k_caches, v_caches)."""
+    h = embed_fwd(rom, tokens)
+    L = cfg.layers_per_partition
+    nk, nv = [], []
+    for p in range(cfg.n_partitions):
+        h, kc, vc = partition_fwd(
+            rom,
+            p,
+            cfg,
+            h,
+            k_caches[p * L : (p + 1) * L],
+            v_caches[p * L : (p + 1) * L],
+            positions,
+            use_kernel,
+            lora,
+            train,
+            qat,
+        )
+        nk.append(kc)
+        nv.append(vc)
+    h = rms_norm(h, rom["final_norm"], cfg.norm_eps)
+    logits = jnp.dot(h, rom["lm_head"])
+    return logits, jnp.concatenate(nk), jnp.concatenate(nv)
+
+
+def empty_caches(cfg: ModelConfig, n_layers: Optional[int] = None):
+    L = cfg.n_layers if n_layers is None else n_layers
+    shape = (L, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def generate_greedy(rom, cfg: ModelConfig, prompt, n_new: int, lora=None):
+    """Reference auto-regressive loop (prefill + greedy decode) — the
+    python-side oracle the rust coordinator is integration-tested
+    against."""
+    k_caches, v_caches = empty_caches(cfg)
+    S = len(prompt)
+    tokens = jnp.asarray(prompt, jnp.int32)
+    logits, k_caches, v_caches = full_fwd(
+        rom, cfg, tokens, jnp.arange(S), k_caches, v_caches, lora=lora
+    )
+    out = []
+    tok = int(jnp.argmax(logits[S - 1]))
+    out.append(tok)
+    for step in range(1, n_new):
+        pos = S + step - 1
+        logits, k_caches, v_caches = full_fwd(
+            rom,
+            cfg,
+            jnp.asarray([tok], jnp.int32),
+            jnp.asarray([pos]),
+            k_caches,
+            v_caches,
+            lora=lora,
+        )
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+    return out

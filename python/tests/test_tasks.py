@@ -1,0 +1,114 @@
+"""Synthetic task suite + metric implementations."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks as T
+
+
+RNG = np.random.default_rng(0)
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("task", list(T.TASKS))
+    def test_examples_well_formed(self, task):
+        rng = np.random.default_rng(1)
+        for _ in range(20):
+            ex = T.TASKS[task](rng)
+            assert ex.tokens.dtype == np.int32
+            assert ex.tokens.shape == ex.loss_mask.shape
+            assert ex.tokens[0] == T.BOS
+            assert ex.tokens[-1] == T.EOS
+            assert np.all(ex.tokens >= 0) and np.all(ex.tokens < 256)
+            if task != "lm":
+                assert ex.loss_mask.sum() >= 1
+                assert len(ex.answer) >= 1
+
+    def test_qa_answer_is_recoverable(self):
+        """The queried value must actually appear bound to the queried
+        key in the context."""
+        rng = np.random.default_rng(2)
+        for _ in range(50):
+            ex = T.qa_example(rng)
+            toks = ex.tokens.tolist()
+            sep = toks.index(T.SEP)
+            qkey = toks[sep + 1]
+            ctx = toks[1:sep]
+            pairs = {ctx[i]: ctx[i + 1] for i in range(0, len(ctx), 2)}
+            assert pairs[qkey] == ex.answer[0]
+
+    def test_summarization_keeps_marked_words_in_order(self):
+        rng = np.random.default_rng(3)
+        for _ in range(30):
+            ex = T.summarization_example(rng)
+            toks = ex.tokens.tolist()
+            sep = toks.index(T.SEP)
+            body = toks[1:sep]
+            # every answer token follows a noise marker in the body
+            marked = [body[i + 1] for i, t in enumerate(body[:-1]) if t in T.NOISE]
+            assert marked == ex.answer
+
+    def test_drop_count_is_correct(self):
+        rng = np.random.default_rng(4)
+        for _ in range(30):
+            ex = T.drop_example(rng)
+            toks = ex.tokens.tolist()
+            sep = toks.index(T.SEP)
+            target = toks[sep + 1]
+            passage = toks[1:sep]
+            count = passage.count(target)
+            assert ex.answer == [T.DIGITS[count]]
+
+    def test_batch_padding(self):
+        rng = np.random.default_rng(5)
+        toks, mask, exs = T.batch(rng, "qa", 8, 48)
+        assert toks.shape == (8, 48)
+        assert mask.shape == (8, 48)
+        assert len(exs) == 8
+        # padding area has zero mask
+        for i, ex in enumerate(exs):
+            assert mask[i, len(ex.tokens):].sum() == 0
+
+
+class TestMetrics:
+    def test_exact_match(self):
+        assert T.exact_match([1, 2], [1, 2]) == 1.0
+        assert T.exact_match([1, 2], [2, 1]) == 0.0
+        assert T.exact_match([], []) == 1.0
+
+    def test_f1_perfect_and_disjoint(self):
+        assert T.f1_score([1, 2, 3], [1, 2, 3]) == 1.0
+        assert T.f1_score([1, 2], [3, 4]) == 0.0
+
+    def test_f1_partial(self):
+        # pred {1,2}, ref {2,3}: p=r=0.5 → f1=0.5
+        assert abs(T.f1_score([1, 2], [2, 3]) - 0.5) < 1e-9
+
+    def test_f1_respects_multiplicity(self):
+        assert T.f1_score([7, 7], [7]) == pytest.approx(2 / 3)
+
+    def test_rouge_l_order_sensitivity(self):
+        # same unigrams, different order: ROUGE-1 identical, ROUGE-L drops
+        ref = [1, 2, 3, 4]
+        shuffled = [4, 3, 2, 1]
+        assert T.rouge_1(shuffled, ref) == 1.0
+        assert T.rouge_l(shuffled, ref) < 0.5
+
+    def test_rouge_l_subsequence(self):
+        # pred = subsequence of ref: recall = 2/4, precision = 1
+        assert T.rouge_l([1, 3], [1, 2, 3, 4]) == pytest.approx(2 * 0.5 / 1.5)
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        st.lists(st.integers(0, 10), max_size=8),
+        st.lists(st.integers(0, 10), max_size=8),
+    )
+    def test_metric_ranges(self, a, b):
+        for fn in [T.exact_match, T.f1_score, T.rouge_1, T.rouge_l]:
+            v = fn(a, b)
+            assert 0.0 <= v <= 1.0
+            # symmetry of F1-style metrics in perfect case
+        if a == b:
+            assert T.f1_score(a, b) == 1.0
+            assert T.rouge_l(a, b) == 1.0

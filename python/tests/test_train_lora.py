@@ -1,0 +1,133 @@
+"""Adaptation machinery: optimizer, adapter plumbing, loss masking.
+
+Training *quality* is exercised by `make experiments`; these tests pin
+the machinery (shapes, gradients, masking, requantization) at a few
+seconds of runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tasks as T
+from compile import train_lora as TL
+from compile.configs import ModelConfig
+
+MINI = ModelConfig(
+    name="mini",
+    n_layers=2,
+    d_model=32,
+    n_heads=2,
+    n_kv_heads=1,
+    d_ff=64,
+    vocab_size=256,
+    max_seq=48,
+    n_partitions=2,
+)
+
+
+class TestAdam:
+    def test_step_moves_params_against_gradient(self):
+        params = {"w": jnp.ones((4,))}
+        grads = {"w": jnp.ones((4,))}
+        st = TL.adam_init(params)
+        new, st2 = TL.adam_step(params, grads, st, lr=0.1)
+        assert np.all(np.asarray(new["w"]) < 1.0)
+        assert st2["t"] == 1
+
+    def test_zero_grad_is_noop(self):
+        params = {"w": jnp.ones((4,))}
+        grads = {"w": jnp.zeros((4,))}
+        new, _ = TL.adam_step(params, grads, TL.adam_init(params), lr=0.1)
+        np.testing.assert_allclose(np.asarray(new["w"]), 1.0)
+
+
+class TestLoraPlumbing:
+    def test_init_shapes(self):
+        lora = TL.init_lora(MINI, ["v", "o", "down"], rank=4, bits=6, seed=0)
+        assert len(lora["layers"]) == MINI.n_layers
+        l0 = lora["layers"][0]
+        assert l0["v"]["a"].shape == (32, 4)
+        assert l0["v"]["b"].shape == (4, MINI.n_kv_heads * MINI.head_dim)
+        assert l0["down"]["a"].shape == (64, 4)
+        assert l0["down"]["b"].shape == (4, 32)
+        # B init to zero → adapter starts as a no-op
+        assert float(jnp.abs(l0["o"]["b"]).max()) == 0.0
+
+    def test_trainable_roundtrip(self):
+        lora = TL.init_lora(MINI, ["v"], rank=2, bits=6, seed=1)
+        tr = TL.lora_trainable(lora)
+        tr[0]["v"]["b"] = jnp.ones_like(tr[0]["v"]["b"])
+        lora2 = TL.lora_with(lora, tr)
+        assert float(lora2["layers"][0]["v"]["b"].min()) == 1.0
+        # metadata preserved
+        assert lora2["layers"][0]["v"]["bits"] == 6
+
+    def test_requant_changes_bits_only(self):
+        lora = TL.init_lora(MINI, ["v"], rank=2, bits=6, seed=1)
+        l2 = TL.json_safe_requant(lora, 3)
+        assert l2["layers"][0]["v"]["bits"] == 3
+        np.testing.assert_array_equal(
+            np.asarray(l2["layers"][0]["v"]["a"]),
+            np.asarray(lora["layers"][0]["v"]["a"]),
+        )
+
+
+class TestLossAndTraining:
+    @pytest.fixture(scope="class")
+    def rom(self):
+        params = M.init_params(MINI, jax.random.PRNGKey(0))
+        return M.rom_image(params, MINI)
+
+    def test_loss_respects_mask(self, rom):
+        rng = np.random.default_rng(0)
+        toks, mask, _ = T.batch(rng, "qa", 4, 48)
+        full = TL.batched_loss(rom, MINI, jnp.asarray(toks), jnp.ones_like(jnp.asarray(mask)))
+        masked = TL.batched_loss(rom, MINI, jnp.asarray(toks), jnp.asarray(mask))
+        assert float(full) != float(masked)
+        # all-zero mask → zero loss (normalized by max(weight,1))
+        zero = TL.batched_loss(rom, MINI, jnp.asarray(toks), jnp.zeros_like(jnp.asarray(mask)))
+        assert float(zero) == 0.0
+
+    def test_lora_gradients_flow(self, rom):
+        lora = TL.init_lora(MINI, ["v", "down"], rank=2, bits=6, seed=2)
+        rng = np.random.default_rng(1)
+        toks, mask, _ = T.batch(rng, "qa", 4, 48)
+
+        def loss_fn(tr):
+            return TL.batched_loss(
+                rom, MINI, jnp.asarray(toks), jnp.asarray(mask),
+                lora=TL.lora_with(lora, tr), train=True,
+            )
+
+        grads = jax.grad(loss_fn)(TL.lora_trainable(lora))
+        # B starts at zero, so dL/dA is zero on the first step but dL/dB
+        # is not (the standard LoRA init property)
+        gb = float(jnp.abs(grads[0]["v"]["b"]).max())
+        assert gb > 0.0, "no gradient reached the adapter"
+
+    def test_one_training_step_reduces_loss(self, rom):
+        lora = TL.init_lora(MINI, ["v", "o", "down"], rank=4, bits=6, seed=3)
+        rng = np.random.default_rng(2)
+        toks, mask, _ = T.batch(rng, "qa", 8, 48)
+        tj, mj = jnp.asarray(toks), jnp.asarray(mask)
+
+        before = TL.batched_loss(rom, MINI, tj, mj, lora=lora, train=True)
+        trained = TL.train_lora(
+            rom, MINI, lora, "qa", steps=12, batch_size=8, seed=2, lr=5e-2
+        )
+        after = TL.batched_loss(rom, MINI, tj, mj, lora=trained, train=True)
+        assert float(after) < float(before), (float(before), float(after))
+
+    def test_eval_task_returns_metrics(self, rom):
+        sc = TL.eval_task(rom, MINI, "qa", n_examples=4)
+        assert set(sc) == {"em", "f1"}
+        assert all(0.0 <= v <= 100.0 for v in sc.values())
+        sc = TL.eval_task(rom, MINI, "summarization", n_examples=4)
+        assert set(sc) == {"rouge1", "rougeL"}
+
+    def test_eval_ppl_positive(self, rom):
+        ppl = TL.eval_ppl(rom, MINI, n_batches=1, batch_size=4)
+        assert ppl > 1.0

@@ -1,0 +1,86 @@
+//! End-to-end PJRT decode benchmarks: per-partition latency, full
+//! decode-step latency, single-stream tokens/s (EXPERIMENTS.md §Perf L3).
+//!
+//! Requires artifacts (`make artifacts`); prints a skip note otherwise.
+
+use bitrom::runtime::{Manifest, ModelExecutor};
+use bitrom::util::bench::bench_config;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_decode: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let exec = ModelExecutor::load(&dir)?;
+    println!(
+        "loaded {} executables in {:.2}s",
+        exec.manifest.artifacts.len(),
+        exec.load_time_s
+    );
+    let b = bench_config();
+
+    // embed + head (the auxiliary-processor ops)
+    let r = b.run("embed_decode_token", || exec.embed_token(42).unwrap());
+    println!("{}", r.report());
+
+    // one partition decode step
+    let mut state = exec.new_state()?;
+    let h = exec.embed_token(1)?;
+    let r = b.run("partition_decode (1 layer)", || {
+        exec.run_partition_decode(0, &h, 0, &mut state).unwrap()
+    });
+    println!("{}", r.report());
+
+    // full decode step, partitioned path (8 PJRT dispatches per token —
+    // the §Perf L3 *before* number)
+    let (mut state, logits) = exec.prefill(&[1, 2, 3, 4])?;
+    let mut tok = logits.argmax() as i32;
+    let max_seq = exec.manifest.model.max_seq;
+    let r = b.run("decode_step partitioned (8 dispatches)", || {
+        if state.pos + 1 >= max_seq {
+            // reset the sequence when the cache fills up mid-bench
+            let (s2, l2) = exec.prefill(&[1, 2, 3, 4]).unwrap();
+            state = s2;
+            tok = l2.argmax() as i32;
+        }
+        let logits = exec.decode_step(&mut state, tok).unwrap();
+        tok = logits.argmax() as i32;
+        tok
+    });
+    println!("{}", r.report());
+    let partitioned_ns = r.mean_ns;
+    println!("  -> single-stream decode: {:.1} tokens/s", 1e9 / r.mean_ns);
+
+    // fused fast path (1 PJRT dispatch per token — the *after* number)
+    if exec.has_fused() {
+        let (mut fstate, flogits) = exec.fused_prefill(&[1, 2, 3, 4])?;
+        let mut ftok = flogits.argmax() as i32;
+        let r = b.run("decode_step fused (1 dispatch)", || {
+            if fstate.pos + 1 >= max_seq {
+                let (s2, l2) = exec.fused_prefill(&[1, 2, 3, 4]).unwrap();
+                fstate = s2;
+                ftok = l2.argmax() as i32;
+            }
+            let logits = exec.fused_decode_step(&mut fstate, ftok).unwrap();
+            ftok = logits.argmax() as i32;
+            ftok
+        });
+        println!("{}", r.report());
+        println!(
+            "  -> single-stream decode: {:.1} tokens/s ({:.2}x vs partitioned)",
+            1e9 / r.mean_ns,
+            partitioned_ns / r.mean_ns
+        );
+    } else {
+        println!("fused artifacts absent — rerun `make artifacts` for the fast path");
+    }
+
+    // prefill latency (64-token bucket)
+    let prompt: Vec<i32> = (0..48).map(|i| (i * 3) % 250).collect();
+    let r = b.run("prefill (48-token prompt, 64 bucket)", || {
+        exec.prefill(&prompt).unwrap().1
+    });
+    println!("{}", r.report());
+    Ok(())
+}

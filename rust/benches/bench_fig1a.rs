@@ -1,0 +1,13 @@
+//! Fig 1(a) regenerator + benchmark of the area-model sweep.
+
+use bitrom::config::HardwareConfig;
+use bitrom::report::fig1a_report;
+use bitrom::util::bench::bench_config;
+
+fn main() {
+    let hw = HardwareConfig::default();
+    println!("{}", fig1a_report(&hw));
+    let b = bench_config();
+    let r = b.run("fig1a_area_sweep", || fig1a_report(&hw));
+    println!("{}", r.report());
+}

@@ -1,0 +1,32 @@
+//! Fig 5(b) regenerator + benchmark: the reduction grid via the
+//! step-simulator and the closed form, including the paper point check.
+
+use bitrom::kvcache::{
+    closed_form_reduction, reduction_sweep, simulate_reduction, PAPER_BUFFERS, PAPER_SEQ_LENS,
+};
+use bitrom::report::fig5b_report;
+use bitrom::util::bench::bench_config;
+
+fn main() {
+    println!("{}", fig5b_report());
+
+    let paper = simulate_reduction(128, 32);
+    assert!((paper - 0.436).abs() < 0.001);
+    println!("paper point (seq 128, 32 buffered): {:.1}% — matches 43.6%\n", paper * 100.0);
+
+    let b = bench_config();
+    let r = b.run("fig5b_grid_simulated", || {
+        reduction_sweep(&PAPER_SEQ_LENS, &PAPER_BUFFERS)
+    });
+    println!("{}", r.report());
+    let r = b.run("fig5b_grid_closed_form", || {
+        let mut acc = 0.0;
+        for &s in &PAPER_SEQ_LENS {
+            for &buf in &PAPER_BUFFERS {
+                acc += closed_form_reduction(s, buf);
+            }
+        }
+        acc
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,57 @@
+//! KV-cache manager benchmarks: decode-step accounting throughput and
+//! DR-eDRAM access costs (the manager runs on the serving hot path, so
+//! its overhead must be negligible vs a PJRT partition execution).
+
+use bitrom::config::{EdramParams, ModelConfig, ServeConfig};
+use bitrom::kvcache::KvCacheManager;
+use bitrom::util::bench::bench_config;
+
+fn main() {
+    let b = bench_config();
+    let model = ModelConfig::sim_tiny();
+    let serve = ServeConfig::default();
+
+    // full-sequence accounting (128 tokens, 6 layers)
+    let r = b.run("kv_manager full 128-token sequence", || {
+        let mut kv = KvCacheManager::new(&model, &serve, EdramParams::default());
+        kv.start_seq(0);
+        kv.prefill(0, 8, 0.0);
+        for step in 0..120usize {
+            let now = (step + 1) as f64 * 0.005;
+            kv.write_token(0, now);
+            kv.read_context(0, now).unwrap();
+        }
+        kv.stats.external_reduction()
+    });
+    println!("{}", r.report());
+
+    // single decode-step accounting at max context
+    let mut kv = KvCacheManager::new(&model, &serve, EdramParams::default());
+    kv.start_seq(0);
+    kv.prefill(0, 8, 0.0);
+    for step in 0..119usize {
+        let now = (step + 1) as f64 * 0.005;
+        kv.write_token(0, now);
+        kv.read_context(0, now).unwrap();
+    }
+    // continue the retention clock from where the setup loop left it —
+    // a time jump past tREF would (correctly) trip the DR check.
+    let mut t = 119.0 * 0.005;
+    let r = b.run("kv_manager read_context @127 tokens", || {
+        t += 0.005;
+        kv.read_context(0, t).unwrap();
+        kv.stats.ondie_reads
+    });
+    println!("{}", r.report());
+
+    // eDRAM raw ops
+    let mut e = bitrom::edram::DrEdram::new(EdramParams::default());
+    e.write(0, 64, 0.0);
+    let mut now = 0.0f64;
+    let r = b.run("edram read (refresh-on-read)", || {
+        now += 1e-4;
+        e.read(0, 64, now).unwrap();
+        e.reads
+    });
+    println!("{}", r.report());
+}

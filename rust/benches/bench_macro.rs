@@ -1,0 +1,63 @@
+//! Macro-simulator hot-path benchmarks (the simulator itself must not
+//! bottleneck the energy studies — EXPERIMENTS.md §Perf L3).
+
+use bitrom::bitnet::{absmax_quantize, TernaryMatrix};
+use bitrom::cirom::{AdderTree, BitRomMacro, EventCounters, Trimla};
+use bitrom::config::MacroGeometry;
+use bitrom::util::bench::bench_config;
+use bitrom::util::rng::Rng;
+
+fn main() {
+    let b = bench_config();
+    let mut rng = Rng::new(42);
+
+    // TriMLA single step
+    let r = b.run("trimla_step (1 MAC)", || {
+        let mut t = Trimla::new(8);
+        let mut ev = EventCounters::new();
+        for i in 0..8 {
+            t.step(((i % 3) as i8) - 1, (i % 15) as i32, &mut ev);
+        }
+        (t.output(), ev.macs)
+    });
+    println!("{}", r.report());
+
+    // adder tree pass
+    let tree = AdderTree::new(128);
+    let partials: Vec<i32> = (0..128).map(|i| (i * 7 % 255) - 127).collect();
+    let r = b.run("adder_tree_reduce (128-in)", || {
+        let mut ev = EventCounters::new();
+        tree.reduce(&partials, &mut ev)
+    });
+    println!("{}", r.report());
+
+    // full-geometry single-channel GEMV, 4b and 8b
+    let geom = MacroGeometry::default();
+    for (bits, label) in [(4usize, "4b"), (8usize, "8b bit-serial")] {
+        let w = TernaryMatrix::random(2048, 1, 0.3, &mut rng);
+        let m = BitRomMacro::fabricate(geom.clone(), &w);
+        let x: Vec<f32> = (0..2048).map(|_| rng.normal() as f32).collect();
+        let acts = absmax_quantize(&x, bits);
+        let r = b.run(&format!("macro_gemv 2048x1 {label}"), || {
+            let mut ev = EventCounters::new();
+            m.gemv(&acts, &mut ev)
+        });
+        println!("{}", r.report());
+    }
+
+    // block GEMV: 2048 inputs x 256 outputs (one partition-scale tile)
+    let w = TernaryMatrix::random(2048, 256, 0.3, &mut rng);
+    let m = BitRomMacro::fabricate(geom.clone(), &w);
+    let x: Vec<f32> = (0..2048).map(|_| rng.normal() as f32).collect();
+    let acts = absmax_quantize(&x, 8);
+    let r = b.run("macro_gemv 2048x256 8b", || {
+        let mut ev = EventCounters::new();
+        m.gemv(&acts, &mut ev)
+    });
+    println!("{}", r.report());
+    let macs = 2048.0 * 256.0;
+    println!(
+        "  -> simulated MAC rate: {:.1} MMAC/s",
+        macs / (r.mean_ns / 1e9) / 1e6
+    );
+}

@@ -1,0 +1,169 @@
+//! Golden ternary GEMV/GEMM — the reference the `cirom::Macro`
+//! simulator is bit-checked against, and the host-side compute used by
+//! tests that don't need the full circuit model.
+
+use super::pack::PackedTrits;
+use super::Trit;
+
+/// A ternary weight matrix in packed storage, row-major
+/// `[rows (fan_in) × cols (fan_out)]` with a per-tensor scale.
+#[derive(Debug, Clone)]
+pub struct TernaryMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    packed: PackedTrits,
+    pub scale: f32,
+}
+
+impl TernaryMatrix {
+    pub fn from_trits(rows: usize, cols: usize, trits: &[Trit], scale: f32) -> Self {
+        assert_eq!(trits.len(), rows * cols, "trit count mismatch");
+        TernaryMatrix {
+            rows,
+            cols,
+            packed: PackedTrits::from_trits(trits),
+            scale,
+        }
+    }
+
+    /// Quantize a float matrix (row-major [rows × cols]).
+    pub fn quantize(rows: usize, cols: usize, w: &[f32]) -> Self {
+        let (trits, scale) = super::quant::absmean_ternary(w);
+        Self::from_trits(rows, cols, &trits, scale)
+    }
+
+    /// Random ternary matrix with given zero probability (sparsity).
+    pub fn random(rows: usize, cols: usize, p_zero: f64, rng: &mut crate::util::rng::Rng) -> Self {
+        let trits: Vec<Trit> = (0..rows * cols).map(|_| rng.trit(p_zero)).collect();
+        TernaryMatrix {
+            rows,
+            cols,
+            packed: PackedTrits::from_trits(&trits),
+            scale: 1.0,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> Trit {
+        self.packed.get(row * self.cols + col)
+    }
+
+    pub fn col_trits(&self, col: usize) -> Vec<Trit> {
+        (0..self.rows).map(|r| self.get(r, col)).collect()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.packed.sparsity()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.bytes()
+    }
+}
+
+/// Integer ternary GEMV: `y[c] = Σ_r x[r] * w[r][c]` — exact i64
+/// accumulation (the hardware's error-free digital computation).
+/// `x` are quantized activation integers.
+pub fn ref_gemv(x: &[i32], w: &TernaryMatrix) -> Vec<i64> {
+    assert_eq!(x.len(), w.rows, "gemv dim mismatch");
+    let mut y = vec![0i64; w.cols];
+    for r in 0..w.rows {
+        let xv = x[r] as i64;
+        if xv == 0 {
+            continue;
+        }
+        for c in 0..w.cols {
+            match w.get(r, c) {
+                0 => {}
+                1 => y[c] += xv,
+                -1 => y[c] -= xv,
+                _ => unreachable!(),
+            }
+        }
+    }
+    y
+}
+
+/// Integer ternary GEMM over a batch of activation rows.
+pub fn ref_gemm(xs: &[Vec<i32>], w: &TernaryMatrix) -> Vec<Vec<i64>> {
+    xs.iter().map(|x| ref_gemv(x, w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn gemv_hand_example() {
+        // w = [[1, -1], [0, 1], [-1, 0]], x = [2, 3, 5]
+        let w = TernaryMatrix::from_trits(3, 2, &[1, -1, 0, 1, -1, 0], 1.0);
+        let y = ref_gemv(&[2, 3, 5], &w);
+        assert_eq!(y, vec![2 - 5, -2 + 3]);
+    }
+
+    #[test]
+    fn gemv_matches_dense_float_property() {
+        check(0x6E34, 100, |g| {
+            let rows = g.size(64);
+            let cols = g.size(32);
+            let trits = g.vec_trits(rows * cols, 0.3);
+            let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+            let x: Vec<i32> = (0..rows)
+                .map(|_| g.rng.i64(-127, 127) as i32)
+                .collect();
+            let y = ref_gemv(&x, &w);
+            // dense float recomputation
+            for c in 0..cols {
+                let mut acc = 0f64;
+                for r in 0..rows {
+                    acc += x[r] as f64 * trits[r * cols + c] as f64;
+                }
+                prop_assert_eq!(y[c], acc as i64);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_activation_rows_are_skipped_consistently() {
+        let w = TernaryMatrix::from_trits(2, 2, &[1, 1, -1, -1], 1.0);
+        assert_eq!(ref_gemv(&[0, 0], &w), vec![0, 0]);
+    }
+
+    #[test]
+    fn quantize_then_gemv_tracks_float_product() {
+        let mut rng = Rng::new(3);
+        let (rows, cols) = (48, 24);
+        let wf: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let w = TernaryMatrix::quantize(rows, cols, &wf);
+        assert!(w.sparsity() > 0.05 && w.sparsity() < 0.8);
+        let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+        let y = ref_gemv(&x, &w);
+        // sanity: result magnitudes bounded by rows * 127
+        assert!(y.iter().all(|&v| v.abs() <= (rows as i64) * 127));
+    }
+
+    #[test]
+    fn random_matrix_sparsity_tracks_p_zero() {
+        let mut rng = Rng::new(5);
+        let w = TernaryMatrix::random(100, 100, 0.4, &mut rng);
+        assert!((w.sparsity() - 0.4).abs() < 0.05);
+    }
+
+    #[test]
+    fn storage_is_packed() {
+        let w = TernaryMatrix::from_trits(10, 10, &[0; 100], 1.0);
+        assert_eq!(w.storage_bytes(), 20); // 100 trits / 5 per byte
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn dim_mismatch_panics() {
+        let w = TernaryMatrix::from_trits(2, 2, &[0, 0, 0, 0], 1.0);
+        ref_gemv(&[1], &w);
+    }
+}

@@ -1,0 +1,20 @@
+//! BitNet ternary-weight substrate: trit types, packed storage, the
+//! absmean/absmax quantizers (bit-identical to `python/compile/quant.py`)
+//! and the golden ternary GEMV the `cirom` macro simulator is verified
+//! against.
+
+mod gemv;
+pub mod pack;
+mod quant;
+
+pub use gemv::{ref_gemm, ref_gemv, TernaryMatrix};
+pub use pack::{pack_trits, unpack_trits, PackedTrits};
+pub use quant::{absmax_quantize, absmean_ternary, QuantizedActs};
+
+/// A ternary weight: -1, 0 or +1, stored as i8.
+pub type Trit = i8;
+
+/// Validity check used across the module.
+pub fn is_trit(v: i8) -> bool {
+    (-1..=1).contains(&v)
+}

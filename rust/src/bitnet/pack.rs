@@ -1,0 +1,201 @@
+//! Packed ternary storage.
+//!
+//! Two packings exist in the system:
+//!
+//! * **BiROMA cell packing** (`pack_trits` pairs): two trits per
+//!   single-transistor cell, base-3 pair code in [0, 8] — the physical
+//!   layout of the ROM array, mirrored by
+//!   `python/compile/quant.pack_trits_base3` (round-trip tested on both
+//!   sides).
+//! * **Dense base-3 packing** (`PackedTrits`): five trits per byte
+//!   (3^5 = 243 ≤ 256) — the minimal-footprint host representation used
+//!   to hold large ROM images in memory; 1.6 bits/trit, within 1% of
+//!   the information-theoretic 1.585.
+
+use super::Trit;
+
+/// Encode a pair of trits into a BiROMA cell code in [0, 8].
+#[inline]
+pub fn cell_encode(even: Trit, odd: Trit) -> u8 {
+    debug_assert!(super::is_trit(even) && super::is_trit(odd));
+    ((even + 1) * 3 + (odd + 1)) as u8
+}
+
+/// Decode a BiROMA cell code back to (even, odd) trits.
+#[inline]
+pub fn cell_decode(code: u8) -> (Trit, Trit) {
+    debug_assert!(code <= 8);
+    ((code / 3) as i8 - 1, (code % 3) as i8 - 1)
+}
+
+/// Pack a trit slice into cell codes (pads odd lengths with 0).
+pub fn pack_trits(trits: &[Trit]) -> Vec<u8> {
+    trits
+        .chunks(2)
+        .map(|c| cell_encode(c[0], if c.len() > 1 { c[1] } else { 0 }))
+        .collect()
+}
+
+/// Unpack cell codes to `n` trits.
+pub fn unpack_trits(cells: &[u8], n: usize) -> Vec<Trit> {
+    let mut out = Vec::with_capacity(n);
+    for &c in cells {
+        let (e, o) = cell_decode(c);
+        out.push(e);
+        if out.len() < n {
+            out.push(o);
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Dense base-3 packed trit vector: 5 trits per byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTrits {
+    data: Vec<u8>,
+    len: usize,
+}
+
+impl PackedTrits {
+    pub fn from_trits(trits: &[Trit]) -> Self {
+        let mut data = Vec::with_capacity((trits.len() + 4) / 5);
+        for chunk in trits.chunks(5) {
+            let mut code = 0u16;
+            // little-endian base-3 digits
+            for (i, &t) in chunk.iter().enumerate() {
+                debug_assert!(super::is_trit(t));
+                code += (t + 1) as u16 * POW3[i];
+            }
+            data.push(code as u8);
+        }
+        PackedTrits {
+            data,
+            len: trits.len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> Trit {
+        assert!(idx < self.len, "trit index {idx} out of bounds {}", self.len);
+        let byte = self.data[idx / 5] as u16;
+        ((byte / POW3[idx % 5]) % 3) as i8 - 1
+    }
+
+    pub fn to_trits(&self) -> Vec<Trit> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Effective storage density in bits per trit.
+    pub fn bits_per_trit(&self) -> f64 {
+        self.data.len() as f64 * 8.0 / self.len as f64
+    }
+
+    /// Fraction of zero trits (TriMLA skip rate of this tensor).
+    pub fn sparsity(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        let zeros = (0..self.len).filter(|&i| self.get(i) == 0).count();
+        zeros as f64 / self.len as f64
+    }
+}
+
+const POW3: [u16; 5] = [1, 3, 9, 27, 81];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn cell_codes_cover_all_pairs() {
+        let mut seen = [false; 9];
+        for e in -1..=1i8 {
+            for o in -1..=1i8 {
+                let c = cell_encode(e, o);
+                assert!(c <= 8);
+                assert!(!seen[c as usize], "duplicate code {c}");
+                seen[c as usize] = true;
+                assert_eq!(cell_decode(c), (e, o));
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_property() {
+        check(0xB17B0A, 200, |g| {
+            let n = g.size(512);
+            let trits = g.vec_trits(n, 0.3);
+            let cells = pack_trits(&trits);
+            prop_assert_eq!(cells.len(), (n + 1) / 2);
+            let back = unpack_trits(&cells, n);
+            prop_assert_eq!(back, trits);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_pack_roundtrip_property() {
+        check(0xDE45E, 200, |g| {
+            let n = g.size(1000);
+            let trits = g.vec_trits(n, 0.4);
+            let packed = PackedTrits::from_trits(&trits);
+            prop_assert_eq!(packed.to_trits(), trits);
+            prop_assert!(
+                packed.bytes() == (n + 4) / 5,
+                "bytes {} for {} trits",
+                packed.bytes(),
+                n
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_density_close_to_entropy() {
+        let trits: Vec<Trit> = (0..10_000).map(|i| ((i % 3) as i8) - 1).collect();
+        let p = PackedTrits::from_trits(&trits);
+        let bpt = p.bits_per_trit();
+        assert!(bpt < 1.61, "bits/trit {bpt}"); // vs 1.585 ideal
+    }
+
+    #[test]
+    fn random_access_matches_sequential() {
+        let trits: Vec<Trit> = vec![1, -1, 0, 0, 1, -1, -1, 1, 0, 1, 1];
+        let p = PackedTrits::from_trits(&trits);
+        for (i, &t) in trits.iter().enumerate() {
+            assert_eq!(p.get(i), t, "index {i}");
+        }
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let p = PackedTrits::from_trits(&[0, 0, 1, -1]);
+        assert!((p.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_get_panics() {
+        PackedTrits::from_trits(&[1]).get(1);
+    }
+}

@@ -1,0 +1,152 @@
+//! Rust mirror of the python quantizers (`compile/quant.py`).
+//!
+//! The macro simulator quantizes its own inputs so it can be exercised
+//! without the python stack; the cross-language tests pin both sides to
+//! the same arithmetic.
+
+use super::Trit;
+
+/// BitNet b1.58 absmean ternary quantization.
+/// Returns `(trits, scale)` with `w ≈ trit * scale`.
+pub fn absmean_ternary(w: &[f32]) -> (Vec<Trit>, f32) {
+    let n = w.len().max(1);
+    let scale = w.iter().map(|x| x.abs()).sum::<f32>() / n as f32 + 1e-8;
+    let trits = w
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-1.0, 1.0) as i8)
+        .collect();
+    (trits, scale)
+}
+
+/// Per-vector absmax quantization to `bits` bits.
+#[derive(Debug, Clone)]
+pub struct QuantizedActs {
+    /// Exact integers in [-qmax, qmax].
+    pub values: Vec<i32>,
+    pub scale: f32,
+    pub bits: usize,
+}
+
+pub fn absmax_quantize(x: &[f32], bits: usize) -> QuantizedActs {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = amax.max(1e-8) / qmax;
+    let values = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32)
+        .collect();
+    QuantizedActs {
+        values,
+        scale,
+        bits,
+    }
+}
+
+impl QuantizedActs {
+    pub fn dequant(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32 * self.scale).collect()
+    }
+
+    /// Split each int value into (hi, lo) 4-bit digits: v = 16*hi + lo,
+    /// lo in [0, 15] — the TriMLA bit-serial decomposition (must match
+    /// `kernels/ref.bit_serial_split`).
+    pub fn bit_serial_digits(&self) -> Vec<(i32, i32)> {
+        self.values
+            .iter()
+            .map(|&v| {
+                let hi = (v as f64 / 16.0).floor() as i32;
+                let lo = v - hi * 16;
+                (hi, lo)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn absmean_scale_matches_hand_example() {
+        // same example as the python test: mean |[1,-2,3,-4]| = 2.5
+        let (trits, scale) = absmean_ternary(&[1.0, -2.0, 3.0, -4.0]);
+        assert!((scale - 2.5).abs() < 1e-6);
+        assert_eq!(trits, vec![0, -1, 1, -1]);
+    }
+
+    #[test]
+    fn absmean_outputs_are_trits() {
+        check(0xAB5, 100, |g| {
+            let n = g.size(256);
+            let w = g.vec_f32(n);
+            let (trits, scale) = absmean_ternary(&w);
+            prop_assert!(scale > 0.0, "scale {scale}");
+            prop_assert!(
+                trits.iter().all(|&t| super::super::is_trit(t)),
+                "non-trit output"
+            );
+            // sign preservation on non-zeros
+            for (t, x) in trits.iter().zip(&w) {
+                if *t != 0 {
+                    prop_assert!(
+                        (*t as f32) * x >= 0.0,
+                        "sign flip: trit {t} for {x}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn absmax_integer_range_property() {
+        check(0xA3A, 100, |g| {
+            let n = g.size(256);
+            let x = g.vec_f32(n);
+            for bits in [4usize, 8] {
+                let q = absmax_quantize(&x, bits);
+                let qmax = (1i32 << (bits - 1)) - 1;
+                prop_assert!(
+                    q.values.iter().all(|&v| v.abs() <= qmax),
+                    "out of range for {bits} bits"
+                );
+                // reconstruction error ≤ scale/2
+                for (v, orig) in q.values.iter().zip(&x) {
+                    let err = (*v as f32 * q.scale - orig).abs();
+                    prop_assert!(
+                        err <= q.scale * 0.5 + 1e-6,
+                        "err {err} > half-step {}",
+                        q.scale * 0.5
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bit_serial_digits_recompose() {
+        check(0xB17, 100, |g| {
+            let n = g.size(128);
+            let x = g.vec_f32(n);
+            let q = absmax_quantize(&x, 8);
+            for ((hi, lo), v) in q.bit_serial_digits().iter().zip(&q.values) {
+                prop_assert_eq!(16 * hi + lo, *v);
+                prop_assert!((0..=15).contains(lo), "lo digit {lo}");
+                prop_assert!((-8..=8).contains(hi), "hi digit {hi}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_vector_quantizes_to_zero() {
+        let q = absmax_quantize(&[0.0; 8], 8);
+        assert!(q.values.iter().all(|&v| v == 0));
+        let (t, _) = absmean_ternary(&[0.0; 8]);
+        assert!(t.iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,111 @@
+//! The shared global adder tree (paper §III-B2).
+//!
+//! Prior digital CiROM gives each small cell group its own adder tree —
+//! the dominant area cost. BitROM's local-then-global schedule lets ONE
+//! tree serve the whole 2048×1024 array: it fires once per channel pass,
+//! after all TriMLAs have finished their local accumulation. The
+//! simulator models the reduction exactly (binary tree, wide enough to
+//! be overflow-free by construction) and counts passes for the energy
+//! model.
+
+use super::events::EventCounters;
+
+#[derive(Debug, Clone)]
+pub struct AdderTree {
+    fan_in: usize,
+}
+
+impl AdderTree {
+    pub fn new(fan_in: usize) -> Self {
+        assert!(fan_in.is_power_of_two(), "tree fan-in must be 2^k");
+        AdderTree { fan_in }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.fan_in
+    }
+
+    /// Tree depth in adder stages (= log2 fan-in).
+    pub fn depth(&self) -> u32 {
+        self.fan_in.trailing_zeros()
+    }
+
+    /// Output width needed for `in_bits`-wide inputs: one extra bit per
+    /// stage. 128 × 8b → 15b, comfortably inside the 32-bit model.
+    pub fn out_bits(&self, in_bits: u32) -> u32 {
+        in_bits + self.depth()
+    }
+
+    /// One global accumulation pass over the TriMLA partials.
+    /// Reduction order is the physical pairwise tree (exact in integer
+    /// arithmetic regardless of order — asserted in tests).
+    pub fn reduce(&self, partials: &[i32], ev: &mut EventCounters) -> i64 {
+        assert_eq!(
+            partials.len(),
+            self.fan_in,
+            "tree fed {} partials, fan-in {}",
+            partials.len(),
+            self.fan_in
+        );
+        ev.tree_passes += 1;
+        let mut level: Vec<i64> = partials.iter().map(|&p| p as i64).collect();
+        while level.len() > 1 {
+            level = level.chunks(2).map(|c| c[0] + c[1]).collect();
+        }
+        level[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn reduces_exactly() {
+        let t = AdderTree::new(8);
+        let mut ev = EventCounters::new();
+        let sum = t.reduce(&[1, -2, 3, -4, 5, -6, 7, -8], &mut ev);
+        assert_eq!(sum, -4);
+        assert_eq!(ev.tree_passes, 1);
+    }
+
+    #[test]
+    fn matches_linear_sum_property() {
+        check(0xADD, 200, |g| {
+            let fan_in = 1usize << g.usize(0, 8);
+            let t = AdderTree::new(fan_in);
+            let partials: Vec<i32> = (0..fan_in)
+                .map(|_| g.rng.i64(-128, 127) as i32)
+                .collect();
+            let mut ev = EventCounters::new();
+            let got = t.reduce(&partials, &mut ev);
+            let want: i64 = partials.iter().map(|&p| p as i64).sum();
+            prop_assert_eq!(got, want);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn depth_and_width() {
+        let t = AdderTree::new(128);
+        assert_eq!(t.depth(), 7);
+        assert_eq!(t.out_bits(8), 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "fan-in")]
+    fn wrong_partial_count_panics() {
+        let t = AdderTree::new(4);
+        let mut ev = EventCounters::new();
+        t.reduce(&[1, 2, 3], &mut ev);
+    }
+
+    #[test]
+    #[should_panic(expected = "2^k")]
+    fn non_pow2_fan_in_rejected() {
+        AdderTree::new(12);
+    }
+}

@@ -1,0 +1,165 @@
+//! MacroBank — shards an arbitrary-size ternary weight matrix across
+//! multiple BitROM macros (the paper maps Falcon3-1B onto ~340 macros
+//! grouped into 6 partitions; this is the intra-partition tiling).
+//!
+//! fan_out tiles map to macro wordline rows (≤ `geom.rows` channels per
+//! macro); fan_in tiles map to the two signal-line sides (≤ 2·cols per
+//! macro). Partial sums across fan_in tiles accumulate in the wide
+//! output registers (exact integer arithmetic).
+
+use crate::bitnet::{QuantizedActs, TernaryMatrix};
+use crate::config::MacroGeometry;
+
+use super::events::EventCounters;
+use super::macro_sim::BitRomMacro;
+
+#[derive(Debug, Clone)]
+pub struct MacroBank {
+    geom: MacroGeometry,
+    /// Tiles indexed [fan_in_tile][fan_out_tile].
+    tiles: Vec<Vec<BitRomMacro>>,
+    fan_in: usize,
+    fan_out: usize,
+    scale: f32,
+}
+
+impl MacroBank {
+    pub fn fabricate(geom: MacroGeometry, w: &TernaryMatrix) -> Self {
+        let in_tile = 2 * geom.cols;
+        let out_tile = geom.rows;
+        let n_in = (w.rows + in_tile - 1) / in_tile;
+        let n_out = (w.cols + out_tile - 1) / out_tile;
+        let mut tiles = Vec::with_capacity(n_in);
+        for ti in 0..n_in {
+            let r0 = ti * in_tile;
+            let r1 = (r0 + in_tile).min(w.rows);
+            let mut row_tiles = Vec::with_capacity(n_out);
+            for tj in 0..n_out {
+                let c0 = tj * out_tile;
+                let c1 = (c0 + out_tile).min(w.cols);
+                let mut trits = Vec::with_capacity((r1 - r0) * (c1 - c0));
+                for r in r0..r1 {
+                    for c in c0..c1 {
+                        trits.push(w.get(r, c));
+                    }
+                }
+                let sub = TernaryMatrix::from_trits(r1 - r0, c1 - c0, &trits, w.scale);
+                row_tiles.push(BitRomMacro::fabricate(geom.clone(), &sub));
+            }
+            tiles.push(row_tiles);
+        }
+        MacroBank {
+            geom,
+            tiles,
+            fan_in: w.rows,
+            fan_out: w.cols,
+            scale: w.scale,
+        }
+    }
+
+    pub fn n_macros(&self) -> usize {
+        self.tiles.iter().map(|r| r.len()).sum()
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.fan_in
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.fan_out
+    }
+
+    /// Full integer GEMV across all tiles.
+    pub fn gemv(&self, acts: &QuantizedActs, ev: &mut EventCounters) -> Vec<i64> {
+        assert_eq!(acts.values.len(), self.fan_in, "bank gemv dim mismatch");
+        let in_tile = 2 * self.geom.cols;
+        let mut y = vec![0i64; self.fan_out];
+        for (ti, row_tiles) in self.tiles.iter().enumerate() {
+            let r0 = ti * in_tile;
+            let r1 = (r0 + in_tile).min(self.fan_in);
+            let sub_acts = QuantizedActs {
+                values: acts.values[r0..r1].to_vec(),
+                scale: acts.scale,
+                bits: acts.bits,
+            };
+            let mut col0 = 0;
+            for m in row_tiles {
+                let part = m.gemv(&sub_acts, ev);
+                for (i, v) in part.into_iter().enumerate() {
+                    y[col0 + i] += v;
+                }
+                col0 += m.fan_out();
+            }
+        }
+        y
+    }
+
+    pub fn gemv_f32(&self, acts: &QuantizedActs, ev: &mut EventCounters) -> Vec<f32> {
+        self.gemv(acts, ev)
+            .into_iter()
+            .map(|v| v as f32 * acts.scale * self.scale)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitnet::{absmax_quantize, ref_gemv};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn small_geom() -> MacroGeometry {
+        MacroGeometry {
+            rows: 16,
+            cols: 8,
+            cols_per_trimla: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn bank_matches_reference_across_tilings() {
+        check(0xBA2C, 40, |g| {
+            let geom = small_geom();
+            // force multi-tile shapes: up to 4 tiles each way
+            let fan_in = g.usize(1, 4 * 2 * geom.cols);
+            let fan_out = g.usize(1, 4 * geom.rows);
+            let trits = g.vec_trits(fan_in * fan_out, 0.3);
+            let w = TernaryMatrix::from_trits(fan_in, fan_out, &trits, 1.0);
+            let bank = MacroBank::fabricate(geom, &w);
+            let x: Vec<f32> = g.vec_f32(fan_in);
+            let acts = absmax_quantize(&x, if g.rng.bool(0.5) { 4 } else { 8 });
+            let mut ev = EventCounters::new();
+            let got = bank.gemv(&acts, &mut ev);
+            prop_assert_eq!(got, ref_gemv(&acts.values, &w));
+            prop_assert_eq!(ev.saturations, 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tile_count_matches_geometry() {
+        let geom = small_geom(); // 16 out × 16 in per macro
+        let mut rng = Rng::new(1);
+        let w = TernaryMatrix::random(33, 17, 0.3, &mut rng);
+        let bank = MacroBank::fabricate(geom, &w);
+        // fan_in 33 → 3 in-tiles (16 each); fan_out 17 → 2 out-tiles
+        assert_eq!(bank.n_macros(), 6);
+    }
+
+    #[test]
+    fn scales_applied_in_f32_path() {
+        let geom = small_geom();
+        let w = TernaryMatrix::from_trits(1, 1, &[-1], 0.25);
+        let bank = MacroBank::fabricate(geom, &w);
+        let acts = QuantizedActs {
+            values: vec![8],
+            scale: 0.5,
+            bits: 4,
+        };
+        let mut ev = EventCounters::new();
+        assert_eq!(bank.gemv_f32(&acts, &mut ev), vec![-8.0 * 0.5 * 0.25]);
+    }
+}

@@ -1,0 +1,207 @@
+//! BiROMA — the Bidirectional ROM Array (paper §III-B2, Fig 4).
+//!
+//! Each single-transistor cell stores two ternary weights by connecting
+//! its source/drain to one of three signal-line levels per side
+//! (½VDD → '0', ¼VDD → '+1', VSS → '−1'). The even (E) and odd (O)
+//! signal-line sides are fully symmetric: either side can act as the
+//! source lines (drive) while the other develops bitline readout —
+//! *bidirectional operation*, which is what doubles the density.
+//!
+//! The simulator stores the cell codes exactly as the mask would fix
+//! them and models readout at trit granularity, counting every read.
+//! Contents are immutable after construction — this is ROM; there is
+//! deliberately NO write method.
+
+use crate::bitnet::pack::{cell_decode, cell_encode};
+use crate::bitnet::Trit;
+
+/// Which signal-line side is being read out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Even,
+    Odd,
+}
+
+#[derive(Debug, Clone)]
+pub struct Biroma {
+    rows: usize,
+    cols: usize,
+    /// Cell codes, row-major; code ∈ [0, 8] encodes (even, odd) trits.
+    cells: Vec<u8>,
+}
+
+impl Biroma {
+    /// "Fabricate" an array from per-cell (even, odd) trit pairs.
+    /// `pairs` is row-major, `rows * cols` entries.
+    pub fn fabricate(rows: usize, cols: usize, pairs: &[(Trit, Trit)]) -> Self {
+        assert_eq!(pairs.len(), rows * cols, "cell count mismatch");
+        let cells = pairs.iter().map(|&(e, o)| cell_encode(e, o)).collect();
+        Biroma { rows, cols, cells }
+    }
+
+    /// Fabricate an all-zero (erased mask) array.
+    pub fn blank(rows: usize, cols: usize) -> Self {
+        Biroma {
+            rows,
+            cols,
+            cells: vec![cell_encode(0, 0); rows * cols],
+        }
+    }
+
+    /// Fabricate from per-output-channel weight rows in the *blocked*
+    /// layout: input `i < cols` is stored on the even side of cell `i`;
+    /// input `i >= cols` on the odd side of cell `i - cols`. Small
+    /// fan-in channels therefore need only the even-side readout pass —
+    /// half the cycles. Unprogrammed cells hold 0.
+    pub fn fabricate_rows(rows: usize, cols: usize, row_trits: &[Vec<Trit>]) -> Self {
+        assert!(row_trits.len() <= rows, "too many rows");
+        let mut cells = vec![cell_encode(0, 0); rows * cols];
+        for (r, trits) in row_trits.iter().enumerate() {
+            assert!(trits.len() <= 2 * cols, "row {r} too wide");
+            for c in 0..cols {
+                let e = trits.get(c).copied().unwrap_or(0);
+                let o = trits.get(cols + c).copied().unwrap_or(0);
+                cells[r * cols + c] = cell_encode(e, o);
+            }
+        }
+        Biroma { rows, cols, cells }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Read one trit: activate WL `row`, configure `side`'s lines as
+    /// bitlines, select cell column `col`. Returns the stored trit.
+    #[inline]
+    pub fn read(&self, row: usize, col: usize, side: Side) -> Trit {
+        assert!(row < self.rows && col < self.cols, "read OOB ({row},{col})");
+        let (e, o) = cell_decode(self.cells[row * self.cols + col]);
+        match side {
+            Side::Even => e,
+            Side::Odd => o,
+        }
+    }
+
+    /// Read a whole row on one side (one WL activation; `cols` trits).
+    pub fn read_row(&self, row: usize, side: Side) -> Vec<Trit> {
+        (0..self.cols).map(|c| self.read(row, c, side)).collect()
+    }
+
+    /// Logical input weight `i` of output-channel `row`, using the
+    /// blocked even/odd layout of `fabricate_rows`.
+    #[inline]
+    pub fn weight(&self, row: usize, i: usize) -> Trit {
+        let (side, col) = if i < self.cols {
+            (Side::Even, i)
+        } else {
+            (Side::Odd, i - self.cols)
+        };
+        self.read(row, col, side)
+    }
+
+    /// Total ternary weights stored.
+    pub fn capacity_weights(&self) -> usize {
+        self.rows * self.cols * 2
+    }
+
+    /// Zero fraction over the whole array.
+    pub fn sparsity(&self) -> f64 {
+        let zeros: usize = self
+            .cells
+            .iter()
+            .map(|&c| {
+                let (e, o) = cell_decode(c);
+                (e == 0) as usize + (o == 0) as usize
+            })
+            .sum();
+        zeros as f64 / self.capacity_weights() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn fabricate_and_read_both_sides() {
+        let pairs = vec![(1i8, -1i8), (0, 1), (-1, 0), (1, 1)];
+        let b = Biroma::fabricate(2, 2, &pairs);
+        assert_eq!(b.read(0, 0, Side::Even), 1);
+        assert_eq!(b.read(0, 0, Side::Odd), -1);
+        assert_eq!(b.read(1, 0, Side::Even), -1);
+        assert_eq!(b.read(1, 1, Side::Odd), 1);
+    }
+
+    #[test]
+    fn sides_are_independent_property() {
+        check(0xB1120, 100, |g| {
+            let rows = g.size(16);
+            let cols = g.size(16);
+            let pairs: Vec<(i8, i8)> = (0..rows * cols)
+                .map(|_| (g.trit(0.3), g.trit(0.3)))
+                .collect();
+            let b = Biroma::fabricate(rows, cols, &pairs);
+            for r in 0..rows {
+                for c in 0..cols {
+                    prop_assert_eq!(b.read(r, c, Side::Even), pairs[r * cols + c].0);
+                    prop_assert_eq!(b.read(r, c, Side::Odd), pairs[r * cols + c].1);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_layout_is_blocked_even_then_odd() {
+        let row: Vec<i8> = vec![1, -1, 0, 1]; // inputs 0..4, cols=2
+        let b = Biroma::fabricate_rows(1, 2, &[row.clone()]);
+        for (i, &t) in row.iter().enumerate() {
+            assert_eq!(b.weight(0, i), t, "input {i}");
+        }
+        // inputs 0,1 live on the even side; 2,3 on the odd side
+        assert_eq!(b.read(0, 0, Side::Even), 1);
+        assert_eq!(b.read(0, 1, Side::Even), -1);
+        assert_eq!(b.read(0, 0, Side::Odd), 0);
+        assert_eq!(b.read(0, 1, Side::Odd), 1);
+    }
+
+    #[test]
+    fn short_rows_pad_with_zero() {
+        let b = Biroma::fabricate_rows(2, 4, &[vec![1, 1, 1]]);
+        assert_eq!(b.weight(0, 3), 0);
+        assert_eq!(b.weight(0, 7), 0); // odd side empty
+        assert_eq!(b.weight(1, 0), 0); // unprogrammed row
+    }
+
+    #[test]
+    fn read_row_matches_point_reads() {
+        let pairs: Vec<(i8, i8)> = (0..12).map(|i| ((i % 3) as i8 - 1, 1)).collect();
+        let b = Biroma::fabricate(3, 4, &pairs);
+        for r in 0..3 {
+            let row = b.read_row(r, Side::Even);
+            for c in 0..4 {
+                assert_eq!(row[c], b.read(r, c, Side::Even));
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_counts_both_sides() {
+        let b = Biroma::fabricate(1, 2, &[(0, 1), (0, 0)]);
+        assert!((b.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "OOB")]
+    fn out_of_bounds_read_panics() {
+        Biroma::blank(2, 2).read(2, 0, Side::Even);
+    }
+}

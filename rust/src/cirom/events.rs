@@ -1,0 +1,95 @@
+//! Energy/activity event counters — the interface between the circuit
+//! simulators and the analytical energy model.
+
+/// Counts of every energy-bearing event during macro execution.
+/// The `energy` module multiplies these by the per-event constants in
+/// `config::EnergyParams` (scaled by voltage) to obtain joules.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EventCounters {
+    /// Ternary weights read from the BiROMA (BL precharge + develop).
+    pub weight_reads: u64,
+    /// TriMLA local accumulates actually performed (EN high).
+    pub accums: u64,
+    /// TriMLA cycles skipped because the weight was zero (EN gated).
+    /// Costs no accumulate energy — the sparsity win.
+    pub skips: u64,
+    /// Global adder-tree passes.
+    pub tree_passes: u64,
+    /// Array clock cycles (column-select steps × sides × serial passes,
+    /// all TriMLAs operating in parallel per cycle). Tracked by the
+    /// macro, not by individual TriMLAs.
+    pub mac_cycles: u64,
+    /// Extra cycles incurred by 8-bit bit-serial mode.
+    pub bitserial_cycles: u64,
+    /// TriMLA 8-bit accumulator saturations (must stay 0 in-spec).
+    pub saturations: u64,
+    /// MAC operations completed (multiply-accumulate pairs, for TOPS).
+    pub macs: u64,
+}
+
+impl EventCounters {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn merge(&mut self, other: &EventCounters) {
+        self.weight_reads += other.weight_reads;
+        self.accums += other.accums;
+        self.skips += other.skips;
+        self.tree_passes += other.tree_passes;
+        self.mac_cycles += other.mac_cycles;
+        self.bitserial_cycles += other.bitserial_cycles;
+        self.saturations += other.saturations;
+        self.macs += other.macs;
+    }
+
+    /// Observed zero-skip rate.
+    pub fn skip_rate(&self) -> f64 {
+        let total = self.accums + self.skips;
+        if total == 0 {
+            0.0
+        } else {
+            self.skips as f64 / total as f64
+        }
+    }
+
+    /// Arithmetic operations for TOPS accounting (2 ops per MAC —
+    /// multiply + add — the convention used by the paper's TOPS/W).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_fields() {
+        let mut a = EventCounters {
+            weight_reads: 1,
+            accums: 2,
+            skips: 3,
+            tree_passes: 4,
+            mac_cycles: 5,
+            bitserial_cycles: 6,
+            saturations: 0,
+            macs: 7,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.weight_reads, 2);
+        assert_eq!(a.macs, 14);
+        assert_eq!(a.ops(), 28);
+    }
+
+    #[test]
+    fn skip_rate() {
+        let c = EventCounters {
+            accums: 70,
+            skips: 30,
+            ..Default::default()
+        };
+        assert!((c.skip_rate() - 0.3).abs() < 1e-12);
+        assert_eq!(EventCounters::new().skip_rate(), 0.0);
+    }
+}

@@ -1,0 +1,321 @@
+//! The complete BitROM macro: BiROMA + 128 TriMLAs + shared adder tree
+//! executing the local-then-global accumulation schedule (paper Fig 4).
+//!
+//! `gemv` is bit-exact against `bitnet::ref_gemv` (tested) while
+//! counting every circuit event — the simulator is simultaneously the
+//! functional model and the activity trace the energy model consumes.
+
+use crate::bitnet::{QuantizedActs, TernaryMatrix, Trit};
+use crate::config::MacroGeometry;
+
+use super::adder_tree::AdderTree;
+use super::biroma::{Biroma, Side};
+use super::events::EventCounters;
+use super::trimla::Trimla;
+
+#[derive(Debug, Clone)]
+pub struct BitRomMacro {
+    geom: MacroGeometry,
+    array: Biroma,
+    tree: AdderTree,
+    /// Dimensions of the weight matrix programmed at fabrication.
+    fan_in: usize,
+    fan_out: usize,
+    scale: f32,
+}
+
+impl BitRomMacro {
+    /// "Fabricate" a macro holding `w` ([fan_in × fan_out], column = one
+    /// output channel = one wordline row).
+    pub fn fabricate(geom: MacroGeometry, w: &TernaryMatrix) -> Self {
+        assert!(
+            w.cols <= geom.rows,
+            "fan_out {} exceeds array rows {}",
+            w.cols,
+            geom.rows
+        );
+        assert!(
+            w.rows <= 2 * geom.cols,
+            "fan_in {} exceeds 2x array cols {}",
+            w.rows,
+            2 * geom.cols
+        );
+        let rows: Vec<Vec<Trit>> = (0..w.cols).map(|c| w.col_trits(c)).collect();
+        let array = Biroma::fabricate_rows(geom.rows, geom.cols, &rows);
+        let tree = AdderTree::new(geom.n_trimla().next_power_of_two());
+        BitRomMacro {
+            fan_in: w.rows,
+            fan_out: w.cols,
+            scale: w.scale,
+            geom,
+            array,
+            tree,
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.fan_in
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.fan_out
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.array.sparsity()
+    }
+
+    /// Integer GEMV through the full circuit model.
+    ///
+    /// `acts.bits` selects the datapath mode: 4-bit runs each side in a
+    /// single pass; 8-bit runs the two-cycle bit-serial schedule
+    /// (low nibble then high digit, recombined as 16·hi + lo).
+    pub fn gemv(&self, acts: &QuantizedActs, ev: &mut EventCounters) -> Vec<i64> {
+        assert_eq!(acts.values.len(), self.fan_in, "gemv dim mismatch");
+        assert!(
+            acts.bits == 4 || acts.bits == 8,
+            "TriMLA supports 4b/8b activations, got {}b",
+            acts.bits
+        );
+        let mut out = Vec::with_capacity(self.fan_out);
+        match acts.bits {
+            4 => {
+                for row in 0..self.fan_out {
+                    out.push(self.channel_pass(row, &acts.values, ev));
+                }
+            }
+            _ => {
+                // bit-serial: x = 16*hi + lo
+                let digits = acts.bit_serial_digits();
+                let lo: Vec<i32> = digits.iter().map(|d| d.1).collect();
+                let hi: Vec<i32> = digits.iter().map(|d| d.0).collect();
+                for row in 0..self.fan_out {
+                    let lo_sum = self.channel_pass(row, &lo, ev);
+                    let cyc_before = ev.mac_cycles;
+                    let hi_sum = self.channel_pass(row, &hi, ev);
+                    ev.bitserial_cycles += ev.mac_cycles - cyc_before;
+                    // shift-and-accumulate in the (wide) output register
+                    out.push(16 * hi_sum + lo_sum);
+                }
+            }
+        }
+        out
+    }
+
+    /// Dequantized GEMV (applies activation + weight scales).
+    pub fn gemv_f32(&self, acts: &QuantizedActs, ev: &mut EventCounters) -> Vec<f32> {
+        self.gemv(acts, ev)
+            .into_iter()
+            .map(|v| v as f32 * acts.scale * self.scale)
+            .collect()
+    }
+
+    /// One full local-then-global pass for one output channel with
+    /// single-digit activations: for each populated side, 8
+    /// column-select cycles of parallel TriMLA accumulation, then ONE
+    /// adder-tree pass; sides accumulate into the (wide) channel
+    /// register.
+    fn channel_pass(&self, row: usize, x: &[i32], ev: &mut EventCounters) -> i64 {
+        let n_tr = self.geom.n_trimla();
+        let cpt = self.geom.cols_per_trimla;
+        let mut channel_total = 0i64;
+
+        for (side_idx, side) in [Side::Even, Side::Odd].into_iter().enumerate() {
+            let base = side_idx * self.geom.cols;
+            if base >= self.fan_in {
+                // side holds no weights for this matrix: the voltage
+                // supply control never precharges it — zero cycles.
+                continue;
+            }
+            let mut trimlas: Vec<Trimla> =
+                (0..n_tr).map(|_| Trimla::new(self.geom.trimla_out_bits)).collect();
+
+            // 8 column-select cycles; all TriMLAs step in parallel.
+            for c in 0..cpt {
+                ev.mac_cycles += 1;
+                for (j, t) in trimlas.iter_mut().enumerate() {
+                    let input = base + j * cpt + c;
+                    if input >= self.fan_in {
+                        continue; // column group beyond fan_in: gated off
+                    }
+                    let w = self.array.read(row, j * cpt + c, side);
+                    t.step(w, x[input], ev);
+                }
+            }
+
+            // one-shot global accumulation over all TriMLA partials
+            let mut partials: Vec<i32> = trimlas.iter().map(|t| t.output()).collect();
+            partials.resize(self.tree.fan_in(), 0);
+            channel_total += self.tree.reduce(&partials, ev);
+        }
+        channel_total
+    }
+
+    /// Array cycles needed for one full GEMV (throughput model).
+    pub fn cycles_per_gemv(&self, act_bits: usize) -> u64 {
+        let sides = if self.fan_in > self.geom.cols { 2 } else { 1 };
+        let serial = if act_bits == 8 { 2 } else { 1 };
+        (self.fan_out * sides * self.geom.cols_per_trimla * serial) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitnet::{absmax_quantize, ref_gemv};
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn small_geom() -> MacroGeometry {
+        MacroGeometry {
+            rows: 32,
+            cols: 16,
+            cols_per_trimla: 8,
+            ..Default::default()
+        }
+    }
+
+    fn random_acts(rng: &mut Rng, n: usize, bits: usize) -> QuantizedActs {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        absmax_quantize(&x, bits)
+    }
+
+    #[test]
+    fn gemv_matches_golden_reference_4bit() {
+        check(0x6433, 60, |g| {
+            let geom = small_geom();
+            let fan_in = g.usize(1, 2 * geom.cols);
+            let fan_out = g.usize(1, geom.rows);
+            let trits = g.vec_trits(fan_in * fan_out, 0.3);
+            let w = TernaryMatrix::from_trits(fan_in, fan_out, &trits, 1.0);
+            let m = BitRomMacro::fabricate(geom, &w);
+            let acts = random_acts(&mut g.rng, fan_in, 4);
+            let mut ev = EventCounters::new();
+            let got = m.gemv(&acts, &mut ev);
+            let want = ref_gemv(&acts.values, &w);
+            prop_assert_eq!(got, want);
+            prop_assert_eq!(ev.saturations, 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemv_matches_golden_reference_8bit_bitserial() {
+        check(0x6488, 60, |g| {
+            let geom = small_geom();
+            let fan_in = g.usize(1, 2 * geom.cols);
+            let fan_out = g.usize(1, geom.rows);
+            let trits = g.vec_trits(fan_in * fan_out, 0.3);
+            let w = TernaryMatrix::from_trits(fan_in, fan_out, &trits, 1.0);
+            let m = BitRomMacro::fabricate(geom, &w);
+            let acts = random_acts(&mut g.rng, fan_in, 8);
+            let mut ev = EventCounters::new();
+            let got = m.gemv(&acts, &mut ev);
+            let want = ref_gemv(&acts.values, &w);
+            prop_assert_eq!(got, want);
+            prop_assert_eq!(ev.saturations, 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_size_macro_single_channel() {
+        // default 2048×1024 geometry, one output channel, fan_in 2048
+        let geom = MacroGeometry::default();
+        let mut rng = Rng::new(42);
+        let w = TernaryMatrix::random(2048, 1, 0.3, &mut rng);
+        let m = BitRomMacro::fabricate(geom, &w);
+        let acts = random_acts(&mut rng, 2048, 8);
+        let mut ev = EventCounters::new();
+        let got = m.gemv(&acts, &mut ev);
+        assert_eq!(got, ref_gemv(&acts.values, &w));
+        assert_eq!(ev.saturations, 0);
+        // 2 sides × 8 col-selects × 2 serial passes = 32 cycles
+        assert_eq!(ev.mac_cycles, 32);
+        assert_eq!(ev.bitserial_cycles, 16);
+        // 2048 weights read twice (lo + hi pass)
+        assert_eq!(ev.weight_reads, 4096);
+        assert_eq!(ev.tree_passes, 4);
+    }
+
+    #[test]
+    fn sparsity_shows_up_as_skips() {
+        let geom = small_geom();
+        let mut rng = Rng::new(7);
+        let w = TernaryMatrix::random(32, 32, 0.5, &mut rng);
+        let m = BitRomMacro::fabricate(geom, &w);
+        let acts = random_acts(&mut rng, 32, 4);
+        let mut ev = EventCounters::new();
+        m.gemv(&acts, &mut ev);
+        let rate = ev.skip_rate();
+        assert!((rate - 0.5).abs() < 0.12, "skip rate {rate}");
+        // dense weights → zero skips
+        let wd = TernaryMatrix::from_trits(4, 4, &[1; 16], 1.0);
+        let md = BitRomMacro::fabricate(small_geom(), &wd);
+        let mut evd = EventCounters::new();
+        md.gemv(&random_acts(&mut rng, 4, 4), &mut evd);
+        assert_eq!(evd.skips, 0);
+    }
+
+    #[test]
+    fn small_fan_in_uses_single_side() {
+        let geom = small_geom(); // cols = 16
+        let mut rng = Rng::new(9);
+        let w = TernaryMatrix::random(16, 8, 0.3, &mut rng); // fits even side
+        let m = BitRomMacro::fabricate(geom, &w);
+        let acts = random_acts(&mut rng, 16, 4);
+        let mut ev = EventCounters::new();
+        m.gemv(&acts, &mut ev);
+        // 8 channels × 1 side × 8 col-selects
+        assert_eq!(ev.mac_cycles, 64);
+        assert_eq!(ev.tree_passes, 8); // one per channel, single side
+        assert_eq!(m.cycles_per_gemv(4), 64);
+    }
+
+    #[test]
+    fn dequantized_gemv_applies_scales() {
+        let geom = small_geom();
+        let w = TernaryMatrix::from_trits(2, 1, &[1, 1], 0.5);
+        let m = BitRomMacro::fabricate(geom, &w);
+        let acts = QuantizedActs {
+            values: vec![3, 4],
+            scale: 2.0,
+            bits: 4,
+        };
+        let mut ev = EventCounters::new();
+        let y = m.gemv_f32(&acts, &mut ev);
+        assert_eq!(y, vec![7.0 * 2.0 * 0.5]);
+    }
+
+    #[test]
+    fn cycles_model_matches_simulation() {
+        let geom = small_geom();
+        let mut rng = Rng::new(11);
+        for (fan_in, bits) in [(16, 4), (32, 4), (16, 8), (32, 8)] {
+            let w = TernaryMatrix::random(fan_in, 8, 0.3, &mut rng);
+            let m = BitRomMacro::fabricate(geom.clone(), &w);
+            let acts = random_acts(&mut rng, fan_in, bits);
+            let mut ev = EventCounters::new();
+            m.gemv(&acts, &mut ev);
+            assert_eq!(
+                ev.mac_cycles,
+                m.cycles_per_gemv(bits),
+                "fan_in {fan_in} bits {bits}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fan_out")]
+    fn oversize_matrix_rejected() {
+        let geom = small_geom();
+        let w = TernaryMatrix::from_trits(1, 33, &[0; 33], 1.0);
+        BitRomMacro::fabricate(geom, &w);
+    }
+}

@@ -1,0 +1,40 @@
+//! Bit-accurate, cycle-approximate simulators of the BitROM macro
+//! circuits (paper §III-B, Fig 4).
+//!
+//! Microarchitecture reconstructed from the paper text:
+//!
+//! * The **BiROMA** array is 2048 rows × 1024 single-transistor cells;
+//!   each cell stores TWO ternary weights (even-side + odd-side). One
+//!   wordline = one *output channel*: its row holds up to 2048 input
+//!   weights (1024 per side, read in two bidirectional passes).
+//! * Each **TriMLA** serves a group of 8 adjacent columns via the column
+//!   selector: per cycle it receives one prefetched ternary weight and
+//!   the matching 4-bit activation digit, and — per the Fig 4 truth
+//!   table — either skips (w = 0, EN gated by the MSB comparator), adds
+//!   (w = +1) or subtracts (w = −1). Its local accumulator is 8-bit;
+//!   with 8 products of 4-bit digits the worst case |Σ| ≤ 8·15 = 120,
+//!   which is why the paper's "8-bit output width is sufficient" —
+//!   the simulator *checks* this instead of assuming it.
+//! * After the 8 column-select cycles (per side), the shared **adder
+//!   tree** performs the single global summation over all 128 TriMLA
+//!   partials ("local-then-global accumulation").
+//! * 8-bit activations run **bit-serial**: low nibble pass then high
+//!   nibble pass, recombined as 16·hi + lo.
+//!
+//! Every weight read, accumulate, skip and tree pass increments
+//! [`EventCounters`]; the `energy` module turns those counts into
+//! joules, which is where the TOPS/W numbers come from.
+
+mod adder_tree;
+mod bank;
+mod biroma;
+mod events;
+mod macro_sim;
+mod trimla;
+
+pub use adder_tree::AdderTree;
+pub use bank::MacroBank;
+pub use biroma::{Biroma, Side};
+pub use events::EventCounters;
+pub use macro_sim::BitRomMacro;
+pub use trimla::{Trimla, TrimlaMode};

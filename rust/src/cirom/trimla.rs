@@ -1,0 +1,218 @@
+//! TriMLA — the Tri-Mode Local Accumulator (paper §III-B2/B3, Fig 4).
+//!
+//! The prefetched ternary weight drives two comparators against the
+//! 1/8·VDD and 3/8·VDD references; their outputs form the (MSB, LSB)
+//! mode code of the truth table:
+//!
+//! | weight | MSB (≠0?) | LSB (sign) | mode     |
+//! |--------|-----------|------------|----------|
+//! |   0    |     0     |     ×      | **skip** (EN low — no toggle) |
+//! |  +1    |     1     |     0      | **add**  |
+//! |  −1    |     1     |     1      | **sub**  |
+//!
+//! The local accumulator is 8-bit signed; the simulator saturates and
+//! *counts* any saturation event so the paper's "8-bit output width is
+//! sufficient to avoid overflow" claim is checked, not assumed.
+
+use crate::bitnet::Trit;
+
+use super::events::EventCounters;
+
+/// Decoded operating mode (the comparator outputs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrimlaMode {
+    Skip,
+    Add,
+    Sub,
+}
+
+impl TrimlaMode {
+    /// The Fig 4 truth table.
+    #[inline]
+    pub fn decode(w: Trit) -> TrimlaMode {
+        match w {
+            0 => TrimlaMode::Skip,
+            1 => TrimlaMode::Add,
+            -1 => TrimlaMode::Sub,
+            _ => panic!("non-ternary weight {w}"),
+        }
+    }
+
+    /// (MSB, LSB) comparator bits for this mode.
+    pub fn comparator_bits(self) -> (bool, bool) {
+        match self {
+            TrimlaMode::Skip => (false, false),
+            TrimlaMode::Add => (true, false),
+            TrimlaMode::Sub => (true, true),
+        }
+    }
+}
+
+/// One local accumulator instance.
+#[derive(Debug, Clone)]
+pub struct Trimla {
+    acc: i32,
+    out_bits: u32,
+}
+
+impl Trimla {
+    pub fn new(out_bits: usize) -> Self {
+        Trimla {
+            acc: 0,
+            out_bits: out_bits as u32,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    /// One MAC cycle: weight-mode decode + gated accumulate of a 4-bit
+    /// activation digit (in [-8, 15]: signed int4 or a bit-serial
+    /// nibble). Saturates at the accumulator width and records events.
+    #[inline]
+    pub fn step(&mut self, w: Trit, x_digit: i32, ev: &mut EventCounters) {
+        debug_assert!(
+            (-8..=15).contains(&x_digit),
+            "activation digit {x_digit} exceeds the 4-bit datapath"
+        );
+        ev.weight_reads += 1;
+        ev.macs += 1;
+        match TrimlaMode::decode(w) {
+            TrimlaMode::Skip => {
+                // EN low: accumulator clock-gated, no energy event.
+                ev.skips += 1;
+            }
+            TrimlaMode::Add => {
+                ev.accums += 1;
+                self.accumulate(x_digit, ev);
+            }
+            TrimlaMode::Sub => {
+                ev.accums += 1;
+                self.accumulate(-x_digit, ev);
+            }
+        }
+    }
+
+    #[inline]
+    fn accumulate(&mut self, delta: i32, ev: &mut EventCounters) {
+        let max = (1i32 << (self.out_bits - 1)) - 1;
+        let min = -(1i32 << (self.out_bits - 1));
+        let next = self.acc + delta;
+        if next > max || next < min {
+            ev.saturations += 1;
+            self.acc = next.clamp(min, max);
+        } else {
+            self.acc = next;
+        }
+    }
+
+    /// The local partial sum handed to the adder tree.
+    pub fn output(&self) -> i32 {
+        self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn truth_table_exact() {
+        assert_eq!(TrimlaMode::decode(0), TrimlaMode::Skip);
+        assert_eq!(TrimlaMode::decode(1), TrimlaMode::Add);
+        assert_eq!(TrimlaMode::decode(-1), TrimlaMode::Sub);
+        assert_eq!(TrimlaMode::Skip.comparator_bits(), (false, false));
+        assert_eq!(TrimlaMode::Add.comparator_bits(), (true, false));
+        assert_eq!(TrimlaMode::Sub.comparator_bits(), (true, true));
+    }
+
+    #[test]
+    fn accumulates_add_sub_skip() {
+        let mut t = Trimla::new(8);
+        let mut ev = EventCounters::new();
+        t.step(1, 5, &mut ev); // +5
+        t.step(-1, 3, &mut ev); // -3
+        t.step(0, 7, &mut ev); // skip
+        assert_eq!(t.output(), 2);
+        assert_eq!(ev.accums, 2);
+        assert_eq!(ev.skips, 1);
+        assert_eq!(ev.macs, 3);
+        assert_eq!(ev.saturations, 0);
+    }
+
+    #[test]
+    fn eight_products_of_nibbles_never_saturate() {
+        // The paper's claim: 8 columns per TriMLA, 4-bit digits →
+        // worst case |Σ| = 8·15 = 120 < 127. Exhaustive worst cases:
+        let mut ev = EventCounters::new();
+        for digit in [15, -8] {
+            let mut t = Trimla::new(8);
+            for _ in 0..8 {
+                t.step(1, digit, &mut ev);
+            }
+            assert_eq!(t.output(), 8 * digit);
+        }
+        for digit in [15, -8] {
+            let mut t = Trimla::new(8);
+            for _ in 0..8 {
+                t.step(-1, digit, &mut ev);
+            }
+            assert_eq!(t.output(), -8 * digit);
+        }
+        assert_eq!(ev.saturations, 0);
+    }
+
+    #[test]
+    fn saturation_detected_beyond_spec() {
+        // 9+ max-magnitude products CAN overflow — the simulator must
+        // detect it (this is exactly why the group size is 8).
+        let mut t = Trimla::new(8);
+        let mut ev = EventCounters::new();
+        for _ in 0..9 {
+            t.step(1, 15, &mut ev);
+        }
+        assert!(ev.saturations > 0);
+        assert_eq!(t.output(), 127); // clamped
+    }
+
+    #[test]
+    fn matches_plain_arithmetic_property() {
+        check(0x7215, 200, |g| {
+            let n = g.usize(1, 8);
+            let mut t = Trimla::new(8);
+            let mut ev = EventCounters::new();
+            let mut expect = 0i32;
+            for _ in 0..n {
+                let w = g.trit(0.3);
+                let x = g.rng.i64(-8, 15) as i32;
+                t.step(w, x, &mut ev);
+                expect += w as i32 * x;
+            }
+            prop_assert_eq!(t.output(), expect);
+            prop_assert_eq!(ev.saturations, 0);
+            prop_assert_eq!(ev.accums + ev.skips, n as u64);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut t = Trimla::new(8);
+        let mut ev = EventCounters::new();
+        t.step(1, 7, &mut ev);
+        t.reset();
+        assert_eq!(t.output(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-ternary")]
+    fn rejects_non_ternary_weight() {
+        let mut t = Trimla::new(8);
+        let mut ev = EventCounters::new();
+        t.step(2, 1, &mut ev);
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system: model architectures, hardware parameters, and
+//! serving settings. All configs are JSON-loadable/savable and carry the
+//! constants the analytical models (energy, area, eDRAM) are built from.
+
+mod hardware;
+mod model;
+mod serve;
+
+pub use hardware::{
+    EdramParams, EnergyParams, HardwareConfig, MacroGeometry, TechNode, BITS_PER_CELL,
+};
+pub use model::ModelConfig;
+pub use serve::ServeConfig;

@@ -1,0 +1,231 @@
+//! Model architecture config — the rust mirror of
+//! `python/compile/configs.py` (kept in sync by the manifest check in
+//! `runtime::manifest`).
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub n_partitions: usize,
+    pub act_bits: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    pub fn layers_per_partition(&self) -> usize {
+        debug_assert_eq!(self.n_layers % self.n_partitions, 0);
+        self.n_layers / self.n_partitions
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Total weight parameter count (embeddings + blocks + head) —
+    /// matches `configs.ModelConfig.param_count` on the python side.
+    pub fn param_count(&self) -> u64 {
+        let (d, f) = (self.d_model as u64, self.d_ff as u64);
+        let kv = self.kv_dim() as u64;
+        let attn = d * d + 2 * d * kv + d * d;
+        let mlp = 3 * d * f;
+        let block = attn + mlp + 2 * d;
+        self.vocab_size as u64 * d * 2 + self.n_layers as u64 * block + d
+    }
+
+    /// Parameters held in the BiROMA arrays (= every linear projection;
+    /// embeddings/norms/head live in the auxiliary processor's memory).
+    pub fn rom_param_count(&self) -> u64 {
+        let (d, f) = (self.d_model as u64, self.d_ff as u64);
+        let kv = self.kv_dim() as u64;
+        self.n_layers as u64 * (d * d + 2 * d * kv + d * d + 3 * d * f)
+    }
+
+    /// KV-cache bytes per token (all layers, f16 entries as deployed).
+    pub fn kv_bytes_per_token(&self, bytes_per_elem: usize) -> u64 {
+        (self.n_layers * 2 * self.kv_dim() * bytes_per_elem) as u64
+    }
+
+    /// MAC operations per generated token (2 ops per MAC: mul+add
+    /// convention used by the TOPS figures). Linear projections only —
+    /// attention itself runs on the auxiliary processor.
+    pub fn ops_per_token(&self) -> u64 {
+        2 * self.rom_param_count()
+    }
+
+    // ---- built-in configs -----------------------------------------------
+
+    /// The paper's deployment target (Falcon3-1B-Instruct, 1.58-bit).
+    pub fn falcon3_1b() -> Self {
+        ModelConfig {
+            name: "falcon3-1b".into(),
+            n_layers: 18,
+            d_model: 2048,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_ff: 8192,
+            vocab_size: 131072,
+            max_seq: 4096,
+            n_partitions: 6,
+            act_bits: 8,
+        }
+    }
+
+    /// The AOT/serving config compiled into `artifacts/`.
+    pub fn sim_tiny() -> Self {
+        ModelConfig {
+            name: "sim-tiny".into(),
+            n_layers: 6,
+            d_model: 128,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 384,
+            vocab_size: 256,
+            max_seq: 128,
+            n_partitions: 6,
+            act_bits: 8,
+        }
+    }
+
+    /// Larger BitNet family members for the Fig 1(a) area sweep; dims
+    /// follow the published Falcon3/LLaMA shapes closely enough for
+    /// area purposes.
+    pub fn named(name: &str) -> Option<Self> {
+        let mk = |name: &str,
+                  n_layers,
+                  d_model,
+                  n_heads,
+                  n_kv_heads,
+                  d_ff,
+                  vocab_size| ModelConfig {
+            name: name.into(),
+            n_layers,
+            d_model,
+            n_heads,
+            n_kv_heads,
+            d_ff,
+            vocab_size,
+            max_seq: 4096,
+            n_partitions: 6,
+            act_bits: 8,
+        };
+        match name {
+            "falcon3-1b" => Some(Self::falcon3_1b()),
+            "sim-tiny" => Some(Self::sim_tiny()),
+            "falcon3-3b" => Some(mk("falcon3-3b", 22, 3072, 12, 4, 9216, 131072)),
+            "falcon3-7b" => Some(mk("falcon3-7b", 28, 3072, 12, 4, 23040, 131072)),
+            "falcon3-10b" => Some(mk("falcon3-10b", 40, 3072, 12, 4, 23040, 131072)),
+            "llama-7b" => Some(mk("llama-7b", 32, 4096, 32, 32, 11008, 32000)),
+            "llama-13b" => Some(mk("llama-13b", 40, 5120, 40, 40, 13824, 32000)),
+            "llama-70b" => Some(mk("llama-70b", 80, 8192, 64, 8, 28672, 32000)),
+            _ => None,
+        }
+    }
+
+    // ---- json ------------------------------------------------------------
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let get = |k: &str| -> anyhow::Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("model config missing field {k:?}"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unnamed")
+                .to_string(),
+            n_layers: get("n_layers")?,
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            d_ff: get("d_ff")?,
+            vocab_size: get("vocab_size")?,
+            max_seq: get("max_seq")?,
+            n_partitions: get("n_partitions")?,
+            act_bits: get("act_bits")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("n_kv_heads", Json::num(self.n_kv_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("n_partitions", Json::num(self.n_partitions as f64)),
+            ("act_bits", Json::num(self.act_bits as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn falcon3_1b_dims() {
+        let c = ModelConfig::falcon3_1b();
+        assert_eq!(c.head_dim(), 256);
+        assert_eq!(c.layers_per_partition(), 3); // paper §V-B
+        assert_eq!(c.kv_dim(), 1024);
+        let p = c.param_count();
+        assert!(
+            (1_200_000_000..2_000_000_000).contains(&p),
+            "param count {p}"
+        );
+    }
+
+    #[test]
+    fn sim_tiny_matches_python() {
+        // cross-checked against compile/configs.py SIM_TINY param_count
+        assert_eq!(ModelConfig::sim_tiny().param_count(), 1_246_848);
+    }
+
+    #[test]
+    fn rom_params_less_than_total() {
+        let c = ModelConfig::falcon3_1b();
+        assert!(c.rom_param_count() < c.param_count());
+        // linear layers dominate a 1B model even with a 131k vocab
+        assert!(c.rom_param_count() as f64 / c.param_count() as f64 > 0.5);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_falcon() {
+        let c = ModelConfig::falcon3_1b();
+        // 18 layers * 2 (K+V) * 1024 * 2B = 73,728 B/token
+        assert_eq!(c.kv_bytes_per_token(2), 73_728);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::falcon3_1b();
+        let j = c.to_json();
+        let c2 = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn named_lookup() {
+        assert!(ModelConfig::named("llama-7b").is_some());
+        assert!(ModelConfig::named("nope").is_none());
+        let l7 = ModelConfig::named("llama-7b").unwrap().param_count();
+        assert!((6_000_000_000..8_000_000_000).contains(&l7), "{l7}");
+    }
+}

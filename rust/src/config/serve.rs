@@ -1,0 +1,130 @@
+//! Serving configuration for the coordinator (paper §V-B deployment:
+//! 6 partitions, up to 6 in-flight batches, sequence length 128 with 32
+//! early tokens buffered on-die).
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Max batches in flight through the partition pipeline (paper: 6).
+    pub max_batches: usize,
+    /// Prefill bucket length — prompts are padded up to this (AOT
+    /// executables have a fixed prefill shape).
+    pub prefill_len: usize,
+    /// Max total sequence length (prompt + generated).
+    pub max_seq: usize,
+    /// Early tokens whose KV lives in DR eDRAM (paper: 32 @ seq 128).
+    pub ondie_tokens: usize,
+    /// Greedy decoding (argmax) vs top-k sampling.
+    pub top_k: usize,
+    /// Sampling seed (ignored for greedy).
+    pub seed: u64,
+    /// Modeled hardware token-between-token time (s) used to advance
+    /// the DR-eDRAM retention clock. The retention argument concerns
+    /// the *accelerator's* timing, not the speed of the CPU emulating
+    /// it — the energy model's Falcon3-1B estimate is ~0.4 ms/token;
+    /// 5 ms is a conservative edge default (still 12x under tREF).
+    pub hw_tbt_s: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batches: 6,
+            prefill_len: 64,
+            max_seq: 128,
+            ondie_tokens: 32,
+            top_k: 1,
+            seed: 0,
+            hw_tbt_s: 0.005,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.max_batches >= 1, "max_batches must be >= 1");
+        anyhow::ensure!(
+            self.prefill_len <= self.max_seq,
+            "prefill_len {} > max_seq {}",
+            self.prefill_len,
+            self.max_seq
+        );
+        anyhow::ensure!(
+            self.ondie_tokens <= self.max_seq,
+            "ondie_tokens {} > max_seq {}",
+            self.ondie_tokens,
+            self.max_seq
+        );
+        anyhow::ensure!(self.top_k >= 1, "top_k must be >= 1");
+        anyhow::ensure!(self.hw_tbt_s > 0.0, "hw_tbt_s must be positive");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_batches", Json::num(self.max_batches as f64)),
+            ("prefill_len", Json::num(self.prefill_len as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("ondie_tokens", Json::num(self.ondie_tokens as f64)),
+            ("top_k", Json::num(self.top_k as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("hw_tbt_s", Json::num(self.hw_tbt_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = ServeConfig::default();
+        let get = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
+        let cfg = ServeConfig {
+            max_batches: get("max_batches", d.max_batches),
+            prefill_len: get("prefill_len", d.prefill_len),
+            max_seq: get("max_seq", d.max_seq),
+            ondie_tokens: get("ondie_tokens", d.ondie_tokens),
+            top_k: get("top_k", d.top_k),
+            seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            hw_tbt_s: j.get("hw_tbt_s").and_then(Json::as_f64).unwrap_or(d.hw_tbt_s),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_deployment() {
+        let c = ServeConfig::default();
+        assert_eq!(c.max_batches, 6);
+        assert_eq!(c.max_seq, 128);
+        assert_eq!(c.ondie_tokens, 32);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = ServeConfig::default();
+        c.prefill_len = 1000;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.max_batches = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ServeConfig {
+            max_batches: 3,
+            prefill_len: 32,
+            max_seq: 64,
+            ondie_tokens: 16,
+            top_k: 4,
+            seed: 99,
+            hw_tbt_s: 0.002,
+        };
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+}

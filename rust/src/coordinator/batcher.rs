@@ -1,0 +1,192 @@
+//! Dynamic batcher: admits queued requests into free pipeline slots
+//! (continuous batching at token granularity — a finished sequence
+//! frees its slot for the next request mid-flight, vLLM-style, bounded
+//! by the paper's 6 in-flight batches).
+
+use std::collections::VecDeque;
+
+use crate::trace::Request;
+
+/// What a pipeline slot is doing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlotState {
+    Free,
+    /// Admitted, prefill not yet executed.
+    NeedsPrefill,
+    /// Decoding; `generated` tokens produced so far.
+    Decoding { generated: usize },
+}
+
+#[derive(Debug)]
+pub struct Slot {
+    pub state: SlotState,
+    pub request: Option<Request>,
+    /// Tokens generated so far (including the prefill's first token).
+    pub output: Vec<i32>,
+    /// Admission timestamp (s).
+    pub admitted_at: f64,
+}
+
+impl Slot {
+    fn free() -> Self {
+        Slot {
+            state: SlotState::Free,
+            request: None,
+            output: Vec::new(),
+            admitted_at: 0.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    slots: Vec<Slot>,
+}
+
+impl Batcher {
+    pub fn new(max_batches: usize) -> Self {
+        Batcher {
+            queue: VecDeque::new(),
+            slots: (0..max_batches).map(|_| Slot::free()).collect(),
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit arrived requests into free slots. Returns admitted slot ids.
+    pub fn admit(&mut self, now: f64) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if slot.state != SlotState::Free {
+                continue;
+            }
+            // FIFO admission of requests whose arrival time has passed
+            match self.queue.front() {
+                Some(r) if r.arrival_s <= now => {
+                    let req = self.queue.pop_front().unwrap();
+                    slot.state = SlotState::NeedsPrefill;
+                    slot.request = Some(req);
+                    slot.output.clear();
+                    slot.admitted_at = now;
+                    admitted.push(i);
+                }
+                _ => break,
+            }
+        }
+        admitted
+    }
+
+    pub fn slot(&self, i: usize) -> &Slot {
+        &self.slots[i]
+    }
+
+    pub fn slot_mut(&mut self, i: usize) -> &mut Slot {
+        &mut self.slots[i]
+    }
+
+    /// Slots currently holding work (prefill or decode).
+    pub fn active_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state != SlotState::Free)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Release a finished slot, returning its request + output.
+    pub fn release(&mut self, i: usize) -> (Request, Vec<i32>, f64) {
+        let slot = std::mem::replace(&mut self.slots[i], Slot::free());
+        (
+            slot.request.expect("releasing empty slot"),
+            slot.output,
+            slot.admitted_at,
+        )
+    }
+
+    pub fn all_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(|s| s.state == SlotState::Free)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: f64) -> Request {
+        Request {
+            id,
+            arrival_s: arrival,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+        }
+    }
+
+    #[test]
+    fn admits_up_to_capacity() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.submit(req(i, 0.0));
+        }
+        let admitted = b.admit(0.0);
+        assert_eq!(admitted, vec![0, 1]);
+        assert_eq!(b.queued(), 3);
+        assert_eq!(b.active_slots(), vec![0, 1]);
+    }
+
+    #[test]
+    fn respects_arrival_times() {
+        let mut b = Batcher::new(4);
+        b.submit(req(0, 0.0));
+        b.submit(req(1, 10.0));
+        assert_eq!(b.admit(0.5).len(), 1);
+        assert_eq!(b.admit(0.6).len(), 0); // #1 hasn't arrived
+        assert_eq!(b.admit(10.5).len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_is_preserved() {
+        let mut b = Batcher::new(1);
+        b.submit(req(7, 0.0));
+        b.submit(req(8, 0.0));
+        b.admit(0.0);
+        assert_eq!(b.slot(0).request.as_ref().unwrap().id, 7);
+        let (r, _, _) = b.release(0);
+        assert_eq!(r.id, 7);
+        b.admit(0.0);
+        assert_eq!(b.slot(0).request.as_ref().unwrap().id, 8);
+    }
+
+    #[test]
+    fn release_frees_capacity() {
+        let mut b = Batcher::new(1);
+        b.submit(req(0, 0.0));
+        b.submit(req(1, 0.0));
+        b.admit(0.0);
+        b.slot_mut(0).output.push(42);
+        let (r0, out, _) = b.release(0);
+        assert_eq!(r0.id, 0);
+        assert_eq!(out, vec![42]);
+        assert_eq!(b.admit(1.0), vec![0]);
+        assert!(!b.all_idle());
+        b.release(0);
+        assert!(b.all_idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty slot")]
+    fn releasing_free_slot_panics() {
+        Batcher::new(1).release(0);
+    }
+}

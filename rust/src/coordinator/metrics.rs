@@ -1,0 +1,88 @@
+//! Serving metrics: TTFT (time to first token), TBT (token-between-
+//! token), throughput, plus the eDRAM-health counters the DR argument
+//! depends on.
+
+use crate::util::stats::{Percentiles, Summary};
+
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub ttft: Percentiles,
+    pub tbt: Percentiles,
+    pub tokens_out: u64,
+    pub requests_done: u64,
+    pub wall_s: f64,
+    pub prefill_time: Summary,
+    pub decode_time: Summary,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn record_ttft(&mut self, s: f64) {
+        self.ttft.add(s);
+    }
+
+    pub fn record_tbt(&mut self, s: f64) {
+        self.tbt.add(s);
+        self.decode_time.add(s);
+    }
+
+    pub fn record_prefill(&mut self, s: f64) {
+        self.prefill_time.add(s);
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.wall_s
+        }
+    }
+
+    /// Max observed TBT — must stay below the eDRAM tREF for the
+    /// refresh-on-read argument to hold (checked by the server).
+    pub fn max_tbt(&mut self) -> f64 {
+        self.tbt.pct(100.0)
+    }
+
+    pub fn report(&mut self) -> String {
+        let max_tbt = self.max_tbt();
+        format!(
+            "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
+             TTFT  p50={:.1}ms p95={:.1}ms\n\
+             TBT   p50={:.2}ms p95={:.2}ms max={:.2}ms",
+            self.requests_done,
+            self.tokens_out,
+            self.wall_s,
+            self.tokens_per_s(),
+            self.ttft.pct(50.0) * 1e3,
+            self.ttft.pct(95.0) * 1e3,
+            self.tbt.pct(50.0) * 1e3,
+            self.tbt.pct(95.0) * 1e3,
+            max_tbt * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = ServeMetrics::new();
+        m.record_ttft(0.100);
+        m.record_tbt(0.010);
+        m.record_tbt(0.020);
+        m.tokens_out = 3;
+        m.wall_s = 0.130;
+        m.requests_done = 1;
+        assert!((m.tokens_per_s() - 23.08).abs() < 0.1);
+        assert!((m.max_tbt() - 0.020).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("requests=1"));
+        assert!(r.contains("TTFT"));
+    }
+}

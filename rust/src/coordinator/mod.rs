@@ -1,0 +1,19 @@
+//! The serving coordinator — the paper's §V-B system layer.
+//!
+//! Requests are admitted by the dynamic batcher into one of
+//! `max_batches` slots; the 6-stage pipeline walks every in-flight
+//! sequence through the macro partitions (one partition per pipeline
+//! stage, all partitions busy on different batches in the same cycle —
+//! "allowing all partitions to operate in parallel and maintain full
+//! macro utilization"); the KV-cache manager routes every KV access to
+//! DR eDRAM or external DRAM as it happens.
+
+mod batcher;
+mod metrics;
+mod pipeline;
+mod server;
+
+pub use batcher::{Batcher, SlotState};
+pub use metrics::ServeMetrics;
+pub use pipeline::{PipelineSchedule, StageOp};
+pub use server::{CompletedRequest, Server};

@@ -1,0 +1,114 @@
+//! External DRAM traffic model — the baseline the paper's 43.6%
+//! reduction claim is measured against.
+//!
+//! The model is a counter set with per-access energy/latency constants
+//! (LPDDR-class, documented in DESIGN.md §5); the KV-cache manager
+//! routes accesses here or to the DR eDRAM and the ratio of the two is
+//! the Fig 5(b) result.
+
+/// LPDDR-class external memory parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramParams {
+    pub read_pj_per_byte: f64,
+    pub write_pj_per_byte: f64,
+    pub latency_ns: f64,
+    pub bandwidth_gb_s: f64,
+}
+
+impl Default for DramParams {
+    fn default() -> Self {
+        DramParams {
+            // ~6 pJ/bit LPDDR4-class interface + array
+            read_pj_per_byte: 48.0,
+            write_pj_per_byte: 52.0,
+            latency_ns: 100.0,
+            bandwidth_gb_s: 8.5,
+        }
+    }
+}
+
+/// Access counters for one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct ExternalDram {
+    pub params: DramParams,
+    pub reads: u64,
+    pub writes: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+impl ExternalDram {
+    pub fn new(params: DramParams) -> Self {
+        ExternalDram {
+            params,
+            reads: 0,
+            writes: 0,
+            read_bytes: 0,
+            write_bytes: 0,
+        }
+    }
+
+    pub fn read(&mut self, bytes: u64) {
+        self.reads += 1;
+        self.read_bytes += bytes;
+    }
+
+    pub fn write(&mut self, bytes: u64) {
+        self.writes += 1;
+        self.write_bytes += bytes;
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        (self.read_bytes as f64 * self.params.read_pj_per_byte
+            + self.write_bytes as f64 * self.params.write_pj_per_byte)
+            * 1e-12
+    }
+
+    /// Transfer time at the configured bandwidth (s).
+    pub fn transfer_time_s(&self) -> f64 {
+        self.total_bytes() as f64 / (self.params.bandwidth_gb_s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut d = ExternalDram::new(DramParams::default());
+        d.read(64);
+        d.read(64);
+        d.write(128);
+        assert_eq!(d.accesses(), 3);
+        assert_eq!(d.total_bytes(), 256);
+    }
+
+    #[test]
+    fn energy_scales_with_bytes() {
+        let mut d = ExternalDram::new(DramParams::default());
+        d.read(1000);
+        let e1 = d.energy_j();
+        d.read(1000);
+        assert!((d.energy_j() - 2.0 * e1).abs() < 1e-18);
+        assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn transfer_time_uses_bandwidth() {
+        let mut d = ExternalDram::new(DramParams {
+            bandwidth_gb_s: 1.0,
+            ..DramParams::default()
+        });
+        d.write(1_000_000_000);
+        assert!((d.transfer_time_s() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,261 @@
+//! DR (Decode-Refresh) eDRAM — the paper's §IV contribution.
+//!
+//! The key observation: once a token's KV is stored, it is read at
+//! *every* subsequent decoding step, and a DRAM read inherently
+//! refreshes the row (WL open → sense amplify → WL close). Therefore,
+//! as long as the Token-Between-Token time stays below the cell
+//! retention time (tREF = 64 ms per JESD79-5C), the KV-cache needs **no
+//! explicit refresh management at all**.
+//!
+//! This simulator makes that argument *checkable* rather than assumed:
+//! every row carries a retention deadline; reads and writes renew it;
+//! reading an expired row is a hard `RetentionError`; and an optional
+//! scrubber counts how many explicit refreshes would have been needed —
+//! zero under a healthy decode loop (tested), nonzero if the loop
+//! stalls past tREF.
+
+use crate::config::EdramParams;
+
+/// Error: a row was read after its retention deadline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetentionError {
+    pub row: usize,
+    pub expired_for_s: f64,
+}
+
+impl std::fmt::Display for RetentionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "eDRAM row {} read {:.3}s past its retention deadline",
+            self.row, self.expired_for_s
+        )
+    }
+}
+
+impl std::error::Error for RetentionError {}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Row {
+    /// Simulation time of the last operation that refreshed the cells
+    /// (write, read, or explicit refresh). `None` = never written.
+    last_refresh: Option<f64>,
+}
+
+/// The DR eDRAM array with access/energy counters.
+#[derive(Debug, Clone)]
+pub struct DrEdram {
+    pub params: EdramParams,
+    rows: Vec<Row>,
+    pub reads: u64,
+    pub writes: u64,
+    pub explicit_refreshes: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    pub retention_failures: u64,
+}
+
+impl DrEdram {
+    pub fn new(params: EdramParams) -> Self {
+        let n_rows = (params.capacity_bytes / params.row_bytes) as usize;
+        DrEdram {
+            params,
+            rows: vec![Row::default(); n_rows],
+            reads: 0,
+            writes: 0,
+            explicit_refreshes: 0,
+            read_bytes: 0,
+            write_bytes: 0,
+            retention_failures: 0,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.params.capacity_bytes
+    }
+
+    /// Write `bytes` into `row` at simulation time `now` (refreshes it).
+    pub fn write(&mut self, row: usize, bytes: u64, now: f64) {
+        assert!(row < self.rows.len(), "eDRAM row {row} out of range");
+        self.rows[row].last_refresh = Some(now);
+        self.writes += 1;
+        self.write_bytes += bytes;
+    }
+
+    /// Read `bytes` from `row` at time `now`. A successful read
+    /// automatically refreshes the row (the DR property). Reading an
+    /// expired or never-written row fails.
+    pub fn read(&mut self, row: usize, bytes: u64, now: f64) -> Result<(), RetentionError> {
+        assert!(row < self.rows.len(), "eDRAM row {row} out of range");
+        match self.rows[row].last_refresh {
+            Some(t) if now - t <= self.params.t_ref_s => {
+                self.rows[row].last_refresh = Some(now); // refresh-on-read
+                self.reads += 1;
+                self.read_bytes += bytes;
+                Ok(())
+            }
+            Some(t) => {
+                self.retention_failures += 1;
+                Err(RetentionError {
+                    row,
+                    expired_for_s: now - t - self.params.t_ref_s,
+                })
+            }
+            None => {
+                self.retention_failures += 1;
+                Err(RetentionError {
+                    row,
+                    expired_for_s: f64::INFINITY,
+                })
+            }
+        }
+    }
+
+    /// Explicit refresh of one row (the fallback a conventional eDRAM
+    /// controller would issue). Counted separately so experiments can
+    /// show the DR scheme needs zero of these during healthy decoding.
+    pub fn explicit_refresh(&mut self, row: usize, now: f64) {
+        assert!(row < self.rows.len());
+        self.rows[row].last_refresh = Some(now);
+        self.explicit_refreshes += 1;
+    }
+
+    /// Scrub pass: explicitly refresh every live row whose deadline
+    /// would expire before `now + horizon`. Returns how many refreshes
+    /// were issued. A conventional controller runs this continuously;
+    /// under DR decoding it should find nothing to do.
+    pub fn scrub(&mut self, now: f64, horizon: f64) -> u64 {
+        let mut issued = 0;
+        for i in 0..self.rows.len() {
+            if let Some(t) = self.rows[i].last_refresh {
+                if now + horizon - t > self.params.t_ref_s {
+                    self.explicit_refresh(i, now);
+                    issued += 1;
+                }
+            }
+        }
+        issued
+    }
+
+    /// Seconds of retention slack remaining for `row` at `now`
+    /// (negative = expired).
+    pub fn slack(&self, row: usize, now: f64) -> Option<f64> {
+        self.rows[row]
+            .last_refresh
+            .map(|t| self.params.t_ref_s - (now - t))
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        (self.read_bytes as f64 * self.params.read_pj_per_byte
+            + self.write_bytes as f64 * self.params.write_pj_per_byte
+            + self.explicit_refreshes as f64 * self.params.refresh_pj_per_row)
+            * 1e-12
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DrEdram {
+        DrEdram::new(EdramParams {
+            capacity_bytes: 64 * 16,
+            row_bytes: 64,
+            t_ref_s: 0.064,
+            ..EdramParams::default()
+        })
+    }
+
+    #[test]
+    fn write_then_read_within_retention_ok() {
+        let mut e = small();
+        e.write(3, 64, 0.0);
+        assert!(e.read(3, 64, 0.050).is_ok());
+        assert_eq!(e.reads, 1);
+        assert_eq!(e.writes, 1);
+    }
+
+    #[test]
+    fn read_refreshes_the_row() {
+        // chain of reads each 50ms apart stays alive indefinitely even
+        // though total elapsed time >> tREF — the DR property.
+        let mut e = small();
+        e.write(0, 64, 0.0);
+        for step in 1..=20 {
+            let now = step as f64 * 0.050;
+            assert!(e.read(0, 64, now).is_ok(), "step {step}");
+        }
+        assert_eq!(e.retention_failures, 0);
+        assert_eq!(e.explicit_refreshes, 0);
+    }
+
+    #[test]
+    fn expired_read_fails() {
+        let mut e = small();
+        e.write(1, 64, 0.0);
+        let err = e.read(1, 64, 0.065).unwrap_err();
+        assert_eq!(err.row, 1);
+        assert!(err.expired_for_s > 0.0);
+        assert_eq!(e.retention_failures, 1);
+    }
+
+    #[test]
+    fn never_written_read_fails() {
+        let mut e = small();
+        assert!(e.read(2, 64, 0.0).is_err());
+    }
+
+    #[test]
+    fn scrub_finds_nothing_under_healthy_cadence() {
+        let mut e = small();
+        e.write(0, 64, 0.0);
+        e.write(1, 64, 0.0);
+        let _ = e.read(0, 64, 0.030);
+        let _ = e.read(1, 64, 0.030);
+        assert_eq!(e.scrub(0.040, 0.010), 0);
+    }
+
+    #[test]
+    fn scrub_rescues_stale_rows() {
+        let mut e = small();
+        e.write(0, 64, 0.0);
+        let issued = e.scrub(0.060, 0.010); // would expire by 0.070
+        assert_eq!(issued, 1);
+        assert!(e.read(0, 64, 0.070).is_ok()); // rescued
+        assert_eq!(e.explicit_refreshes, 1);
+    }
+
+    #[test]
+    fn slack_decreases_with_time() {
+        let mut e = small();
+        e.write(0, 64, 0.0);
+        let s1 = e.slack(0, 0.010).unwrap();
+        let s2 = e.slack(0, 0.020).unwrap();
+        assert!(s1 > s2 && s2 > 0.0);
+        assert!(e.slack(1, 0.0).is_none());
+    }
+
+    #[test]
+    fn energy_counts_refreshes_separately() {
+        let mut e = small();
+        e.write(0, 64, 0.0);
+        let base = e.energy_j();
+        e.explicit_refresh(0, 0.01);
+        assert!(e.energy_j() > base);
+    }
+
+    #[test]
+    fn capacity_rows() {
+        let e = DrEdram::new(EdramParams::default());
+        // 13.5 MB / 64 B rows
+        assert_eq!(e.n_rows() as u64, 13_500_000 / 64);
+    }
+}

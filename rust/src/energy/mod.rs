@@ -1,0 +1,14 @@
+//! Analytical energy / area / performance model.
+//!
+//! Converts `cirom::EventCounters` activity into joules using the
+//! calibrated per-event constants (`config::EnergyParams`), computes
+//! TOPS/W at any operating voltage, bit density and silicon area at any
+//! node — the machinery behind Table III and Fig 1(a). See
+//! `config::hardware` module docs for exactly which constants are
+//! fitted vs derived.
+
+mod area;
+mod model;
+
+pub use area::{area_estimate, AreaEstimate, ModelPoint};
+pub use model::{EnergyBreakdown, EnergyModel, PerfEstimate};

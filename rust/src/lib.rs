@@ -1,0 +1,33 @@
+//! # BitROM — weight reload-free CiROM architecture for 1.58-bit LLMs
+//!
+//! Full-system reproduction of *BitROM: Weight Reload-Free CiROM
+//! Architecture Towards Billion-Parameter 1.58-bit LLM Inference*
+//! (ASP-DAC 2026). See DESIGN.md for the system inventory and the
+//! per-experiment index, EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, weights
+//!   baked as constants = the ROM mask set) via the PJRT C API.
+//! * [`coordinator`] — the serving layer: dynamic batcher and the
+//!   6-stage macro-partition pipeline (paper §V-B).
+//! * [`cirom`] — bit-accurate simulators of the paper's circuits:
+//!   BiROMA, TriMLA, the shared adder tree.
+//! * [`edram`] / [`dram`] / [`kvcache`] — decoding-aware KV-cache
+//!   management with the DR-eDRAM refresh-on-read argument checked.
+//! * [`energy`] — analytical energy/area model (Table III, Fig 1a).
+//! * [`util`] — offline substrates (json, args, rng, stats, bench,
+//!   property-check harness, tables).
+
+pub mod bitnet;
+pub mod cirom;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod edram;
+pub mod energy;
+pub mod kvcache;
+pub mod lora;
+pub mod report;
+pub mod runtime;
+pub mod trace;
+pub mod util;

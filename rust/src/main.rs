@@ -1,0 +1,232 @@
+//! `bitrom` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve      run a request trace through the partition pipeline
+//!   generate   single-prompt greedy generation (sanity path)
+//!   report     regenerate paper tables/figures from the simulators
+//!   verify     check the runtime against the python golden trace
+//!   info       print artifact/config summary
+
+use std::path::PathBuf;
+
+use bitrom::config::{HardwareConfig, ServeConfig};
+use bitrom::coordinator::Server;
+use bitrom::report::{fig1a_report, fig5a_report, fig5b_report, table3_report};
+use bitrom::runtime::{Manifest, ModelExecutor};
+use bitrom::trace::{generate, TraceConfig};
+use bitrom::util::args::ArgParser;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    let code = match cmd.as_str() {
+        "serve" => cmd_serve(argv),
+        "generate" => cmd_generate(argv),
+        "report" => cmd_report(argv),
+        "verify" => cmd_verify(argv),
+        "info" => cmd_info(argv),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+    .map_or_else(
+        |e: anyhow::Error| {
+            eprintln!("error: {e:#}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "bitrom — weight reload-free CiROM serving for 1.58-bit LLMs\n\n\
+         USAGE: bitrom <command> [options]\n\n\
+         COMMANDS:\n\
+         \x20 serve     run a synthetic request trace through the 6-stage pipeline\n\
+         \x20 generate  greedy-generate from a prompt (token ids)\n\
+         \x20 report    print paper tables/figures (--table3 --fig1a --fig5a --fig5b)\n\
+         \x20 verify    replay the python golden trace and compare\n\
+         \x20 info      artifact + config summary\n\n\
+         Artifacts default to ./artifacts (override with BITROM_ARTIFACTS\n\
+         or --artifacts). Build them with `make artifacts`."
+    );
+}
+
+fn artifacts_dir(args: &bitrom::util::args::Args) -> PathBuf {
+    match args.get("artifacts") {
+        Some(p) if !p.is_empty() => PathBuf::from(p),
+        _ => Manifest::default_dir(),
+    }
+}
+
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let p = ArgParser::new("bitrom serve", "run a request trace through the pipeline")
+        .opt("artifacts", "", "artifact directory")
+        .opt("requests", "12", "number of requests")
+        .opt("batches", "6", "max in-flight batches")
+        .opt("gen", "32", "max new tokens per request")
+        .opt("rate", "0", "arrival rate (req/s, 0 = closed batch)")
+        .opt("seed", "1", "trace seed")
+        .flag("verbose", "per-request output");
+    let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
+
+    let exec = ModelExecutor::load(&artifacts_dir(&args))?;
+    println!(
+        "loaded {} artifacts in {:.2}s (model {}, {} partitions)",
+        exec.manifest.artifacts.len(),
+        exec.load_time_s,
+        exec.manifest.model.name,
+        exec.n_partitions()
+    );
+    let serve = ServeConfig {
+        max_batches: args.usize("batches"),
+        seed: args.u64("seed"),
+        ..ServeConfig::default()
+    };
+    let trace = TraceConfig {
+        n_requests: args.usize("requests"),
+        gen_len_min: args.usize("gen").min(8),
+        gen_len_max: args.usize("gen"),
+        arrival_rate: args.f64("rate"),
+        seed: args.u64("seed"),
+        vocab_size: exec.manifest.model.vocab_size,
+        ..TraceConfig::default()
+    };
+    let mut server = Server::new(exec, serve)?;
+    let (done, mut metrics) = server.run_trace(generate(&trace))?;
+    if args.flag("verbose") {
+        for r in &done {
+            println!(
+                "req {:>3}: prompt {:>2} tokens -> {} generated (ttft {:.1} ms)",
+                r.id,
+                r.prompt_len,
+                r.tokens.len(),
+                r.ttft_s * 1e3
+            );
+        }
+    }
+    println!("{}", metrics.report());
+    let kv = server.kv();
+    println!(
+        "KV traffic: on-die {} / external {} accesses ({} external reduction); \
+         eDRAM explicit refreshes: {}",
+        kv.stats.ondie_reads + kv.stats.ondie_writes,
+        kv.stats.external_accesses(),
+        bitrom::util::table::fmt_pct(kv.stats.external_reduction()),
+        kv.edram().explicit_refreshes,
+    );
+    Ok(())
+}
+
+fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
+    let p = ArgParser::new("bitrom generate", "greedy generation from a token-id prompt")
+        .opt("artifacts", "", "artifact directory")
+        .opt("prompt", "1,5,17,42", "comma-separated token ids")
+        .opt("n", "16", "tokens to generate");
+    let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
+    let exec = ModelExecutor::load(&artifacts_dir(&args))?;
+    let prompt: Vec<i32> = args
+        .str("prompt")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let out = exec.generate_greedy(&prompt, args.usize("n"))?;
+    println!("prompt:    {prompt:?}");
+    println!("generated: {out:?}");
+    Ok(())
+}
+
+fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
+    let p = ArgParser::new("bitrom report", "regenerate paper tables/figures")
+        .opt("artifacts", "", "artifact directory (for measured sparsity)")
+        .opt("sparsity", "0.30", "ROM sparsity for the energy model")
+        .flag("table3", "Table III comparison")
+        .flag("fig1a", "Fig 1(a) area sweep")
+        .flag("fig5a", "Fig 5(a) KV access analysis")
+        .flag("fig5b", "Fig 5(b) DRAM reduction grid")
+        .flag("all", "everything");
+    let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
+    let all = args.flag("all")
+        || !(args.flag("table3") || args.flag("fig1a") || args.flag("fig5a") || args.flag("fig5b"));
+
+    // prefer the measured ROM sparsity if artifacts exist
+    let sparsity = Manifest::load(&artifacts_dir(&args))
+        .map(|m| m.rom_sparsity)
+        .unwrap_or_else(|_| args.f64("sparsity"));
+
+    if all || args.flag("table3") {
+        println!("{}", table3_report(sparsity));
+    }
+    if all || args.flag("fig1a") {
+        println!("{}", fig1a_report(&HardwareConfig::default()));
+    }
+    if all || args.flag("fig5a") {
+        println!("{}", fig5a_report(16));
+    }
+    if all || args.flag("fig5b") {
+        println!("{}", fig5b_report());
+    }
+    Ok(())
+}
+
+fn cmd_verify(argv: Vec<String>) -> anyhow::Result<()> {
+    let p = ArgParser::new("bitrom verify", "replay the python golden trace")
+        .opt("artifacts", "", "artifact directory");
+    let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
+    let exec = ModelExecutor::load(&artifacts_dir(&args))?;
+    let golden = exec
+        .manifest
+        .golden
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("manifest has no golden trace"))?;
+
+    let (_, logits) = exec.prefill(&golden.prompt)?;
+    let mut max_err = 0f32;
+    for (a, b) in logits.data.iter().zip(&golden.prefill_last_logits) {
+        max_err = max_err.max((a - b).abs());
+    }
+    println!("prefill logits max |err| vs python: {max_err:.2e}");
+    anyhow::ensure!(max_err < 2e-3, "prefill logits diverge from python");
+
+    let got = exec.generate_greedy(&golden.prompt, golden.generated.len())?;
+    println!("python tokens: {:?}", golden.generated);
+    println!("rust tokens:   {got:?}");
+    anyhow::ensure!(got == golden.generated, "golden token mismatch");
+    println!("verify OK — rust runtime reproduces the python model exactly");
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
+    let p = ArgParser::new("bitrom info", "artifact + config summary")
+        .opt("artifacts", "", "artifact directory");
+    let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
+    let m = Manifest::load(&artifacts_dir(&args))?;
+    println!("model:        {}", m.model.name);
+    println!("parameters:   {}", m.model.param_count());
+    println!("partitions:   {} x {} layers", m.model.n_partitions, m.model.layers_per_partition());
+    println!("prefill len:  {}", m.prefill_len);
+    println!("max seq:      {}", m.model.max_seq);
+    println!("ROM sparsity: {:.2}%", m.rom_sparsity * 100.0);
+    println!("pallas:       {}", m.pallas_kernel);
+    println!("trained ckpt: {}", m.trained_checkpoint);
+    println!("artifacts:    {}", m.artifacts.len());
+    let hw = HardwareConfig::default();
+    println!(
+        "bit density:  {:.0} kb/mm2 @65nm ({} macros for falcon3-1b)",
+        hw.geometry.bit_density_kb_mm2(bitrom::config::TechNode::N65),
+        hw.macros_for_weights(bitrom::config::ModelConfig::falcon3_1b().rom_param_count()),
+    );
+    Ok(())
+}

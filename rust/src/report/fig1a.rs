@@ -1,0 +1,67 @@
+//! Fig 1(a): silicon-area estimation of CiROM architectures across
+//! model sizes and fabrication nodes.
+
+use crate::config::{HardwareConfig, ModelConfig, TechNode};
+use crate::energy::{area_estimate, ModelPoint};
+use crate::util::table::Table;
+
+/// The model sweep of Fig 1(a): CNN-era baselines through LLaMA-70B in
+/// fp16 CiROM cells, plus the ternary BitNet points that motivate the
+/// paper.
+pub fn fig1a_points() -> Vec<ModelPoint> {
+    let mut pts = vec![
+        ModelPoint::fp16("resnet-56 (fp16)", 850_000),
+        ModelPoint::fp16("bert-base (fp16)", 110_000_000),
+    ];
+    for name in ["llama-7b", "llama-13b", "llama-70b"] {
+        let cfg = ModelConfig::named(name).unwrap();
+        pts.push(ModelPoint::fp16(
+            Box::leak(format!("{name} (fp16)").into_boxed_str()),
+            cfg.param_count(),
+        ));
+    }
+    let f1 = ModelConfig::falcon3_1b();
+    pts.push(ModelPoint::ternary("bitnet-falcon3-1b (1.58b)", f1.param_count()));
+    let f3 = ModelConfig::named("falcon3-3b").unwrap();
+    pts.push(ModelPoint::ternary("bitnet-falcon3-3b (1.58b)", f3.param_count()));
+    pts
+}
+
+pub fn fig1a_report(hw: &HardwareConfig) -> String {
+    let mut t = Table::new("Fig 1(a) — CiROM silicon area (cm²) by model and node")
+        .header(&["Model", "Params", "65nm", "28nm", "14nm", "Feasible@14nm"]);
+    for p in fig1a_points() {
+        let a65 = area_estimate(hw, &p, TechNode::N65);
+        let a28 = area_estimate(hw, &p, TechNode::N28);
+        let a14 = area_estimate(hw, &p, TechNode::N14);
+        t.row(&[
+            p.name.clone(),
+            crate::util::table::fmt_si(p.params as f64),
+            format!("{:.1}", a65.rom_cm2),
+            format!("{:.1}", a28.rom_cm2),
+            format!("{:.2}", a14.rom_cm2),
+            if a14.rom_cm2 < 20.0 { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_reproduces_fig1a_shape() {
+        let s = fig1a_report(&HardwareConfig::default());
+        // LLaMA rows infeasible, BitNet rows feasible — the paper's point
+        assert!(s.contains("llama-7b"));
+        assert!(s.contains("NO"));
+        assert!(s.contains("bitnet-falcon3-1b"));
+        assert!(s.lines().filter(|l| l.contains("| yes")).count() >= 2);
+    }
+
+    #[test]
+    fn has_all_seven_models() {
+        assert_eq!(fig1a_points().len(), 7);
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig 5(a)/(b): KV-cache behaviour analysis and external-DRAM access
+//! reduction.
+
+use crate::kvcache::{reduction_sweep, simulate_reduction, PAPER_BUFFERS, PAPER_SEQ_LENS};
+use crate::util::table::{fmt_pct, Table};
+
+/// Fig 5(a): per-step read/write counts for a short sequence — the
+/// analysis that motivates buffering early tokens.
+pub fn fig5a_report(seq_len: usize) -> String {
+    let mut t = Table::new(&format!(
+        "Fig 5(a) — KV-cache accesses per decode step (seq {seq_len})"
+    ))
+    .header(&["step", "writes", "reads", "cumulative reads of token 0"]);
+    let mut cum0 = 0u64;
+    for step in 0..seq_len {
+        if step > 0 {
+            cum0 += 1; // token 0 is read at every step after it exists
+        }
+        t.row(&[
+            step.to_string(),
+            "1".to_string(),
+            step.to_string(),
+            cum0.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 5(b): the reduction grid with the paper's operating point marked.
+pub fn fig5b_report() -> String {
+    let pts = reduction_sweep(&PAPER_SEQ_LENS, &PAPER_BUFFERS);
+    let mut t = Table::new(
+        "Fig 5(b) — reduction in external DRAM access (rows: on-die tokens; cols: seq len)",
+    )
+    .header(&["buffered\\seq", "32", "64", "128", "256"]);
+    for &b in &PAPER_BUFFERS {
+        let mut row = vec![b.to_string()];
+        for &s in &PAPER_SEQ_LENS {
+            let p = pts
+                .iter()
+                .find(|p| p.seq_len == s && p.ondie_tokens == b)
+                .unwrap();
+            let mark = if s == 128 && b == 32 { " *" } else { "" };
+            row.push(format!("{}{}", fmt_pct(p.reduction), mark));
+        }
+        t.row(&row);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "* paper operating point: {} (paper reports 43.6%)\n",
+        fmt_pct(simulate_reduction(128, 32))
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5b_contains_paper_point() {
+        let s = fig5b_report();
+        assert!(s.contains("43.6% *"), "{s}");
+        assert!(s.contains("paper reports 43.6%"));
+    }
+
+    #[test]
+    fn fig5a_counts_grow_linearly() {
+        let s = fig5a_report(8);
+        // step 7 row: reads = 7
+        assert!(s.lines().any(|l| l.starts_with("| 7 ") && l.contains("| 7 ")));
+    }
+}

@@ -1,0 +1,11 @@
+//! Paper table/figure renderers — each function regenerates one
+//! published artifact from the simulators (see DESIGN.md §4 for the
+//! experiment index).
+
+mod fig1a;
+mod fig5b;
+mod table3;
+
+pub use fig1a::fig1a_report;
+pub use fig5b::{fig5a_report, fig5b_report};
+pub use table3::{table3_report, Table3Row};

@@ -1,0 +1,202 @@
+//! `artifacts/manifest.json` — the contract between the python compile
+//! path and the rust runtime. The loader validates shapes and hashes so
+//! a stale or mismatched artifact directory fails fast instead of
+//! producing garbage logits.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+/// The golden trace the python side recorded (integration oracle).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub prefill_last_logits: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub prefill_len: usize,
+    pub weight_seed: u64,
+    pub rom_sparsity: f64,
+    pub pallas_kernel: bool,
+    pub trained_checkpoint: bool,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub golden: Option<Golden>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))
+            .context("loading artifacts manifest (run `make artifacts`)")?;
+        let model = ModelConfig::from_json(
+            j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?,
+        )?;
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|(name, info)| {
+                Ok(ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(
+                        info.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+                    ),
+                    sha256: info
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    bytes: info.get("bytes").and_then(Json::as_i64).unwrap_or(0) as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let golden = j.get("golden").map(|g| -> Result<Golden> {
+            let ints = |k: &str| -> Result<Vec<i32>> {
+                Ok(g.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("golden missing {k}"))?
+                    .iter()
+                    .filter_map(Json::as_i64)
+                    .map(|v| v as i32)
+                    .collect())
+            };
+            Ok(Golden {
+                prompt: ints("prompt")?,
+                generated: ints("generated")?,
+                prefill_last_logits: g
+                    .get("prefill_last_logits")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .map(|v| v as f32)
+                    .collect(),
+            })
+        });
+        let golden = match golden {
+            Some(g) => Some(g?),
+            None => None,
+        };
+
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            prefill_len: j
+                .get("prefill_len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing prefill_len"))?,
+            weight_seed: j.get("weight_seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            rom_sparsity: j.get("rom_sparsity").and_then(Json::as_f64).unwrap_or(0.0),
+            pallas_kernel: j
+                .get("pallas_kernel")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            trained_checkpoint: j
+                .get("trained_checkpoint")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            artifacts,
+            golden,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural validation: every expected entry point present, every
+    /// file on disk.
+    pub fn validate(&self) -> Result<()> {
+        let mut expected: Vec<String> = vec![
+            "embed_prefill".into(),
+            "embed_decode".into(),
+            "head_prefill".into(),
+            "head_decode".into(),
+        ];
+        for p in 0..self.model.n_partitions {
+            expected.push(format!("part{p}_prefill"));
+            expected.push(format!("part{p}_decode"));
+        }
+        for name in &expected {
+            let info = self
+                .artifacts
+                .iter()
+                .find(|a| &a.name == name)
+                .ok_or_else(|| anyhow!("manifest missing artifact {name}"))?;
+            anyhow::ensure!(
+                info.file.exists(),
+                "artifact file missing: {} (run `make artifacts`)",
+                info.file.display()
+            );
+        }
+        anyhow::ensure!(
+            self.prefill_len <= self.model.max_seq,
+            "prefill_len exceeds max_seq"
+        );
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))
+    }
+
+    /// Default artifacts dir: `$BITROM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("BITROM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the workspace root
+        Manifest::default_dir()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.name, "sim-tiny");
+        assert_eq!(m.model.n_partitions, 6);
+        assert!(m.artifacts.len() >= 16, "{}", m.artifacts.len());
+        assert!(m.rom_sparsity > 0.1 && m.rom_sparsity < 0.8);
+        let g = m.golden.as_ref().expect("golden trace present");
+        assert!(!g.prompt.is_empty());
+        assert_eq!(g.prefill_last_logits.len(), m.model.vocab_size);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

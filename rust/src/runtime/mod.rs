@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO artifacts (the "mask set") once at
+//! startup and executes them from the serving hot path. Python is never
+//! involved at runtime — the weights live inside the compiled
+//! executables as constants, which is the CiROM deployment model.
+
+mod manifest;
+mod model_exec;
+mod tensor;
+
+pub use manifest::{ArtifactInfo, Manifest};
+pub use model_exec::{DecodeState, ModelExecutor};
+pub use tensor::TensorF32;

@@ -1,0 +1,344 @@
+//! ModelExecutor — owns the PJRT client and the compiled partition
+//! executables; exposes prefill / decode-step operations over explicit
+//! per-sequence KV state. This is the compute backend the coordinator's
+//! pipeline schedules onto.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::Manifest;
+use super::tensor::{i32_scalar, tokens_to_literal, TensorF32};
+
+/// Per-sequence decoding state: the KV literals for every partition and
+/// the current absolute position.
+pub struct DecodeState {
+    /// [n_partitions] cache pairs, each [L_p, max_seq, kv_heads, hd].
+    k: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    /// Number of positions already written (next token goes here).
+    pub pos: usize,
+    /// Prompt length after prefill.
+    pub prompt_len: usize,
+}
+
+/// Whole-model decode state for the fused fast path: one cache pair
+/// spanning all layers.
+pub struct FusedState {
+    k: xla::Literal,
+    v: xla::Literal,
+    pub pos: usize,
+}
+
+pub struct ModelExecutor {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    embed_prefill: xla::PjRtLoadedExecutable,
+    embed_decode: xla::PjRtLoadedExecutable,
+    head_prefill: xla::PjRtLoadedExecutable,
+    head_decode: xla::PjRtLoadedExecutable,
+    parts_prefill: Vec<xla::PjRtLoadedExecutable>,
+    parts_decode: Vec<xla::PjRtLoadedExecutable>,
+    /// Fused whole-model executables (one PJRT dispatch per token) —
+    /// the single-stream fast path (EXPERIMENTS.md §Perf L3). Optional:
+    /// absent in older artifact sets.
+    fused_prefill: Option<xla::PjRtLoadedExecutable>,
+    fused_decode: Option<xla::PjRtLoadedExecutable>,
+    pub load_time_s: f64,
+}
+
+impl ModelExecutor {
+    /// Load + compile every artifact ("power-on"): after this returns,
+    /// no weight data ever moves again.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let info = manifest.artifact(name)?;
+            let proto = xla::HloModuleProto::from_text_file(&info.file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", info.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))
+        };
+
+        let mut parts_prefill = Vec::new();
+        let mut parts_decode = Vec::new();
+        for p in 0..manifest.model.n_partitions {
+            parts_prefill.push(compile(&format!("part{p}_prefill"))?);
+            parts_decode.push(compile(&format!("part{p}_decode"))?);
+        }
+        let fused_prefill = manifest
+            .artifact("full_prefill")
+            .ok()
+            .map(|_| compile("full_prefill"))
+            .transpose()?;
+        let fused_decode = manifest
+            .artifact("full_decode")
+            .ok()
+            .map(|_| compile("full_decode"))
+            .transpose()?;
+        Ok(ModelExecutor {
+            embed_prefill: compile("embed_prefill")?,
+            embed_decode: compile("embed_decode")?,
+            head_prefill: compile("head_prefill")?,
+            head_decode: compile("head_decode")?,
+            parts_prefill,
+            parts_decode,
+            fused_prefill,
+            fused_decode,
+            load_time_s: t0.elapsed().as_secs_f64(),
+            client,
+            manifest,
+        })
+    }
+
+    pub fn has_fused(&self) -> bool {
+        self.fused_prefill.is_some() && self.fused_decode.is_some()
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.manifest.model.n_partitions
+    }
+
+    fn cache_dims(&self) -> Vec<usize> {
+        let m = &self.manifest.model;
+        vec![
+            m.layers_per_partition(),
+            m.max_seq,
+            m.n_kv_heads,
+            m.head_dim(),
+        ]
+    }
+
+    /// Fresh (zeroed) decode state.
+    pub fn new_state(&self) -> Result<DecodeState> {
+        let dims = self.cache_dims();
+        let n = self.n_partitions();
+        let mut k = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            k.push(TensorF32::zeros(dims.clone()).to_literal()?);
+            v.push(TensorF32::zeros(dims.clone()).to_literal()?);
+        }
+        Ok(DecodeState {
+            k,
+            v,
+            pos: 0,
+            prompt_len: 0,
+        })
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = exe.execute::<&xla::Literal>(inputs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// One partition's prefill step (exposed for pipeline scheduling).
+    pub fn run_partition_prefill(
+        &self,
+        part: usize,
+        h: &xla::Literal,
+        state: &mut DecodeState,
+    ) -> Result<xla::Literal> {
+        let outs = self.run(
+            &self.parts_prefill[part],
+            &[h, &state.k[part], &state.v[part]],
+        )?;
+        let mut it = outs.into_iter();
+        let h_out = it.next().ok_or_else(|| anyhow!("missing h output"))?;
+        state.k[part] = it.next().ok_or_else(|| anyhow!("missing k output"))?;
+        state.v[part] = it.next().ok_or_else(|| anyhow!("missing v output"))?;
+        Ok(h_out)
+    }
+
+    /// One partition's decode step at absolute position `pos`.
+    pub fn run_partition_decode(
+        &self,
+        part: usize,
+        h: &xla::Literal,
+        pos: usize,
+        state: &mut DecodeState,
+    ) -> Result<xla::Literal> {
+        let pos_lit = i32_scalar(pos as i32);
+        let outs = self.run(
+            &self.parts_decode[part],
+            &[h, &state.k[part], &state.v[part], &pos_lit],
+        )?;
+        let mut it = outs.into_iter();
+        let h_out = it.next().ok_or_else(|| anyhow!("missing h output"))?;
+        state.k[part] = it.next().ok_or_else(|| anyhow!("missing k output"))?;
+        state.v[part] = it.next().ok_or_else(|| anyhow!("missing v output"))?;
+        Ok(h_out)
+    }
+
+    /// Embed a padded prompt bucket.
+    pub fn embed_prompt(&self, prompt: &[i32]) -> Result<xla::Literal> {
+        let p = self.manifest.prefill_len;
+        anyhow::ensure!(
+            !prompt.is_empty() && prompt.len() <= p,
+            "prompt length {} not in 1..={p}",
+            prompt.len()
+        );
+        let mut padded = prompt.to_vec();
+        padded.resize(p, 0); // causal masking makes pad contents invisible
+        let toks = tokens_to_literal(&padded)?;
+        let outs = self.run(&self.embed_prefill, &[&toks])?;
+        outs.into_iter().next().ok_or_else(|| anyhow!("no embed output"))
+    }
+
+    /// Embed a single decode token.
+    pub fn embed_token(&self, token: i32) -> Result<xla::Literal> {
+        let toks = tokens_to_literal(&[token])?;
+        let outs = self.run(&self.embed_decode, &[&toks])?;
+        outs.into_iter().next().ok_or_else(|| anyhow!("no embed output"))
+    }
+
+    /// LM head over prefill hidden states at row `idx`.
+    pub fn head_at(&self, h: &xla::Literal, idx: usize) -> Result<TensorF32> {
+        let outs = self.run(&self.head_prefill, &[h, &i32_scalar(idx as i32)])?;
+        let logits = outs.into_iter().next().ok_or_else(|| anyhow!("no logits"))?;
+        TensorF32::from_literal(&logits, vec![self.manifest.model.vocab_size])
+    }
+
+    /// LM head over a decode hidden state.
+    pub fn head_decode_logits(&self, h: &xla::Literal) -> Result<TensorF32> {
+        let outs = self.run(&self.head_decode, &[h])?;
+        let logits = outs.into_iter().next().ok_or_else(|| anyhow!("no logits"))?;
+        TensorF32::from_literal(&logits, vec![self.manifest.model.vocab_size])
+    }
+
+    /// Full prefill: runs the prompt through every partition in order
+    /// and returns (state, last-token logits).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(DecodeState, TensorF32)> {
+        let mut state = self.new_state()?;
+        let mut h = self.embed_prompt(prompt)?;
+        for part in 0..self.n_partitions() {
+            h = self.run_partition_prefill(part, &h, &mut state)?;
+        }
+        let logits = self.head_at(&h, prompt.len() - 1)?;
+        state.pos = prompt.len();
+        state.prompt_len = prompt.len();
+        Ok((state, logits))
+    }
+
+    /// One full decode step for `token` (written at `state.pos`);
+    /// returns next-token logits.
+    pub fn decode_step(&self, state: &mut DecodeState, token: i32) -> Result<TensorF32> {
+        let max_seq = self.manifest.model.max_seq;
+        anyhow::ensure!(state.pos < max_seq, "sequence exceeds max_seq {max_seq}");
+        let mut h = self.embed_token(token)?;
+        let pos = state.pos;
+        for part in 0..self.n_partitions() {
+            h = self.run_partition_decode(part, &h, pos, state)?;
+        }
+        state.pos += 1;
+        self.head_decode_logits(&h)
+    }
+
+    // ---- fused fast path ---------------------------------------------
+
+    fn full_cache_dims(&self) -> Vec<usize> {
+        let m = &self.manifest.model;
+        vec![m.n_layers, m.max_seq, m.n_kv_heads, m.head_dim()]
+    }
+
+    /// Whole-model prefill in one PJRT dispatch.
+    pub fn fused_prefill(&self, prompt: &[i32]) -> Result<(FusedState, TensorF32)> {
+        let exe = self
+            .fused_prefill
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifacts lack full_prefill (rerun make artifacts)"))?;
+        let p = self.manifest.prefill_len;
+        anyhow::ensure!(
+            !prompt.is_empty() && prompt.len() <= p,
+            "prompt length {} not in 1..={p}",
+            prompt.len()
+        );
+        let mut padded = prompt.to_vec();
+        padded.resize(p, 0);
+        let toks = tokens_to_literal(&padded)?;
+        let dims = self.full_cache_dims();
+        let k0 = TensorF32::zeros(dims.clone()).to_literal()?;
+        let v0 = TensorF32::zeros(dims).to_literal()?;
+        let idx = i32_scalar(prompt.len() as i32 - 1);
+        let outs = self.run(exe, &[&toks, &k0, &v0, &idx])?;
+        let mut it = outs.into_iter();
+        let logits = it.next().ok_or_else(|| anyhow!("missing logits"))?;
+        let k = it.next().ok_or_else(|| anyhow!("missing k"))?;
+        let v = it.next().ok_or_else(|| anyhow!("missing v"))?;
+        Ok((
+            FusedState {
+                k,
+                v,
+                pos: prompt.len(),
+            },
+            TensorF32::from_literal(&logits, vec![self.manifest.model.vocab_size])?,
+        ))
+    }
+
+    /// Whole-model decode step in one PJRT dispatch.
+    pub fn fused_decode_step(&self, state: &mut FusedState, token: i32) -> Result<TensorF32> {
+        let exe = self
+            .fused_decode
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifacts lack full_decode (rerun make artifacts)"))?;
+        let max_seq = self.manifest.model.max_seq;
+        anyhow::ensure!(state.pos < max_seq, "sequence exceeds max_seq {max_seq}");
+        let toks = tokens_to_literal(&[token])?;
+        let pos = i32_scalar(state.pos as i32);
+        let outs = self.run(exe, &[&toks, &state.k, &state.v, &pos])?;
+        let mut it = outs.into_iter();
+        let logits = it.next().ok_or_else(|| anyhow!("missing logits"))?;
+        state.k = it.next().ok_or_else(|| anyhow!("missing k"))?;
+        state.v = it.next().ok_or_else(|| anyhow!("missing v"))?;
+        state.pos += 1;
+        TensorF32::from_literal(&logits, vec![self.manifest.model.vocab_size])
+    }
+
+    /// Greedy generation (prefill + n steps). Uses the fused fast path
+    /// when the artifacts provide it; the coordinator's batched
+    /// pipeline always uses the partitioned executables.
+    pub fn generate_greedy(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
+        if self.has_fused() {
+            let (mut state, logits) = self.fused_prefill(prompt)?;
+            let mut out = Vec::with_capacity(n_new);
+            let mut tok = logits.argmax() as i32;
+            out.push(tok);
+            for _ in 1..n_new {
+                let logits = self.fused_decode_step(&mut state, tok)?;
+                tok = logits.argmax() as i32;
+                out.push(tok);
+            }
+            return Ok(out);
+        }
+        self.generate_greedy_partitioned(prompt, n_new)
+    }
+
+    /// Greedy generation through the partitioned (pipeline-unit) path.
+    pub fn generate_greedy_partitioned(
+        &self,
+        prompt: &[i32],
+        n_new: usize,
+    ) -> Result<Vec<i32>> {
+        let (mut state, logits) = self.prefill(prompt)?;
+        let mut out = Vec::with_capacity(n_new);
+        let mut tok = logits.argmax() as i32;
+        out.push(tok);
+        for _ in 1..n_new {
+            let logits = self.decode_step(&mut state, tok)?;
+            tok = logits.argmax() as i32;
+            out.push(tok);
+        }
+        Ok(out)
+    }
+}

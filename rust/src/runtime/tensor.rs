@@ -1,0 +1,121 @@
+//! Minimal host tensor + Literal conversion helpers for the runtime.
+
+use anyhow::Result;
+
+/// A host-side f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorF32 { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        TensorF32 {
+            dims,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, dims: Vec<usize>) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "literal has {} elements, expected shape {:?}",
+            data.len(),
+            dims
+        );
+        Ok(TensorF32 { dims, data })
+    }
+
+    /// Index of the maximum element (greedy sampling over logits).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Top-k indices by value, descending.
+    pub fn top_k(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.data.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.data[b]
+                .partial_cmp(&self.data[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// i32 token vector → Literal of shape [n].
+pub fn tokens_to_literal(tokens: &[i32]) -> Result<xla::Literal> {
+    let dims = [tokens.len() as i64];
+    Ok(xla::Literal::vec1(tokens).reshape(&dims)?)
+}
+
+/// Scalar i32 literal (positions / indices).
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_topk() {
+        let t = TensorF32::new(vec![5], vec![0.1, 3.0, -1.0, 3.5, 2.0]);
+        assert_eq!(t.argmax(), 3);
+        assert_eq!(t.top_k(3), vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = TensorF32::zeros(vec![2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        TensorF32::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = TensorF32::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = TensorF32::from_literal(&lit, vec![2, 2]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn token_literal_roundtrip() {
+        let lit = tokens_to_literal(&[1, 2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Workload generation: edge-style request traces (paper §IV: "edge
+//! applications and short-sequence tasks such as instruction execution
+//! and question answering").
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (s) relative to trace start.
+    pub arrival_s: f64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    pub prompt_len_min: usize,
+    pub prompt_len_max: usize,
+    pub gen_len_min: usize,
+    pub gen_len_max: usize,
+    pub vocab_size: usize,
+    /// Mean arrival rate (req/s); 0 = all arrive at t=0 (closed batch).
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 24,
+            prompt_len_min: 8,
+            prompt_len_max: 48,
+            gen_len_min: 16,
+            gen_len_max: 64,
+            vocab_size: 256,
+            arrival_rate: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate a deterministic trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
+    assert!(cfg.prompt_len_min >= 1 && cfg.prompt_len_min <= cfg.prompt_len_max);
+    assert!(cfg.gen_len_min >= 1 && cfg.gen_len_min <= cfg.gen_len_max);
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            if cfg.arrival_rate > 0.0 {
+                t += rng.exp(cfg.arrival_rate);
+            }
+            let plen = rng.usize(cfg.prompt_len_min, cfg.prompt_len_max);
+            Request {
+                id: i as u64,
+                arrival_s: t,
+                prompt: (0..plen)
+                    .map(|_| rng.usize(0, cfg.vocab_size - 1) as i32)
+                    .collect(),
+                max_new_tokens: rng.usize(cfg.gen_len_min, cfg.gen_len_max),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceConfig::default();
+        assert_eq!(generate(&cfg), generate(&cfg));
+        let other = TraceConfig {
+            seed: 2,
+            ..TraceConfig::default()
+        };
+        assert_ne!(generate(&cfg), generate(&other));
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let cfg = TraceConfig {
+            n_requests: 100,
+            ..TraceConfig::default()
+        };
+        for r in generate(&cfg) {
+            assert!((8..=48).contains(&r.prompt.len()));
+            assert!((16..=64).contains(&r.max_new_tokens));
+            assert!(r.prompt.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn closed_batch_arrives_at_zero() {
+        let reqs = generate(&TraceConfig::default());
+        assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let cfg = TraceConfig {
+            arrival_rate: 10.0,
+            n_requests: 50,
+            ..TraceConfig::default()
+        };
+        let reqs = generate(&cfg);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        let mean_gap = reqs.last().unwrap().arrival_s / 49.0;
+        assert!((mean_gap - 0.1).abs() < 0.05, "mean gap {mean_gap}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Tiny declarative CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! per-command help text. Used by `main.rs`, examples and benches.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgParser {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl ArgParser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        ArgParser {
+            program,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let left = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <value>", spec.name)
+            };
+            s.push_str(&format!("{left:<28}{}", spec.help));
+            if let Some(d) = spec.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Parse an iterator of argument strings (exclude argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env(&self) -> Args {
+        // skip argv[0]; examples under `cargo run --example` see clean argv
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> &str {
+        self.get(key)
+            .unwrap_or_else(|| panic!("missing option --{key} (no default)"))
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: {e}"))
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: {e}"))
+    }
+
+    pub fn f64(&self, key: &str) -> f64 {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: {e}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> ArgParser {
+        ArgParser::new("t", "test")
+            .opt("count", "4", "how many")
+            .opt("name", "x", "a name")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        parser().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.usize("count"), 4);
+        assert_eq!(a.str("name"), "x");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&["--count", "7", "--name=zed"]).unwrap();
+        assert_eq!(a.usize("count"), 7);
+        assert_eq!(a.str("name"), "zed");
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["pos1", "--verbose", "pos2"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--count"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parse(&["--verbose=1"]).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = parse(&["--help"]).unwrap_err();
+        assert!(err.contains("--count"));
+        assert!(err.contains("how many"));
+    }
+}

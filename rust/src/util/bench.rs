@@ -1,0 +1,167 @@
+//! Micro-benchmark harness (no criterion offline).
+//!
+//! Warms up, then runs timed batches until a target measurement time is
+//! reached; reports mean / median / p95 per-iteration latency and
+//! throughput. Every `rust/benches/*.rs` target is built on this.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Percentiles;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} iters  mean {:>12}  median {:>12}  p95 {:>12}  ({:.1}/s)",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.per_sec(),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            max_iters: 100_000,
+        }
+    }
+
+    pub fn with_measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload and
+    /// returns a value that is black-boxed to prevent dead-code elision.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples = Percentiles::new();
+        let mut total = Duration::ZERO;
+        let mut iters = 0u64;
+        while total < self.measure && iters < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            let dt = t0.elapsed();
+            samples.add(dt.as_nanos() as f64);
+            total += dt;
+            iters += 1;
+        }
+        let mean_ns = total.as_nanos() as f64 / iters.max(1) as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns,
+            median_ns: samples.median(),
+            p95_ns: samples.pct(95.0),
+            min_ns: samples.pct(0.0),
+        }
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Shared entry-point glue for bench binaries: honors BITROM_BENCH_QUICK
+/// for fast CI runs.
+pub fn bench_config() -> Bench {
+    if std::env::var("BITROM_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.median_ns <= r.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 1500.0,
+            median_ns: 1400.0,
+            p95_ns: 2000.0,
+            min_ns: 1000.0,
+        };
+        let s = r.report();
+        assert!(s.contains("µs"), "{s}");
+    }
+
+    #[test]
+    fn ns_formatting_ranges() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(10_000.0).contains("µs"));
+        assert!(fmt_ns(10_000_000.0).contains("ms"));
+        assert!(fmt_ns(10_000_000_000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,161 @@
+//! Mini property-based testing harness (no proptest offline).
+//!
+//! `check(seed, cases, |g| { ... })` runs a closure over `cases`
+//! generated inputs; on failure it retries with progressively simpler
+//! generator bounds (a lightweight stand-in for shrinking) and reports
+//! the failing seed so the case replays deterministically.
+
+use super::rng::Rng;
+
+/// Generator handle passed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    /// Simplification level 0 (full size) ..= 3 (tiny). Generators are
+    /// expected to scale their output size down with this.
+    pub level: u32,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Size helper: scales `max` down at higher simplification levels.
+    pub fn size(&mut self, max: usize) -> usize {
+        let max = (max >> self.level).max(1);
+        self.rng.usize(1, max)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize(lo, hi)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn trit(&mut self, p_zero: f64) -> i8 {
+        self.rng.trit(p_zero)
+    }
+
+    pub fn vec_trits(&mut self, len: usize, p_zero: f64) -> Vec<i8> {
+        (0..len).map(|_| self.rng.trit(p_zero)).collect()
+    }
+
+    pub fn vec_i8(&mut self, len: usize, lo: i8, hi: i8) -> Vec<i8> {
+        (0..len)
+            .map(|_| self.rng.i64(lo as i64, hi as i64) as i8)
+            .collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal() as f32).collect()
+    }
+}
+
+/// Outcome of a property: Ok(()) or an explanation of the violation.
+pub type Prop = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs. Panics (test failure) with
+/// the failing case's seed and message.
+pub fn check<F: FnMut(&mut Gen) -> Prop>(seed: u64, cases: u64, mut prop: F) {
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        if let Err(msg) = run_case(case_seed, 0, &mut prop) {
+            // try simpler levels to report the smallest reproduction
+            for level in 1..=3 {
+                if let Err(smaller) = run_case(case_seed, level, &mut prop) {
+                    panic!(
+                        "property failed (case {case}, seed {case_seed:#x}, \
+                         simplification level {level}): {smaller}"
+                    );
+                }
+            }
+            panic!("property failed (case {case}, seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+fn run_case<F: FnMut(&mut Gen) -> Prop>(case_seed: u64, level: u32, prop: &mut F) -> Prop {
+    let mut g = Gen {
+        rng: Rng::new(case_seed),
+        level,
+        case_seed,
+    };
+    prop(&mut g)
+}
+
+/// Assertion helpers producing `Prop`-friendly errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 50, |g| {
+            let n = g.size(100);
+            prop_assert!(n >= 1, "size must be positive, got {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, 50, |g| {
+            let n = g.usize(0, 10);
+            prop_assert!(n < 10, "hit the bound: {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut collected = Vec::new();
+        check(3, 5, |g| {
+            collected.push(g.case_seed);
+            Ok(())
+        });
+        let mut again = Vec::new();
+        check(3, 5, |g| {
+            again.push(g.case_seed);
+            Ok(())
+        });
+        assert_eq!(collected, again);
+    }
+
+    #[test]
+    fn size_scales_down_with_level() {
+        let mut g = Gen {
+            rng: Rng::new(1),
+            level: 3,
+            case_seed: 1,
+        };
+        for _ in 0..100 {
+            assert!(g.size(64) <= 8);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained substrates the coordinator is built on.
+//!
+//! This repository builds fully offline with only the `xla` and `anyhow`
+//! crates available, so the usual ecosystem pieces (serde, clap, rand,
+//! criterion, proptest) are implemented here from scratch — each module
+//! is small, tested, and exactly as capable as this project needs.
+
+pub mod args;
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,154 @@
+//! Aligned text tables for report output (paper tables/figures are
+//! regenerated as text rows that mirror the published layout).
+
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        self.rows
+            .push(cells.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let n_cols = self
+            .header
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; n_cols];
+        let measure = |widths: &mut Vec<usize>, row: &[String]| {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        };
+        measure(&mut widths, &self.header);
+        for r in &self.rows {
+            measure(&mut widths, r);
+        }
+
+        let fmt_row = |row: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (i, w) in widths.iter().enumerate() {
+                let cell = row.get(i).map(|s| s.as_str()).unwrap_or("");
+                let pad = w - cell.chars().count();
+                s.push(' ');
+                s.push_str(cell);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let sep = {
+            let mut s = String::from("|");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('|');
+            }
+            s
+        };
+
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header, &widths));
+            out.push('\n');
+            out.push_str(&sep);
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers used across reports.
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+pub fn fmt_si(x: f64) -> String {
+    let (val, suffix) = if x.abs() >= 1e12 {
+        (x / 1e12, "T")
+    } else if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{val:.2}{suffix}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").header(&["name", "value"]);
+        t.row_str(&["a", "1"]);
+        t.row_str(&["longer", "22"]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all body lines equal width
+        let w = lines[1].len();
+        assert!(lines[2..].iter().all(|l| l.len() == w), "{s}");
+    }
+
+    #[test]
+    fn handles_ragged_rows() {
+        let mut t = Table::new("").header(&["a", "b", "c"]);
+        t.row_str(&["1"]);
+        let s = t.render();
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(fmt_si(20.8e12), "20.80T");
+        assert_eq!(fmt_si(4967e3), "4.97M");
+        assert_eq!(fmt_si(5.0), "5.00");
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(fmt_pct(0.436), "43.6%");
+    }
+}

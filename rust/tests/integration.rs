@@ -1,0 +1,175 @@
+//! Cross-layer integration tests: the rust runtime + coordinator
+//! against the AOT artifacts produced by the python compile path.
+//!
+//! All tests share one ModelExecutor (compiling 16 HLO executables
+//! takes seconds). Tests are skipped gracefully when `make artifacts`
+//! has not been run.
+
+use bitrom::config::ServeConfig;
+use bitrom::coordinator::Server;
+use bitrom::runtime::{Manifest, ModelExecutor};
+use bitrom::trace::{generate, TraceConfig};
+
+// PjRtClient is Rc-based (not Send), so each test loads its own
+// executor; loads are a few seconds (16 small HLO compiles).
+fn executor() -> Option<ModelExecutor> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("integration tests skipped: run `make artifacts` first");
+        return None;
+    }
+    Some(ModelExecutor::load(&dir).expect("loading artifacts"))
+}
+
+#[test]
+fn golden_trace_matches_python_exactly() {
+    let Some(exec) = executor() else { return };
+    let exec = &exec;
+    let g = exec.manifest.golden.clone().expect("golden trace");
+
+    let (_, logits) = exec.prefill(&g.prompt).unwrap();
+    let max_err = logits
+        .data
+        .iter()
+        .zip(&g.prefill_last_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 2e-3, "prefill logits diverge: {max_err}");
+
+    let got = exec.generate_greedy(&g.prompt, g.generated.len()).unwrap();
+    assert_eq!(got, g.generated, "token sequence must match python");
+}
+
+#[test]
+fn prefill_equals_chunked_prefill_plus_decode() {
+    // DESIGN.md invariant 4, checked through the compiled artifacts:
+    // prefill(p[..n]) then decoding the remaining prompt tokens yields
+    // the same logits as prefill(p).
+    let Some(exec) = executor() else { return };
+    let exec = &exec;
+    let prompt: Vec<i32> = vec![9, 33, 77, 150, 2, 41];
+
+    let (_, full_logits) = exec.prefill(&prompt).unwrap();
+
+    let (mut state, _) = exec.prefill(&prompt[..3]).unwrap();
+    let mut last = None;
+    for &t in &prompt[3..] {
+        last = Some(exec.decode_step(&mut state, t).unwrap());
+    }
+    let inc_logits = last.unwrap();
+    let max_err = full_logits
+        .data
+        .iter()
+        .zip(&inc_logits.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 5e-3, "prefill/decode inconsistency: {max_err}");
+    // and the argmax (the actual sampling decision) must agree
+    assert_eq!(full_logits.argmax(), inc_logits.argmax());
+}
+
+#[test]
+fn prompt_padding_is_invisible() {
+    // same prompt served through the padded bucket must not depend on
+    // bucket garbage: two different pad-lengths, identical logits.
+    let Some(exec) = executor() else { return };
+    let exec = &exec;
+    let (_, l1) = exec.prefill(&[5, 6, 7]).unwrap();
+    let (_, l2) = exec.prefill(&[5, 6, 7]).unwrap();
+    assert_eq!(l1.data, l2.data, "prefill must be deterministic");
+    // compare a 3-token prompt against the same prompt decoded from 2+1
+    let (mut st, _) = exec.prefill(&[5, 6]).unwrap();
+    let l3 = exec.decode_step(&mut st, 7).unwrap();
+    assert_eq!(l1.argmax(), l3.argmax());
+}
+
+#[test]
+fn decode_respects_max_seq() {
+    let Some(exec) = executor() else { return };
+    let exec = &exec;
+    let max = exec.manifest.model.max_seq;
+    let (mut state, logits) = exec.prefill(&[1, 2, 3]).unwrap();
+    let mut tok = logits.argmax() as i32;
+    // positions 3..=127 are writable: 125 more decode steps succeed
+    for _ in 0..(max - 3) {
+        tok = exec.decode_step(&mut state, tok).unwrap().argmax() as i32;
+    }
+    // cache is now full: the next step must fail cleanly, not corrupt
+    let err = exec.decode_step(&mut state, tok);
+    assert!(err.is_err(), "overflow must be rejected");
+}
+
+#[test]
+fn server_completes_trace_with_healthy_edram() {
+    let Some(exec) = executor() else { return };
+    let vocab = exec.manifest.model.vocab_size;
+    let serve = ServeConfig::default();
+    let trace = TraceConfig {
+        n_requests: 5,
+        gen_len_min: 4,
+        gen_len_max: 10,
+        prompt_len_min: 3,
+        prompt_len_max: 20,
+        vocab_size: vocab,
+        ..TraceConfig::default()
+    };
+    let reqs = generate(&trace);
+    let n = reqs.len();
+    let mut server = Server::new(exec, serve).unwrap();
+    let (done, mut metrics) = server.run_trace(reqs).unwrap();
+
+    assert_eq!(done.len(), n, "every request completes");
+    for r in &done {
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 10);
+        assert!(r.tokens.iter().all(|&t| (t as usize) < vocab));
+        assert!(r.ttft_s > 0.0);
+    }
+    assert_eq!(metrics.requests_done as usize, n);
+    assert!(metrics.tokens_per_s() > 0.0);
+    // DR-eDRAM invariants held for the whole run
+    assert_eq!(server.kv().edram().retention_failures, 0);
+    assert_eq!(server.kv().edram().explicit_refreshes, 0);
+    // KV placement actually moved traffic on-die
+    assert!(server.kv().stats.external_reduction() > 0.2);
+}
+
+#[test]
+fn server_batched_output_matches_single_stream() {
+    // token-level determinism: the same request decoded alone and
+    // decoded inside a 6-way batch must produce identical tokens
+    // (per-sequence KV state is fully isolated).
+    let Some(exec_ref) = executor() else { return };
+    let prompt = vec![11, 22, 33, 44];
+    let solo = exec_ref.generate_greedy(&prompt, 6).unwrap();
+    drop(exec_ref);
+
+    let Some(exec) = executor() else { return };
+    let vocab = exec.manifest.model.vocab_size;
+    let mut reqs = generate(&TraceConfig {
+        n_requests: 5,
+        gen_len_min: 6,
+        gen_len_max: 6,
+        vocab_size: vocab,
+        seed: 3,
+        ..TraceConfig::default()
+    });
+    // request 0 is our probe
+    reqs[0].prompt = prompt.clone();
+    reqs[0].max_new_tokens = 6;
+    let mut server = Server::new(exec, ServeConfig::default()).unwrap();
+    let (done, _) = server.run_trace(reqs).unwrap();
+    let probe = done.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(probe.tokens, solo, "batching must not change results");
+}
+
+#[test]
+fn manifest_matches_rust_config() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() { return; }
+    let m = &Manifest::load(&dir).unwrap().model;
+    let rust_cfg = bitrom::config::ModelConfig::sim_tiny();
+    assert_eq!(m.n_layers, rust_cfg.n_layers);
+    assert_eq!(m.d_model, rust_cfg.d_model);
+    assert_eq!(m.n_partitions, rust_cfg.n_partitions);
+    assert_eq!(m.param_count(), rust_cfg.param_count());
+}
