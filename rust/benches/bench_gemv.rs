@@ -1,0 +1,52 @@
+//! Host GEMV/GEMM kernel benchmarks: per-trit base-3 reference vs the
+//! word-parallel bitplane engine at LLaMA-shaped sizes across
+//! sparsities (EXPERIMENTS.md §Perf). Emits `BENCH_gemv.json` at the
+//! repository root so the perf trajectory is recorded across PRs.
+//!
+//!   cargo bench --bench bench_gemv            # full sweep (~minutes)
+//!   BITROM_BENCH_QUICK=1 cargo bench --bench bench_gemv
+//!
+//! Override the output path with BITROM_BENCH_OUT.
+
+use std::path::PathBuf;
+
+use bitrom::report::{gemv_perf_json, gemv_perf_study, gemv_perf_table};
+
+fn out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BITROM_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    // cargo runs benches with cwd = the package root (rust/); the
+    // record lives at the repository root next to EXPERIMENTS.md
+    if PathBuf::from("../ROADMAP.md").exists() {
+        PathBuf::from("../BENCH_gemv.json")
+    } else {
+        PathBuf::from("BENCH_gemv.json")
+    }
+}
+
+fn main() {
+    let points = gemv_perf_study(false);
+    println!("{}", gemv_perf_table(&points));
+
+    // the acceptance bar this bench exists to watch: ≥ 8x over the
+    // reference at 2048x2048 / 30% sparsity
+    if let Some(p) = points
+        .iter()
+        .find(|p| p.rows == 2048 && p.cols == 2048 && (p.sparsity - 0.3).abs() < 1e-9)
+    {
+        let s = p.speedup();
+        println!(
+            "2048x2048 @ 0.3 sparsity: {s:.1}x gemv, {:.1}x batched gemm {}",
+            p.gemm_speedup(),
+            if s >= 8.0 { "(PASS: >= 8x bar)" } else { "(BELOW the 8x bar!)" }
+        );
+    }
+
+    let path = out_path();
+    let json = gemv_perf_json(&points, "bench_gemv");
+    match std::fs::write(&path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("recorded {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

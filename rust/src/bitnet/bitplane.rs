@@ -1,0 +1,493 @@
+//! Word-parallel ternary kernel engine — the host compute path.
+//!
+//! A ternary matrix decomposes into two bitplanes (the same sign/zero
+//! decomposition the TriMLA comparators produce in silicon, paper Fig 4):
+//! a *plus* mask (bit set ⇔ weight = +1) and a *minus* mask (bit set ⇔
+//! weight = −1). Zero weights set no bit in either plane, so sparsity
+//! is skipped for free — the software twin of the TriMLA zero-skip.
+//!
+//! Storage is per-column: column `c` (one output channel / one BiROMA
+//! wordline row) owns `words_per_col` contiguous u64 words per plane,
+//! rows blocked 64 to a word. A GEMV walks each column's words once:
+//! sparse words iterate set bits (`trailing_zeros`), dense words run a
+//! straight sign-select pass over all 64 lanes — either way there is no
+//! per-trit base-3 decode, no division, no modulo on the hot path.
+//!
+//! Accumulation is exact i64, so results are bit-identical to
+//! [`ref_gemv`](super::ref_gemv) (property-tested across shapes,
+//! sparsities, and negative/zero activations). `PackedTrits` remains
+//! the minimal-footprint storage format; a `BitplaneMatrix` is the
+//! compute view constructed from it once and reused.
+
+use super::pack::PackedTrits;
+use super::Trit;
+
+/// Above this many populated lanes in a 64-row word, a straight
+/// whole-word sign-select pass beats per-set-bit iteration (the
+/// bit-iteration loop costs ~2 dependent ops per set bit; the dense
+/// pass streams all lanes branch-free).
+const DENSE_WORD_CUTOVER: u32 = 32;
+
+/// A ternary weight matrix decomposed into per-column sign bitplanes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitplaneMatrix {
+    rows: usize,
+    cols: usize,
+    /// u64 words per column (`ceil(rows / 64)`).
+    words_per_col: usize,
+    /// Plus-plane, column-major: column `c` is
+    /// `plus[c * words_per_col .. (c + 1) * words_per_col]`; bit `r % 64`
+    /// of word `r / 64` covers row `r`.
+    plus: Vec<u64>,
+    /// Minus-plane, same layout.
+    minus: Vec<u64>,
+    /// Total non-zero weights (popcount of both planes).
+    nonzeros: u64,
+}
+
+impl BitplaneMatrix {
+    /// Build from row-major packed trits (`rows × cols`, the layout
+    /// `TernaryMatrix` stores).
+    pub fn from_packed(rows: usize, cols: usize, packed: &PackedTrits) -> Self {
+        assert_eq!(packed.len(), rows * cols, "packed length mismatch");
+        Self::build(rows, cols, packed.iter())
+    }
+
+    /// Build directly from a trit slice (row-major) — no base-3
+    /// roundtrip.
+    pub fn from_trits(rows: usize, cols: usize, trits: &[Trit]) -> Self {
+        assert_eq!(trits.len(), rows * cols, "trit count mismatch");
+        Self::build(rows, cols, trits.iter().copied())
+    }
+
+    fn build(rows: usize, cols: usize, trits: impl Iterator<Item = Trit>) -> Self {
+        let words_per_col = (rows + 63) / 64;
+        let mut plus = vec![0u64; cols * words_per_col];
+        let mut minus = vec![0u64; cols * words_per_col];
+        let mut nonzeros = 0u64;
+        // Sequential source decode; the scattered plane writes hit
+        // `cols` cache lines round-robin, which is fine for a one-time
+        // construction pass.
+        let mut r = 0usize;
+        let mut c = 0usize;
+        for t in trits {
+            if t != 0 {
+                nonzeros += 1;
+                let word = c * words_per_col + (r >> 6);
+                let bit = 1u64 << (r & 63);
+                if t > 0 {
+                    plus[word] |= bit;
+                } else {
+                    minus[word] |= bit;
+                }
+            }
+            c += 1;
+            if c == cols {
+                c = 0;
+                r += 1;
+            }
+        }
+        BitplaneMatrix {
+            rows,
+            cols,
+            words_per_col,
+            plus,
+            minus,
+            nonzeros,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Non-zero weight count (one popcount reduction, precomputed).
+    pub fn nonzeros(&self) -> u64 {
+        self.nonzeros
+    }
+
+    /// Zero-weight fraction — O(1).
+    pub fn sparsity(&self) -> f64 {
+        let n = (self.rows * self.cols) as u64;
+        if n == 0 {
+            return 0.0;
+        }
+        1.0 - self.nonzeros as f64 / n as f64
+    }
+
+    /// Plane storage in bytes (the compute view's footprint).
+    pub fn storage_bytes(&self) -> usize {
+        (self.plus.len() + self.minus.len()) * 8
+    }
+
+    /// Single weight readout from the planes.
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> Trit {
+        assert!(row < self.rows && col < self.cols, "get OOB ({row},{col})");
+        let w = col * self.words_per_col + (row >> 6);
+        let bit = row & 63;
+        ((self.plus[w] >> bit) & 1) as i8 - ((self.minus[w] >> bit) & 1) as i8
+    }
+
+    /// Materialize one column (an output channel's fan-in weights) —
+    /// the fabrication path the `cirom` layer uses instead of per-trit
+    /// base-3 decode.
+    pub fn col_trits(&self, col: usize) -> Vec<Trit> {
+        assert!(col < self.cols, "column {col} out of bounds {}", self.cols);
+        let base = col * self.words_per_col;
+        let mut out = vec![0i8; self.rows];
+        for wi in 0..self.words_per_col {
+            let (p, m) = (self.plus[base + wi], self.minus[base + wi]);
+            let mut bits = p | m;
+            while bits != 0 {
+                let i = bits.trailing_zeros() as usize;
+                let r = (wi << 6) | i;
+                out[r] = ((p >> i) & 1) as i8 - ((m >> i) & 1) as i8;
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Integer GEMV, bit-identical to `ref_gemv`: `y[c] = Σ_r x[r]·w[r][c]`
+    /// with exact i64 accumulation.
+    pub fn gemv(&self, x: &[i32]) -> Vec<i64> {
+        let mut y = vec![0i64; self.cols];
+        self.gemv_into(x, &mut y);
+        y
+    }
+
+    /// GEMV into a caller-provided output buffer (overwrites `y`).
+    pub fn gemv_into(&self, x: &[i32], y: &mut [i64]) {
+        assert_eq!(x.len(), self.rows, "gemv dim mismatch");
+        assert_eq!(y.len(), self.cols, "gemv output dim mismatch");
+        let wpc = self.words_per_col;
+        for (c, out) in y.iter_mut().enumerate() {
+            let base = c * wpc;
+            let pcol = &self.plus[base..base + wpc];
+            let mcol = &self.minus[base..base + wpc];
+            let mut acc = 0i64;
+            for (wi, (&p, &m)) in pcol.iter().zip(mcol).enumerate() {
+                let both = p | m;
+                if both == 0 {
+                    continue;
+                }
+                let row0 = wi << 6;
+                if both.count_ones() >= DENSE_WORD_CUTOVER {
+                    // dense word: stream every resident lane, branch-free
+                    // sign select (+1 / −1 / 0 as a two-bit difference)
+                    let lanes = &x[row0..(row0 + 64).min(self.rows)];
+                    for (i, &xv) in lanes.iter().enumerate() {
+                        let sign = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
+                        acc += sign * xv as i64;
+                    }
+                } else {
+                    // sparse word: touch only the set bits
+                    let mut pp = p;
+                    while pp != 0 {
+                        acc += x[row0 + pp.trailing_zeros() as usize] as i64;
+                        pp &= pp - 1;
+                    }
+                    let mut mm = m;
+                    while mm != 0 {
+                        acc -= x[row0 + mm.trailing_zeros() as usize] as i64;
+                        mm &= mm - 1;
+                    }
+                }
+            }
+            *out = acc;
+        }
+    }
+
+    /// Batched integer GEMM over activation rows, bit-identical to
+    /// mapping `ref_gemv` over `xs`.
+    ///
+    /// The win over repeated `gemv` calls: each column word's bit
+    /// pattern is decoded ONCE into (row, sign) pairs and replayed
+    /// across the whole batch, so mask iteration amortizes over the
+    /// batch dimension (the LoRA merge, report, and KV-study paths all
+    /// push multiple activation rows through the same weights).
+    pub fn gemm<X: AsRef<[i32]>>(&self, xs: &[X]) -> Vec<Vec<i64>> {
+        for x in xs {
+            assert_eq!(x.as_ref().len(), self.rows, "gemm dim mismatch");
+        }
+        let mut ys = vec![vec![0i64; self.cols]; xs.len()];
+        if xs.is_empty() {
+            return ys;
+        }
+        let wpc = self.words_per_col;
+        // decoded (row, sign) scratch for one 64-row word
+        let mut rows_buf = [0usize; 64];
+        let mut sign_buf = [0i64; 64];
+        for c in 0..self.cols {
+            let base = c * wpc;
+            let pcol = &self.plus[base..base + wpc];
+            let mcol = &self.minus[base..base + wpc];
+            for (wi, (&p, &m)) in pcol.iter().zip(mcol).enumerate() {
+                let both = p | m;
+                if both == 0 {
+                    continue;
+                }
+                let row0 = wi << 6;
+                if both.count_ones() >= DENSE_WORD_CUTOVER {
+                    let hi = (row0 + 64).min(self.rows);
+                    for (b, x) in xs.iter().enumerate() {
+                        let x = x.as_ref();
+                        let mut acc = 0i64;
+                        for (i, &xv) in x[row0..hi].iter().enumerate() {
+                            let sign = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
+                            acc += sign * xv as i64;
+                        }
+                        ys[b][c] += acc;
+                    }
+                } else {
+                    let mut n = 0usize;
+                    let mut bits = both;
+                    while bits != 0 {
+                        let i = bits.trailing_zeros() as usize;
+                        rows_buf[n] = row0 + i;
+                        sign_buf[n] = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
+                        n += 1;
+                        bits &= bits - 1;
+                    }
+                    for (b, x) in xs.iter().enumerate() {
+                        let x = x.as_ref();
+                        let mut acc = 0i64;
+                        for k in 0..n {
+                            acc += sign_buf[k] * x[rows_buf[k]] as i64;
+                        }
+                        ys[b][c] += acc;
+                    }
+                }
+            }
+        }
+        ys
+    }
+
+    /// Extract a sub-matrix's trits (row-major, `[r0, r1) × [c0, c1)`) —
+    /// the tiling primitive `cirom::MacroBank` shards with.
+    pub fn submatrix_trits(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Vec<Trit> {
+        assert!(r0 <= r1 && r1 <= self.rows, "row range {r0}..{r1}");
+        assert!(c0 <= c1 && c1 <= self.cols, "col range {c0}..{c1}");
+        let (h, w) = (r1 - r0, c1 - c0);
+        let mut out = vec![0i8; h * w];
+        if h == 0 || w == 0 {
+            return out;
+        }
+        for (j, c) in (c0..c1).enumerate() {
+            let base = c * self.words_per_col;
+            for wi in (r0 >> 6)..=((r1 - 1) >> 6) {
+                let (p, m) = (self.plus[base + wi], self.minus[base + wi]);
+                let mut bits = p | m;
+                while bits != 0 {
+                    let i = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let r = (wi << 6) | i;
+                    if r < r0 || r >= r1 {
+                        continue;
+                    }
+                    out[(r - r0) * w + j] = ((p >> i) & 1) as i8 - ((m >> i) & 1) as i8;
+                }
+            }
+        }
+        out
+    }
+
+    /// Plane-level submatrix (`[r0, r1) × [c0, c1)`) — word-wise bit
+    /// extraction straight into a new plane view, no base-3 roundtrip
+    /// (the `cirom::MacroBank` tiling path).
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> BitplaneMatrix {
+        BitplaneMatrix::from_trits(r1 - r0, c1 - c0, &self.submatrix_trits(r0, r1, c0, c1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ref_gemv, TernaryMatrix};
+    use super::*;
+    use crate::util::check::check;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn random_case(g: &mut crate::util::check::Gen) -> (usize, usize, Vec<Trit>, Vec<i32>) {
+        // shapes deliberately straddle the 64-row word boundary
+        let rows = g.size(200);
+        let cols = g.size(48);
+        let p_zero = g.f64(); // full sparsity range 0.0..1.0
+        let trits = g.vec_trits(rows * cols, p_zero);
+        // negative, zero, and large activations all exercised
+        let x: Vec<i32> = (0..rows)
+            .map(|_| {
+                if g.rng.bool(0.15) {
+                    0
+                } else {
+                    g.rng.i64(-127, 127) as i32
+                }
+            })
+            .collect();
+        (rows, cols, trits, x)
+    }
+
+    #[test]
+    fn gemv_bit_identical_to_reference_property() {
+        check(0xB17A, 150, |g| {
+            let (rows, cols, trits, x) = random_case(g);
+            let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+            let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            prop_assert_eq!(plane.gemv(&x), ref_gemv(&x, &w));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemv_exact_at_word_boundaries() {
+        // rows exactly at, one under, and one over multiples of 64
+        let mut rng = crate::util::rng::Rng::new(0xB0);
+        for rows in [1usize, 63, 64, 65, 127, 128, 129, 192] {
+            let cols = 7;
+            let trits: Vec<Trit> = (0..rows * cols).map(|_| rng.trit(0.3)).collect();
+            let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+            let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+            let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            assert_eq!(plane.gemv(&x), ref_gemv(&x, &w), "rows {rows}");
+        }
+    }
+
+    #[test]
+    fn gemv_covers_both_density_paths() {
+        // all-dense (sparsity 0) forces the whole-word path; high
+        // sparsity forces bit iteration; both must agree with ref.
+        let mut rng = crate::util::rng::Rng::new(0xD3);
+        for p_zero in [0.0, 0.05, 0.5, 0.95, 1.0] {
+            let (rows, cols) = (130, 9);
+            let trits: Vec<Trit> = (0..rows * cols).map(|_| rng.trit(p_zero)).collect();
+            let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+            let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+            let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            assert_eq!(plane.gemv(&x), ref_gemv(&x, &w), "p_zero {p_zero}");
+        }
+    }
+
+    #[test]
+    fn gemm_bit_identical_to_mapped_reference_property() {
+        check(0x6E44, 80, |g| {
+            let (rows, cols, trits, _) = random_case(g);
+            let batch = g.usize(1, 6);
+            let xs: Vec<Vec<i32>> = (0..batch)
+                .map(|_| (0..rows).map(|_| g.rng.i64(-127, 127) as i32).collect())
+                .collect();
+            let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+            let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            let want: Vec<Vec<i64>> = xs.iter().map(|x| ref_gemv(x, &w)).collect();
+            prop_assert_eq!(plane.gemm(&xs), want);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_empty_batch() {
+        let plane = BitplaneMatrix::from_trits(4, 4, &[1i8; 16]);
+        assert!(plane.gemm::<Vec<i32>>(&[]).is_empty());
+    }
+
+    #[test]
+    fn gemm_accepts_borrowed_rows() {
+        let plane = BitplaneMatrix::from_trits(3, 2, &[1, -1, 0, 1, -1, 0]);
+        let x = [2i32, 3, 5];
+        let borrowed: Vec<&[i32]> = vec![&x];
+        assert_eq!(plane.gemm(&borrowed), vec![vec![2 - 5, -2 + 3]]);
+    }
+
+    #[test]
+    fn gemv_into_reuses_buffer() {
+        let plane = BitplaneMatrix::from_trits(3, 2, &[1, -1, 0, 1, -1, 0]);
+        let mut y = vec![99i64; 2];
+        plane.gemv_into(&[2, 3, 5], &mut y);
+        assert_eq!(y, vec![2 - 5, -2 + 3]);
+    }
+
+    #[test]
+    fn get_and_col_trits_match_source() {
+        check(0xC01, 100, |g| {
+            let rows = g.size(150);
+            let cols = g.size(20);
+            let trits = g.vec_trits(rows * cols, 0.4);
+            let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            for c in 0..cols {
+                let col = plane.col_trits(c);
+                for r in 0..rows {
+                    prop_assert_eq!(col[r], trits[r * cols + c]);
+                }
+            }
+            let r = g.usize(0, rows - 1);
+            let c = g.usize(0, cols - 1);
+            prop_assert_eq!(plane.get(r, c), trits[r * cols + c]);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn submatrix_extraction_matches_source() {
+        check(0x5AB, 100, |g| {
+            let rows = g.size(180);
+            let cols = g.size(24);
+            let trits = g.vec_trits(rows * cols, 0.3);
+            let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            let r0 = g.usize(0, rows);
+            let r1 = g.usize(r0, rows);
+            let c0 = g.usize(0, cols);
+            let c1 = g.usize(c0, cols);
+            let sub = plane.submatrix_trits(r0, r1, c0, c1);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    prop_assert_eq!(
+                        sub[(r - r0) * (c1 - c0) + (c - c0)],
+                        trits[r * cols + c]
+                    );
+                }
+            }
+            // the plane-level submatrix is the same data as a plane
+            // built from the extracted trits
+            let sub_plane = plane.submatrix(r0, r1, c0, c1);
+            prop_assert_eq!(
+                sub_plane,
+                BitplaneMatrix::from_trits(r1 - r0, c1 - c0, &sub)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn popcount_sparsity_is_exact() {
+        check(0x90C, 60, |g| {
+            let rows = g.size(100);
+            let cols = g.size(30);
+            let trits = g.vec_trits(rows * cols, g.f64());
+            let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            let zeros = trits.iter().filter(|&&t| t == 0).count();
+            prop_assert!(
+                (plane.sparsity() - zeros as f64 / trits.len() as f64).abs() < 1e-15,
+                "sparsity mismatch"
+            );
+            prop_assert_eq!(plane.nonzeros(), (trits.len() - zeros) as u64);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn storage_is_two_bits_per_weight_plus_padding() {
+        let plane = BitplaneMatrix::from_trits(128, 16, &[1i8; 128 * 16]);
+        // 2 words per column per plane × 16 cols × 2 planes × 8 bytes
+        assert_eq!(plane.storage_bytes(), 2 * 16 * 2 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn dim_mismatch_panics() {
+        BitplaneMatrix::from_trits(2, 2, &[0; 4]).gemv(&[1]);
+    }
+}

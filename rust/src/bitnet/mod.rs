@@ -1,12 +1,16 @@
 //! BitNet ternary-weight substrate: trit types, packed storage, the
-//! absmean/absmax quantizers (bit-identical to `python/compile/quant.py`)
-//! and the golden ternary GEMV the `cirom` macro simulator is verified
-//! against.
+//! absmean/absmax quantizers (bit-identical to `python/compile/quant.py`),
+//! the golden ternary GEMV the `cirom` macro simulator is verified
+//! against, and the word-parallel [`BitplaneMatrix`] kernel engine the
+//! host-side functional compute paths run on (bit-identical to
+//! `ref_gemv`, property-tested).
 
+mod bitplane;
 mod gemv;
 pub mod pack;
 mod quant;
 
+pub use bitplane::BitplaneMatrix;
 pub use gemv::{ref_gemm, ref_gemv, TernaryMatrix};
 pub use pack::{pack_trits, unpack_trits, PackedTrits};
 pub use quant::{absmax_quantize, absmean_ternary, QuantizedActs};

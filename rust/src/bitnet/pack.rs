@@ -58,23 +58,29 @@ pub fn unpack_trits(cells: &[u8], n: usize) -> Vec<Trit> {
 pub struct PackedTrits {
     data: Vec<u8>,
     len: usize,
+    /// Zero-trit count, computed once at pack time (keeps `sparsity()`
+    /// O(1) instead of re-decoding the whole tensor).
+    zeros: usize,
 }
 
 impl PackedTrits {
     pub fn from_trits(trits: &[Trit]) -> Self {
         let mut data = Vec::with_capacity((trits.len() + 4) / 5);
+        let mut zeros = 0usize;
         for chunk in trits.chunks(5) {
             let mut code = 0u16;
             // little-endian base-3 digits
             for (i, &t) in chunk.iter().enumerate() {
                 debug_assert!(super::is_trit(t));
                 code += (t + 1) as u16 * POW3[i];
+                zeros += (t == 0) as usize;
             }
             data.push(code as u8);
         }
         PackedTrits {
             data,
             len: trits.len(),
+            zeros,
         }
     }
 
@@ -93,12 +99,36 @@ impl PackedTrits {
     #[inline]
     pub fn get(&self, idx: usize) -> Trit {
         assert!(idx < self.len, "trit index {idx} out of bounds {}", self.len);
-        let byte = self.data[idx / 5] as u16;
-        ((byte / POW3[idx % 5]) % 3) as i8 - 1
+        // table lookup instead of a base-3 division + modulo per access
+        DECODE5[self.data[idx / 5] as usize][idx % 5]
+    }
+
+    /// Decode the 5-trit group holding byte `chunk` — the bulk-decode
+    /// primitive `to_trits`/`iter` run on (one table lookup per FIVE
+    /// trits instead of one div/mod each). NOTE: positions past `len`
+    /// in the final partial chunk decode as −1 (absent base-3 digits
+    /// are zero, and digit 0 means trit −1) — callers must truncate,
+    /// which is why this stays crate-private.
+    #[inline]
+    pub(crate) fn chunk(&self, chunk: usize) -> &'static [Trit; 5] {
+        &DECODE5[self.data[chunk] as usize]
     }
 
     pub fn to_trits(&self) -> Vec<Trit> {
-        (0..self.len).map(|i| self.get(i)).collect()
+        let mut out = Vec::with_capacity(self.len);
+        for c in 0..self.data.len() {
+            out.extend_from_slice(self.chunk(c));
+        }
+        out.truncate(self.len);
+        out
+    }
+
+    /// Iterate all trits in order (bulk table decode, no div/mod).
+    pub fn iter(&self) -> impl Iterator<Item = Trit> + '_ {
+        self.data
+            .iter()
+            .flat_map(|&b| DECODE5[b as usize].iter().copied())
+            .take(self.len)
     }
 
     /// Effective storage density in bits per trit.
@@ -106,17 +136,43 @@ impl PackedTrits {
         self.data.len() as f64 * 8.0 / self.len as f64
     }
 
-    /// Fraction of zero trits (TriMLA skip rate of this tensor).
+    /// Zero-trit count (precomputed at pack time).
+    pub fn zero_count(&self) -> usize {
+        self.zeros
+    }
+
+    /// Fraction of zero trits (TriMLA skip rate of this tensor) — O(1).
     pub fn sparsity(&self) -> f64 {
         if self.len == 0 {
             return 0.0;
         }
-        let zeros = (0..self.len).filter(|&i| self.get(i) == 0).count();
-        zeros as f64 / self.len as f64
+        self.zeros as f64 / self.len as f64
     }
 }
 
 const POW3: [u16; 5] = [1, 3, 9, 27, 81];
+
+/// All 243 valid pack bytes decoded to their 5 trits, built at compile
+/// time. Indexed `[code][digit]`; codes ≥ 243 never occur (packing
+/// caps at 3^5 − 1 = 242), but the table is sized 256 so indexing with
+/// a raw byte needs no bounds trickery.
+static DECODE5: [[Trit; 5]; 256] = build_decode5();
+
+const fn build_decode5() -> [[Trit; 5]; 256] {
+    let mut table = [[0i8; 5]; 256];
+    let mut code = 0usize;
+    while code < 243 {
+        let mut rem = code;
+        let mut digit = 0usize;
+        while digit < 5 {
+            table[code][digit] = (rem % 3) as i8 - 1;
+            rem /= 3;
+            digit += 1;
+        }
+        code += 1;
+    }
+    table
+}
 
 #[cfg(test)]
 mod tests {
@@ -191,6 +247,36 @@ mod tests {
     fn sparsity_counts_zeros() {
         let p = PackedTrits::from_trits(&[0, 0, 1, -1]);
         assert!((p.sparsity() - 0.5).abs() < 1e-12);
+        assert_eq!(p.zero_count(), 2);
+    }
+
+    #[test]
+    fn decode_table_matches_base3_arithmetic() {
+        // exhaustive: every valid code, every digit position
+        for code in 0u16..243 {
+            for digit in 0..5usize {
+                let want = ((code / POW3[digit]) % 3) as i8 - 1;
+                assert_eq!(DECODE5[code as usize][digit], want, "code {code} digit {digit}");
+            }
+        }
+    }
+
+    #[test]
+    fn iter_and_chunks_match_indexed_gets() {
+        check(0x17E2, 100, |g| {
+            let n = g.size(400);
+            let trits = g.vec_trits(n, 0.3);
+            let p = PackedTrits::from_trits(&trits);
+            let via_iter: Vec<Trit> = p.iter().collect();
+            prop_assert_eq!(via_iter, trits.clone());
+            let via_get: Vec<Trit> = (0..n).map(|i| p.get(i)).collect();
+            prop_assert_eq!(via_get, trits.clone());
+            prop_assert_eq!(
+                p.zero_count(),
+                trits.iter().filter(|&&t| t == 0).count()
+            );
+            Ok(())
+        });
     }
 
     #[test]

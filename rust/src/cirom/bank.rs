@@ -7,7 +7,9 @@
 //! macro). Partial sums across fan_in tiles accumulate in the wide
 //! output registers (exact integer arithmetic).
 
-use crate::bitnet::{QuantizedActs, TernaryMatrix};
+use std::sync::Arc;
+
+use crate::bitnet::{BitplaneMatrix, QuantizedActs, TernaryMatrix};
 use crate::config::MacroGeometry;
 
 use super::events::EventCounters;
@@ -18,6 +20,11 @@ pub struct MacroBank {
     geom: MacroGeometry,
     /// Tiles indexed [fan_in_tile][fan_out_tile].
     tiles: Vec<Vec<BitRomMacro>>,
+    /// Bitplane view of the FULL weight matrix — the functional
+    /// (non-event) compute path, bit-identical to tiling + accumulating
+    /// through every macro (tested). Shared with the source
+    /// `TernaryMatrix`'s cache, not copied.
+    planes: Arc<BitplaneMatrix>,
     fan_in: usize,
     fan_out: usize,
     scale: f32,
@@ -25,6 +32,7 @@ pub struct MacroBank {
 
 impl MacroBank {
     pub fn fabricate(geom: MacroGeometry, w: &TernaryMatrix) -> Self {
+        let planes = w.bitplanes_arc();
         let in_tile = 2 * geom.cols;
         let out_tile = geom.rows;
         let n_in = (w.rows + in_tile - 1) / in_tile;
@@ -37,20 +45,18 @@ impl MacroBank {
             for tj in 0..n_out {
                 let c0 = tj * out_tile;
                 let c1 = (c0 + out_tile).min(w.cols);
-                let mut trits = Vec::with_capacity((r1 - r0) * (c1 - c0));
-                for r in r0..r1 {
-                    for c in c0..c1 {
-                        trits.push(w.get(r, c));
-                    }
-                }
-                let sub = TernaryMatrix::from_trits(r1 - r0, c1 - c0, &trits, w.scale);
-                row_tiles.push(BitRomMacro::fabricate(geom.clone(), &sub));
+                // tile extraction is plane-to-plane (word-wise bit
+                // tests) — no per-trit base-3 decode, no intermediate
+                // packed matrix
+                let sub = planes.submatrix(r0, r1, c0, c1);
+                row_tiles.push(BitRomMacro::fabricate_view(geom.clone(), &sub, w.scale));
             }
             tiles.push(row_tiles);
         }
         MacroBank {
             geom,
             tiles,
+            planes,
             fan_in: w.rows,
             fan_out: w.cols,
             scale: w.scale,
@@ -100,6 +106,19 @@ impl MacroBank {
             .map(|v| v as f32 * acts.scale * self.scale)
             .collect()
     }
+
+    /// Functional (non-event) GEMV across the whole bank on the
+    /// word-parallel bitplane view — same integers as [`Self::gemv`]
+    /// without instantiating per-tile circuit activity.
+    pub fn gemv_functional(&self, acts: &QuantizedActs) -> Vec<i64> {
+        assert_eq!(acts.values.len(), self.fan_in, "bank gemv dim mismatch");
+        self.planes.gemv(&acts.values)
+    }
+
+    /// Batched functional GEMM across the whole bank.
+    pub fn gemm_functional<X: AsRef<[i32]>>(&self, batch: &[X]) -> Vec<Vec<i64>> {
+        self.planes.gemm(batch)
+    }
 }
 
 #[cfg(test)]
@@ -133,10 +152,26 @@ mod tests {
             let acts = absmax_quantize(&x, if g.rng.bool(0.5) { 4 } else { 8 });
             let mut ev = EventCounters::new();
             let got = bank.gemv(&acts, &mut ev);
+            prop_assert_eq!(bank.gemv_functional(&acts), got.clone());
             prop_assert_eq!(got, ref_gemv(&acts.values, &w));
             prop_assert_eq!(ev.saturations, 0);
             Ok(())
         });
+    }
+
+    #[test]
+    fn functional_gemm_matches_per_row_reference() {
+        let geom = small_geom();
+        let mut rng = Rng::new(13);
+        let w = TernaryMatrix::random(40, 21, 0.35, &mut rng);
+        let bank = MacroBank::fabricate(geom, &w);
+        let batch: Vec<Vec<i32>> = (0..4)
+            .map(|_| (0..40).map(|_| rng.i64(-127, 127) as i32).collect())
+            .collect();
+        let got = bank.gemm_functional(&batch);
+        for (x, y) in batch.iter().zip(&got) {
+            assert_eq!(y, &ref_gemv(x, &w));
+        }
     }
 
     #[test]

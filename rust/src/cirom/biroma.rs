@@ -13,7 +13,7 @@
 //! deliberately NO write method.
 
 use crate::bitnet::pack::{cell_decode, cell_encode};
-use crate::bitnet::Trit;
+use crate::bitnet::{BitplaneMatrix, Trit};
 
 /// Which signal-line side is being read out.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,6 +61,27 @@ impl Biroma {
             for c in 0..cols {
                 let e = trits.get(c).copied().unwrap_or(0);
                 let o = trits.get(cols + c).copied().unwrap_or(0);
+                cells[r * cols + c] = cell_encode(e, o);
+            }
+        }
+        Biroma { rows, cols, cells }
+    }
+
+    /// Fabricate from a weight matrix's bitplane view — the same
+    /// blocked layout as [`Biroma::fabricate_rows`] (plane column `c` =
+    /// output channel = wordline row; input `i < cols` on the even
+    /// side, `i ≥ cols` on the odd side) but WITHOUT materializing a
+    /// `Vec<Trit>` per channel: cells are written straight off the
+    /// plane words. Unprogrammed cells hold 0.
+    pub fn fabricate_from_planes(rows: usize, cols: usize, planes: &BitplaneMatrix) -> Self {
+        assert!(planes.cols() <= rows, "too many rows");
+        assert!(planes.rows() <= 2 * cols, "rows too wide");
+        let mut cells = vec![cell_encode(0, 0); rows * cols];
+        let fan_in = planes.rows();
+        for r in 0..planes.cols() {
+            for c in 0..cols {
+                let e = if c < fan_in { planes.get(c, r) } else { 0 };
+                let o = if cols + c < fan_in { planes.get(cols + c, r) } else { 0 };
                 cells[r * cols + c] = cell_encode(e, o);
             }
         }
@@ -171,6 +192,29 @@ mod tests {
         assert_eq!(b.read(0, 1, Side::Even), -1);
         assert_eq!(b.read(0, 0, Side::Odd), 0);
         assert_eq!(b.read(0, 1, Side::Odd), 1);
+    }
+
+    #[test]
+    fn plane_fabrication_equals_row_fabrication_property() {
+        use crate::bitnet::TernaryMatrix;
+        check(0xB1FA, 80, |g| {
+            let cols = g.size(16);
+            let rows = g.size(16);
+            let fan_in = g.usize(1, 2 * cols);
+            let fan_out = g.usize(1, rows);
+            let trits = g.vec_trits(fan_in * fan_out, 0.3);
+            let w = TernaryMatrix::from_trits(fan_in, fan_out, &trits, 1.0);
+            let via_rows: Vec<Vec<i8>> = (0..w.cols).map(|c| w.col_trits(c)).collect();
+            let a = Biroma::fabricate_rows(rows, cols, &via_rows);
+            let b = Biroma::fabricate_from_planes(rows, cols, w.bitplanes());
+            for r in 0..rows {
+                for c in 0..cols {
+                    prop_assert_eq!(a.read(r, c, Side::Even), b.read(r, c, Side::Even));
+                    prop_assert_eq!(a.read(r, c, Side::Odd), b.read(r, c, Side::Odd));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! counting every circuit event — the simulator is simultaneously the
 //! functional model and the activity trace the energy model consumes.
 
-use crate::bitnet::{QuantizedActs, TernaryMatrix, Trit};
+use std::sync::OnceLock;
+
+use crate::bitnet::{BitplaneMatrix, QuantizedActs, TernaryMatrix};
 use crate::config::MacroGeometry;
 
 use super::adder_tree::AdderTree;
@@ -18,6 +20,12 @@ pub struct BitRomMacro {
     geom: MacroGeometry,
     array: Biroma,
     tree: AdderTree,
+    /// Bitplane twin of the programmed weights — the functional
+    /// (non-event) compute path; bit-identical to the circuit model.
+    /// Built lazily from the array on first use, so macros that only
+    /// ever run the event path (e.g. `MacroBank` tiles, whose bank
+    /// holds a full-matrix plane view of its own) never pay for it.
+    planes: OnceLock<BitplaneMatrix>,
     /// Dimensions of the weight matrix programmed at fabrication.
     fan_in: usize,
     fan_out: usize,
@@ -28,29 +36,55 @@ impl BitRomMacro {
     /// "Fabricate" a macro holding `w` ([fan_in × fan_out], column = one
     /// output channel = one wordline row).
     pub fn fabricate(geom: MacroGeometry, w: &TernaryMatrix) -> Self {
+        let m = Self::fabricate_view(geom, w.bitplanes(), w.scale);
+        // seed the functional twin from the view we already have, so a
+        // standalone macro's first gemv_functional() doesn't have to
+        // reconstruct it from the array (bank tiles stay lazy)
+        let _ = m.planes.set(w.bitplanes().clone());
+        m
+    }
+
+    /// Fabricate straight from a bitplane view (the `MacroBank` tiling
+    /// path — no intermediate packed matrix per tile).
+    pub fn fabricate_view(geom: MacroGeometry, planes: &BitplaneMatrix, scale: f32) -> Self {
         assert!(
-            w.cols <= geom.rows,
+            planes.cols() <= geom.rows,
             "fan_out {} exceeds array rows {}",
-            w.cols,
+            planes.cols(),
             geom.rows
         );
         assert!(
-            w.rows <= 2 * geom.cols,
+            planes.rows() <= 2 * geom.cols,
             "fan_in {} exceeds 2x array cols {}",
-            w.rows,
+            planes.rows(),
             2 * geom.cols
         );
-        let rows: Vec<Vec<Trit>> = (0..w.cols).map(|c| w.col_trits(c)).collect();
-        let array = Biroma::fabricate_rows(geom.rows, geom.cols, &rows);
+        let array = Biroma::fabricate_from_planes(geom.rows, geom.cols, planes);
         let tree = AdderTree::new(geom.n_trimla().next_power_of_two());
         BitRomMacro {
-            fan_in: w.rows,
-            fan_out: w.cols,
-            scale: w.scale,
+            fan_in: planes.rows(),
+            fan_out: planes.cols(),
+            scale,
             geom,
             array,
             tree,
+            planes: OnceLock::new(),
         }
+    }
+
+    /// The lazily-built bitplane twin (reconstructed from the ROM
+    /// array's blocked layout: logical input `i` of channel `ch` is
+    /// `array.weight(ch, i)`).
+    fn planes(&self) -> &BitplaneMatrix {
+        self.planes.get_or_init(|| {
+            let mut trits = vec![0i8; self.fan_in * self.fan_out];
+            for ch in 0..self.fan_out {
+                for i in 0..self.fan_in {
+                    trits[i * self.fan_out + ch] = self.array.weight(ch, i);
+                }
+            }
+            BitplaneMatrix::from_trits(self.fan_in, self.fan_out, &trits)
+        })
     }
 
     pub fn fan_in(&self) -> usize {
@@ -112,6 +146,20 @@ impl BitRomMacro {
             .into_iter()
             .map(|v| v as f32 * acts.scale * self.scale)
             .collect()
+    }
+
+    /// Functional (non-event) GEMV on the word-parallel bitplane twin:
+    /// the same integers [`Self::gemv`] produces (tested), for callers
+    /// that need the macro's *result* but not its activity trace —
+    /// orders of magnitude faster than stepping every TriMLA.
+    pub fn gemv_functional(&self, acts: &QuantizedActs) -> Vec<i64> {
+        assert_eq!(acts.values.len(), self.fan_in, "gemv dim mismatch");
+        self.planes().gemv(&acts.values)
+    }
+
+    /// Batched functional GEMM on the bitplane twin.
+    pub fn gemm_functional<X: AsRef<[i32]>>(&self, batch: &[X]) -> Vec<Vec<i64>> {
+        self.planes().gemm(batch)
     }
 
     /// One full local-then-global pass for one output channel with
@@ -220,6 +268,28 @@ mod tests {
             let want = ref_gemv(&acts.values, &w);
             prop_assert_eq!(got, want);
             prop_assert_eq!(ev.saturations, 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn functional_path_matches_event_path_property() {
+        check(0x64FA, 60, |g| {
+            let geom = small_geom();
+            let fan_in = g.usize(1, 2 * geom.cols);
+            let fan_out = g.usize(1, geom.rows);
+            let trits = g.vec_trits(fan_in * fan_out, g.f64());
+            let w = TernaryMatrix::from_trits(fan_in, fan_out, &trits, 1.0);
+            let m = BitRomMacro::fabricate(geom, &w);
+            let bits = if g.rng.bool(0.5) { 4 } else { 8 };
+            let acts = random_acts(&mut g.rng, fan_in, bits);
+            let mut ev = EventCounters::new();
+            let via_circuit = m.gemv(&acts, &mut ev);
+            prop_assert_eq!(m.gemv_functional(&acts), via_circuit);
+            prop_assert_eq!(
+                m.gemm_functional(&[acts.values.clone()]),
+                vec![ref_gemv(&acts.values, &w)]
+            );
             Ok(())
         });
     }

@@ -11,9 +11,11 @@
 mod batcher;
 mod metrics;
 mod pipeline;
+#[cfg(feature = "pjrt")]
 mod server;
 
 pub use batcher::{Batcher, SlotState};
 pub use metrics::ServeMetrics;
 pub use pipeline::{PipelineSchedule, StageOp};
+#[cfg(feature = "pjrt")]
 pub use server::{CompletedRequest, Server};

@@ -7,9 +7,15 @@
 //!
 //! Layer map:
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, weights
-//!   baked as constants = the ROM mask set) via the PJRT C API.
+//!   baked as constants = the ROM mask set) via the PJRT C API. The
+//!   PJRT-backed executor lives behind the off-by-default `pjrt`
+//!   feature; manifest handling is always available.
 //! * [`coordinator`] — the serving layer: dynamic batcher and the
-//!   6-stage macro-partition pipeline (paper §V-B).
+//!   6-stage macro-partition pipeline (paper §V-B). The PJRT-executing
+//!   `Server` is `pjrt`-gated; the batcher/schedule/metrics are not.
+//! * [`bitnet`] — ternary substrate: packed storage, quantizers, the
+//!   golden `ref_gemv`, and the word-parallel [`bitnet::BitplaneMatrix`]
+//!   kernel engine that every host-side functional compute path runs on.
 //! * [`cirom`] — bit-accurate simulators of the paper's circuits:
 //!   BiROMA, TriMLA, the shared adder tree.
 //! * [`edram`] / [`dram`] / [`kvcache`] — decoding-aware KV-cache

@@ -6,6 +6,7 @@
 //! arithmetic: parameter/op overhead for any placement, and the
 //! 4-input multiplier-adder unit model used in the energy accounting.
 
+use crate::bitnet::TernaryMatrix;
 use crate::config::ModelConfig;
 
 /// The seven adapter sites (paper Table II columns).
@@ -139,6 +140,89 @@ pub fn adapter_cycles(fan_in: usize, fan_out: usize, rank: usize) -> u64 {
     (macs + 3) / 4
 }
 
+/// A ROM-resident ternary base projection merged with a digital LoRA
+/// adapter: `y = scale_x · scale_w · (x · W) + (x · A) · B · (α/r)`.
+///
+/// The base term runs on the word-parallel bitplane kernel (exact
+/// integers, bit-identical to `ref_gemv`); the low-rank adapter term is
+/// the small dense f32 compute the paper's 4-input multiplier-adder
+/// unit performs. This is the host-side model of a domain-adapted
+/// projection — the compute the `report`/adaptation paths consume.
+#[derive(Debug, Clone)]
+pub struct MergedProjection {
+    pub base: TernaryMatrix,
+    /// Down-projection, row-major `[fan_in × rank]`.
+    pub a: Vec<f32>,
+    /// Up-projection, row-major `[rank × fan_out]`.
+    pub b: Vec<f32>,
+    pub rank: usize,
+    pub alpha: f32,
+}
+
+impl MergedProjection {
+    pub fn new(base: TernaryMatrix, a: Vec<f32>, b: Vec<f32>, rank: usize, alpha: f32) -> Self {
+        assert_eq!(a.len(), base.rows * rank, "A shape mismatch");
+        assert_eq!(b.len(), rank * base.cols, "B shape mismatch");
+        MergedProjection {
+            base,
+            a,
+            b,
+            rank,
+            alpha,
+        }
+    }
+
+    /// Forward one activation vector.
+    pub fn forward(&self, acts: &crate::bitnet::QuantizedActs) -> Vec<f32> {
+        self.forward_batch(std::slice::from_ref(acts)).pop().unwrap()
+    }
+
+    /// Forward a batch of activation vectors. The base term goes
+    /// through the batched bitplane GEMM so weight-mask decoding
+    /// amortizes across the batch; the adapter term is `O(rank·(fan_in
+    /// + fan_out))` per row and stays dense f32.
+    pub fn forward_batch(&self, acts: &[crate::bitnet::QuantizedActs]) -> Vec<Vec<f32>> {
+        let (fan_out, rank) = (self.base.cols, self.rank);
+        let batch: Vec<&[i32]> = acts.iter().map(|q| q.values.as_slice()).collect();
+        let base_int = self.base.gemm(&batch);
+        let gain = self.alpha / rank.max(1) as f32;
+        acts.iter()
+            .zip(base_int)
+            .map(|(q, yi)| {
+                let mut y: Vec<f32> = yi
+                    .into_iter()
+                    .map(|v| v as f32 * q.scale * self.base.scale)
+                    .collect();
+                if rank > 0 {
+                    // t = x · A  (dequantized activations)
+                    let mut t = vec![0f32; rank];
+                    for (r, &xv) in q.values.iter().enumerate() {
+                        if xv == 0 {
+                            continue;
+                        }
+                        let xf = xv as f32 * q.scale;
+                        let arow = &self.a[r * rank..(r + 1) * rank];
+                        for (tj, &aj) in t.iter_mut().zip(arow) {
+                            *tj += xf * aj;
+                        }
+                    }
+                    // y += (t · B) · (α/r)
+                    for (j, &tj) in t.iter().enumerate() {
+                        if tj == 0.0 {
+                            continue;
+                        }
+                        let brow = &self.b[j * fan_out..(j + 1) * fan_out];
+                        for (yc, &bc) in y.iter_mut().zip(brow) {
+                            *yc += tj * bc * gain;
+                        }
+                    }
+                }
+                y
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +295,79 @@ mod tests {
     #[test]
     fn placement_string() {
         assert_eq!(LoraConfig::paper().placement_str(), "VOD");
+    }
+
+    fn merged_fixture(seed: u64, fan_in: usize, fan_out: usize, rank: usize) -> MergedProjection {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let base = TernaryMatrix::random(fan_in, fan_out, 0.3, &mut rng);
+        let a: Vec<f32> = (0..fan_in * rank).map(|_| rng.normal() as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..rank * fan_out).map(|_| rng.normal() as f32 * 0.1).collect();
+        MergedProjection::new(base, a, b, rank, 2.0 * rank as f32)
+    }
+
+    #[test]
+    fn merged_base_term_is_bit_exact_vs_reference() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let m = merged_fixture(30, 96, 40, 0); // rank 0: pure base path
+        let x: Vec<f32> = (0..96).map(|_| rng.normal() as f32).collect();
+        let q = crate::bitnet::absmax_quantize(&x, 8);
+        let y = m.forward(&q);
+        let want = crate::bitnet::ref_gemv(&q.values, &m.base);
+        for (got, wi) in y.iter().zip(&want) {
+            assert_eq!(*got, *wi as f32 * q.scale * m.base.scale);
+        }
+    }
+
+    #[test]
+    fn merged_forward_matches_dense_float_model() {
+        let m = merged_fixture(32, 70, 24, 4);
+        let mut rng = crate::util::rng::Rng::new(33);
+        let x: Vec<f32> = (0..70).map(|_| rng.normal() as f32).collect();
+        let q = crate::bitnet::absmax_quantize(&x, 8);
+        let xf = q.dequant();
+        let y = m.forward(&q);
+        let gain = m.alpha / m.rank as f32;
+        for c in 0..24 {
+            let mut want = 0f64;
+            for r in 0..70 {
+                want += xf[r] as f64 * m.base.get(r, c) as f64 * m.base.scale as f64;
+            }
+            for j in 0..m.rank {
+                let mut t = 0f64;
+                for r in 0..70 {
+                    t += xf[r] as f64 * m.a[r * m.rank + j] as f64;
+                }
+                want += t * m.b[j * 24 + c] as f64 * gain as f64;
+            }
+            assert!(
+                (y[c] as f64 - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "col {c}: {} vs {want}",
+                y[c]
+            );
+        }
+    }
+
+    #[test]
+    fn merged_batch_equals_per_row_forward() {
+        let m = merged_fixture(34, 80, 16, 8);
+        let mut rng = crate::util::rng::Rng::new(35);
+        let qs: Vec<crate::bitnet::QuantizedActs> = (0..5)
+            .map(|_| {
+                let x: Vec<f32> = (0..80).map(|_| rng.normal() as f32).collect();
+                crate::bitnet::absmax_quantize(&x, 8)
+            })
+            .collect();
+        let batched = m.forward_batch(&qs);
+        for (q, want) in qs.iter().zip(&batched) {
+            assert_eq!(&m.forward(q), want, "batched must be bit-identical");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "A shape mismatch")]
+    fn merged_rejects_bad_adapter_shapes() {
+        let mut rng = crate::util::rng::Rng::new(36);
+        let base = TernaryMatrix::random(8, 4, 0.3, &mut rng);
+        MergedProjection::new(base, vec![0.0; 7], vec![0.0; 8], 2, 1.0);
     }
 }

@@ -9,10 +9,16 @@
 
 use std::path::PathBuf;
 
-use bitrom::config::{HardwareConfig, ServeConfig};
+use bitrom::config::HardwareConfig;
+#[cfg(feature = "pjrt")]
+use bitrom::config::ServeConfig;
+#[cfg(feature = "pjrt")]
 use bitrom::coordinator::Server;
-use bitrom::report::{fig1a_report, fig5a_report, fig5b_report, table3_report};
-use bitrom::runtime::{Manifest, ModelExecutor};
+use bitrom::report::{fig1a_report, fig5a_report, fig5b_report, gemv_perf_report, table3_report};
+use bitrom::runtime::Manifest;
+#[cfg(feature = "pjrt")]
+use bitrom::runtime::ModelExecutor;
+#[cfg(feature = "pjrt")]
 use bitrom::trace::{generate, TraceConfig};
 use bitrom::util::args::ArgParser;
 
@@ -71,6 +77,20 @@ fn artifacts_dir(args: &bitrom::util::args::Args) -> PathBuf {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "`bitrom {cmd}` needs the PJRT runtime — rebuild with \
+         `cargo build --release --features pjrt` (and a real xla binding)"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_argv: Vec<String>) -> anyhow::Result<()> {
+    pjrt_unavailable("serve")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let p = ArgParser::new("bitrom serve", "run a request trace through the pipeline")
         .opt("artifacts", "", "artifact directory")
@@ -130,6 +150,12 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_generate(_argv: Vec<String>) -> anyhow::Result<()> {
+    pjrt_unavailable("generate")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
     let p = ArgParser::new("bitrom generate", "greedy generation from a token-id prompt")
         .opt("artifacts", "", "artifact directory")
@@ -156,10 +182,15 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
         .flag("fig1a", "Fig 1(a) area sweep")
         .flag("fig5a", "Fig 5(a) KV access analysis")
         .flag("fig5b", "Fig 5(b) DRAM reduction grid")
-        .flag("all", "everything");
+        .flag("gemv", "host bitplane-vs-reference GEMV perf (timed, not in --all)")
+        .flag("all", "everything except --gemv");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
     let all = args.flag("all")
-        || !(args.flag("table3") || args.flag("fig1a") || args.flag("fig5a") || args.flag("fig5b"));
+        || !(args.flag("table3")
+            || args.flag("fig1a")
+            || args.flag("fig5a")
+            || args.flag("fig5b")
+            || args.flag("gemv"));
 
     // prefer the measured ROM sparsity if artifacts exist
     let sparsity = Manifest::load(&artifacts_dir(&args))
@@ -178,9 +209,19 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
     if all || args.flag("fig5b") {
         println!("{}", fig5b_report());
     }
+    if args.flag("gemv") {
+        // timed study — explicit opt-in only (quick mode)
+        println!("{}", gemv_perf_report(true));
+    }
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_verify(_argv: Vec<String>) -> anyhow::Result<()> {
+    pjrt_unavailable("verify")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_verify(argv: Vec<String>) -> anyhow::Result<()> {
     let p = ArgParser::new("bitrom verify", "replay the python golden trace")
         .opt("artifacts", "", "artifact directory");

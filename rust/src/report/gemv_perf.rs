@@ -1,0 +1,199 @@
+//! Host GEMV/GEMM kernel performance study: the per-trit base-3
+//! reference (`ref_gemv`) vs the word-parallel bitplane engine, at
+//! LLaMA-shaped projection sizes across sparsities.
+//!
+//! This is the §Perf record for the host compute path (EXPERIMENTS.md):
+//! `bench_gemv` runs the same study and emits `BENCH_gemv.json` so the
+//! perf trajectory is tracked across PRs. Every timed point first
+//! asserts bit-exact agreement between the two kernels — a perf number
+//! for a wrong result is worthless.
+
+use crate::bitnet::{ref_gemv, TernaryMatrix};
+use crate::util::bench::{bench_config, Bench};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// One measured (shape × sparsity) point.
+#[derive(Debug, Clone)]
+pub struct GemvPerfPoint {
+    pub rows: usize,
+    pub cols: usize,
+    /// Target zero fraction the weights were drawn at.
+    pub sparsity: f64,
+    /// Mean ns per reference GEMV.
+    pub ref_ns: f64,
+    /// Mean ns per bitplane GEMV.
+    pub plane_ns: f64,
+    /// Batch size used for the GEMM measurement.
+    pub gemm_batch: usize,
+    /// Mean ns per row of the batched bitplane GEMM.
+    pub gemm_row_ns: f64,
+}
+
+impl GemvPerfPoint {
+    pub fn speedup(&self) -> f64 {
+        self.ref_ns / self.plane_ns
+    }
+
+    pub fn gemm_speedup(&self) -> f64 {
+        self.ref_ns / self.gemm_row_ns
+    }
+}
+
+/// The LLaMA-shaped projection sizes the study sweeps (d_model×d_model
+/// attention and d_model×d_ff MLP shapes of a ~1B model).
+const FULL_SHAPES: [(usize, usize); 2] = [(2048, 2048), (2048, 5632)];
+const FULL_SPARSITIES: [f64; 4] = [0.0, 0.3, 0.5, 0.7];
+const QUICK_SHAPES: [(usize, usize); 1] = [(512, 512)];
+const QUICK_SPARSITIES: [f64; 2] = [0.0, 0.3];
+const GEMM_BATCH: usize = 8;
+
+/// Run the study. `quick` restricts to a small shape with short
+/// measurement windows (the `bitrom report --gemv` path); the full
+/// sweep honors `BITROM_BENCH_QUICK` like every bench binary.
+pub fn gemv_perf_study(quick: bool) -> Vec<GemvPerfPoint> {
+    let bench = if quick { Bench::quick() } else { bench_config() };
+    let shapes: &[(usize, usize)] = if quick { &QUICK_SHAPES } else { &FULL_SHAPES };
+    let sparsities: &[f64] = if quick { &QUICK_SPARSITIES } else { &FULL_SPARSITIES };
+    let mut rng = Rng::new(0x6E3A);
+    let mut out = Vec::new();
+    for &(rows, cols) in shapes {
+        for &s in sparsities {
+            let w = TernaryMatrix::random(rows, cols, s, &mut rng);
+            let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+            // correctness gate before any timing
+            assert_eq!(
+                w.gemv(&x),
+                ref_gemv(&x, &w),
+                "bitplane kernel diverged from reference at {rows}x{cols} s={s}"
+            );
+            let r_ref = bench.run("ref", || ref_gemv(&x, &w));
+            let r_plane = bench.run("plane", || w.gemv(&x));
+            let batch: Vec<Vec<i32>> = (0..GEMM_BATCH)
+                .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
+                .collect();
+            let r_gemm = bench.run("gemm", || w.gemm(&batch));
+            out.push(GemvPerfPoint {
+                rows,
+                cols,
+                sparsity: s,
+                ref_ns: r_ref.mean_ns,
+                plane_ns: r_plane.mean_ns,
+                gemm_batch: GEMM_BATCH,
+                gemm_row_ns: r_gemm.mean_ns / GEMM_BATCH as f64,
+            });
+        }
+    }
+    out
+}
+
+/// Render measured points as a table.
+pub fn gemv_perf_table(points: &[GemvPerfPoint]) -> String {
+    let mut t = Table::new("Host ternary GEMV — per-trit reference vs word-parallel bitplanes")
+        .header(&[
+            "shape",
+            "sparsity",
+            "ref/gemv",
+            "bitplane/gemv",
+            "speedup",
+            "gemm/row (b=8)",
+            "gemm speedup",
+        ]);
+    for p in points {
+        t.row(&[
+            format!("{}x{}", p.rows, p.cols),
+            format!("{:.1}", p.sparsity),
+            crate::util::bench::fmt_ns(p.ref_ns),
+            crate::util::bench::fmt_ns(p.plane_ns),
+            format!("{:.1}x", p.speedup()),
+            crate::util::bench::fmt_ns(p.gemm_row_ns),
+            format!("{:.1}x", p.gemm_speedup()),
+        ]);
+    }
+    t.render()
+}
+
+/// Run the study and render it (the `bitrom report --gemv` entry).
+pub fn gemv_perf_report(quick: bool) -> String {
+    gemv_perf_table(&gemv_perf_study(quick))
+}
+
+/// JSON record (the `BENCH_gemv.json` payload).
+pub fn gemv_perf_json(points: &[GemvPerfPoint], source: &str) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("gemv")),
+        ("source", Json::str(source)),
+        ("gemm_batch", Json::num(GEMM_BATCH as f64)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("rows", Json::num(p.rows as f64)),
+                            ("cols", Json::num(p.cols as f64)),
+                            ("sparsity", Json::num(p.sparsity)),
+                            ("ref_ns", Json::num(p.ref_ns)),
+                            ("bitplane_ns", Json::num(p.plane_ns)),
+                            ("speedup", Json::num(p.speedup())),
+                            ("gemm_row_ns", Json::num(p.gemm_row_ns)),
+                            ("gemm_speedup", Json::num(p.gemm_speedup())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_point() -> GemvPerfPoint {
+        GemvPerfPoint {
+            rows: 2048,
+            cols: 2048,
+            sparsity: 0.3,
+            ref_ns: 8_000_000.0,
+            plane_ns: 500_000.0,
+            gemm_batch: 8,
+            gemm_row_ns: 400_000.0,
+        }
+    }
+
+    #[test]
+    fn speedups_derive_from_means() {
+        let p = fake_point();
+        assert!((p.speedup() - 16.0).abs() < 1e-9);
+        assert!((p.gemm_speedup() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let pts = vec![fake_point()];
+        let table = gemv_perf_table(&pts);
+        assert!(table.contains("2048x2048"));
+        assert!(table.contains("16.0x"));
+        let j = gemv_perf_json(&pts, "unit-test");
+        assert_eq!(j.at(&["bench"]).unwrap().as_str(), Some("gemv"));
+        let first = &j.get("points").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("rows").unwrap().as_usize(), Some(2048));
+        assert!(first.get("speedup").unwrap().as_f64().unwrap() > 15.0);
+    }
+
+    #[test]
+    fn tiny_study_is_exact_and_positive() {
+        // a micro study (not the full shapes) to keep test time sane;
+        // correctness is asserted inside the study itself
+        let bench = Bench::quick();
+        let mut rng = Rng::new(1);
+        let w = TernaryMatrix::random(96, 64, 0.3, &mut rng);
+        let x: Vec<i32> = (0..96).map(|_| rng.i64(-127, 127) as i32).collect();
+        assert_eq!(w.gemv(&x), ref_gemv(&x, &w));
+        let r = bench.run("tiny", || w.gemv(&x));
+        assert!(r.mean_ns > 0.0);
+    }
+}

@@ -4,8 +4,12 @@
 
 mod fig1a;
 mod fig5b;
+mod gemv_perf;
 mod table3;
 
 pub use fig1a::fig1a_report;
 pub use fig5b::{fig5a_report, fig5b_report};
+pub use gemv_perf::{
+    gemv_perf_json, gemv_perf_report, gemv_perf_study, gemv_perf_table, GemvPerfPoint,
+};
 pub use table3::{table3_report, Table3Row};

@@ -4,9 +4,13 @@
 //! executables as constants, which is the CiROM deployment model.
 
 mod manifest;
+#[cfg(feature = "pjrt")]
 mod model_exec;
+#[cfg(feature = "pjrt")]
 mod tensor;
 
 pub use manifest::{ArtifactInfo, Manifest};
+#[cfg(feature = "pjrt")]
 pub use model_exec::{DecodeState, ModelExecutor};
+#[cfg(feature = "pjrt")]
 pub use tensor::TensorF32;

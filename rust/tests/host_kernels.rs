@@ -1,0 +1,93 @@
+//! Cross-layer host-kernel integration tests (default features — no
+//! PJRT, no artifacts): the word-parallel bitplane engine must agree
+//! bit-exactly with the golden reference everywhere it is wired in:
+//! the `bitnet` kernels themselves, the `cirom` functional paths, and
+//! the LoRA merged-projection compute.
+
+use bitrom::bitnet::{absmax_quantize, ref_gemv, BitplaneMatrix, TernaryMatrix};
+use bitrom::cirom::{BitRomMacro, EventCounters, MacroBank};
+use bitrom::config::MacroGeometry;
+use bitrom::lora::MergedProjection;
+use bitrom::util::rng::Rng;
+
+#[test]
+fn bitplane_engine_matches_reference_across_llama_shapes() {
+    let mut rng = Rng::new(0xE2E);
+    // scaled-down versions of the LLaMA projection aspect ratios,
+    // including a non-multiple-of-64 fan-in
+    for (rows, cols) in [(256, 256), (256, 704), (193, 65)] {
+        for sparsity in [0.0, 0.3, 0.9] {
+            let w = TernaryMatrix::random(rows, cols, sparsity, &mut rng);
+            let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+            assert_eq!(w.gemv(&x), ref_gemv(&x, &w), "{rows}x{cols} s={sparsity}");
+        }
+    }
+}
+
+#[test]
+fn macro_bank_functional_path_is_bit_exact_end_to_end() {
+    let mut rng = Rng::new(0xBA11);
+    let geom = MacroGeometry {
+        rows: 16,
+        cols: 8,
+        cols_per_trimla: 8,
+        ..Default::default()
+    };
+    // spans 3 fan-in tiles x 2 fan-out tiles
+    let w = TernaryMatrix::random(40, 20, 0.3, &mut rng);
+    let bank = MacroBank::fabricate(geom.clone(), &w);
+    let x: Vec<f32> = (0..40).map(|_| rng.normal() as f32).collect();
+    let acts = absmax_quantize(&x, 8);
+    let mut ev = EventCounters::new();
+    let via_circuit = bank.gemv(&acts, &mut ev);
+    assert_eq!(via_circuit, ref_gemv(&acts.values, &w));
+    assert_eq!(bank.gemv_functional(&acts), via_circuit);
+
+    let single = TernaryMatrix::random(16, 8, 0.5, &mut rng);
+    let m = BitRomMacro::fabricate(geom, &single);
+    let acts1 = absmax_quantize(&(0..16).map(|_| rng.normal() as f32).collect::<Vec<_>>(), 4);
+    let mut ev1 = EventCounters::new();
+    assert_eq!(m.gemv_functional(&acts1), m.gemv(&acts1, &mut ev1));
+}
+
+#[test]
+fn merged_projection_batched_compute_is_consistent() {
+    let mut rng = Rng::new(0x10A);
+    let base = TernaryMatrix::random(128, 48, 0.3, &mut rng);
+    let rank = 4;
+    let a: Vec<f32> = (0..128 * rank).map(|_| rng.normal() as f32 * 0.05).collect();
+    let b: Vec<f32> = (0..rank * 48).map(|_| rng.normal() as f32 * 0.05).collect();
+    let proj = MergedProjection::new(base, a, b, rank, 8.0);
+    let qs: Vec<_> = (0..3)
+        .map(|_| {
+            let h: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+            absmax_quantize(&h, 8)
+        })
+        .collect();
+    let batched = proj.forward_batch(&qs);
+    for (q, want) in qs.iter().zip(&batched) {
+        assert_eq!(&proj.forward(q), want);
+    }
+    // base integers inside the merge are the reference integers
+    let base_only = MergedProjection::new(proj.base.clone(), vec![], vec![], 0, 0.0);
+    let y = base_only.forward(&qs[0]);
+    let want = ref_gemv(&qs[0].values, &proj.base);
+    for (got, wi) in y.iter().zip(&want) {
+        assert_eq!(*got, *wi as f32 * qs[0].scale * proj.base.scale);
+    }
+}
+
+#[test]
+fn plane_view_survives_clone_and_matches_storage() {
+    let mut rng = Rng::new(0xC10);
+    let w = TernaryMatrix::random(100, 30, 0.4, &mut rng);
+    let plane = BitplaneMatrix::from_trits(
+        100,
+        30,
+        &(0..100 * 30)
+            .map(|i| w.get(i / 30, i % 30))
+            .collect::<Vec<_>>(),
+    );
+    assert_eq!(&plane, w.bitplanes());
+    assert!((plane.sparsity() - w.sparsity()).abs() < 1e-12);
+}

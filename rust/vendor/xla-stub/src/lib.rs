@@ -1,0 +1,231 @@
+//! Offline stub of the subset of the `xla` (xla-rs) PJRT binding the
+//! `bitrom` runtime uses. Host-side `Literal` construction/conversion
+//! works for real (so `runtime::tensor` and its tests are exercisable
+//! without a PJRT plugin); anything that needs an actual XLA runtime —
+//! client creation, compilation, execution — returns a clean error.
+//!
+//! Swap this for the real binding by pointing the `xla` dependency in
+//! `rust/Cargo.toml` at the xla-rs crate; no source change needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error — carries the reason PJRT functionality is unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real PJRT binding (this build vendors the \
+         offline stub; point Cargo.toml's `xla` dependency at xla-rs)"
+    )))
+}
+
+/// Element storage for host literals (f32 and i32 are the only types
+/// the runtime moves across the boundary).
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types supported by the stub's host literals.
+pub trait NativeType: Sized + Clone {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side literal: typed buffer + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v.to_vec()),
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            dims: vec![],
+            data: T::wrap(vec![v]),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy the buffer out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples
+    /// (they only come out of executions), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("tuple literals (produced only by execution)")
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module — the stub only records the path it came from.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        // Validate existence so error messages stay precise, but defer
+        // the "no runtime" error to compile time-of-use.
+        let p = path.as_ref();
+        if !p.exists() {
+            return Err(Error(format!("HLO file not found: {}", p.display())));
+        }
+        Ok(HloModuleProto {
+            path: p.display().to_string(),
+        })
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation {
+            proto: proto.clone(),
+        }
+    }
+}
+
+/// PJRT client handle. Construction fails in the stub: there is no
+/// backing runtime to hand out.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu()")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile()")
+    }
+}
+
+/// A compiled executable (unreachable in the stub — `compile` errors).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute()")
+    }
+}
+
+/// A device buffer (unreachable in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync()")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_bad_reshape() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(Literal::vec1(&[1i32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_cleanly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
