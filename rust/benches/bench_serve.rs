@@ -1,0 +1,131 @@
+//! Offline serving throughput vs in-flight batch count: the same trace
+//! through `Server<HostBackend>` at 1/2/4/6 slots — the §V-B "pipeline
+//! keeps all partitions busy" claim measured end-to-end (batcher +
+//! pipeline + KV accounting included), no artifacts needed. Emits
+//! `BENCH_serve.json` at the repository root so the serving-perf
+//! trajectory is recorded across PRs.
+//!
+//!   cargo bench --bench bench_serve            # full trace
+//!   BITROM_BENCH_QUICK=1 cargo bench --bench bench_serve
+//!
+//! Override the output path with BITROM_BENCH_OUT.
+
+use std::path::PathBuf;
+
+use bitrom::config::{ModelConfig, ServeConfig};
+use bitrom::coordinator::Server;
+use bitrom::runtime::HostBackend;
+use bitrom::trace::{generate, TraceConfig};
+use bitrom::util::json::Json;
+
+fn out_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BITROM_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    // cargo runs benches with cwd = the package root (rust/); the
+    // record lives at the repository root next to EXPERIMENTS.md
+    if PathBuf::from("../ROADMAP.md").exists() {
+        PathBuf::from("../BENCH_serve.json")
+    } else {
+        PathBuf::from("BENCH_serve.json")
+    }
+}
+
+struct Point {
+    batches: usize,
+    tokens_per_s: f64,
+    tbt_p50_ms: f64,
+    tbt_p95_ms: f64,
+    tokens: u64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BITROM_BENCH_QUICK").is_ok();
+    let (n_requests, gen_len) = if quick { (8, 12) } else { (24, 32) };
+    let model = ModelConfig::sim_tiny();
+    let trace_cfg = TraceConfig {
+        n_requests,
+        gen_len_min: gen_len.min(8),
+        gen_len_max: gen_len,
+        vocab_size: model.vocab_size,
+        ..TraceConfig::default()
+    };
+
+    println!(
+        "== bench_serve: offline Server<HostBackend>, {} requests, gen <= {gen_len} ==",
+        n_requests
+    );
+    let mut points = Vec::new();
+    let mut single = 0.0f64;
+    for batches in [1usize, 2, 4, 6] {
+        let backend = HostBackend::new(model.clone(), 0xB17)?;
+        let serve = ServeConfig {
+            max_batches: batches,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve)?;
+        let (done, mut metrics) = server.run_trace(generate(&trace_cfg))?;
+        assert_eq!(done.len(), n_requests, "every request must complete");
+        assert_eq!(server.kv().edram().retention_failures, 0);
+        let tput = metrics.tokens_per_s();
+        if batches == 1 {
+            single = tput;
+        }
+        println!(
+            "  {batches} batches: {:>8.1} tok/s  (x{:.2} vs single)  \
+             TBT p50 {:.3} ms  p95 {:.3} ms",
+            tput,
+            tput / single.max(1e-9),
+            metrics.tbt.pct(50.0) * 1e3,
+            metrics.tbt.pct(95.0) * 1e3,
+        );
+        points.push(Point {
+            batches,
+            tokens_per_s: tput,
+            tbt_p50_ms: metrics.tbt.pct(50.0) * 1e3,
+            tbt_p95_ms: metrics.tbt.pct(95.0) * 1e3,
+            tokens: metrics.tokens_out,
+        });
+    }
+
+    let best = points.iter().map(|p| p.tokens_per_s).fold(0f64, f64::max);
+    println!(
+        "batching speedup: {:.2}x (best vs 1 slot)",
+        best / single.max(1e-9)
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("bench_serve")),
+        ("model", Json::str(model.name.clone())),
+        ("quick", Json::Bool(quick)),
+        ("requests", Json::num(n_requests as f64)),
+        ("gen_len", Json::num(gen_len as f64)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("batches", Json::num(p.batches as f64)),
+                            ("tokens_per_s", Json::num(p.tokens_per_s)),
+                            ("tbt_p50_ms", Json::num(p.tbt_p50_ms)),
+                            ("tbt_p95_ms", Json::num(p.tbt_p95_ms)),
+                            ("tokens", Json::num(p.tokens as f64)),
+                            (
+                                "speedup_vs_1",
+                                Json::num(p.tokens_per_s / single.max(1e-9)),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = out_path();
+    match std::fs::write(&path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("recorded {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    Ok(())
+}

@@ -52,6 +52,19 @@ impl ModelConfig {
         self.n_layers as u64 * (d * d + 2 * d * kv + d * d + 3 * d * f)
     }
 
+    /// Clamp `n_partitions` down to the largest value (≥ 1, ≤ current)
+    /// that divides `n_layers` evenly. Fabricated host serving accepts
+    /// any named config this way (e.g. llama-7b's 32 layers drop from
+    /// 6 to 4 pipeline partitions); real artifact manifests keep their
+    /// exact partitioning and never go through here.
+    pub fn with_divisible_partitions(mut self) -> Self {
+        self.n_partitions = self.n_partitions.max(1);
+        while self.n_layers % self.n_partitions != 0 {
+            self.n_partitions -= 1;
+        }
+        self
+    }
+
     /// KV-cache bytes per token (all layers, f16 entries as deployed).
     pub fn kv_bytes_per_token(&self, bytes_per_elem: usize) -> u64 {
         (self.n_layers * 2 * self.kv_dim() * bytes_per_elem) as u64
@@ -219,6 +232,34 @@ mod tests {
         let j = c.to_json();
         let c2 = ModelConfig::from_json(&j).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn divisible_partitions_clamp() {
+        // 6 already divides falcon3-1b's 18 layers: unchanged
+        assert_eq!(ModelConfig::falcon3_1b().with_divisible_partitions().n_partitions, 6);
+        // llama-7b: 32 layers, 6 -> 4
+        let l7 = ModelConfig::named("llama-7b").unwrap().with_divisible_partitions();
+        assert_eq!(l7.n_partitions, 4);
+        assert_eq!(l7.layers_per_partition(), 8);
+        // falcon3-3b: 22 layers, 6 -> 2
+        let f3 = ModelConfig::named("falcon3-3b").unwrap().with_divisible_partitions();
+        assert_eq!(f3.n_partitions, 2);
+        // every named config becomes host-fabricable
+        for name in [
+            "falcon3-1b",
+            "sim-tiny",
+            "falcon3-3b",
+            "falcon3-7b",
+            "falcon3-10b",
+            "llama-7b",
+            "llama-13b",
+            "llama-70b",
+        ] {
+            let c = ModelConfig::named(name).unwrap().with_divisible_partitions();
+            assert!(c.n_partitions >= 1);
+            assert_eq!(c.n_layers % c.n_partitions, 0, "{name}");
+        }
     }
 
     #[test]

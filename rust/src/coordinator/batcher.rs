@@ -64,6 +64,13 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Arrival time of the next admissible queued request (admission is
+    /// FIFO, so this is the earliest instant `admit` can make progress
+    /// — the serving loop skips or sleeps to it when idle).
+    pub fn next_arrival(&self) -> Option<f64> {
+        self.queue.front().map(|r| r.arrival_s)
+    }
+
     /// Admit arrived requests into free slots. Returns admitted slot ids.
     pub fn admit(&mut self, now: f64) -> Vec<usize> {
         let mut admitted = Vec::new();
@@ -143,6 +150,17 @@ mod tests {
         assert_eq!(admitted, vec![0, 1]);
         assert_eq!(b.queued(), 3);
         assert_eq!(b.active_slots(), vec![0, 1]);
+    }
+
+    #[test]
+    fn next_arrival_tracks_fifo_head() {
+        let mut b = Batcher::new(1);
+        assert_eq!(b.next_arrival(), None);
+        b.submit(req(0, 1.5));
+        b.submit(req(1, 9.0));
+        assert_eq!(b.next_arrival(), Some(1.5));
+        b.admit(2.0);
+        assert_eq!(b.next_arrival(), Some(9.0));
     }
 
     #[test]

@@ -11,7 +11,11 @@ pub struct ServeMetrics {
     pub tokens_out: u64,
     pub requests_done: u64,
     pub wall_s: f64,
+    /// Actual prefill *execution* time per request (embed + all
+    /// partition stages + head) — distinct from TTFT, which also
+    /// contains the admission-queue wait.
     pub prefill_time: Summary,
+    /// Actual decode execution time per token (same decomposition).
     pub decode_time: Summary,
 }
 
@@ -20,17 +24,25 @@ impl ServeMetrics {
         Default::default()
     }
 
+    /// Admission-to-first-token (includes any wait for a pipeline
+    /// round, not just prefill compute).
     pub fn record_ttft(&mut self, s: f64) {
         self.ttft.add(s);
     }
 
+    /// Wall gap between consecutive tokens of one sequence.
     pub fn record_tbt(&mut self, s: f64) {
         self.tbt.add(s);
-        self.decode_time.add(s);
     }
 
+    /// Backend execution time of one prefill (compute only).
     pub fn record_prefill(&mut self, s: f64) {
         self.prefill_time.add(s);
+    }
+
+    /// Backend execution time of one decode token (compute only).
+    pub fn record_decode(&mut self, s: f64) {
+        self.decode_time.add(s);
     }
 
     pub fn tokens_per_s(&self) -> f64 {
@@ -84,5 +96,22 @@ mod tests {
         let r = m.report();
         assert!(r.contains("requests=1"));
         assert!(r.contains("TTFT"));
+    }
+
+    #[test]
+    fn compute_times_are_independent_of_latency_metrics() {
+        // prefill compute is its own series: recording a TTFT (queue
+        // wait included) must not pollute it, and TBT must not leak
+        // into decode compute.
+        let mut m = ServeMetrics::new();
+        m.record_ttft(0.500);
+        m.record_tbt(0.100);
+        assert_eq!(m.prefill_time.count(), 0);
+        assert_eq!(m.decode_time.count(), 0);
+        m.record_prefill(0.004);
+        m.record_decode(0.002);
+        assert_eq!(m.prefill_time.count(), 1);
+        assert!((m.prefill_time.mean() - 0.004).abs() < 1e-12);
+        assert!((m.decode_time.mean() - 0.002).abs() < 1e-12);
     }
 }

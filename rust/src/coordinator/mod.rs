@@ -1,4 +1,5 @@
-//! The serving coordinator — the paper's §V-B system layer.
+//! The serving coordinator — the paper's §V-B system layer, all of it
+//! tier-1-tested offline.
 //!
 //! Requests are admitted by the dynamic batcher into one of
 //! `max_batches` slots; the 6-stage pipeline walks every in-flight
@@ -7,15 +8,20 @@
 //! "allowing all partitions to operate in parallel and maintain full
 //! macro utilization"); the KV-cache manager routes every KV access to
 //! DR eDRAM or external DRAM as it happens.
+//!
+//! The [`Server`] is generic over [`runtime::InferenceBackend`]
+//! (DESIGN.md §9): `Server<HostBackend>` runs full traces offline on
+//! the bitplane kernel engine; `Server<ModelExecutor>` (`pjrt`
+//! feature) executes the compiled artifacts.
+//!
+//! [`runtime::InferenceBackend`]: crate::runtime::InferenceBackend
 
 mod batcher;
 mod metrics;
 mod pipeline;
-#[cfg(feature = "pjrt")]
 mod server;
 
 pub use batcher::{Batcher, SlotState};
 pub use metrics::ServeMetrics;
 pub use pipeline::{PipelineSchedule, StageOp};
-#[cfg(feature = "pjrt")]
 pub use server::{CompletedRequest, Server};

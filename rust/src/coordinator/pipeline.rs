@@ -138,6 +138,62 @@ mod tests {
     }
 
     #[test]
+    fn non_contiguous_slot_sets_schedule_cleanly() {
+        // continuous batching frees slots mid-flight, so rounds
+        // routinely run over gappy sets like {1, 3, 5}: lanes are
+        // positional (skew by lane index), slot ids pass through
+        let s = PipelineSchedule::for_round(&[1, 3, 5], 4);
+        s.validate(4).unwrap();
+        assert_eq!(s.ops.len(), 12);
+        assert_eq!(s.n_cycles, 4 + 2); // 3 lanes, last starts at cycle 2
+        let mut seen: Vec<usize> = s.ops.iter().map(|o| o.slot).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, vec![1, 3, 5]);
+        // lane skew follows list position, not slot id: slot 3 (lane 1)
+        // runs partition 0 in cycle 1
+        assert!(s
+            .ops
+            .iter()
+            .any(|o| o.slot == 3 && o.partition == 0 && o.cycle == 1));
+    }
+
+    #[test]
+    fn schedule_valid_for_sparse_random_slot_ids() {
+        check(0x51A7, 100, |g| {
+            let n_parts = g.usize(1, 8);
+            let n_slots = g.usize(0, 6);
+            // strictly increasing ids with random gaps (slot ids carry
+            // no contiguity guarantee whatsoever)
+            let mut slots = Vec::with_capacity(n_slots);
+            let mut next = g.usize(0, 3);
+            for _ in 0..n_slots {
+                slots.push(next);
+                next += g.usize(1, 5);
+            }
+            let s = PipelineSchedule::for_round(&slots, n_parts);
+            if let Err(e) = s.validate(n_parts) {
+                return Err(e);
+            }
+            prop_assert!(
+                s.ops.len() == slots.len() * n_parts,
+                "op count {} != {}",
+                s.ops.len(),
+                slots.len() * n_parts
+            );
+            for (lane, &slot) in slots.iter().enumerate() {
+                prop_assert!(
+                    s.ops
+                        .iter()
+                        .any(|o| o.slot == slot && o.partition == 0 && o.cycle == lane),
+                    "slot {slot} does not enter at its lane cycle {lane}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn utilization_improves_with_batching() {
         let u1 = PipelineSchedule::for_round(&[0], 6).utilization(6);
         let u6 = PipelineSchedule::for_round(&[0, 1, 2, 3, 4, 5], 6).utilization(6);

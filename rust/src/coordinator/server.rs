@@ -1,6 +1,8 @@
-//! The serving loop: batcher + pipeline schedule + PJRT execution +
-//! KV-cache placement, with the eDRAM retention clock driven by real
-//! wall time so the DR-eDRAM argument is live-checked on every read.
+//! The serving loop: batcher + pipeline schedule + backend execution +
+//! KV-cache placement, with the eDRAM retention clock driven by modeled
+//! hardware time so the DR-eDRAM argument is live-checked on every
+//! read. Generic over [`InferenceBackend`] — the same loop serves the
+//! PJRT artifact runtime and the offline host transformer.
 
 use std::time::Instant;
 
@@ -8,7 +10,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{EdramParams, ServeConfig};
 use crate::kvcache::KvCacheManager;
-use crate::runtime::{DecodeState, ModelExecutor, TensorF32};
+use crate::runtime::{InferenceBackend, Logits, SequenceState};
 use crate::trace::Request;
 use crate::util::rng::Rng;
 
@@ -22,48 +24,50 @@ pub struct CompletedRequest {
     pub id: u64,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
+    /// Admission-to-first-token (s).
     pub ttft_s: f64,
-    pub finished_at_s: f64,
+    /// Admission-to-last-token latency (s).
+    pub latency_s: f64,
 }
 
-pub struct Server {
-    exec: ModelExecutor,
+pub struct Server<B: InferenceBackend> {
+    backend: B,
     serve: ServeConfig,
     kv: KvCacheManager,
     rng: Rng,
 }
 
-impl Server {
-    pub fn new(exec: ModelExecutor, serve: ServeConfig) -> Result<Self> {
+impl<B: InferenceBackend> Server<B> {
+    pub fn new(backend: B, serve: ServeConfig) -> Result<Self> {
         serve.validate()?;
         anyhow::ensure!(
-            serve.prefill_len <= exec.manifest.prefill_len,
-            "serve prefill_len {} exceeds artifact bucket {}",
+            serve.prefill_len <= backend.prefill_len(),
+            "serve prefill_len {} exceeds backend prompt bucket {}",
             serve.prefill_len,
-            exec.manifest.prefill_len
+            backend.prefill_len()
         );
         anyhow::ensure!(
-            serve.max_seq <= exec.manifest.model.max_seq,
+            serve.max_seq <= backend.model().max_seq,
             "serve max_seq exceeds model max_seq"
         );
-        let kv = KvCacheManager::new(&exec.manifest.model, &serve, EdramParams::default());
+        let kv = KvCacheManager::new(backend.model(), &serve, EdramParams::default());
         Ok(Server {
             rng: Rng::new(serve.seed),
             kv,
             serve,
-            exec,
+            backend,
         })
     }
 
-    pub fn executor(&self) -> &ModelExecutor {
-        &self.exec
+    pub fn backend(&self) -> &B {
+        &self.backend
     }
 
     pub fn kv(&self) -> &KvCacheManager {
         &self.kv
     }
 
-    fn sample(&mut self, logits: &TensorF32) -> i32 {
+    fn sample(&mut self, logits: &Logits) -> i32 {
         if self.serve.top_k <= 1 {
             logits.argmax() as i32
         } else {
@@ -74,8 +78,11 @@ impl Server {
 
     /// Run a trace to completion (continuous batching). Returns the
     /// completed requests and serving metrics.
-    pub fn run_trace(&mut self, requests: Vec<Request>) -> Result<(Vec<CompletedRequest>, ServeMetrics)> {
-        let n_parts = self.exec.n_partitions();
+    pub fn run_trace(
+        &mut self,
+        requests: Vec<Request>,
+    ) -> Result<(Vec<CompletedRequest>, ServeMetrics)> {
+        let n_parts = self.backend.n_partitions();
         let mut batcher = Batcher::new(self.serve.max_batches);
         for r in requests {
             anyhow::ensure!(
@@ -88,36 +95,61 @@ impl Server {
             batcher.submit(r);
         }
 
-        let mut states: Vec<Option<DecodeState>> = Vec::new();
+        let mut states: Vec<Option<B::State>> = Vec::new();
         let mut last_tok: Vec<i32> = Vec::new();
         let mut last_tok_at: Vec<f64> = Vec::new();
         let mut slot_ttft: Vec<f64> = Vec::new();
+        // Backend execution time accumulated for the slot's current
+        // token (embed + every partition stage + head) — what
+        // prefill/decode compute metrics record, as opposed to the
+        // queue wait that TTFT measures.
+        let mut slot_compute: Vec<f64> = Vec::new();
         for _ in 0..self.serve.max_batches {
             states.push(None);
             last_tok.push(0);
             last_tok_at.push(0.0);
             slot_ttft.push(0.0);
+            slot_compute.push(0.0);
         }
 
         let mut done = Vec::new();
         let mut metrics = ServeMetrics::new();
         let t0 = Instant::now();
-        let now = |t0: &Instant| t0.elapsed().as_secs_f64();
+        // The serving clock is wall time plus any idle skip: an offline
+        // backend (realtime() == false) jumps straight over gaps before
+        // the next queued arrival instead of sleeping through sparse
+        // traces; a realtime backend sleeps so arrivals stay
+        // wall-clock-true.
+        let mut skipped_s = 0.0f64;
+        let now = |skipped: f64| t0.elapsed().as_secs_f64() + skipped;
         // The DR-eDRAM retention clock runs on *modeled hardware time*
         // (one hw_tbt per token round): the retention argument is about
-        // the accelerator's cadence, not the CPU emulating it. Wall
-        // time is still used for all serving metrics.
+        // the accelerator's cadence, not the CPU emulating it. The
+        // serving clock is still used for all latency metrics.
         let mut hw_time = 0.0f64;
 
         while !batcher.all_idle() {
-            for slot in batcher.admit(now(&t0)) {
+            for slot in batcher.admit(now(skipped_s)) {
                 self.kv.start_seq(slot);
                 states[slot] = None;
+                slot_compute[slot] = 0.0;
             }
             let active = batcher.active_slots();
             if active.is_empty() {
-                // waiting on a future arrival
-                std::thread::sleep(std::time::Duration::from_micros(200));
+                // waiting on a future arrival: sleep (realtime) or skip
+                // the clock ahead (offline) — never busy-wait
+                let next = batcher
+                    .next_arrival()
+                    .context("no active slots and nothing queued")?;
+                let t_now = now(skipped_s);
+                if next > t_now {
+                    if self.backend.realtime() {
+                        let nap = (next - t_now).min(0.01);
+                        std::thread::sleep(std::time::Duration::from_secs_f64(nap));
+                    } else {
+                        skipped_s += next - t_now;
+                    }
+                }
                 continue;
             }
 
@@ -128,73 +160,84 @@ impl Server {
                 .map_err(|e| anyhow::anyhow!("pipeline invariant violated: {e}"))?;
 
             // per-slot hidden activations flowing between stages
-            let mut hidden: Vec<Option<xla::Literal>> = (0..self.serve.max_batches)
-                .map(|_| None)
-                .collect();
+            let mut hidden: Vec<Option<B::Hidden>> =
+                (0..self.serve.max_batches).map(|_| None).collect();
 
             for op in &sched.ops {
                 let slot = op.slot;
-                let is_prefill =
-                    batcher.slot(slot).state == SlotState::NeedsPrefill;
+                let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
+                let t_op = Instant::now();
                 if op.partition == 0 {
                     // entering the pipeline: embed
                     let h = if is_prefill {
                         let prompt = &batcher.slot(slot).request.as_ref().unwrap().prompt;
-                        self.exec.embed_prompt(prompt)?
+                        self.backend.embed_prompt(prompt)?
                     } else {
-                        self.exec.embed_token(last_tok[slot])?
+                        self.backend.embed_token(last_tok[slot])?
                     };
                     hidden[slot] = Some(h);
                     if states[slot].is_none() {
-                        states[slot] = Some(self.exec.new_state()?);
+                        states[slot] = Some(self.backend.new_state()?);
                     }
                 }
                 let h_in = hidden[slot].take().expect("pipeline order broken");
                 let state = states[slot].as_mut().unwrap();
                 let h_out = if is_prefill {
-                    self.exec.run_partition_prefill(op.partition, &h_in, state)?
+                    self.backend.run_partition_prefill(op.partition, &h_in, state)?
                 } else {
-                    let pos = state.pos;
-                    self.exec.run_partition_decode(op.partition, &h_in, pos, state)?
+                    let pos = state.pos();
+                    self.backend.run_partition_decode(op.partition, &h_in, pos, state)?
                 };
                 hidden[slot] = Some(h_out);
+                slot_compute[slot] += t_op.elapsed().as_secs_f64();
             }
 
             // head + sampling + KV accounting per slot
             hw_time += self.serve.hw_tbt_s; // one pipeline token round
             for &slot in &active {
-                let t_now = now(&t0);
                 let h = hidden[slot].take().expect("missing hidden after round");
                 let state = states[slot].as_mut().unwrap();
                 let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
+                // KV accounting runs outside the compute timers: only
+                // backend execution is billed to prefill/decode compute
                 let logits = if is_prefill {
                     let plen = batcher.slot(slot).request.as_ref().unwrap().prompt.len();
-                    state.pos = plen;
-                    state.prompt_len = plen;
+                    state.set_pos(plen);
+                    state.set_prompt_len(plen);
                     self.kv.prefill(slot, plen, hw_time);
-                    self.exec.head_at(&h, plen - 1)?
+                    let t_head = Instant::now();
+                    let l = self.backend.head_at(&h, plen - 1)?;
+                    slot_compute[slot] += t_head.elapsed().as_secs_f64();
+                    l
                 } else {
-                    state.pos += 1;
+                    state.set_pos(state.pos() + 1);
                     self.kv.write_token(slot, hw_time);
                     self.kv
                         .read_context(slot, hw_time)
                         .context("DR-eDRAM retention violated during decode")?;
-                    self.exec.head_decode_logits(&h)?
+                    let t_head = Instant::now();
+                    let l = self.backend.head_decode_logits(&h)?;
+                    slot_compute[slot] += t_head.elapsed().as_secs_f64();
+                    l
                 };
                 let tok = self.sample(&logits);
+                let t_now = now(skipped_s);
 
                 let admitted_at = batcher.slot(slot).admitted_at;
                 if is_prefill {
                     slot_ttft[slot] = t_now - admitted_at;
                     metrics.record_ttft(t_now - admitted_at);
-                    metrics.record_prefill(t_now - admitted_at);
+                    // actual prefill execution time, not the queue wait
+                    metrics.record_prefill(slot_compute[slot]);
                     batcher.slot_mut(slot).state = SlotState::Decoding { generated: 1 };
                 } else {
                     metrics.record_tbt(t_now - last_tok_at[slot]);
+                    metrics.record_decode(slot_compute[slot]);
                     if let SlotState::Decoding { generated } = &mut batcher.slot_mut(slot).state {
                         *generated += 1;
                     }
                 }
+                slot_compute[slot] = 0.0;
                 last_tok[slot] = tok;
                 last_tok_at[slot] = t_now;
                 batcher.slot_mut(slot).output.push(tok);
@@ -204,7 +247,7 @@ impl Server {
                 let slot_ref = batcher.slot(slot);
                 let req = slot_ref.request.as_ref().unwrap();
                 let produced = slot_ref.output.len();
-                let out_of_room = state.pos + 1 >= self.serve.max_seq;
+                let out_of_room = state.pos() + 1 >= self.serve.max_seq;
                 if produced >= req.max_new_tokens || out_of_room {
                     let (req, tokens, admitted_at) = batcher.release(slot);
                     self.kv.end_seq(slot);
@@ -215,18 +258,85 @@ impl Server {
                         prompt_len: req.prompt.len(),
                         tokens,
                         ttft_s: slot_ttft[slot],
-                        finished_at_s: t_now - admitted_at,
+                        latency_s: t_now - admitted_at,
                     });
                 }
             }
         }
 
-        metrics.wall_s = now(&t0);
+        metrics.wall_s = now(skipped_s);
         // DR-eDRAM health postcondition (DESIGN.md invariant 5)
         anyhow::ensure!(
             self.kv.edram().retention_failures == 0,
             "retention failures occurred"
         );
         Ok((done, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::runtime::HostBackend;
+
+    fn micro() -> ModelConfig {
+        ModelConfig {
+            name: "host-micro".into(),
+            n_layers: 2,
+            d_model: 32,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 64,
+            vocab_size: 64,
+            max_seq: 32,
+            n_partitions: 2,
+            act_bits: 8,
+        }
+    }
+
+    #[test]
+    fn rejects_serve_config_exceeding_backend_limits() {
+        let serve = ServeConfig {
+            prefill_len: 64,
+            max_seq: 128,
+            ondie_tokens: 16,
+            ..ServeConfig::default()
+        };
+        // micro model has max_seq 32 < serve.max_seq 128
+        let backend = HostBackend::new(micro(), 1).unwrap();
+        assert!(Server::new(backend, serve).is_err());
+    }
+
+    #[test]
+    fn closed_batch_trace_completes_on_host_backend() {
+        let backend = HostBackend::new(micro(), 2).unwrap();
+        let serve = ServeConfig {
+            max_batches: 2,
+            prefill_len: 8,
+            max_seq: 32,
+            ondie_tokens: 8,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                arrival_s: 0.0,
+                prompt: vec![1 + i as i32, 2, 3],
+                max_new_tokens: 4,
+            })
+            .collect();
+        let (done, mut metrics) = server.run_trace(reqs).unwrap();
+        assert_eq!(done.len(), 3);
+        for r in &done {
+            assert_eq!(r.tokens.len(), 4);
+            assert!(r.latency_s >= r.ttft_s);
+        }
+        assert_eq!(metrics.requests_done, 3);
+        assert_eq!(metrics.tokens_out, 12);
+        assert!(metrics.prefill_time.count() == 3);
+        assert!(metrics.tokens_per_s() > 0.0);
+        assert_eq!(server.kv().edram().retention_failures, 0);
     }
 }

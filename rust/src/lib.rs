@@ -6,13 +6,18 @@
 //! per-experiment index, EXPERIMENTS.md for paper-vs-measured results.
 //!
 //! Layer map:
-//! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, weights
-//!   baked as constants = the ROM mask set) via the PJRT C API. The
-//!   PJRT-backed executor lives behind the off-by-default `pjrt`
-//!   feature; manifest handling is always available.
-//! * [`coordinator`] — the serving layer: dynamic batcher and the
-//!   6-stage macro-partition pipeline (paper §V-B). The PJRT-executing
-//!   `Server` is `pjrt`-gated; the batcher/schedule/metrics are not.
+//! * [`runtime`] — the backend-agnostic serving contract
+//!   ([`runtime::InferenceBackend`], DESIGN.md §9) and its two
+//!   implementations: the always-built offline
+//!   [`runtime::HostBackend`] (BitNet-style partitioned transformer on
+//!   the bitplane kernels) and the PJRT [`runtime::ModelExecutor`]
+//!   (`pjrt` feature; AOT HLO artifacts with weights baked as
+//!   constants = the ROM mask set). Manifest handling is always
+//!   available.
+//! * [`coordinator`] — the serving layer: dynamic batcher, the 6-stage
+//!   macro-partition pipeline (paper §V-B), metrics, and the
+//!   [`coordinator::Server`], generic over the backend — all of it
+//!   tier-1-tested offline via `Server<HostBackend>`.
 //! * [`bitnet`] — ternary substrate: packed storage, quantizers, the
 //!   golden `ref_gemv`, and the word-parallel [`bitnet::BitplaneMatrix`]
 //!   kernel engine that every host-side functional compute path runs on.

@@ -9,18 +9,15 @@
 
 use std::path::PathBuf;
 
-use bitrom::config::HardwareConfig;
-#[cfg(feature = "pjrt")]
-use bitrom::config::ServeConfig;
-#[cfg(feature = "pjrt")]
-use bitrom::coordinator::Server;
+use bitrom::config::{HardwareConfig, ModelConfig, ServeConfig};
+use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
+use bitrom::kvcache::KvCacheManager;
 use bitrom::report::{fig1a_report, fig5a_report, fig5b_report, gemv_perf_report, table3_report};
-use bitrom::runtime::Manifest;
+use bitrom::runtime::{HostBackend, InferenceBackend, Manifest};
 #[cfg(feature = "pjrt")]
 use bitrom::runtime::ModelExecutor;
-#[cfg(feature = "pjrt")]
 use bitrom::trace::{generate, TraceConfig};
-use bitrom::util::args::ArgParser;
+use bitrom::util::args::{ArgParser, Args};
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -61,12 +58,14 @@ fn print_help() {
          USAGE: bitrom <command> [options]\n\n\
          COMMANDS:\n\
          \x20 serve     run a synthetic request trace through the 6-stage pipeline\n\
-         \x20 generate  greedy-generate from a prompt (token ids)\n\
+         \x20           (--host serves offline on the fabricated HostBackend)\n\
+         \x20 generate  greedy-generate from a prompt (token ids; --host = offline)\n\
          \x20 report    print paper tables/figures (--table3 --fig1a --fig5a --fig5b)\n\
          \x20 verify    replay the python golden trace and compare\n\
          \x20 info      artifact + config summary\n\n\
          Artifacts default to ./artifacts (override with BITROM_ARTIFACTS\n\
-         or --artifacts). Build them with `make artifacts`."
+         or --artifacts). Build them with `make artifacts`. The --host\n\
+         paths need neither artifacts nor the `pjrt` feature."
     );
 }
 
@@ -77,68 +76,65 @@ fn artifacts_dir(args: &bitrom::util::args::Args) -> PathBuf {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
-fn pjrt_unavailable(cmd: &str) -> anyhow::Result<()> {
-    anyhow::bail!(
-        "`bitrom {cmd}` needs the PJRT runtime — rebuild with \
-         `cargo build --release --features pjrt` (and a real xla binding)"
-    )
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_argv: Vec<String>) -> anyhow::Result<()> {
-    pjrt_unavailable("serve")
-}
-
-#[cfg(feature = "pjrt")]
-fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
-    let p = ArgParser::new("bitrom serve", "run a request trace through the pipeline")
-        .opt("artifacts", "", "artifact directory")
-        .opt("requests", "12", "number of requests")
-        .opt("batches", "6", "max in-flight batches")
-        .opt("gen", "32", "max new tokens per request")
-        .opt("rate", "0", "arrival rate (req/s, 0 = closed batch)")
-        .opt("seed", "1", "trace seed")
-        .flag("verbose", "per-request output");
-    let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
-
-    let exec = ModelExecutor::load(&artifacts_dir(&args))?;
-    println!(
-        "loaded {} artifacts in {:.2}s (model {}, {} partitions)",
-        exec.manifest.artifacts.len(),
-        exec.load_time_s,
-        exec.manifest.model.name,
-        exec.n_partitions()
-    );
-    let serve = ServeConfig {
-        max_batches: args.usize("batches"),
-        seed: args.u64("seed"),
-        ..ServeConfig::default()
-    };
-    let trace = TraceConfig {
+fn serve_trace_cfg(args: &Args, vocab: usize) -> TraceConfig {
+    TraceConfig {
         n_requests: args.usize("requests"),
         gen_len_min: args.usize("gen").min(8),
         gen_len_max: args.usize("gen"),
         arrival_rate: args.f64("rate"),
         seed: args.u64("seed"),
-        vocab_size: exec.manifest.model.vocab_size,
+        vocab_size: vocab,
         ..TraceConfig::default()
-    };
-    let mut server = Server::new(exec, serve)?;
-    let (done, mut metrics) = server.run_trace(generate(&trace))?;
-    if args.flag("verbose") {
-        for r in &done {
+    }
+}
+
+fn serve_cfg(args: &Args) -> ServeConfig {
+    ServeConfig {
+        max_batches: args.usize("batches"),
+        seed: args.u64("seed"),
+        ..ServeConfig::default()
+    }
+}
+
+/// Fabricate the offline backend for a `--host` invocation (shared by
+/// `serve` and `generate`). `max_context` caps the model's sequence
+/// length: HostState allocates real per-layer KV tensors `max_seq`
+/// rows deep, so a big named config (llama-7b: 32 layers × 4096 rows ×
+/// 4096 kv_dim f32) would otherwise allocate gigabytes per slot that
+/// this invocation can never use.
+fn host_backend(args: &Args, max_context: usize) -> anyhow::Result<HostBackend> {
+    let mut model = ModelConfig::named(args.str("model"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model {:?}", args.str("model")))?
+        .with_divisible_partitions();
+    model.max_seq = model.max_seq.min(max_context.max(1));
+    HostBackend::new(model, args.u64("seed"))
+}
+
+fn print_serve_outcome(
+    done: &[CompletedRequest],
+    metrics: &mut ServeMetrics,
+    kv: &KvCacheManager,
+    verbose: bool,
+) {
+    if verbose {
+        for r in done {
             println!(
-                "req {:>3}: prompt {:>2} tokens -> {} generated (ttft {:.1} ms)",
+                "req {:>3}: prompt {:>2} tokens -> {} generated \
+                 (ttft {:.1} ms, latency {:.1} ms)",
                 r.id,
                 r.prompt_len,
                 r.tokens.len(),
-                r.ttft_s * 1e3
+                r.ttft_s * 1e3,
+                r.latency_s * 1e3,
             );
         }
     }
     println!("{}", metrics.report());
-    let kv = server.kv();
+    println!(
+        "compute: prefill mean {:.3} ms/req | decode mean {:.4} ms/tok",
+        metrics.prefill_time.mean() * 1e3,
+        metrics.decode_time.mean() * 1e3,
+    );
     println!(
         "KV traffic: on-die {} / external {} accesses ({} external reduction); \
          eDRAM explicit refreshes: {}",
@@ -147,31 +143,106 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         bitrom::util::table::fmt_pct(kv.stats.external_reduction()),
         kv.edram().explicit_refreshes,
     );
+}
+
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let p = ArgParser::new("bitrom serve", "run a request trace through the pipeline")
+        .opt("artifacts", "", "artifact directory (PJRT path)")
+        .opt("requests", "12", "number of requests")
+        .opt("batches", "6", "max in-flight batches")
+        .opt("gen", "32", "max new tokens per request")
+        .opt("rate", "0", "arrival rate (req/s, 0 = closed batch)")
+        .opt("seed", "1", "trace seed")
+        .opt("model", "sim-tiny", "model config for --host")
+        .flag("host", "serve on the offline HostBackend (no artifacts/PJRT needed)")
+        .flag("verbose", "per-request output");
+    let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
+
+    if args.flag("host") {
+        let serve = serve_cfg(&args);
+        let backend = host_backend(&args, serve.max_seq)?;
+        println!(
+            "fabricated host model {} ({} params, {} partitions, ROM sparsity {:.1}%)",
+            backend.model().name,
+            backend.model().param_count(),
+            backend.model().n_partitions,
+            backend.rom_sparsity() * 100.0,
+        );
+        let trace = serve_trace_cfg(&args, backend.model().vocab_size);
+        let mut server = Server::new(backend, serve)?;
+        let (done, mut metrics) = server.run_trace(generate(&trace))?;
+        print_serve_outcome(&done, &mut metrics, server.kv(), args.flag("verbose"));
+        return Ok(());
+    }
+    serve_pjrt(&args)
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(args: &Args) -> anyhow::Result<()> {
+    let exec = ModelExecutor::load(&artifacts_dir(args))?;
+    println!(
+        "loaded {} artifacts in {:.2}s (model {}, {} partitions)",
+        exec.manifest.artifacts.len(),
+        exec.load_time_s,
+        exec.manifest.model.name,
+        exec.n_partitions()
+    );
+    let trace = serve_trace_cfg(args, exec.manifest.model.vocab_size);
+    let mut server = Server::new(exec, serve_cfg(args))?;
+    let (done, mut metrics) = server.run_trace(generate(&trace))?;
+    print_serve_outcome(&done, &mut metrics, server.kv(), args.flag("verbose"));
     Ok(())
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_generate(_argv: Vec<String>) -> anyhow::Result<()> {
-    pjrt_unavailable("generate")
+fn serve_pjrt(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "`bitrom serve` without --host needs the PJRT runtime — rebuild with \
+         `cargo build --release --features pjrt` (and a real xla binding), \
+         or pass --host to serve on the offline backend"
+    )
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
     let p = ArgParser::new("bitrom generate", "greedy generation from a token-id prompt")
-        .opt("artifacts", "", "artifact directory")
+        .opt("artifacts", "", "artifact directory (PJRT path)")
         .opt("prompt", "1,5,17,42", "comma-separated token ids")
-        .opt("n", "16", "tokens to generate");
+        .opt("n", "16", "tokens to generate")
+        .opt("model", "sim-tiny", "model config for --host")
+        .opt("seed", "1", "weight seed for --host")
+        .flag("host", "generate on the offline HostBackend");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
-    let exec = ModelExecutor::load(&artifacts_dir(&args))?;
     let prompt: Vec<i32> = args
         .str("prompt")
         .split(',')
         .map(|s| s.trim().parse())
         .collect::<Result<_, _>>()?;
-    let out = exec.generate_greedy(&prompt, args.usize("n"))?;
+
+    if args.flag("host") {
+        let backend = host_backend(&args, prompt.len() + args.usize("n"))?;
+        let out = backend.generate_greedy(&prompt, args.usize("n"))?;
+        println!("prompt:    {prompt:?}");
+        println!("generated: {out:?}");
+        return Ok(());
+    }
+    generate_pjrt(&args, &prompt)
+}
+
+#[cfg(feature = "pjrt")]
+fn generate_pjrt(args: &Args, prompt: &[i32]) -> anyhow::Result<()> {
+    let exec = ModelExecutor::load(&artifacts_dir(args))?;
+    let out = exec.generate_greedy(prompt, args.usize("n"))?;
     println!("prompt:    {prompt:?}");
     println!("generated: {out:?}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn generate_pjrt(_args: &Args, _prompt: &[i32]) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "`bitrom generate` without --host needs the PJRT runtime — rebuild with \
+         `cargo build --release --features pjrt`, or pass --host"
+    )
 }
 
 fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
@@ -218,7 +289,10 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 fn cmd_verify(_argv: Vec<String>) -> anyhow::Result<()> {
-    pjrt_unavailable("verify")
+    anyhow::bail!(
+        "`bitrom verify` needs the PJRT runtime — rebuild with \
+         `cargo build --release --features pjrt` (and a real xla binding)"
+    )
 }
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,343 @@
+//! Backend-agnostic inference API — the serving contract.
+//!
+//! The coordinator's serving loop (continuous batching + the partition
+//! pipeline of paper §V-B) needs exactly this much from a compute
+//! engine: embed a prompt or token, run one partition's prefill/decode
+//! stage over per-sequence KV state, and project a hidden state through
+//! the LM head. Everything else — what a tensor is, where the KV cache
+//! lives, whether the MACs run inside AOT-compiled PJRT executables or
+//! on the host bitplane kernels — is the backend's own business,
+//! captured in the associated [`State`](InferenceBackend::State) and
+//! [`Hidden`](InferenceBackend::Hidden) types.
+//!
+//! Two implementations ship in-tree (DESIGN.md §9):
+//! * [`ModelExecutor`](super::ModelExecutor) (`pjrt` feature) — the
+//!   compiled-artifact runtime, the CiROM deployment model.
+//! * [`HostBackend`](super::HostBackend) (always built) — a small
+//!   BitNet-style partitioned transformer on the word-parallel bitplane
+//!   kernel engine, so the whole serving stack runs offline under
+//!   tier-1.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+
+/// Decode progress every backend's per-sequence KV state must expose.
+/// `pos` is the number of positions already written (the next token's
+/// KV lands there); `prompt_len` is fixed after prefill.
+pub trait SequenceState {
+    fn pos(&self) -> usize;
+    fn set_pos(&mut self, pos: usize);
+    fn prompt_len(&self) -> usize;
+    fn set_prompt_len(&mut self, len: usize);
+}
+
+/// Index of the maximum element of `data` (greedy sampling). The one
+/// implementation both `Logits` and the pjrt `TensorF32` share, so a
+/// tie-break/NaN policy change can never diverge the two paths.
+pub fn argmax_f32(data: &[f32]) -> usize {
+    data.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Top-k indices of `data` by value, descending (shared like
+/// [`argmax_f32`]).
+pub fn top_k_f32(data: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    idx.sort_by(|&a, &b| data[b].partial_cmp(&data[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx
+}
+
+/// Next-token logits in host memory — the one tensor type the serving
+/// layer itself needs to understand (for sampling), so it is a concrete
+/// type rather than an associated one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Logits {
+    pub data: Vec<f32>,
+}
+
+impl Logits {
+    pub fn new(data: Vec<f32>) -> Self {
+        Logits { data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Index of the maximum element (greedy sampling).
+    pub fn argmax(&self) -> usize {
+        argmax_f32(&self.data)
+    }
+
+    /// Top-k indices by value, descending.
+    pub fn top_k(&self, k: usize) -> Vec<usize> {
+        top_k_f32(&self.data, k)
+    }
+}
+
+/// The execution contract the serving coordinator schedules onto.
+///
+/// A backend is a *loaded model*: partitioned into
+/// [`n_partitions`](Self::n_partitions) pipeline stages, able to run
+/// one stage of one sequence's current token through itself, holding
+/// all weights resident for its whole lifetime (the weight reload-free
+/// premise — nothing in this API can move a weight).
+pub trait InferenceBackend {
+    /// Opaque per-sequence KV state. Backends choose their own tensor
+    /// representation; the coordinator only tracks `pos`/`prompt_len`.
+    type State: SequenceState;
+    /// Opaque hidden activation flowing between pipeline stages.
+    type Hidden;
+
+    /// The architecture this backend executes.
+    fn model(&self) -> &ModelConfig;
+
+    /// Prompt-bucket capacity: the longest prompt `embed_prompt`
+    /// accepts (PJRT executables have a fixed prefill shape; host
+    /// backends typically allow up to `model().max_seq`).
+    fn prefill_len(&self) -> usize;
+
+    fn n_partitions(&self) -> usize {
+        self.model().n_partitions
+    }
+
+    /// True when execution latency is wall-clock-meaningful (real
+    /// accelerator or PJRT dispatch): the coordinator then honors
+    /// request arrival times by sleeping. Offline backends return
+    /// false and let the serving clock skip idle gaps.
+    fn realtime(&self) -> bool {
+        false
+    }
+
+    /// Fresh (zeroed) per-sequence KV state.
+    fn new_state(&self) -> Result<Self::State>;
+
+    /// Embed a prompt (1..=`prefill_len` tokens) into the pipeline's
+    /// input activation.
+    fn embed_prompt(&self, prompt: &[i32]) -> Result<Self::Hidden>;
+
+    /// Embed a single decode token.
+    fn embed_token(&self, token: i32) -> Result<Self::Hidden>;
+
+    /// One partition's prefill stage: consumes the hidden activation,
+    /// writes the partition's KV rows for every prompt position.
+    fn run_partition_prefill(
+        &self,
+        part: usize,
+        h: &Self::Hidden,
+        state: &mut Self::State,
+    ) -> Result<Self::Hidden>;
+
+    /// One partition's decode stage at absolute position `pos`: writes
+    /// the partition's KV row at `pos`, attends over `0..=pos`.
+    fn run_partition_decode(
+        &self,
+        part: usize,
+        h: &Self::Hidden,
+        pos: usize,
+        state: &mut Self::State,
+    ) -> Result<Self::Hidden>;
+
+    /// LM head over prefill hidden states at prompt row `idx`.
+    fn head_at(&self, h: &Self::Hidden, idx: usize) -> Result<Logits>;
+
+    /// LM head over a decode hidden state.
+    fn head_decode_logits(&self, h: &Self::Hidden) -> Result<Logits>;
+
+    // ---- provided drivers (single-stream paths built on the hooks) ----
+
+    /// Full prefill: the prompt through every partition in order;
+    /// returns (state, last-token logits).
+    fn prefill(&self, prompt: &[i32]) -> Result<(Self::State, Logits)> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut state = self.new_state()?;
+        let mut h = self.embed_prompt(prompt)?;
+        for part in 0..self.n_partitions() {
+            h = self.run_partition_prefill(part, &h, &mut state)?;
+        }
+        let logits = self.head_at(&h, prompt.len() - 1)?;
+        state.set_pos(prompt.len());
+        state.set_prompt_len(prompt.len());
+        Ok((state, logits))
+    }
+
+    /// One full decode step for `token` (written at `state.pos()`);
+    /// returns next-token logits.
+    fn decode_step(&self, state: &mut Self::State, token: i32) -> Result<Logits> {
+        let max_seq = self.model().max_seq;
+        anyhow::ensure!(state.pos() < max_seq, "sequence exceeds max_seq {max_seq}");
+        let mut h = self.embed_token(token)?;
+        let pos = state.pos();
+        for part in 0..self.n_partitions() {
+            h = self.run_partition_decode(part, &h, pos, state)?;
+        }
+        state.set_pos(pos + 1);
+        self.head_decode_logits(&h)
+    }
+
+    /// Greedy generation through the partitioned path (prefill + decode
+    /// steps; always produces at least the prefill's first token).
+    fn generate_greedy(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
+        let (mut state, logits) = self.prefill(prompt)?;
+        let mut out = Vec::with_capacity(n_new.max(1));
+        let mut tok = logits.argmax() as i32;
+        out.push(tok);
+        for _ in 1..n_new {
+            let logits = self.decode_step(&mut state, tok)?;
+            tok = logits.argmax() as i32;
+            out.push(tok);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_argmax_and_topk() {
+        let l = Logits::new(vec![0.1, 3.0, -1.0, 3.5, 2.0]);
+        assert_eq!(l.argmax(), 3);
+        assert_eq!(l.top_k(3), vec![3, 1, 4]);
+        assert_eq!(l.len(), 5);
+        assert!(!l.is_empty());
+    }
+
+    /// Minimal mock backend: hidden = running token sum, logits put the
+    /// mass on `sum % vocab`. Exercises the provided drivers and the
+    /// pos/prompt_len bookkeeping without any tensor machinery.
+    struct MockState {
+        pos: usize,
+        prompt_len: usize,
+        writes: Vec<usize>,
+    }
+
+    impl SequenceState for MockState {
+        fn pos(&self) -> usize {
+            self.pos
+        }
+        fn set_pos(&mut self, pos: usize) {
+            self.pos = pos;
+        }
+        fn prompt_len(&self) -> usize {
+            self.prompt_len
+        }
+        fn set_prompt_len(&mut self, len: usize) {
+            self.prompt_len = len;
+        }
+    }
+
+    struct MockBackend {
+        model: ModelConfig,
+    }
+
+    impl MockBackend {
+        fn new() -> Self {
+            MockBackend {
+                model: ModelConfig::sim_tiny(),
+            }
+        }
+    }
+
+    impl InferenceBackend for MockBackend {
+        type State = MockState;
+        type Hidden = i64;
+
+        fn model(&self) -> &ModelConfig {
+            &self.model
+        }
+
+        fn prefill_len(&self) -> usize {
+            self.model.max_seq
+        }
+
+        fn new_state(&self) -> Result<MockState> {
+            Ok(MockState {
+                pos: 0,
+                prompt_len: 0,
+                writes: Vec::new(),
+            })
+        }
+
+        fn embed_prompt(&self, prompt: &[i32]) -> Result<i64> {
+            Ok(prompt.iter().map(|&t| t as i64).sum())
+        }
+
+        fn embed_token(&self, token: i32) -> Result<i64> {
+            Ok(token as i64)
+        }
+
+        fn run_partition_prefill(
+            &self,
+            part: usize,
+            h: &i64,
+            state: &mut MockState,
+        ) -> Result<i64> {
+            state.writes.push(part);
+            Ok(h + 1)
+        }
+
+        fn run_partition_decode(
+            &self,
+            part: usize,
+            h: &i64,
+            pos: usize,
+            state: &mut MockState,
+        ) -> Result<i64> {
+            state.writes.push(100 * (pos + 1) + part);
+            Ok(h + 1)
+        }
+
+        fn head_at(&self, h: &i64, idx: usize) -> Result<Logits> {
+            let mut data = vec![0.0f32; self.model.vocab_size];
+            let hot = (*h as usize + idx) % self.model.vocab_size;
+            data[hot] = 1.0;
+            Ok(Logits::new(data))
+        }
+
+        fn head_decode_logits(&self, h: &i64) -> Result<Logits> {
+            let mut data = vec![0.0f32; self.model.vocab_size];
+            data[(*h as usize) % self.model.vocab_size] = 1.0;
+            Ok(Logits::new(data))
+        }
+    }
+
+    #[test]
+    fn provided_prefill_sets_state_and_visits_all_partitions() {
+        let b = MockBackend::new();
+        let (state, logits) = b.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(state.pos, 3);
+        assert_eq!(state.prompt_len, 3);
+        assert_eq!(state.writes, (0..b.n_partitions()).collect::<Vec<_>>());
+        // hidden 6 + 6 partitions + idx 2 → argmax 14
+        assert_eq!(logits.argmax(), 14);
+    }
+
+    #[test]
+    fn provided_decode_advances_pos_and_bounds_max_seq() {
+        let b = MockBackend::new();
+        let (mut state, _) = b.prefill(&[1, 2, 3]).unwrap();
+        b.decode_step(&mut state, 5).unwrap();
+        assert_eq!(state.pos, 4);
+        state.pos = b.model.max_seq;
+        assert!(b.decode_step(&mut state, 5).is_err());
+    }
+
+    #[test]
+    fn generate_greedy_emits_requested_tokens() {
+        let b = MockBackend::new();
+        let out = b.generate_greedy(&[1, 2, 3], 4).unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|&t| (t as usize) < b.model.vocab_size));
+    }
+}

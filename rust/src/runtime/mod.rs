@@ -1,14 +1,33 @@
-//! PJRT runtime: loads the AOT HLO artifacts (the "mask set") once at
-//! startup and executes them from the serving hot path. Python is never
-//! involved at runtime — the weights live inside the compiled
-//! executables as constants, which is the CiROM deployment model.
+//! Runtime layer: the backend-agnostic serving contract and its two
+//! implementations.
+//!
+//! [`InferenceBackend`] captures what the coordinator needs from a
+//! compute engine (embed / per-partition prefill & decode over opaque
+//! per-sequence KV state / LM head); DESIGN.md §9 documents the
+//! contract. Implementations:
+//!
+//! * [`HostBackend`] (always built) — a BitNet-style partitioned
+//!   transformer on the word-parallel bitplane kernels with f32
+//!   attention + real KV tensors, fabricated from a `ModelConfig` +
+//!   seed. The whole serving stack runs offline on it under tier-1.
+//! * [`ModelExecutor`] (`pjrt` feature) — loads the AOT HLO artifacts
+//!   (the "mask set") once at startup and executes them via the PJRT C
+//!   API; weights live inside the compiled executables as constants,
+//!   which is the CiROM deployment model. Python is never involved at
+//!   runtime.
+//!
+//! Manifest handling is always available.
 
+mod backend;
+mod host;
 mod manifest;
 #[cfg(feature = "pjrt")]
 mod model_exec;
 #[cfg(feature = "pjrt")]
 mod tensor;
 
+pub use backend::{argmax_f32, top_k_f32, InferenceBackend, Logits, SequenceState};
+pub use host::{HostBackend, HostState};
 pub use manifest::{ArtifactInfo, Manifest};
 #[cfg(feature = "pjrt")]
 pub use model_exec::{DecodeState, ModelExecutor};

@@ -8,6 +8,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::config::ModelConfig;
+
+use super::backend::{InferenceBackend, Logits, SequenceState};
 use super::manifest::Manifest;
 use super::tensor::{i32_scalar, tokens_to_literal, TensorF32};
 
@@ -340,5 +343,81 @@ impl ModelExecutor {
             out.push(tok);
         }
         Ok(out)
+    }
+}
+
+impl SequenceState for DecodeState {
+    fn pos(&self) -> usize {
+        self.pos
+    }
+    fn set_pos(&mut self, pos: usize) {
+        self.pos = pos;
+    }
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+    fn set_prompt_len(&mut self, len: usize) {
+        self.prompt_len = len;
+    }
+}
+
+/// The PJRT executor is the hardware-shaped implementation of the
+/// serving contract (DESIGN.md §9) — pure delegation to the inherent
+/// methods above, no behavior change. `realtime()` is true: PJRT
+/// dispatch latency is wall-clock-meaningful, so the coordinator honors
+/// request arrival times by sleeping instead of skipping ahead.
+impl InferenceBackend for ModelExecutor {
+    type State = DecodeState;
+    type Hidden = xla::Literal;
+
+    fn model(&self) -> &ModelConfig {
+        &self.manifest.model
+    }
+
+    fn prefill_len(&self) -> usize {
+        self.manifest.prefill_len
+    }
+
+    fn realtime(&self) -> bool {
+        true
+    }
+
+    fn new_state(&self) -> Result<DecodeState> {
+        ModelExecutor::new_state(self)
+    }
+
+    fn embed_prompt(&self, prompt: &[i32]) -> Result<xla::Literal> {
+        ModelExecutor::embed_prompt(self, prompt)
+    }
+
+    fn embed_token(&self, token: i32) -> Result<xla::Literal> {
+        ModelExecutor::embed_token(self, token)
+    }
+
+    fn run_partition_prefill(
+        &self,
+        part: usize,
+        h: &xla::Literal,
+        state: &mut DecodeState,
+    ) -> Result<xla::Literal> {
+        ModelExecutor::run_partition_prefill(self, part, h, state)
+    }
+
+    fn run_partition_decode(
+        &self,
+        part: usize,
+        h: &xla::Literal,
+        pos: usize,
+        state: &mut DecodeState,
+    ) -> Result<xla::Literal> {
+        ModelExecutor::run_partition_decode(self, part, h, pos, state)
+    }
+
+    fn head_at(&self, h: &xla::Literal, idx: usize) -> Result<Logits> {
+        Ok(Logits::new(ModelExecutor::head_at(self, h, idx)?.data))
+    }
+
+    fn head_decode_logits(&self, h: &xla::Literal) -> Result<Logits> {
+        Ok(Logits::new(ModelExecutor::head_decode_logits(self, h)?.data))
     }
 }

@@ -47,26 +47,15 @@ impl TensorF32 {
         Ok(TensorF32 { dims, data })
     }
 
-    /// Index of the maximum element (greedy sampling over logits).
+    /// Index of the maximum element (greedy sampling over logits) —
+    /// shares the sampling policy with [`Logits`](super::Logits).
     pub fn argmax(&self) -> usize {
-        self.data
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        super::backend::argmax_f32(&self.data)
     }
 
-    /// Top-k indices by value, descending.
+    /// Top-k indices by value, descending (same shared policy).
     pub fn top_k(&self, k: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..self.data.len()).collect();
-        idx.sort_by(|&a, &b| {
-            self.data[b]
-                .partial_cmp(&self.data[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        idx.truncate(k);
-        idx
+        super::backend::top_k_f32(&self.data, k)
     }
 }
 

@@ -1,0 +1,160 @@
+//! End-to-end offline serving tests (default features — no PJRT, no
+//! artifacts): full request traces through `Server<HostBackend>`,
+//! exercising continuous batching, the partition pipeline (validated
+//! every round, DESIGN.md §7.8), KV/eDRAM accounting and metrics under
+//! tier-1. The ISSUE-2 acceptance path.
+
+use std::time::Instant;
+
+use bitrom::config::{ModelConfig, ServeConfig};
+use bitrom::coordinator::{CompletedRequest, Server};
+use bitrom::runtime::{HostBackend, InferenceBackend};
+use bitrom::trace::{generate, Request, TraceConfig};
+
+const WEIGHT_SEED: u64 = 0xB17;
+
+fn host_server(max_batches: usize, top_k: usize) -> Server<HostBackend> {
+    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+    let serve = ServeConfig {
+        max_batches,
+        top_k,
+        ..ServeConfig::default()
+    };
+    Server::new(backend, serve).unwrap()
+}
+
+fn trace(n_requests: usize, arrival_rate: f64, seed: u64) -> Vec<Request> {
+    generate(&TraceConfig {
+        n_requests,
+        arrival_rate,
+        seed,
+        gen_len_min: 8,
+        gen_len_max: 24,
+        vocab_size: ModelConfig::sim_tiny().vocab_size,
+        ..TraceConfig::default()
+    })
+}
+
+fn by_id(mut done: Vec<CompletedRequest>) -> Vec<CompletedRequest> {
+    done.sort_by_key(|r| r.id);
+    done
+}
+
+#[test]
+fn full_trace_completes_with_healthy_edram_and_metrics() {
+    let mut reqs = trace(10, 0.0, 1);
+    // pin one long sequence (40-token prompt + 24 generated = 64 > the
+    // 32 on-die tokens) so the external-DRAM path is provably exercised
+    reqs[0].prompt = (0..40).map(|i| i % 256).collect();
+    reqs[0].max_new_tokens = 24;
+    let n = reqs.len();
+    let mut server = host_server(6, 1);
+    let (done, mut metrics) = server.run_trace(reqs).unwrap();
+
+    assert_eq!(done.len(), n, "every request completes");
+    let vocab = ModelConfig::sim_tiny().vocab_size;
+    for r in &done {
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 24);
+        assert!(r.tokens.iter().all(|&t| (t as usize) < vocab));
+        assert!(r.ttft_s >= 0.0 && r.latency_s >= r.ttft_s);
+    }
+    assert_eq!(metrics.requests_done as usize, n);
+    assert_eq!(
+        metrics.tokens_out,
+        done.iter().map(|r| r.tokens.len() as u64).sum::<u64>()
+    );
+    assert!(metrics.tokens_per_s() > 0.0);
+    // prefill compute was measured once per request, decode per token
+    assert_eq!(metrics.prefill_time.count() as usize, n);
+    assert_eq!(metrics.decode_time.count(), metrics.tokens_out - n as u64);
+    assert!(metrics.prefill_time.mean() > 0.0);
+
+    // DR-eDRAM invariants held for the whole run (DESIGN.md inv. 5)
+    assert_eq!(server.kv().edram().retention_failures, 0);
+    assert_eq!(server.kv().edram().explicit_refreshes, 0);
+    // KV placement actually split traffic on-die vs external
+    assert!(server.kv().stats.ondie_reads > 0);
+    assert!(server.kv().stats.external_reads > 0);
+    assert!(server.kv().stats.external_reduction() > 0.1);
+}
+
+#[test]
+fn serving_is_deterministic_under_fixed_seed() {
+    let run = || {
+        let mut server = host_server(6, 1);
+        let (done, _) = server.run_trace(trace(8, 0.0, 3)).unwrap();
+        by_id(done)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "request {} diverged", x.id);
+    }
+}
+
+#[test]
+fn top_k_sampling_is_deterministic_under_fixed_seed() {
+    let run = || {
+        let mut server = host_server(4, 4);
+        let (done, _) = server.run_trace(trace(6, 0.0, 5)).unwrap();
+        by_id(done)
+    };
+    let (a, b) = (run(), run());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.tokens, y.tokens, "sampled request {} diverged", x.id);
+    }
+}
+
+#[test]
+fn batched_serving_matches_single_stream_generation() {
+    // token-level determinism: the same request decoded alone (via the
+    // backend's provided greedy driver) and inside a 6-way batch must
+    // produce identical tokens — per-sequence KV state is isolated.
+    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+    let probe_prompt = vec![11, 22, 33, 44];
+    let solo = backend.generate_greedy(&probe_prompt, 6).unwrap();
+
+    let mut reqs = trace(6, 0.0, 7);
+    reqs[0].prompt = probe_prompt;
+    reqs[0].max_new_tokens = 6;
+    let mut server = host_server(6, 1);
+    let (done, _) = server.run_trace(reqs).unwrap();
+    let probe = done.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(probe.tokens, solo, "batching must not change results");
+}
+
+#[test]
+fn sparse_trace_skips_ahead_instead_of_busy_waiting() {
+    // 6 requests spaced 2s apart: 10s of virtual trace time. The
+    // offline backend skips idle gaps, so real elapsed time stays far
+    // below the virtual span (the old 200µs idle spin slept through
+    // all of it in real time).
+    let span = 10.0;
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i,
+            arrival_s: i as f64 * 2.0,
+            prompt: vec![1 + i as i32, 7, 19],
+            max_new_tokens: 6,
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut server = host_server(2, 1);
+    let (done, mut metrics) = server.run_trace(reqs).unwrap();
+    let real = t0.elapsed().as_secs_f64();
+    assert_eq!(done.len(), 6);
+    // the serving clock covered the whole trace...
+    assert!(metrics.wall_s >= span, "wall {} < span {span}", metrics.wall_s);
+    // ...but real time did not (generous margin for slow CI boxes)
+    assert!(real < span, "no skip-ahead: real {real}s >= span {span}s");
+    assert!(metrics.tokens_per_s() > 0.0);
+}
+
+#[test]
+fn single_slot_server_preserves_fifo_completion_order() {
+    let mut server = host_server(1, 1);
+    let (done, _) = server.run_trace(trace(4, 0.0, 11)).unwrap();
+    let ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3], "1-slot serving must be FIFO");
+}
