@@ -1,6 +1,6 @@
 //! End-to-end *offline* serving driver: the same coordinator stack as
-//! `serve_edge` (continuous batcher, 6-stage partition pipeline, DR
-//! eDRAM + external DRAM KV placement, live retention checking) but on
+//! `serve_edge` (continuous batcher, 6-stage partition pipeline, the
+//! tiered quantized KV store with live retention checking) but on
 //! the always-built [`HostBackend`] — no PJRT, no artifacts, runs on a
 //! clean checkout:
 //!
@@ -39,12 +39,13 @@ fn run(
     let mut server = Server::new(backend, serve)?;
     let (done, mut metrics) = server.run_trace(generate(trace_cfg))?;
     assert!(!done.is_empty());
-    let kv = server.kv();
+    // measured on the store's actual accesses (not an accounting model)
+    let kv = metrics.kv.clone().expect("host backend measures KV stats");
     Ok(RunStats {
         tokens_per_s: metrics.tokens_per_s(),
         tbt_p50: metrics.tbt.pct(50.0),
-        kv_reduction: kv.stats.external_reduction(),
-        refreshes: kv.edram().explicit_refreshes,
+        kv_reduction: kv.external_reduction(),
+        refreshes: kv.explicit_refreshes,
         rom_sparsity: server.backend().rom_sparsity(),
     })
 }
@@ -62,9 +63,9 @@ fn main() -> anyhow::Result<()> {
     let mut model = ModelConfig::named(args.str("model"))
         .ok_or_else(|| anyhow::anyhow!("unknown model {:?}", args.str("model")))?
         .with_divisible_partitions();
-    // HostState allocates real KV tensors max_seq rows deep per layer;
-    // cap the context at what this trace's ServeConfig can use so big
-    // named configs don't allocate gigabytes per slot
+    // KV pages are allocated on demand in the tiered store, but the
+    // server requires serve.max_seq <= model.max_seq — cap the model
+    // context at what this trace's ServeConfig can use
     model.max_seq = model.max_seq.min(ServeConfig::default().max_seq);
     let seed = args.u64("seed");
     let trace_cfg = TraceConfig {

@@ -1,15 +1,54 @@
-//! KV-cache manager benchmarks: decode-step accounting throughput and
-//! DR-eDRAM access costs (the manager runs on the serving hot path, so
-//! its overhead must be negligible vs a PJRT partition execution).
+//! KV-cache benchmarks: the tiered quantized store's append/gather
+//! hot path (it now carries every host-backend attention read), the
+//! analytic manager's accounting throughput, and raw DR-eDRAM access
+//! costs.
 
 use bitrom::config::{EdramParams, ModelConfig, ServeConfig};
-use bitrom::kvcache::KvCacheManager;
+use bitrom::dram::DramParams;
+use bitrom::kvcache::{KvCacheManager, KvQuant, KvStore, KvStoreConfig};
 use bitrom::util::bench::bench_config;
+use bitrom::util::rng::Rng;
+
+/// One full 128-token decode through the store: append + gather every
+/// step with read counting (the serving data-plane workload).
+fn store_decode(quant: KvQuant, model: &ModelConfig) -> f64 {
+    let mut store = KvStore::new(KvStoreConfig {
+        kv_dim: model.kv_dim(),
+        n_layers: model.n_layers,
+        block_tokens: 8,
+        ondie_tokens: 32,
+        quant,
+        edram: EdramParams::default(),
+        dram: DramParams::default(),
+    });
+    let mut seq = store.new_seq();
+    let mut rng = Rng::new(3);
+    let row: Vec<f32> = (0..model.kv_dim()).map(|_| rng.normal() as f32).collect();
+    let (mut k, mut v) = (Vec::new(), Vec::new());
+    for t in 0..128usize {
+        store.set_now(t as f64 * 0.005);
+        for layer in 0..model.n_layers {
+            store.append(&mut seq, layer, &row, &row);
+            store.gather(&seq, layer, t + 1, true, &mut k, &mut v).unwrap();
+        }
+    }
+    store.stats().external_reduction()
+}
 
 fn main() {
     let b = bench_config();
     let model = ModelConfig::sim_tiny();
     let serve = ServeConfig::default();
+
+    // the real data plane: quantize-on-write + dequantize-on-read
+    let r = b.run("kv_store q8 full 128-token decode (6 layers)", || {
+        store_decode(KvQuant::Q8, &model)
+    });
+    println!("{}", r.report());
+    let r = b.run("kv_store f32 full 128-token decode (6 layers)", || {
+        store_decode(KvQuant::F32, &model)
+    });
+    println!("{}", r.report());
 
     // full-sequence accounting (128 tokens, 6 layers)
     let r = b.run("kv_manager full 128-token sequence", || {

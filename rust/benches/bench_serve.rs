@@ -66,7 +66,8 @@ fn main() -> anyhow::Result<()> {
         let mut server = Server::new(backend, serve)?;
         let (done, mut metrics) = server.run_trace(generate(&trace_cfg))?;
         assert_eq!(done.len(), n_requests, "every request must complete");
-        assert_eq!(server.kv().edram().retention_failures, 0);
+        let kv = metrics.kv.as_ref().expect("host backend measures KV stats");
+        assert_eq!(kv.retention_failures, 0);
         let tput = metrics.tokens_per_s();
         if batches == 1 {
             single = tput;

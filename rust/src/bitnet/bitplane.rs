@@ -97,10 +97,12 @@ impl BitplaneMatrix {
         }
     }
 
+    /// Fan-in (input features).
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Fan-out (output features).
     pub fn cols(&self) -> usize {
         self.cols
     }

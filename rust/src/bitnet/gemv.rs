@@ -19,9 +19,12 @@ use super::Trit;
 /// never invalidates).
 #[derive(Debug, Clone)]
 pub struct TernaryMatrix {
+    /// Fan-in (input features).
     pub rows: usize,
+    /// Fan-out (output features).
     pub cols: usize,
     packed: PackedTrits,
+    /// Per-tensor dequantization scale (`w ≈ trit * scale`).
     pub scale: f32,
     /// Arc so long-lived consumers (`cirom::MacroBank`) share one copy
     /// instead of deep-cloning the plane words.
@@ -29,6 +32,7 @@ pub struct TernaryMatrix {
 }
 
 impl TernaryMatrix {
+    /// Build from explicit trits (row-major `[rows × cols]`).
     pub fn from_trits(rows: usize, cols: usize, trits: &[Trit], scale: f32) -> Self {
         assert_eq!(trits.len(), rows * cols, "trit count mismatch");
         TernaryMatrix {
@@ -52,6 +56,7 @@ impl TernaryMatrix {
         Self::from_trits(rows, cols, &trits, 1.0)
     }
 
+    /// The trit at `(row, col)`.
     #[inline]
     pub fn get(&self, row: usize, col: usize) -> Trit {
         self.packed.get(row * self.cols + col)
@@ -105,6 +110,7 @@ impl TernaryMatrix {
         self.packed.sparsity()
     }
 
+    /// Packed-storage footprint in bytes (1.6 bits/trit).
     pub fn storage_bytes(&self) -> usize {
         self.packed.bytes()
     }

@@ -64,6 +64,7 @@ pub struct PackedTrits {
 }
 
 impl PackedTrits {
+    /// Pack a trit slice (5 trits per byte, base-3).
     pub fn from_trits(trits: &[Trit]) -> Self {
         let mut data = Vec::with_capacity((trits.len() + 4) / 5);
         let mut zeros = 0usize;
@@ -84,18 +85,22 @@ impl PackedTrits {
         }
     }
 
+    /// Number of stored trits.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when no trits are stored.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Packed size in bytes.
     pub fn bytes(&self) -> usize {
         self.data.len()
     }
 
+    /// The trit at `idx`.
     #[inline]
     pub fn get(&self, idx: usize) -> Trit {
         assert!(idx < self.len, "trit index {idx} out of bounds {}", self.len);
@@ -114,6 +119,7 @@ impl PackedTrits {
         &DECODE5[self.data[chunk] as usize]
     }
 
+    /// Decode every trit (bulk table-lookup path).
     pub fn to_trits(&self) -> Vec<Trit> {
         let mut out = Vec::with_capacity(self.len);
         for c in 0..self.data.len() {

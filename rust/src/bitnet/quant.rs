@@ -23,10 +23,13 @@ pub fn absmean_ternary(w: &[f32]) -> (Vec<Trit>, f32) {
 pub struct QuantizedActs {
     /// Exact integers in [-qmax, qmax].
     pub values: Vec<i32>,
+    /// Dequantization scale (`x ≈ value * scale`).
     pub scale: f32,
+    /// Quantization width in bits.
     pub bits: usize,
 }
 
+/// Absmax-quantize an activation vector to `bits` bits.
 pub fn absmax_quantize(x: &[f32], bits: usize) -> QuantizedActs {
     let qmax = ((1i64 << (bits - 1)) - 1) as f32;
     let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
@@ -43,6 +46,7 @@ pub fn absmax_quantize(x: &[f32], bits: usize) -> QuantizedActs {
 }
 
 impl QuantizedActs {
+    /// Reconstruct the (lossy) float vector.
     pub fn dequant(&self) -> Vec<f32> {
         self.values.iter().map(|&v| v as f32 * self.scale).collect()
     }

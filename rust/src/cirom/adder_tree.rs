@@ -10,17 +10,20 @@
 
 use super::events::EventCounters;
 
+/// The shared global adder tree (one per macro; module docs).
 #[derive(Debug, Clone)]
 pub struct AdderTree {
     fan_in: usize,
 }
 
 impl AdderTree {
+    /// Tree with the given (power-of-two) fan-in.
     pub fn new(fan_in: usize) -> Self {
         assert!(fan_in.is_power_of_two(), "tree fan-in must be 2^k");
         AdderTree { fan_in }
     }
 
+    /// Inputs the tree reduces per pass.
     pub fn fan_in(&self) -> usize {
         self.fan_in
     }

@@ -15,10 +15,12 @@ use crate::config::MacroGeometry;
 use super::events::EventCounters;
 use super::macro_sim::BitRomMacro;
 
+/// A weight matrix tiled across BitROM macros (the multi-macro
+/// compute unit one projection maps onto).
 #[derive(Debug, Clone)]
 pub struct MacroBank {
     geom: MacroGeometry,
-    /// Tiles indexed [fan_in_tile][fan_out_tile].
+    /// Tiles indexed `[fan_in_tile][fan_out_tile]`.
     tiles: Vec<Vec<BitRomMacro>>,
     /// Bitplane view of the FULL weight matrix — the functional
     /// (non-event) compute path, bit-identical to tiling + accumulating
@@ -31,6 +33,7 @@ pub struct MacroBank {
 }
 
 impl MacroBank {
+    /// Tile `w` into macros of the given geometry.
     pub fn fabricate(geom: MacroGeometry, w: &TernaryMatrix) -> Self {
         let planes = w.bitplanes_arc();
         let in_tile = 2 * geom.cols;
@@ -63,14 +66,17 @@ impl MacroBank {
         }
     }
 
+    /// Macros in the bank.
     pub fn n_macros(&self) -> usize {
         self.tiles.iter().map(|r| r.len()).sum()
     }
 
+    /// Input features of the tiled matrix.
     pub fn fan_in(&self) -> usize {
         self.fan_in
     }
 
+    /// Output features of the tiled matrix.
     pub fn fan_out(&self) -> usize {
         self.fan_out
     }
@@ -100,6 +106,7 @@ impl MacroBank {
         y
     }
 
+    /// [`Self::gemv`] with the activation/weight scales applied.
     pub fn gemv_f32(&self, acts: &QuantizedActs, ev: &mut EventCounters) -> Vec<f32> {
         self.gemv(acts, ev)
             .into_iter()

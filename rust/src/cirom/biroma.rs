@@ -18,10 +18,14 @@ use crate::bitnet::{BitplaneMatrix, Trit};
 /// Which signal-line side is being read out.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Side {
+    /// Even signal lines act as bitlines.
     Even,
+    /// Odd signal lines act as bitlines.
     Odd,
 }
 
+/// One BiROMA array: single-transistor cells storing two trits each
+/// (paper §III-B1).
 #[derive(Debug, Clone)]
 pub struct Biroma {
     rows: usize,
@@ -88,10 +92,12 @@ impl Biroma {
         Biroma { rows, cols, cells }
     }
 
+    /// Wordlines in the array.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Cells per wordline (each stores two trits).
     pub fn cols(&self) -> usize {
         self.cols
     }

@@ -28,10 +28,12 @@ pub struct EventCounters {
 }
 
 impl EventCounters {
+    /// All-zero counters.
     pub fn new() -> Self {
         Default::default()
     }
 
+    /// Accumulate another trace's counts into this one.
     pub fn merge(&mut self, other: &EventCounters) {
         self.weight_reads += other.weight_reads;
         self.accums += other.accums;

@@ -15,6 +15,8 @@ use super::biroma::{Biroma, Side};
 use super::events::EventCounters;
 use super::trimla::Trimla;
 
+/// Bit-accurate simulator of one BitROM macro: a BiROMA array, its
+/// TriMLAs and the shared adder tree (paper Fig 3).
 #[derive(Debug, Clone)]
 pub struct BitRomMacro {
     geom: MacroGeometry,
@@ -87,18 +89,22 @@ impl BitRomMacro {
         })
     }
 
+    /// Input features this macro accepts.
     pub fn fan_in(&self) -> usize {
         self.fan_in
     }
 
+    /// Output channels this macro produces.
     pub fn fan_out(&self) -> usize {
         self.fan_out
     }
 
+    /// Weight dequantization scale.
     pub fn scale(&self) -> f32 {
         self.scale
     }
 
+    /// Zero-weight fraction of the stored tile.
     pub fn sparsity(&self) -> f64 {
         self.array.sparsity()
     }

@@ -21,8 +21,11 @@ use super::events::EventCounters;
 /// Decoded operating mode (the comparator outputs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrimlaMode {
+    /// Zero weight: EN gated low, no accumulate energy.
     Skip,
+    /// +1 weight: add the activation.
     Add,
+    /// −1 weight: subtract the activation.
     Sub,
 }
 
@@ -56,6 +59,7 @@ pub struct Trimla {
 }
 
 impl Trimla {
+    /// Accumulator with an `out_bits`-wide saturating register.
     pub fn new(out_bits: usize) -> Self {
         Trimla {
             acc: 0,
@@ -63,6 +67,7 @@ impl Trimla {
         }
     }
 
+    /// Clear the accumulator for the next channel pass.
     pub fn reset(&mut self) {
         self.acc = 0;
     }

@@ -30,12 +30,16 @@ pub const BITS_PER_CELL: f64 = 3.169925001442312; // 2 * log2(3)
 /// a 65nm CMOS process based on spatial scaling ratios").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TechNode {
+    /// 65 nm (the paper's implementation/normalization node).
     N65,
+    /// 28 nm.
     N28,
+    /// 14 nm.
     N14,
 }
 
 impl TechNode {
+    /// Feature size in nanometers.
     pub fn nm(self) -> f64 {
         match self {
             TechNode::N65 => 65.0,
@@ -57,6 +61,7 @@ impl TechNode {
         value / self.density_scale_vs_65()
     }
 
+    /// Parse a node name like `"65"` or `"28nm"`.
     pub fn parse(s: &str) -> Option<TechNode> {
         match s {
             "65" | "65nm" => Some(TechNode::N65),
@@ -105,6 +110,7 @@ impl Default for MacroGeometry {
 }
 
 impl MacroGeometry {
+    /// TriMLAs per macro (`cols / cols_per_trimla`).
     pub fn n_trimla(&self) -> usize {
         self.cols / self.cols_per_trimla
     }
@@ -180,6 +186,7 @@ impl EnergyParams {
         (v / self.v_nominal) * (v / self.v_nominal)
     }
 
+    /// Clock frequency at supply voltage `v` (linear scaling).
     pub fn clk_hz(&self, v: f64) -> f64 {
         self.clk_hz_nominal * v / self.v_nominal
     }
@@ -224,9 +231,13 @@ impl Default for EdramParams {
 /// Full hardware configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HardwareConfig {
+    /// Technology node.
     pub node: TechNode,
+    /// BiROMA array geometry.
     pub geometry: MacroGeometry,
+    /// Calibrated per-event energies.
     pub energy: EnergyParams,
+    /// DR eDRAM parameters.
     pub edram: EdramParams,
     /// Operating voltage (paper evaluates 0.6 V and 1.2 V).
     pub vdd: f64,
@@ -245,11 +256,13 @@ impl Default for HardwareConfig {
 }
 
 impl HardwareConfig {
+    /// This config operated at `vdd` volts.
     pub fn at_voltage(mut self, vdd: f64) -> Self {
         self.vdd = vdd;
         self
     }
 
+    /// This config scaled to `node`.
     pub fn at_node(mut self, node: TechNode) -> Self {
         self.node = node;
         self
@@ -261,6 +274,7 @@ impl HardwareConfig {
         (n_weights + per - 1) / per
     }
 
+    /// Export the key constants as JSON.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("node_nm", Json::num(self.node.nm())),

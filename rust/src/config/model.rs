@@ -4,31 +4,45 @@
 
 use crate::util::json::Json;
 
+/// Transformer architecture constants (mirrors the python side).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Config name (e.g. `"falcon3-1b"`).
     pub name: String,
+    /// Transformer blocks.
     pub n_layers: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Query heads.
     pub n_heads: usize,
+    /// KV heads (GQA when < `n_heads`).
     pub n_kv_heads: usize,
+    /// MLP inner width.
     pub d_ff: usize,
+    /// Vocabulary size.
     pub vocab_size: usize,
+    /// Maximum context length.
     pub max_seq: usize,
+    /// Pipeline partitions the layers split into (paper: 6).
     pub n_partitions: usize,
+    /// Activation quantization width in bits.
     pub act_bits: usize,
 }
 
 impl ModelConfig {
+    /// Per-head dimension (`d_model / n_heads`).
     pub fn head_dim(&self) -> usize {
         debug_assert_eq!(self.d_model % self.n_heads, 0);
         self.d_model / self.n_heads
     }
 
+    /// Layers per pipeline partition.
     pub fn layers_per_partition(&self) -> usize {
         debug_assert_eq!(self.n_layers % self.n_partitions, 0);
         self.n_layers / self.n_partitions
     }
 
+    /// K (or V) row width: `n_kv_heads * head_dim`.
     pub fn kv_dim(&self) -> usize {
         self.n_kv_heads * self.head_dim()
     }
@@ -148,6 +162,7 @@ impl ModelConfig {
 
     // ---- json ------------------------------------------------------------
 
+    /// Parse from JSON (all dimension fields required).
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let get = |k: &str| -> anyhow::Result<usize> {
             j.get(k)
@@ -172,6 +187,7 @@ impl ModelConfig {
         })
     }
 
+    /// Serialize to JSON.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),

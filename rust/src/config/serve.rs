@@ -4,6 +4,9 @@
 
 use crate::util::json::Json;
 
+/// Knobs of one serving deployment: batching, sequence shape, KV-cache
+/// placement/paging/quantization, sampling, and the modeled hardware
+/// token cadence.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
     /// Max batches in flight through the partition pipeline (paper: 6).
@@ -15,6 +18,13 @@ pub struct ServeConfig {
     pub max_seq: usize,
     /// Early tokens whose KV lives in DR eDRAM (paper: 32 @ seq 128).
     pub ondie_tokens: usize,
+    /// KV-store page size in tokens (`kvcache::KvStore` blocks).
+    pub kv_block_tokens: usize,
+    /// KV element width: 8 (i8 + per-token scale, the deployed mode)
+    /// or 32 (raw f32 reference mode).
+    pub kv_quant_bits: usize,
+    /// On-die KV tier capacity in bytes (paper §V-B: 13.5 MB).
+    pub kv_edram_bytes: u64,
     /// Greedy decoding (argmax) vs top-k sampling.
     pub top_k: usize,
     /// Sampling seed (ignored for greedy).
@@ -34,6 +44,9 @@ impl Default for ServeConfig {
             prefill_len: 64,
             max_seq: 128,
             ondie_tokens: 32,
+            kv_block_tokens: 8,
+            kv_quant_bits: 8,
+            kv_edram_bytes: 13_500_000,
             top_k: 1,
             seed: 0,
             hw_tbt_s: 0.005,
@@ -42,6 +55,8 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Check internal consistency; every constructor of a server
+    /// calls this.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.max_batches >= 1, "max_batches must be >= 1");
         anyhow::ensure!(
@@ -56,23 +71,41 @@ impl ServeConfig {
             self.ondie_tokens,
             self.max_seq
         );
+        anyhow::ensure!(self.kv_block_tokens >= 1, "kv_block_tokens must be >= 1");
+        // placement is per block start: a misaligned buffer would
+        // silently round up to the next block boundary, so the
+        // deployment would buffer more tokens than configured
+        anyhow::ensure!(
+            self.ondie_tokens % self.kv_block_tokens == 0,
+            "ondie_tokens {} must be a multiple of kv_block_tokens {}",
+            self.ondie_tokens,
+            self.kv_block_tokens
+        );
+        // the KV store's quant-mode parser is the single source of
+        // truth for which widths exist
+        crate::kvcache::KvQuant::from_bits(self.kv_quant_bits)?;
         anyhow::ensure!(self.top_k >= 1, "top_k must be >= 1");
         anyhow::ensure!(self.hw_tbt_s > 0.0, "hw_tbt_s must be positive");
         Ok(())
     }
 
+    /// Serialize to JSON (all fields).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("max_batches", Json::num(self.max_batches as f64)),
             ("prefill_len", Json::num(self.prefill_len as f64)),
             ("max_seq", Json::num(self.max_seq as f64)),
             ("ondie_tokens", Json::num(self.ondie_tokens as f64)),
+            ("kv_block_tokens", Json::num(self.kv_block_tokens as f64)),
+            ("kv_quant_bits", Json::num(self.kv_quant_bits as f64)),
+            ("kv_edram_bytes", Json::num(self.kv_edram_bytes as f64)),
             ("top_k", Json::num(self.top_k as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("hw_tbt_s", Json::num(self.hw_tbt_s)),
         ])
     }
 
+    /// Parse from JSON; missing fields fall back to the defaults.
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let d = ServeConfig::default();
         let get = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
@@ -81,6 +114,12 @@ impl ServeConfig {
             prefill_len: get("prefill_len", d.prefill_len),
             max_seq: get("max_seq", d.max_seq),
             ondie_tokens: get("ondie_tokens", d.ondie_tokens),
+            kv_block_tokens: get("kv_block_tokens", d.kv_block_tokens),
+            kv_quant_bits: get("kv_quant_bits", d.kv_quant_bits),
+            kv_edram_bytes: j
+                .get("kv_edram_bytes")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.kv_edram_bytes as f64) as u64,
             top_k: get("top_k", d.top_k),
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
             hw_tbt_s: j.get("hw_tbt_s").and_then(Json::as_f64).unwrap_or(d.hw_tbt_s),
@@ -100,6 +139,8 @@ mod tests {
         assert_eq!(c.max_batches, 6);
         assert_eq!(c.max_seq, 128);
         assert_eq!(c.ondie_tokens, 32);
+        assert_eq!(c.kv_quant_bits, 8);
+        assert_eq!(c.kv_edram_bytes, 13_500_000);
         assert!(c.validate().is_ok());
     }
 
@@ -111,6 +152,16 @@ mod tests {
         let mut c = ServeConfig::default();
         c.max_batches = 0;
         assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.kv_block_tokens = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.kv_quant_bits = 4;
+        assert!(c.validate().is_err());
+        // misaligned buffer would silently round up to a block boundary
+        let mut c = ServeConfig::default();
+        c.ondie_tokens = 20;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -120,11 +171,24 @@ mod tests {
             prefill_len: 32,
             max_seq: 64,
             ondie_tokens: 16,
+            kv_block_tokens: 4,
+            kv_quant_bits: 32,
+            kv_edram_bytes: 1 << 20,
             top_k: 4,
             seed: 99,
             hw_tbt_s: 0.002,
         };
         let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn json_defaults_fill_missing_kv_fields() {
+        // configs written before the KV store existed still parse
+        let j = Json::parse(r#"{"max_batches": 2, "max_seq": 64, "prefill_len": 16}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.kv_block_tokens, 8);
+        assert_eq!(c.kv_quant_bits, 8);
+        assert_eq!(c.kv_edram_bytes, 13_500_000);
     }
 }

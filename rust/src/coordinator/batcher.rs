@@ -10,6 +10,7 @@ use crate::trace::Request;
 /// What a pipeline slot is doing.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SlotState {
+    /// Empty, awaiting admission.
     Free,
     /// Admitted, prefill not yet executed.
     NeedsPrefill,
@@ -17,9 +18,12 @@ pub enum SlotState {
     Decoding { generated: usize },
 }
 
+/// One pipeline slot (an in-flight batch lane).
 #[derive(Debug)]
 pub struct Slot {
+    /// Current lifecycle state.
     pub state: SlotState,
+    /// The request occupying the slot, if any.
     pub request: Option<Request>,
     /// Tokens generated so far (including the prefill's first token).
     pub output: Vec<i32>,
@@ -38,6 +42,7 @@ impl Slot {
     }
 }
 
+/// FIFO continuous batcher over a fixed set of pipeline slots.
 #[derive(Debug)]
 pub struct Batcher {
     queue: VecDeque<Request>,
@@ -45,6 +50,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher with `max_batches` slots.
     pub fn new(max_batches: usize) -> Self {
         Batcher {
             queue: VecDeque::new(),
@@ -52,14 +58,17 @@ impl Batcher {
         }
     }
 
+    /// Number of pipeline slots.
     pub fn n_slots(&self) -> usize {
         self.slots.len()
     }
 
+    /// Enqueue a request for admission.
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(req);
     }
 
+    /// Requests waiting for a slot.
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
@@ -94,10 +103,12 @@ impl Batcher {
         admitted
     }
 
+    /// Inspect slot `i`.
     pub fn slot(&self, i: usize) -> &Slot {
         &self.slots[i]
     }
 
+    /// Mutate slot `i`.
     pub fn slot_mut(&mut self, i: usize) -> &mut Slot {
         &mut self.slots[i]
     }
@@ -122,6 +133,7 @@ impl Batcher {
         )
     }
 
+    /// True when nothing is queued and every slot is free.
     pub fn all_idle(&self) -> bool {
         self.queue.is_empty() && self.slots.iter().all(|s| s.state == SlotState::Free)
     }

@@ -1,15 +1,24 @@
 //! Serving metrics: TTFT (time to first token), TBT (token-between-
-//! token), throughput, plus the eDRAM-health counters the DR argument
-//! depends on.
+//! token), throughput, compute-time summaries, and the measured
+//! KV-tier statistics (accesses, evictions, retention health, energy)
+//! read back from the backend's KV store after a trace.
 
+use crate::kvcache::KvStoreStats;
 use crate::util::stats::{Percentiles, Summary};
+use crate::util::table::fmt_pct;
 
+/// Aggregate metrics of one served trace.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
+    /// Time-to-first-token distribution (admission to first token).
     pub ttft: Percentiles,
+    /// Token-between-token gap distribution.
     pub tbt: Percentiles,
+    /// Total tokens emitted.
     pub tokens_out: u64,
+    /// Requests run to completion.
     pub requests_done: u64,
+    /// Serving-clock span of the whole trace (s).
     pub wall_s: f64,
     /// Actual prefill *execution* time per request (embed + all
     /// partition stages + head) — distinct from TTFT, which also
@@ -17,9 +26,15 @@ pub struct ServeMetrics {
     pub prefill_time: Summary,
     /// Actual decode execution time per token (same decomposition).
     pub decode_time: Summary,
+    /// Measured KV-store statistics for the trace: tiered access
+    /// counts (the end-to-end Fig 5(b) quantity), evictions, retention
+    /// health and memory energy. `None` when the backend's KV is
+    /// opaque to the host (the PJRT runtime).
+    pub kv: Option<KvStoreStats>,
 }
 
 impl ServeMetrics {
+    /// Empty metrics.
     pub fn new() -> Self {
         Default::default()
     }
@@ -45,6 +60,7 @@ impl ServeMetrics {
         self.decode_time.add(s);
     }
 
+    /// Trace throughput over the serving clock.
     pub fn tokens_per_s(&self) -> f64 {
         if self.wall_s == 0.0 {
             0.0
@@ -59,9 +75,11 @@ impl ServeMetrics {
         self.tbt.pct(100.0)
     }
 
+    /// Human-readable summary (latency, throughput, and — when the
+    /// backend exposes a KV store — the measured tier statistics).
     pub fn report(&mut self) -> String {
         let max_tbt = self.max_tbt();
-        format!(
+        let mut out = format!(
             "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
              TTFT  p50={:.1}ms p95={:.1}ms\n\
              TBT   p50={:.2}ms p95={:.2}ms max={:.2}ms",
@@ -74,7 +92,24 @@ impl ServeMetrics {
             self.tbt.pct(50.0) * 1e3,
             self.tbt.pct(95.0) * 1e3,
             max_tbt * 1e3,
-        )
+        );
+        if let Some(kv) = &self.kv {
+            out.push_str(&format!(
+                "\nKV    on-die {} / external {} accesses ({} external reduction, \
+                 q{} blocks of {}); evictions={} spills={} refreshes={} \
+                 energy {:.3e} J",
+                kv.accesses.ondie_reads + kv.accesses.ondie_writes,
+                kv.accesses.external_accesses(),
+                fmt_pct(kv.external_reduction()),
+                kv.quant_bits,
+                kv.block_tokens,
+                kv.evictions,
+                kv.spilled_early_blocks,
+                kv.explicit_refreshes,
+                kv.kv_energy_j(),
+            ));
+        }
+        out
     }
 }
 
@@ -113,5 +148,21 @@ mod tests {
         assert_eq!(m.prefill_time.count(), 1);
         assert!((m.prefill_time.mean() - 0.004).abs() < 1e-12);
         assert!((m.decode_time.mean() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_includes_kv_section_only_when_measured() {
+        let mut m = ServeMetrics::new();
+        m.record_ttft(0.1);
+        assert!(!m.report().contains("KV "));
+        let mut kv = KvStoreStats::default();
+        kv.accesses.ondie_reads = 30;
+        kv.accesses.external_reads = 10;
+        kv.quant_bits = 8;
+        kv.block_tokens = 8;
+        m.kv = Some(kv);
+        let r = m.report();
+        assert!(r.contains("external reduction"), "{r}");
+        assert!(r.contains("evictions=0"), "{r}");
     }
 }

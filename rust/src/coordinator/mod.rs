@@ -6,8 +6,10 @@
 //! sequence through the macro partitions (one partition per pipeline
 //! stage, all partitions busy on different batches in the same cycle —
 //! "allowing all partitions to operate in parallel and maintain full
-//! macro utilization"); the KV-cache manager routes every KV access to
-//! DR eDRAM or external DRAM as it happens.
+//! macro utilization"); every KV access runs through the backend's
+//! tiered [`crate::kvcache::KvStore`] (DR eDRAM or external DRAM) as
+//! it happens, and the measured statistics come back in
+//! [`ServeMetrics`].
 //!
 //! The [`Server`] is generic over [`runtime::InferenceBackend`]
 //! (DESIGN.md §9): `Server<HostBackend>` runs full traces offline on

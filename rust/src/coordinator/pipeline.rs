@@ -10,8 +10,11 @@
 /// during `cycle`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageOp {
+    /// Pipeline cycle the op executes in.
     pub cycle: usize,
+    /// Partition (pipeline stage) executing it.
     pub partition: usize,
+    /// Batch slot whose token it advances.
     pub slot: usize,
 }
 
@@ -21,11 +24,14 @@ pub struct StageOp {
 /// busy simultaneously on different slots.
 #[derive(Debug, Clone)]
 pub struct PipelineSchedule {
+    /// Stage ops in execution order (sorted by cycle).
     pub ops: Vec<StageOp>,
+    /// Cycles the round occupies.
     pub n_cycles: usize,
 }
 
 impl PipelineSchedule {
+    /// Schedule one token round for `slots` over `n_partitions` stages.
     pub fn for_round(slots: &[usize], n_partitions: usize) -> Self {
         let mut ops = Vec::with_capacity(slots.len() * n_partitions);
         let mut n_cycles = 0;

@@ -1,6 +1,6 @@
-//! The serving loop: batcher + pipeline schedule + backend execution +
-//! KV-cache placement, with the eDRAM retention clock driven by modeled
-//! hardware time so the DR-eDRAM argument is live-checked on every
+//! The serving loop: batcher + pipeline schedule + backend execution,
+//! with the backend's tiered KV store driven by modeled hardware time
+//! so the DR-eDRAM retention argument is live-checked on every decode
 //! read. Generic over [`InferenceBackend`] — the same loop serves the
 //! PJRT artifact runtime and the offline host transformer.
 
@@ -8,8 +8,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{EdramParams, ServeConfig};
-use crate::kvcache::KvCacheManager;
+use crate::config::ServeConfig;
+use crate::kvcache::KvStoreStats;
 use crate::runtime::{InferenceBackend, Logits, SequenceState};
 use crate::trace::Request;
 use crate::util::rng::Rng;
@@ -21,8 +21,11 @@ use super::pipeline::PipelineSchedule;
 /// A finished request with its timings.
 #[derive(Debug, Clone)]
 pub struct CompletedRequest {
+    /// Request id from the trace.
     pub id: u64,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
+    /// Generated token ids.
     pub tokens: Vec<i32>,
     /// Admission-to-first-token (s).
     pub ttft_s: f64,
@@ -30,14 +33,22 @@ pub struct CompletedRequest {
     pub latency_s: f64,
 }
 
+/// The serving coordinator: owns a backend and runs request traces
+/// through continuous batching + the partition pipeline. KV placement,
+/// quantization and retention checking happen inside the backend's
+/// [`crate::kvcache::KvStore`] (configured here from the
+/// [`ServeConfig`]); the server reads the measured statistics back
+/// into [`ServeMetrics`].
 pub struct Server<B: InferenceBackend> {
     backend: B,
     serve: ServeConfig,
-    kv: KvCacheManager,
     rng: Rng,
 }
 
 impl<B: InferenceBackend> Server<B> {
+    /// Validate `serve` against the backend's limits and build the
+    /// server (this sizes the backend's KV store for the deployment
+    /// via [`InferenceBackend::configure_kv`]).
     pub fn new(backend: B, serve: ServeConfig) -> Result<Self> {
         serve.validate()?;
         anyhow::ensure!(
@@ -50,21 +61,23 @@ impl<B: InferenceBackend> Server<B> {
             serve.max_seq <= backend.model().max_seq,
             "serve max_seq exceeds model max_seq"
         );
-        let kv = KvCacheManager::new(backend.model(), &serve, EdramParams::default());
+        backend.configure_kv(&serve)?;
         Ok(Server {
             rng: Rng::new(serve.seed),
-            kv,
             serve,
             backend,
         })
     }
 
+    /// The backend this server schedules onto.
     pub fn backend(&self) -> &B {
         &self.backend
     }
 
-    pub fn kv(&self) -> &KvCacheManager {
-        &self.kv
+    /// Measured KV-tier statistics so far (None for backends with
+    /// opaque device-side KV).
+    pub fn kv_stats(&self) -> Option<KvStoreStats> {
+        self.backend.kv_stats()
     }
 
     fn sample(&mut self, logits: &Logits) -> i32 {
@@ -114,6 +127,10 @@ impl<B: InferenceBackend> Server<B> {
 
         let mut done = Vec::new();
         let mut metrics = ServeMetrics::new();
+        // baseline so metrics.kv reports THIS trace's traffic even if
+        // the same server runs multiple traces (store counters are
+        // lifetime-accumulated)
+        let kv_baseline = self.backend.kv_stats();
         let t0 = Instant::now();
         // The serving clock is wall time plus any idle skip: an offline
         // backend (realtime() == false) jumps straight over gaps before
@@ -130,7 +147,6 @@ impl<B: InferenceBackend> Server<B> {
 
         while !batcher.all_idle() {
             for slot in batcher.admit(now(skipped_s)) {
-                self.kv.start_seq(slot);
                 states[slot] = None;
                 slot_compute[slot] = 0.0;
             }
@@ -158,6 +174,11 @@ impl<B: InferenceBackend> Server<B> {
             sched
                 .validate(n_parts)
                 .map_err(|e| anyhow::anyhow!("pipeline invariant violated: {e}"))?;
+
+            // advance the retention clock before the round's KV
+            // accesses: one hw_tbt per pipeline token round
+            hw_time += self.serve.hw_tbt_s;
+            self.backend.advance_kv_clock(hw_time);
 
             // per-slot hidden activations flowing between stages
             let mut hidden: Vec<Option<B::Hidden>> =
@@ -192,29 +213,22 @@ impl<B: InferenceBackend> Server<B> {
                 slot_compute[slot] += t_op.elapsed().as_secs_f64();
             }
 
-            // head + sampling + KV accounting per slot
-            hw_time += self.serve.hw_tbt_s; // one pipeline token round
+            // head + sampling per slot (KV reads/writes already ran —
+            // and were tier-accounted — inside the partition stages)
             for &slot in &active {
                 let h = hidden[slot].take().expect("missing hidden after round");
                 let state = states[slot].as_mut().unwrap();
                 let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
-                // KV accounting runs outside the compute timers: only
-                // backend execution is billed to prefill/decode compute
                 let logits = if is_prefill {
                     let plen = batcher.slot(slot).request.as_ref().unwrap().prompt.len();
                     state.set_pos(plen);
                     state.set_prompt_len(plen);
-                    self.kv.prefill(slot, plen, hw_time);
                     let t_head = Instant::now();
                     let l = self.backend.head_at(&h, plen - 1)?;
                     slot_compute[slot] += t_head.elapsed().as_secs_f64();
                     l
                 } else {
                     state.set_pos(state.pos() + 1);
-                    self.kv.write_token(slot, hw_time);
-                    self.kv
-                        .read_context(slot, hw_time)
-                        .context("DR-eDRAM retention violated during decode")?;
                     let t_head = Instant::now();
                     let l = self.backend.head_decode_logits(&h)?;
                     slot_compute[slot] += t_head.elapsed().as_secs_f64();
@@ -250,7 +264,7 @@ impl<B: InferenceBackend> Server<B> {
                 let out_of_room = state.pos() + 1 >= self.serve.max_seq;
                 if produced >= req.max_new_tokens || out_of_room {
                     let (req, tokens, admitted_at) = batcher.release(slot);
-                    self.kv.end_seq(slot);
+                    // dropping the state retires its KV pages
                     states[slot] = None;
                     metrics.requests_done += 1;
                     done.push(CompletedRequest {
@@ -265,11 +279,16 @@ impl<B: InferenceBackend> Server<B> {
         }
 
         metrics.wall_s = now(skipped_s);
-        // DR-eDRAM health postcondition (DESIGN.md invariant 5)
-        anyhow::ensure!(
-            self.kv.edram().retention_failures == 0,
-            "retention failures occurred"
-        );
+        metrics.kv = match (self.backend.kv_stats(), &kv_baseline) {
+            (Some(end), Some(start)) => Some(end.since(start)),
+            (end, _) => end,
+        };
+        // DR-eDRAM health postcondition (DESIGN.md invariant 5): a
+        // violation would already have erred out of a decode read, but
+        // assert the measured counters agree
+        if let Some(kv) = &metrics.kv {
+            anyhow::ensure!(kv.retention_failures == 0, "retention failures occurred");
+        }
         Ok((done, metrics))
     }
 }
@@ -337,6 +356,45 @@ mod tests {
         assert_eq!(metrics.tokens_out, 12);
         assert!(metrics.prefill_time.count() == 3);
         assert!(metrics.tokens_per_s() > 0.0);
-        assert_eq!(server.kv().edram().retention_failures, 0);
+        // measured KV statistics came from the store, not a model
+        let kv = metrics.kv.as_ref().expect("host backend has a KV store");
+        assert_eq!(kv.retention_failures, 0);
+        assert_eq!(kv.explicit_refreshes, 0);
+        assert!(kv.accesses.ondie_writes > 0);
+        assert!(kv.kv_energy_j() > 0.0);
+        // all pages were retired when the requests completed
+        assert_eq!(server.kv_stats().unwrap().ondie_blocks_in_use, 0);
+    }
+
+    #[test]
+    fn kv_metrics_are_per_trace_not_store_lifetime() {
+        // two identically-shaped traces through ONE server must report
+        // identical per-trace KV counts (the store's counters are
+        // lifetime-accumulated; run_trace must report the delta)
+        let backend = HostBackend::new(micro(), 2).unwrap();
+        let serve = ServeConfig {
+            max_batches: 2,
+            prefill_len: 8,
+            max_seq: 32,
+            ondie_tokens: 8,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let reqs = |off: i32| -> Vec<Request> {
+            (0..2)
+                .map(|i| Request {
+                    id: i,
+                    arrival_s: 0.0,
+                    prompt: vec![off + i as i32, 2, 3],
+                    max_new_tokens: 4,
+                })
+                .collect()
+        };
+        let (_, m1) = server.run_trace(reqs(1)).unwrap();
+        let (_, m2) = server.run_trace(reqs(5)).unwrap();
+        let (k1, k2) = (m1.kv.unwrap(), m2.kv.unwrap());
+        assert_eq!(k1.accesses.total_accesses(), k2.accesses.total_accesses());
+        assert!(k2.kv_energy_j() > 0.0);
+        assert!((k1.kv_energy_j() - k2.kv_energy_j()).abs() < 1e-12);
     }
 }

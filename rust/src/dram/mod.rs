@@ -9,9 +9,13 @@
 /// LPDDR-class external memory parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DramParams {
+    /// Read energy per byte (pJ).
     pub read_pj_per_byte: f64,
+    /// Write energy per byte (pJ).
     pub write_pj_per_byte: f64,
+    /// Access latency (ns).
     pub latency_ns: f64,
+    /// Peak interface bandwidth (GB/s).
     pub bandwidth_gb_s: f64,
 }
 
@@ -30,14 +34,20 @@ impl Default for DramParams {
 /// Access counters for one simulation run.
 #[derive(Debug, Clone, Default)]
 pub struct ExternalDram {
+    /// Interface parameters.
     pub params: DramParams,
+    /// Read transactions issued.
     pub reads: u64,
+    /// Write transactions issued.
     pub writes: u64,
+    /// Bytes read.
     pub read_bytes: u64,
+    /// Bytes written.
     pub write_bytes: u64,
 }
 
 impl ExternalDram {
+    /// Zeroed counters over `params`.
     pub fn new(params: DramParams) -> Self {
         ExternalDram {
             params,
@@ -48,24 +58,29 @@ impl ExternalDram {
         }
     }
 
+    /// Count one read of `bytes`.
     pub fn read(&mut self, bytes: u64) {
         self.reads += 1;
         self.read_bytes += bytes;
     }
 
+    /// Count one write of `bytes`.
     pub fn write(&mut self, bytes: u64) {
         self.writes += 1;
         self.write_bytes += bytes;
     }
 
+    /// Total transactions.
     pub fn accesses(&self) -> u64 {
         self.reads + self.writes
     }
 
+    /// Total bytes moved.
     pub fn total_bytes(&self) -> u64 {
         self.read_bytes + self.write_bytes
     }
 
+    /// Interface energy spent so far (J).
     pub fn energy_j(&self) -> f64 {
         (self.read_bytes as f64 * self.params.read_pj_per_byte
             + self.write_bytes as f64 * self.params.write_pj_per_byte)

@@ -19,7 +19,9 @@ use crate::config::EdramParams;
 /// Error: a row was read after its retention deadline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RetentionError {
+    /// The expired row.
     pub row: usize,
+    /// Seconds past the retention deadline (∞ for never-written).
     pub expired_for_s: f64,
 }
 
@@ -45,17 +47,25 @@ struct Row {
 /// The DR eDRAM array with access/energy counters.
 #[derive(Debug, Clone)]
 pub struct DrEdram {
+    /// Array parameters (capacity, tREF, energies).
     pub params: EdramParams,
     rows: Vec<Row>,
+    /// Successful row reads.
     pub reads: u64,
+    /// Row writes.
     pub writes: u64,
+    /// Explicit refreshes issued (0 under healthy decode-refresh).
     pub explicit_refreshes: u64,
+    /// Bytes read.
     pub read_bytes: u64,
+    /// Bytes written.
     pub write_bytes: u64,
+    /// Reads attempted past the retention deadline.
     pub retention_failures: u64,
 }
 
 impl DrEdram {
+    /// Blank array sized from `params`.
     pub fn new(params: EdramParams) -> Self {
         let n_rows = (params.capacity_bytes / params.row_bytes) as usize;
         DrEdram {
@@ -70,10 +80,12 @@ impl DrEdram {
         }
     }
 
+    /// Rows in the array.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Total capacity in bytes.
     pub fn capacity_bytes(&self) -> u64 {
         self.params.capacity_bytes
     }
@@ -149,6 +161,7 @@ impl DrEdram {
             .map(|t| self.params.t_ref_s - (now - t))
     }
 
+    /// Array energy spent so far (J), explicit refreshes included.
     pub fn energy_j(&self) -> f64 {
         (self.read_bytes as f64 * self.params.read_pj_per_byte
             + self.write_bytes as f64 * self.params.write_pj_per_byte
@@ -156,6 +169,7 @@ impl DrEdram {
             * 1e-12
     }
 
+    /// Reads + writes.
     pub fn accesses(&self) -> u64 {
         self.reads + self.writes
     }

@@ -10,7 +10,9 @@ pub const PRIOR_DIGITAL_CIROM_KB_MM2: f64 = 487.0;
 /// One point on the Fig 1(a) sweep.
 #[derive(Debug, Clone)]
 pub struct ModelPoint {
+    /// Display name.
     pub name: String,
+    /// Weight parameter count.
     pub params: u64,
     /// Bits per weight as stored (16 = fp16 CiROM baseline, 8/4 =
     /// quantized baselines, log2(3) = ternary BitROM).
@@ -21,6 +23,7 @@ pub struct ModelPoint {
 }
 
 impl ModelPoint {
+    /// An fp16 baseline point (prior CiROM fabric).
     pub fn fp16(name: &str, params: u64) -> Self {
         ModelPoint {
             name: name.into(),
@@ -30,6 +33,7 @@ impl ModelPoint {
         }
     }
 
+    /// A 1.58-bit point on the BitROM fabric.
     pub fn ternary(name: &str, params: u64) -> Self {
         ModelPoint {
             name: name.into(),
@@ -39,6 +43,7 @@ impl ModelPoint {
         }
     }
 
+    /// A point taken from a [`ModelConfig`]'s parameter count.
     pub fn from_model(cfg: &ModelConfig, bits_per_weight: f64, bitrom: bool) -> Self {
         ModelPoint {
             name: cfg.name.clone(),
@@ -52,10 +57,15 @@ impl ModelPoint {
 /// Area result for a (model, node) pair.
 #[derive(Debug, Clone)]
 pub struct AreaEstimate {
+    /// Model name the estimate is for.
     pub name: String,
+    /// Technology node.
     pub node: TechNode,
+    /// ROM area in mm².
     pub rom_mm2: f64,
+    /// ROM area in cm² (the Fig 1(a) axis).
     pub rom_cm2: f64,
+    /// Macros required (0 for non-BitROM fabrics).
     pub n_macros: u64,
 }
 

@@ -1,0 +1,115 @@
+//! KV-memory energy: joules of a served trace's KV traffic, split by
+//! tier — the energy face of the Fig 5(b) access-reduction claim.
+//!
+//! The per-byte costs live in the tier models themselves
+//! (`EdramParams` / `DramParams`: on-die eDRAM is ~15x cheaper per
+//! byte than the LPDDR-class external interface), and the store
+//! integrates them as traffic happens. This type extracts the result
+//! from a [`KvStoreStats`] snapshot so serving reports and the
+//! Fig 5(b) end-to-end reproduction can show energy next to access
+//! counts.
+
+use crate::kvcache::KvStoreStats;
+
+/// Joule breakdown of a trace's KV-cache traffic by tier.
+#[derive(Debug, Clone, Default)]
+pub struct KvEnergy {
+    /// DR-eDRAM (on-die tier) energy, J.
+    pub ondie_j: f64,
+    /// External-DRAM energy, J — eviction/spill traffic included.
+    pub external_j: f64,
+}
+
+impl KvEnergy {
+    /// Extract the tier energies from a store's measured statistics.
+    pub fn from_stats(kv: &KvStoreStats) -> Self {
+        KvEnergy {
+            ondie_j: kv.edram_energy_j,
+            external_j: kv.dram_energy_j,
+        }
+    }
+
+    /// Total KV memory energy, J.
+    pub fn total_j(&self) -> f64 {
+        self.ondie_j + self.external_j
+    }
+
+    /// Fraction of the KV energy spent on the external interface —
+    /// the quantity the paper's early-token buffering attacks.
+    pub fn external_fraction(&self) -> f64 {
+        let t = self.total_j();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.external_j / t
+        }
+    }
+
+    /// Mean KV memory energy per token, J.
+    pub fn per_token_j(&self, tokens: u64) -> f64 {
+        if tokens == 0 {
+            0.0
+        } else {
+            self.total_j() / tokens as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EdramParams, ModelConfig};
+    use crate::dram::DramParams;
+    use crate::kvcache::{KvQuant, KvStore, KvStoreConfig};
+    use crate::util::rng::Rng;
+
+    /// Decode `s` tokens through a store with `b` on-die tokens and
+    /// return the KV energy.
+    fn run(s: usize, b: usize) -> KvEnergy {
+        let model = ModelConfig::sim_tiny();
+        let mut store = KvStore::new(KvStoreConfig {
+            kv_dim: model.kv_dim(),
+            n_layers: 1,
+            block_tokens: 8,
+            ondie_tokens: b,
+            quant: KvQuant::Q8,
+            edram: EdramParams::default(),
+            dram: DramParams::default(),
+        });
+        let mut seq = store.new_seq();
+        let mut rng = Rng::new(9);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        for t in 0..s {
+            store.set_now(t as f64 * 0.005);
+            let row: Vec<f32> = (0..model.kv_dim()).map(|_| rng.normal() as f32).collect();
+            store.append(&mut seq, 0, &row, &row);
+            store.gather(&seq, 0, t + 1, true, &mut k, &mut v).unwrap();
+        }
+        KvEnergy::from_stats(&store.stats())
+    }
+
+    #[test]
+    fn tier_split_matches_store_counters() {
+        let e = run(64, 16);
+        assert!(e.ondie_j > 0.0 && e.external_j > 0.0);
+        assert!((e.total_j() - (e.ondie_j + e.external_j)).abs() < 1e-18);
+        assert!(e.per_token_j(64) > 0.0);
+        assert!((0.0..=1.0).contains(&e.external_fraction()));
+    }
+
+    #[test]
+    fn buffering_early_tokens_cuts_external_energy() {
+        // the energy twin of Fig 5(b): the same decode with 32 tokens
+        // buffered on-die spends far less on the external interface
+        // than with none, and external DRAM dominates when unbuffered
+        // (it is ~15x more expensive per byte)
+        let none = run(128, 0);
+        let buffered = run(128, 32);
+        assert_eq!(none.ondie_j, 0.0);
+        assert!(buffered.external_j < none.external_j * 0.62);
+        assert!(none.external_fraction() > 0.99);
+        assert!(buffered.external_fraction() < 1.0);
+        // cheaper on-die bytes: total energy drops too
+        assert!(buffered.total_j() < none.total_j());
+    }
+}

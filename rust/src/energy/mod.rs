@@ -5,10 +5,14 @@
 //! TOPS/W at any operating voltage, bit density and silicon area at any
 //! node — the machinery behind Table III and Fig 1(a). See
 //! `config::hardware` module docs for exactly which constants are
-//! fitted vs derived.
+//! fitted vs derived. [`KvEnergy`] adds the memory side: the measured
+//! KV-cache energy of a served trace, split by tier (the energy face
+//! of the Fig 5(b) claim).
 
 mod area;
+mod kv;
 mod model;
 
 pub use area::{area_estimate, AreaEstimate, ModelPoint};
+pub use kv::KvEnergy;
 pub use model::{EnergyBreakdown, EnergyModel, PerfEstimate};

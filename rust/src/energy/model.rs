@@ -6,13 +6,18 @@ use crate::config::{HardwareConfig, ModelConfig};
 /// Joule breakdown of a macro workload.
 #[derive(Debug, Clone, Default)]
 pub struct EnergyBreakdown {
+    /// BiROMA read energy (J).
     pub read_j: f64,
+    /// TriMLA accumulate energy (J).
     pub accum_j: f64,
+    /// Global adder-tree energy (J).
     pub tree_j: f64,
+    /// Control/clock/comparator overhead (J).
     pub ctrl_j: f64,
 }
 
 impl EnergyBreakdown {
+    /// Sum of all terms (J).
     pub fn total_j(&self) -> f64 {
         self.read_j + self.accum_j + self.tree_j + self.ctrl_j
     }
@@ -21,10 +26,12 @@ impl EnergyBreakdown {
 /// The analytical model bound to a hardware config (node + voltage).
 #[derive(Debug, Clone)]
 pub struct EnergyModel {
+    /// The hardware configuration (node + voltage) being modeled.
     pub hw: HardwareConfig,
 }
 
 impl EnergyModel {
+    /// Model bound to `hw`.
     pub fn new(hw: HardwareConfig) -> Self {
         EnergyModel { hw }
     }
@@ -109,10 +116,15 @@ impl EnergyModel {
 /// Per-token performance summary.
 #[derive(Debug, Clone)]
 pub struct PerfEstimate {
+    /// Projection energy per generated token (J).
     pub energy_per_token_j: f64,
+    /// Token latency (s).
     pub latency_per_token_s: f64,
+    /// Decode throughput (1 / latency).
     pub tokens_per_s: f64,
+    /// Average power draw (W).
     pub avg_power_w: f64,
+    /// Macros the model maps onto.
     pub n_macros: u64,
 }
 

@@ -10,17 +10,23 @@ use crate::edram::{DrEdram, RetentionError};
 /// Aggregate access statistics for one run.
 #[derive(Debug, Clone, Default)]
 pub struct KvStats {
+    /// (token, layer) reads served by DR eDRAM.
     pub ondie_reads: u64,
+    /// (token, layer) writes into DR eDRAM.
     pub ondie_writes: u64,
+    /// (token, layer) reads from external DRAM.
     pub external_reads: u64,
+    /// (token, layer) writes to external DRAM.
     pub external_writes: u64,
 }
 
 impl KvStats {
+    /// Accesses that hit the external interface.
     pub fn external_accesses(&self) -> u64 {
         self.external_reads + self.external_writes
     }
 
+    /// Accesses across both tiers.
     pub fn total_accesses(&self) -> u64 {
         self.external_accesses() + self.ondie_reads + self.ondie_writes
     }
@@ -52,10 +58,13 @@ pub struct KvCacheManager {
     edram: DrEdram,
     dram: ExternalDram,
     seqs: Vec<Option<SeqState>>,
+    /// Accumulated access counts.
     pub stats: KvStats,
 }
 
 impl KvCacheManager {
+    /// Manager sized for `serve` over `model` (asserts the on-die
+    /// working set fits the eDRAM capacity).
     pub fn new(model: &ModelConfig, serve: &ServeConfig, edram_params: EdramParams) -> Self {
         // K + V, f32 entries (the simulation artifacts run f32; the
         // paper's silicon would use 8/16-bit KV — the *ratio* results
@@ -95,10 +104,12 @@ impl KvCacheManager {
         self.seqs[slot] = Some(SeqState { len: 0 });
     }
 
+    /// Finish the sequence in `slot`, freeing it.
     pub fn end_seq(&mut self, slot: usize) {
         self.seqs[slot] = None;
     }
 
+    /// Tokens written for the sequence in `slot`.
     pub fn seq_len(&self, slot: usize) -> usize {
         self.seqs[slot].as_ref().map_or(0, |s| s.len)
     }
@@ -167,10 +178,12 @@ impl KvCacheManager {
         }
     }
 
+    /// The on-die tier model.
     pub fn edram(&self) -> &DrEdram {
         &self.edram
     }
 
+    /// The external tier model.
     pub fn dram(&self) -> &ExternalDram {
         &self.dram
     }

@@ -1,0 +1,927 @@
+//! Paged, quantized, tiered KV-cache store — the serving data plane.
+//!
+//! Where [`KvCacheManager`](super::KvCacheManager) *models* the paper's
+//! KV placement (it tallies hypothetical accesses next to the real
+//! serving state), this store *is* the KV state: the host backend's
+//! attention reads and writes go through it, so the Fig 5(b)
+//! external-access reduction and the DR-eDRAM retention argument are
+//! measured on the actual served bytes instead of being assumed.
+//!
+//! Layout: each sequence owns per-layer **block tables** (vLLM-style
+//! paging) whose entries index a shared block slab. A block holds
+//! `block_tokens` consecutive tokens' K and V rows, 8-bit quantized
+//! (per-token absmax scale + i8 payload) or raw f32, and lives in one
+//! of two tiers:
+//!
+//! * **DR eDRAM** — a capacity-bounded on-die tier backed by the
+//!   [`DrEdram`] retention clock: every read refreshes the block's
+//!   rows, and a decode stall past tREF surfaces as a hard
+//!   [`RetentionError`] exactly as it would in silicon.
+//! * **External DRAM** — unbounded spill tier ([`ExternalDram`]
+//!   counters/energy).
+//!
+//! Placement follows the paper's early-token policy: a block whose
+//! first token index is below `ondie_tokens` is placed on-die. When
+//! the on-die tier is full, a resident block covering *later* tokens
+//! than the incoming one is evicted to external DRAM (early tokens win
+//! across all live sequences, since they are re-read the most —
+//! Fig 5(a)); if no later block exists the incoming block spills. Tier
+//! moves never change stored values, so placement is invisible to the
+//! model's numerics.
+//!
+//! Quantization is per *token row*, not per whole block: a row's
+//! stored value is fixed at append time and never revised, which keeps
+//! dequantization time-invariant — prefill and chunked decode see
+//! bit-identical KV (DESIGN.md invariant 4). A single running scale
+//! per block would require requantizing earlier rows as the block's
+//! absmax grows and would break that equivalence.
+
+use crate::config::{EdramParams, ModelConfig, ServeConfig};
+use crate::dram::{DramParams, ExternalDram};
+use crate::edram::{DrEdram, RetentionError};
+
+use super::KvStats;
+
+/// KV element encoding inside a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvQuant {
+    /// Raw f32 rows (lossless reference mode).
+    F32,
+    /// 8-bit rows: per-token absmax scale + i8 payload (the deployed
+    /// mode; ~3.8x smaller than f32 including scales).
+    Q8,
+}
+
+impl KvQuant {
+    /// Parse from a serving config's `kv_quant_bits` field.
+    pub fn from_bits(bits: usize) -> anyhow::Result<KvQuant> {
+        match bits {
+            8 => Ok(KvQuant::Q8),
+            32 => Ok(KvQuant::F32),
+            other => anyhow::bail!("kv_quant_bits must be 8 or 32, got {other}"),
+        }
+    }
+
+    /// Bits per stored KV element (excluding per-token scales).
+    pub fn bits(self) -> usize {
+        match self {
+            KvQuant::F32 => 32,
+            KvQuant::Q8 => 8,
+        }
+    }
+}
+
+/// Static configuration of a [`KvStore`].
+#[derive(Debug, Clone)]
+pub struct KvStoreConfig {
+    /// K (and V) row width in elements, `ModelConfig::kv_dim()`.
+    pub kv_dim: usize,
+    /// Transformer layers (each with its own block table per sequence).
+    pub n_layers: usize,
+    /// Tokens per block (page size of the store).
+    pub block_tokens: usize,
+    /// Early-token policy threshold: blocks starting below this token
+    /// index are placed on-die (paper: 32 at seq 128).
+    pub ondie_tokens: usize,
+    /// Element encoding for stored rows.
+    pub quant: KvQuant,
+    /// DR-eDRAM tier parameters (capacity bounds the on-die tier).
+    pub edram: EdramParams,
+    /// External spill tier parameters.
+    pub dram: DramParams,
+}
+
+impl KvStoreConfig {
+    /// Default store for stand-alone backend use (single-stream
+    /// generation outside a server): paper placement constants clamped
+    /// to the model's context.
+    pub fn for_model(model: &ModelConfig) -> Self {
+        KvStoreConfig {
+            kv_dim: model.kv_dim(),
+            n_layers: model.n_layers,
+            block_tokens: 8,
+            ondie_tokens: 32.min(model.max_seq),
+            quant: KvQuant::Q8,
+            edram: EdramParams::default(),
+            dram: DramParams::default(),
+        }
+    }
+
+    /// Store for a serving deployment: placement and paging knobs come
+    /// from the [`ServeConfig`].
+    pub fn for_serve(model: &ModelConfig, serve: &ServeConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(serve.kv_block_tokens >= 1, "kv_block_tokens must be >= 1");
+        Ok(KvStoreConfig {
+            kv_dim: model.kv_dim(),
+            n_layers: model.n_layers,
+            block_tokens: serve.kv_block_tokens,
+            ondie_tokens: serve.ondie_tokens,
+            quant: KvQuant::from_bits(serve.kv_quant_bits)?,
+            edram: EdramParams {
+                capacity_bytes: serve.kv_edram_bytes,
+                ..EdramParams::default()
+            },
+            dram: DramParams::default(),
+        })
+    }
+
+    /// Stored bytes per (token, layer): K + V payload plus per-token
+    /// scales in Q8 mode.
+    pub fn bytes_per_token(&self) -> u64 {
+        match self.quant {
+            KvQuant::F32 => 2 * self.kv_dim as u64 * 4,
+            KvQuant::Q8 => 2 * (self.kv_dim as u64 + 4),
+        }
+    }
+
+    /// Stored bytes per full block.
+    pub fn block_bytes(&self) -> u64 {
+        self.block_tokens as u64 * self.bytes_per_token()
+    }
+
+    /// eDRAM rows one on-die block occupies.
+    pub fn rows_per_block(&self) -> usize {
+        ((self.block_bytes() + self.edram.row_bytes - 1) / self.edram.row_bytes) as usize
+    }
+}
+
+/// Measured counters of one store over its lifetime — what serving
+/// metrics and the Fig 5(b) end-to-end reproduction report.
+#[derive(Debug, Clone, Default)]
+pub struct KvStoreStats {
+    /// Token-granular access counts per tier (one count per (token,
+    /// layer) read or write — directly comparable to the analytic
+    /// [`simulate_reduction`](super::simulate_reduction) model).
+    pub accesses: KvStats,
+    /// On-die blocks demoted to external DRAM to make room for
+    /// earlier-token blocks.
+    pub evictions: u64,
+    /// Early-token blocks that had to spill because the tier was full
+    /// and held nothing later to evict.
+    pub spilled_early_blocks: u64,
+    /// eDRAM rows read past their retention deadline (must stay 0 for
+    /// the DR argument to hold).
+    pub retention_failures: u64,
+    /// Explicit refreshes issued (always 0 under decode-refresh).
+    pub explicit_refreshes: u64,
+    /// Energy spent in the on-die tier so far (J).
+    pub edram_energy_j: f64,
+    /// Energy spent on the external interface so far (J), eviction
+    /// traffic included.
+    pub dram_energy_j: f64,
+    /// On-die blocks currently resident.
+    pub ondie_blocks_in_use: usize,
+    /// On-die tier capacity in blocks.
+    pub ondie_block_capacity: usize,
+    /// Element encoding bits (8 or 32).
+    pub quant_bits: usize,
+    /// Page size in tokens.
+    pub block_tokens: usize,
+}
+
+impl KvStoreStats {
+    /// Fraction of token-granular accesses kept off the external
+    /// interface — the measured Fig 5(b) quantity.
+    pub fn external_reduction(&self) -> f64 {
+        self.accesses.external_reduction()
+    }
+
+    /// Total KV memory energy (both tiers), J.
+    pub fn kv_energy_j(&self) -> f64 {
+        self.edram_energy_j + self.dram_energy_j
+    }
+
+    /// The counters accumulated since `earlier` (an older snapshot of
+    /// the same store): lifetime counts and energies are subtracted,
+    /// point-in-time gauges (resident blocks, capacity, config) keep
+    /// this snapshot's values. This is how the serving loop turns the
+    /// store's lifetime counters into per-trace metrics.
+    pub fn since(&self, earlier: &KvStoreStats) -> KvStoreStats {
+        KvStoreStats {
+            accesses: KvStats {
+                ondie_reads: self.accesses.ondie_reads - earlier.accesses.ondie_reads,
+                ondie_writes: self.accesses.ondie_writes - earlier.accesses.ondie_writes,
+                external_reads: self.accesses.external_reads - earlier.accesses.external_reads,
+                external_writes: self.accesses.external_writes - earlier.accesses.external_writes,
+            },
+            evictions: self.evictions - earlier.evictions,
+            spilled_early_blocks: self.spilled_early_blocks - earlier.spilled_early_blocks,
+            retention_failures: self.retention_failures - earlier.retention_failures,
+            explicit_refreshes: self.explicit_refreshes - earlier.explicit_refreshes,
+            edram_energy_j: self.edram_energy_j - earlier.edram_energy_j,
+            dram_energy_j: self.dram_energy_j - earlier.dram_energy_j,
+            ondie_blocks_in_use: self.ondie_blocks_in_use,
+            ondie_block_capacity: self.ondie_block_capacity,
+            quant_bits: self.quant_bits,
+            block_tokens: self.block_tokens,
+        }
+    }
+}
+
+/// Where a block's bytes currently live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    /// Resident in DR eDRAM, occupying `rows_per_block` rows starting
+    /// at this row index.
+    OnDie { row_base: usize },
+    /// Spilled to external DRAM.
+    External,
+}
+
+/// Block payload: fixed-capacity K and V pages.
+#[derive(Debug, Clone)]
+enum BlockData {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    Q8 { k: Vec<i8>, v: Vec<i8>, k_scale: Vec<f32>, v_scale: Vec<f32> },
+}
+
+#[derive(Debug, Clone)]
+struct KvBlock {
+    first_token: usize,
+    /// Token rows filled so far (append-only).
+    len: usize,
+    tier: Tier,
+    data: BlockData,
+}
+
+/// One sequence's handle into the store: per-layer block tables plus
+/// per-layer append cursors. Created by [`KvStore::new_seq`], returned
+/// to the store with [`KvStore::retire_seq`] (on-die pages are recycled
+/// there — dropping a `KvSeq` without retiring leaks tier capacity).
+#[derive(Debug, Default)]
+pub struct KvSeq {
+    /// `tables[layer]` = slab indices of this sequence's blocks.
+    tables: Vec<Vec<usize>>,
+    /// Tokens appended per layer.
+    lens: Vec<usize>,
+}
+
+impl KvSeq {
+    /// Tokens stored for `layer`.
+    pub fn len(&self, layer: usize) -> usize {
+        self.lens[layer]
+    }
+
+    /// True when nothing has been appended to any layer.
+    pub fn is_empty(&self) -> bool {
+        self.lens.iter().all(|&l| l == 0)
+    }
+}
+
+/// The paged, quantized, tiered KV store (module docs have the full
+/// design rationale).
+#[derive(Debug)]
+pub struct KvStore {
+    cfg: KvStoreConfig,
+    edram: DrEdram,
+    dram: ExternalDram,
+    /// Block slab; `None` entries are free (recycled via `free_ids`).
+    blocks: Vec<Option<KvBlock>>,
+    free_ids: Vec<usize>,
+    /// Recycled on-die row-range starts (all ranges are
+    /// `rows_per_block` long, so a free list of starts suffices).
+    ondie_free: Vec<usize>,
+    /// Bump allocator: next never-used range start.
+    ondie_next: usize,
+    ondie_in_use: usize,
+    now: f64,
+    stats: KvStats,
+    evictions: u64,
+    spilled_early_blocks: u64,
+}
+
+impl KvStore {
+    /// Build an empty store for `cfg`.
+    pub fn new(cfg: KvStoreConfig) -> Self {
+        let edram = DrEdram::new(cfg.edram.clone());
+        let dram = ExternalDram::new(cfg.dram.clone());
+        KvStore {
+            edram,
+            dram,
+            blocks: Vec::new(),
+            free_ids: Vec::new(),
+            ondie_free: Vec::new(),
+            ondie_next: 0,
+            ondie_in_use: 0,
+            now: 0.0,
+            stats: KvStats::default(),
+            evictions: 0,
+            spilled_early_blocks: 0,
+            cfg,
+        }
+    }
+
+    /// The configuration this store was built with.
+    pub fn config(&self) -> &KvStoreConfig {
+        &self.cfg
+    }
+
+    /// On-die tier capacity in blocks.
+    pub fn ondie_block_capacity(&self) -> usize {
+        self.edram.n_rows() / self.cfg.rows_per_block()
+    }
+
+    /// On-die blocks currently resident.
+    pub fn ondie_blocks_in_use(&self) -> usize {
+        self.ondie_in_use
+    }
+
+    /// Advance the retention clock (modeled hardware time, seconds —
+    /// monotone non-decreasing; the serving loop calls this once per
+    /// token round).
+    pub fn set_now(&mut self, now: f64) {
+        if now > self.now {
+            self.now = now;
+        }
+    }
+
+    /// Current retention-clock time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Fresh empty sequence handle.
+    pub fn new_seq(&self) -> KvSeq {
+        KvSeq {
+            tables: vec![Vec::new(); self.cfg.n_layers],
+            lens: vec![0; self.cfg.n_layers],
+        }
+    }
+
+    /// Return a sequence's pages to the store: on-die row ranges and
+    /// slab slots are recycled for future sequences.
+    pub fn retire_seq(&mut self, seq: &mut KvSeq) {
+        for table in &mut seq.tables {
+            for &id in table.iter() {
+                if let Some(block) = self.blocks[id].take() {
+                    if let Tier::OnDie { row_base } = block.tier {
+                        self.ondie_free.push(row_base);
+                        self.ondie_in_use -= 1;
+                    }
+                    self.free_ids.push(id);
+                }
+            }
+            table.clear();
+        }
+        for l in &mut seq.lens {
+            *l = 0;
+        }
+    }
+
+    /// Append the next token's K/V rows for `layer` (token index =
+    /// tokens appended to that layer so far). Counts one tier write at
+    /// the current clock. Rows must be exactly `kv_dim` wide.
+    pub fn append(&mut self, seq: &mut KvSeq, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let d = self.cfg.kv_dim;
+        assert_eq!(k_row.len(), d, "K row width {} != kv_dim {d}", k_row.len());
+        assert_eq!(v_row.len(), d, "V row width {} != kv_dim {d}", v_row.len());
+        let token = seq.lens[layer];
+        let bt = self.cfg.block_tokens;
+        if token % bt == 0 {
+            let id = self.alloc_block(token);
+            seq.tables[layer].push(id);
+        }
+        let id = *seq.tables[layer].last().expect("block table empty after alloc");
+        let slot = token - self.blocks[id].as_ref().unwrap().first_token;
+        let block = self.blocks[id].as_mut().unwrap();
+        match &mut block.data {
+            BlockData::F32 { k, v } => {
+                k[slot * d..(slot + 1) * d].copy_from_slice(k_row);
+                v[slot * d..(slot + 1) * d].copy_from_slice(v_row);
+            }
+            BlockData::Q8 { k, v, k_scale, v_scale } => {
+                k_scale[slot] = quantize_row(k_row, &mut k[slot * d..(slot + 1) * d]);
+                v_scale[slot] = quantize_row(v_row, &mut v[slot * d..(slot + 1) * d]);
+            }
+        }
+        block.len += 1;
+        seq.lens[layer] = token + 1;
+        // account the write on the block's tier
+        let bytes = self.cfg.bytes_per_token();
+        let tier = self.blocks[id].as_ref().unwrap().tier;
+        match tier {
+            Tier::OnDie { row_base } => {
+                self.write_token_rows(row_base, slot, bytes);
+                self.stats.ondie_writes += 1;
+            }
+            Tier::External => {
+                self.dram.write(bytes);
+                self.stats.external_writes += 1;
+            }
+        }
+    }
+
+    /// Dequantize tokens `0..n_ctx` of `layer` into `k_out`/`v_out`
+    /// (row `t` at `t * kv_dim`, same layout the attention kernels
+    /// expect).
+    ///
+    /// With `count_reads`, one tier read per (token, layer) is counted
+    /// for every token except the newest (its KV feeds from the
+    /// datapath registers — Fig 5(a) convention), and on-die rows pass
+    /// through the DR-eDRAM retention check at the current clock:
+    /// reading refreshes, a stall past tREF returns the row's
+    /// [`RetentionError`]. Prefill attention reads on-chip activation
+    /// buffers, so the serving path gathers with `count_reads = false`
+    /// there.
+    pub fn gather(
+        &mut self,
+        seq: &KvSeq,
+        layer: usize,
+        n_ctx: usize,
+        count_reads: bool,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) -> Result<(), RetentionError> {
+        let d = self.cfg.kv_dim;
+        let bt = self.cfg.block_tokens;
+        assert!(
+            n_ctx <= seq.lens[layer],
+            "gather {n_ctx} tokens but layer {layer} holds {}",
+            seq.lens[layer]
+        );
+        k_out.clear();
+        v_out.clear();
+        k_out.reserve(n_ctx * d);
+        v_out.reserve(n_ctx * d);
+        let bytes = self.cfg.bytes_per_token();
+        for t in 0..n_ctx {
+            let id = seq.tables[layer][t / bt];
+            let slot = t % bt;
+            // newest token forwards from the datapath registers
+            if count_reads && t + 1 < n_ctx {
+                let tier = self.blocks[id].as_ref().unwrap().tier;
+                match tier {
+                    Tier::OnDie { row_base } => {
+                        self.read_token_rows(row_base, slot, bytes)?;
+                        self.stats.ondie_reads += 1;
+                    }
+                    Tier::External => {
+                        self.dram.read(bytes);
+                        self.stats.external_reads += 1;
+                    }
+                }
+            }
+            let block = self.blocks[id].as_ref().unwrap();
+            match &block.data {
+                BlockData::F32 { k, v } => {
+                    k_out.extend_from_slice(&k[slot * d..(slot + 1) * d]);
+                    v_out.extend_from_slice(&v[slot * d..(slot + 1) * d]);
+                }
+                BlockData::Q8 { k, v, k_scale, v_scale } => {
+                    let (ks, vs) = (k_scale[slot], v_scale[slot]);
+                    k_out.extend(k[slot * d..(slot + 1) * d].iter().map(|&q| q as f32 * ks));
+                    v_out.extend(v[slot * d..(slot + 1) * d].iter().map(|&q| q as f32 * vs));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Counter snapshot for metrics and reports.
+    pub fn stats(&self) -> KvStoreStats {
+        KvStoreStats {
+            accesses: self.stats.clone(),
+            evictions: self.evictions,
+            spilled_early_blocks: self.spilled_early_blocks,
+            retention_failures: self.edram.retention_failures,
+            explicit_refreshes: self.edram.explicit_refreshes,
+            edram_energy_j: self.edram.energy_j(),
+            dram_energy_j: self.dram.energy_j(),
+            ondie_blocks_in_use: self.ondie_in_use,
+            ondie_block_capacity: self.ondie_block_capacity(),
+            quant_bits: self.cfg.quant.bits(),
+            block_tokens: self.cfg.block_tokens,
+        }
+    }
+
+    /// The on-die tier (for retention/energy inspection).
+    pub fn edram(&self) -> &DrEdram {
+        &self.edram
+    }
+
+    /// The external tier (for traffic/energy inspection).
+    pub fn dram(&self) -> &ExternalDram {
+        &self.dram
+    }
+
+    // ---- internals ------------------------------------------------------
+
+    /// Allocate a slab slot + tier placement for a block whose first
+    /// token is `first_token`.
+    fn alloc_block(&mut self, first_token: usize) -> usize {
+        let tier = self.place(first_token);
+        let bt = self.cfg.block_tokens;
+        let d = self.cfg.kv_dim;
+        let data = match self.cfg.quant {
+            KvQuant::F32 => BlockData::F32 {
+                k: vec![0.0; bt * d],
+                v: vec![0.0; bt * d],
+            },
+            KvQuant::Q8 => BlockData::Q8 {
+                k: vec![0; bt * d],
+                v: vec![0; bt * d],
+                k_scale: vec![0.0; bt],
+                v_scale: vec![0.0; bt],
+            },
+        };
+        let block = KvBlock {
+            first_token,
+            len: 0,
+            tier,
+            data,
+        };
+        match self.free_ids.pop() {
+            Some(id) => {
+                self.blocks[id] = Some(block);
+                id
+            }
+            None => {
+                self.blocks.push(Some(block));
+                self.blocks.len() - 1
+            }
+        }
+    }
+
+    /// Early-token-on-die placement with eviction on overflow.
+    fn place(&mut self, first_token: usize) -> Tier {
+        if first_token >= self.cfg.ondie_tokens {
+            return Tier::External;
+        }
+        if let Some(row_base) = self.alloc_rows() {
+            self.ondie_in_use += 1;
+            return Tier::OnDie { row_base };
+        }
+        // Tier full: demote the resident block covering the latest
+        // tokens, if it is later than the incoming block (early tokens
+        // are re-read the most — they win across all live sequences).
+        if let Some(victim) = self.latest_ondie_block(first_token) {
+            self.evict(victim);
+            let row_base = self.alloc_rows().expect("eviction freed a row range");
+            self.ondie_in_use += 1;
+            return Tier::OnDie { row_base };
+        }
+        self.spilled_early_blocks += 1;
+        Tier::External
+    }
+
+    fn alloc_rows(&mut self) -> Option<usize> {
+        if let Some(base) = self.ondie_free.pop() {
+            return Some(base);
+        }
+        let rows = self.cfg.rows_per_block();
+        if self.ondie_next + rows <= self.edram.n_rows() {
+            let base = self.ondie_next;
+            self.ondie_next += rows;
+            Some(base)
+        } else {
+            None
+        }
+    }
+
+    /// Resident on-die block with the largest `first_token` strictly
+    /// greater than `than`.
+    fn latest_ondie_block(&self, than: usize) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (id, b) in self.blocks.iter().enumerate() {
+            if let Some(b) = b {
+                if matches!(b.tier, Tier::OnDie { .. })
+                    && b.first_token > than
+                    && best.map_or(true, |(_, ft)| b.first_token > ft)
+                {
+                    best = Some((id, b.first_token));
+                }
+            }
+        }
+        best.map(|(id, _)| id)
+    }
+
+    /// Demote an on-die block to external DRAM: its filled rows are
+    /// written out (external traffic + energy, tracked separately from
+    /// the token-granular access stats), its eDRAM rows are freed. The
+    /// stored values are untouched — placement never changes numerics.
+    fn evict(&mut self, id: usize) {
+        let (row_base, len) = {
+            let b = self.blocks[id].as_ref().expect("evicting a free block");
+            match b.tier {
+                Tier::OnDie { row_base } => (row_base, b.len),
+                Tier::External => unreachable!("evicting an external block"),
+            }
+        };
+        self.dram.write(len as u64 * self.cfg.bytes_per_token());
+        self.ondie_free.push(row_base);
+        self.ondie_in_use -= 1;
+        self.evictions += 1;
+        self.blocks[id].as_mut().unwrap().tier = Tier::External;
+    }
+
+    /// eDRAM rows covering token `slot` of a block at `row_base`.
+    fn token_rows(&self, row_base: usize, slot: usize) -> (usize, usize) {
+        let bpt = self.cfg.bytes_per_token();
+        let rb = self.cfg.edram.row_bytes;
+        let off = slot as u64 * bpt;
+        let first = row_base + (off / rb) as usize;
+        let last = row_base + ((off + bpt - 1) / rb) as usize;
+        (first, last)
+    }
+
+    fn write_token_rows(&mut self, row_base: usize, slot: usize, bytes: u64) {
+        let (first, last) = self.token_rows(row_base, slot);
+        let n = (last - first + 1) as u64;
+        for (i, row) in (first..=last).enumerate() {
+            // distribute the byte count across rows (remainder on the first)
+            let b = bytes / n + if i == 0 { bytes % n } else { 0 };
+            self.edram.write(row, b, self.now);
+        }
+    }
+
+    fn read_token_rows(
+        &mut self,
+        row_base: usize,
+        slot: usize,
+        bytes: u64,
+    ) -> Result<(), RetentionError> {
+        let (first, last) = self.token_rows(row_base, slot);
+        let n = (last - first + 1) as u64;
+        for (i, row) in (first..=last).enumerate() {
+            let b = bytes / n + if i == 0 { bytes % n } else { 0 };
+            self.edram.read(row, b, self.now)?;
+        }
+        Ok(())
+    }
+}
+
+/// Absmax-quantize one row to i8; returns the dequant scale. A zero
+/// row quantizes to all-zeros with scale 0 (exact).
+fn quantize_row(x: &[f32], out: &mut [i8]) -> f32 {
+    let absmax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if absmax == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / absmax;
+    for (q, &v) in out.iter_mut().zip(x) {
+        *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    absmax / 127.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::simulate_reduction;
+    use crate::util::rng::Rng;
+
+    /// Small geometry: 8-wide rows, 2 layers, 4-token blocks, first 8
+    /// tokens on-die.
+    fn cfg() -> KvStoreConfig {
+        KvStoreConfig {
+            kv_dim: 8,
+            n_layers: 2,
+            block_tokens: 4,
+            ondie_tokens: 8,
+            quant: KvQuant::Q8,
+            edram: EdramParams::default(),
+            dram: DramParams::default(),
+        }
+    }
+
+    fn rand_row(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Append `n` tokens to every layer with seeded rows.
+    fn fill(store: &mut KvStore, seq: &mut KvSeq, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let d = store.config().kv_dim;
+        let layers = store.config().n_layers;
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        for _ in 0..n {
+            let (k, v) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
+            for layer in 0..layers {
+                store.append(seq, layer, &k, &v);
+            }
+            rows.push(k);
+            rows.push(v);
+        }
+        rows
+    }
+
+    #[test]
+    fn q8_roundtrip_within_half_ulp() {
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        let rows = fill(&mut store, &mut seq, 10, 42);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 10, false, &mut k, &mut v).unwrap();
+        for t in 0..10 {
+            let (k_ref, v_ref) = (&rows[2 * t], &rows[2 * t + 1]);
+            for (pair, got) in [(k_ref, &k), (v_ref, &v)] {
+                let absmax = pair.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let tol = absmax * (0.5 / 127.0 + 1e-6);
+                for (i, &r) in pair.iter().enumerate() {
+                    let e = (r - got[t * 8 + i]).abs();
+                    assert!(e <= tol, "token {t} elem {i}: err {e} > tol {tol}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_mode_is_lossless() {
+        let mut store = KvStore::new(KvStoreConfig {
+            quant: KvQuant::F32,
+            ..cfg()
+        });
+        let mut seq = store.new_seq();
+        let rows = fill(&mut store, &mut seq, 6, 7);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        store.gather(&seq, 1, 6, false, &mut k, &mut v).unwrap();
+        for t in 0..6 {
+            assert_eq!(&k[t * 8..(t + 1) * 8], rows[2 * t].as_slice());
+            assert_eq!(&v[t * 8..(t + 1) * 8], rows[2 * t + 1].as_slice());
+        }
+    }
+
+    #[test]
+    fn zero_rows_roundtrip_exactly() {
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        let z = vec![0f32; 8];
+        store.append(&mut seq, 0, &z, &z);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 1, false, &mut k, &mut v).unwrap();
+        assert!(k.iter().chain(&v).all(|&x| x == 0.0));
+    }
+
+    /// Decode-loop driver: append token t, then gather its full
+    /// context with read counting — the measured twin of the analytic
+    /// Fig 5(b) step model.
+    fn decode_loop(store: &mut KvStore, seq: &mut KvSeq, s: usize, tbt: f64) {
+        let d = store.config().kv_dim;
+        let layers = store.config().n_layers;
+        let mut rng = Rng::new(1);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        for t in 0..s {
+            store.set_now(t as f64 * tbt);
+            let (kr, vr) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
+            for layer in 0..layers {
+                store.append(seq, layer, &kr, &vr);
+                store
+                    .gather(seq, layer, t + 1, true, &mut k, &mut v)
+                    .expect("retention violated");
+            }
+        }
+    }
+
+    #[test]
+    fn measured_reduction_matches_analytic_model() {
+        // block-aligned (8 on-die tokens, 4-token blocks): the store's
+        // measured reduction must equal the closed-form Fig 5(b) value
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        decode_loop(&mut store, &mut seq, 32, 0.005);
+        let stats = store.stats();
+        let measured = stats.external_reduction();
+        let analytic = simulate_reduction(32, 8);
+        assert!(
+            (measured - analytic).abs() < 1e-12,
+            "measured {measured} vs analytic {analytic}"
+        );
+        assert_eq!(stats.retention_failures, 0);
+        assert_eq!(stats.explicit_refreshes, 0);
+        assert!(stats.edram_energy_j > 0.0 && stats.dram_energy_j > 0.0);
+    }
+
+    #[test]
+    fn healthy_decode_cadence_never_expires() {
+        // 64 steps at 5 ms TBT: total span 320 ms >> tREF 64 ms, but
+        // refresh-on-read keeps every on-die row alive.
+        let mut store = KvStore::new(KvStoreConfig {
+            ondie_tokens: 64,
+            ..cfg()
+        });
+        let mut seq = store.new_seq();
+        decode_loop(&mut store, &mut seq, 64, 0.005);
+        assert_eq!(store.stats().retention_failures, 0);
+    }
+
+    #[test]
+    fn stalled_decode_trips_retention() {
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        fill(&mut store, &mut seq, 4, 3);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        store.set_now(0.05); // within tREF: ok + refresh
+        store.gather(&seq, 0, 4, true, &mut k, &mut v).unwrap();
+        store.set_now(0.05 + 0.1); // 100 ms stall > tREF
+        let err = store.gather(&seq, 0, 4, true, &mut k, &mut v);
+        assert!(err.is_err(), "expired read must fail");
+        assert_eq!(store.stats().retention_failures, 1);
+    }
+
+    /// eDRAM sized for exactly two blocks.
+    fn two_block_cfg() -> KvStoreConfig {
+        let base = cfg();
+        let rows = base.rows_per_block() as u64;
+        KvStoreConfig {
+            ondie_tokens: 16,
+            edram: EdramParams {
+                capacity_bytes: 2 * rows * base.edram.row_bytes,
+                ..base.edram.clone()
+            },
+            n_layers: 1,
+            ..base
+        }
+    }
+
+    #[test]
+    fn overflow_spills_when_nothing_later_to_evict() {
+        let mut store = KvStore::new(two_block_cfg());
+        assert_eq!(store.ondie_block_capacity(), 2);
+        let mut seq = store.new_seq();
+        // 12 tokens = blocks [0..4) [4..8) on-die, [8..12) wants
+        // on-die (8 < 16) but the tier is full and both residents are
+        // earlier -> spill
+        fill(&mut store, &mut seq, 12, 5);
+        let stats = store.stats();
+        assert_eq!(stats.spilled_early_blocks, 1);
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.ondie_blocks_in_use, 2);
+        assert_eq!(stats.accesses.ondie_writes, 8);
+        assert_eq!(stats.accesses.external_writes, 4);
+    }
+
+    #[test]
+    fn overflow_evicts_later_block_for_earlier_tokens() {
+        let mut store = KvStore::new(two_block_cfg());
+        let mut seq_a = store.new_seq();
+        let rows_a = fill(&mut store, &mut seq_a, 8, 5); // fills the tier
+        let mut seq_b = store.new_seq();
+        fill(&mut store, &mut seq_b, 4, 6); // token 0 beats A's block [4..8)
+        let stats = store.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.ondie_blocks_in_use, 2);
+        // eviction moved bytes but not values: A reads back exactly
+        // what round-tripping its rows gives
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        store.gather(&seq_a, 0, 8, false, &mut k, &mut v).unwrap();
+        for t in 0..8 {
+            let absmax = rows_a[2 * t].iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let tol = absmax * (0.5 / 127.0 + 1e-6);
+            for (i, &r) in rows_a[2 * t].iter().enumerate() {
+                assert!((r - k[t * 8 + i]).abs() <= tol, "eviction corrupted token {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn retirement_recycles_ondie_blocks() {
+        let mut store = KvStore::new(two_block_cfg());
+        let mut seq = store.new_seq();
+        fill(&mut store, &mut seq, 8, 5);
+        assert_eq!(store.ondie_blocks_in_use(), 2);
+        store.retire_seq(&mut seq);
+        assert!(seq.is_empty());
+        assert_eq!(store.ondie_blocks_in_use(), 0);
+        // a new sequence reuses the freed pages: on-die again, no
+        // eviction or spill needed
+        let mut seq2 = store.new_seq();
+        fill(&mut store, &mut seq2, 8, 9);
+        let stats = store.stats();
+        assert_eq!(stats.ondie_blocks_in_use, 2);
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.spilled_early_blocks, 0);
+    }
+
+    #[test]
+    fn gather_order_is_time_invariant() {
+        // the dequantized view of early tokens must not change as
+        // later tokens arrive (DESIGN.md invariant 4 depends on this)
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        fill(&mut store, &mut seq, 4, 11);
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 4, false, &mut k1, &mut v1).unwrap();
+        fill(&mut store, &mut seq, 8, 12); // 8 more tokens
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 4, false, &mut k2, &mut v2).unwrap();
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn quant_parse_and_sizes() {
+        assert_eq!(KvQuant::from_bits(8).unwrap(), KvQuant::Q8);
+        assert_eq!(KvQuant::from_bits(32).unwrap(), KvQuant::F32);
+        assert!(KvQuant::from_bits(4).is_err());
+        let c = cfg();
+        // Q8: 2 * (8 + 4 scale bytes) = 24 B/token vs f32 64 B/token
+        assert_eq!(c.bytes_per_token(), 24);
+        let f = KvStoreConfig {
+            quant: KvQuant::F32,
+            ..cfg()
+        };
+        assert_eq!(f.bytes_per_token(), 64);
+        assert!(c.rows_per_block() >= 1);
+    }
+}

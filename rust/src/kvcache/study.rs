@@ -53,8 +53,11 @@ pub fn simulate_reduction(s: usize, b: usize) -> f64 {
 /// One point of the Fig 5(b) sweep.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Total sequence length.
     pub seq_len: usize,
+    /// Early tokens buffered on-die.
     pub ondie_tokens: usize,
+    /// External-access reduction at this point.
     pub reduction: f64,
 }
 
@@ -73,7 +76,9 @@ pub fn reduction_sweep(seq_lens: &[usize], buffers: &[usize]) -> Vec<SweepPoint>
     out
 }
 
+/// Sequence lengths of the published Fig 5(b) grid.
 pub const PAPER_SEQ_LENS: [usize; 4] = [32, 64, 128, 256];
+/// Buffer sizes of the published Fig 5(b) grid.
 pub const PAPER_BUFFERS: [usize; 5] = [4, 8, 16, 32, 64];
 
 #[cfg(test)]

@@ -10,10 +10,9 @@
 //!   ([`runtime::InferenceBackend`], DESIGN.md §9) and its two
 //!   implementations: the always-built offline
 //!   [`runtime::HostBackend`] (BitNet-style partitioned transformer on
-//!   the bitplane kernels) and the PJRT [`runtime::ModelExecutor`]
-//!   (`pjrt` feature; AOT HLO artifacts with weights baked as
-//!   constants = the ROM mask set). Manifest handling is always
-//!   available.
+//!   the bitplane kernels) and the PJRT `ModelExecutor` (`pjrt`
+//!   feature; AOT HLO artifacts with weights baked as constants = the
+//!   ROM mask set). Manifest handling is always available.
 //! * [`coordinator`] — the serving layer: dynamic batcher, the 6-stage
 //!   macro-partition pipeline (paper §V-B), metrics, and the
 //!   [`coordinator::Server`], generic over the backend — all of it
@@ -23,11 +22,17 @@
 //!   kernel engine that every host-side functional compute path runs on.
 //! * [`cirom`] — bit-accurate simulators of the paper's circuits:
 //!   BiROMA, TriMLA, the shared adder tree.
-//! * [`edram`] / [`dram`] / [`kvcache`] — decoding-aware KV-cache
-//!   management with the DR-eDRAM refresh-on-read argument checked.
-//! * [`energy`] — analytical energy/area model (Table III, Fig 1a).
+//! * [`edram`] / [`dram`] / [`kvcache`] — the KV-cache layer
+//!   (DESIGN.md §10): the tiered quantized [`kvcache::KvStore`] that
+//!   serving's KV actually lives in, the analytic placement model, and
+//!   the DR-eDRAM refresh-on-read argument checked live on every
+//!   decode read.
+//! * [`energy`] — analytical energy/area model (Table III, Fig 1a)
+//!   plus the measured KV memory energy ([`energy::KvEnergy`]).
 //! * [`util`] — offline substrates (json, args, rng, stats, bench,
 //!   property-check harness, tables).
+
+#![warn(missing_docs)]
 
 pub mod bitnet;
 pub mod cirom;

@@ -12,16 +12,24 @@ use crate::config::ModelConfig;
 /// The seven adapter sites (paper Table II columns).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Proj {
+    /// Query projection.
     Q,
+    /// Key projection.
     K,
+    /// Value projection.
     V,
+    /// Attention output projection.
     O,
+    /// MLP gate projection.
     Gate,
+    /// MLP up projection.
     Up,
+    /// MLP down projection.
     Down,
 }
 
 impl Proj {
+    /// Every adapter site, Table II order.
     pub const ALL: [Proj; 7] = [
         Proj::Q,
         Proj::K,
@@ -32,6 +40,7 @@ impl Proj {
         Proj::Down,
     ];
 
+    /// One-letter site label (Table II header style).
     pub fn short(self) -> &'static str {
         match self {
             Proj::Q => "Q",
@@ -65,9 +74,13 @@ impl Proj {
 /// adapters, with `weight_bits` quantization.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LoraConfig {
+    /// Projections carrying adapters.
     pub placement: Vec<Proj>,
+    /// Adapter rank.
     pub rank: usize,
+    /// Adapter weight quantization (bits).
     pub weight_bits: usize,
+    /// Adapter activation quantization (bits).
     pub act_bits: usize,
 }
 
@@ -83,6 +96,7 @@ impl LoraConfig {
         }
     }
 
+    /// Compact placement label like `"VOD"`.
     pub fn placement_str(&self) -> String {
         self.placement.iter().map(|p| p.short()).collect()
     }
@@ -150,16 +164,20 @@ pub fn adapter_cycles(fan_in: usize, fan_out: usize, rank: usize) -> u64 {
 /// projection — the compute the `report`/adaptation paths consume.
 #[derive(Debug, Clone)]
 pub struct MergedProjection {
+    /// The frozen ternary base weights.
     pub base: TernaryMatrix,
     /// Down-projection, row-major `[fan_in × rank]`.
     pub a: Vec<f32>,
     /// Up-projection, row-major `[rank × fan_out]`.
     pub b: Vec<f32>,
+    /// Adapter rank.
     pub rank: usize,
+    /// LoRA scaling factor (α).
     pub alpha: f32,
 }
 
 impl MergedProjection {
+    /// Attach adapters `a`/`b` to `base` (shape-checked).
     pub fn new(base: TernaryMatrix, a: Vec<f32>, b: Vec<f32>, rank: usize, alpha: f32) -> Self {
         assert_eq!(a.len(), base.rows * rank, "A shape mismatch");
         assert_eq!(b.len(), rank * base.cols, "B shape mismatch");

@@ -11,8 +11,10 @@ use std::path::PathBuf;
 
 use bitrom::config::{HardwareConfig, ModelConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
-use bitrom::kvcache::KvCacheManager;
-use bitrom::report::{fig1a_report, fig5a_report, fig5b_report, gemv_perf_report, table3_report};
+use bitrom::report::{
+    fig1a_report, fig5a_report, fig5b_report, fig5b_serving_report, gemv_perf_report,
+    table3_report,
+};
 use bitrom::runtime::{HostBackend, InferenceBackend, Manifest};
 #[cfg(feature = "pjrt")]
 use bitrom::runtime::ModelExecutor;
@@ -60,7 +62,8 @@ fn print_help() {
          \x20 serve     run a synthetic request trace through the 6-stage pipeline\n\
          \x20           (--host serves offline on the fabricated HostBackend)\n\
          \x20 generate  greedy-generate from a prompt (token ids; --host = offline)\n\
-         \x20 report    print paper tables/figures (--table3 --fig1a --fig5a --fig5b)\n\
+         \x20 report    print paper tables/figures (--table3 --fig1a --fig5a --fig5b\n\
+         \x20           --fig5b-serving = Fig 5(b) measured on a real served trace)\n\
          \x20 verify    replay the python golden trace and compare\n\
          \x20 info      artifact + config summary\n\n\
          Artifacts default to ./artifacts (override with BITROM_ARTIFACTS\n\
@@ -98,10 +101,10 @@ fn serve_cfg(args: &Args) -> ServeConfig {
 
 /// Fabricate the offline backend for a `--host` invocation (shared by
 /// `serve` and `generate`). `max_context` caps the model's sequence
-/// length: HostState allocates real per-layer KV tensors `max_seq`
-/// rows deep, so a big named config (llama-7b: 32 layers × 4096 rows ×
-/// 4096 kv_dim f32) would otherwise allocate gigabytes per slot that
-/// this invocation can never use.
+/// length at what the invocation can actually use: KV pages are
+/// allocated on demand in the tiered store, but the serving config's
+/// `max_seq` must fit inside the model's, and a smaller context keeps
+/// the early-token placement meaningful for short runs.
 fn host_backend(args: &Args, max_context: usize) -> anyhow::Result<HostBackend> {
     let mut model = ModelConfig::named(args.str("model"))
         .ok_or_else(|| anyhow::anyhow!("unknown model {:?}", args.str("model")))?
@@ -110,12 +113,7 @@ fn host_backend(args: &Args, max_context: usize) -> anyhow::Result<HostBackend> 
     HostBackend::new(model, args.u64("seed"))
 }
 
-fn print_serve_outcome(
-    done: &[CompletedRequest],
-    metrics: &mut ServeMetrics,
-    kv: &KvCacheManager,
-    verbose: bool,
-) {
+fn print_serve_outcome(done: &[CompletedRequest], metrics: &mut ServeMetrics, verbose: bool) {
     if verbose {
         for r in done {
             println!(
@@ -129,19 +127,16 @@ fn print_serve_outcome(
             );
         }
     }
+    // the report includes the measured KV-tier line when the backend
+    // serves through the tiered store
     println!("{}", metrics.report());
+    if metrics.kv.is_none() {
+        println!("KV tier stats: n/a (device-side KV is opaque to the host)");
+    }
     println!(
         "compute: prefill mean {:.3} ms/req | decode mean {:.4} ms/tok",
         metrics.prefill_time.mean() * 1e3,
         metrics.decode_time.mean() * 1e3,
-    );
-    println!(
-        "KV traffic: on-die {} / external {} accesses ({} external reduction); \
-         eDRAM explicit refreshes: {}",
-        kv.stats.ondie_reads + kv.stats.ondie_writes,
-        kv.stats.external_accesses(),
-        bitrom::util::table::fmt_pct(kv.stats.external_reduction()),
-        kv.edram().explicit_refreshes,
     );
 }
 
@@ -171,7 +166,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         let trace = serve_trace_cfg(&args, backend.model().vocab_size);
         let mut server = Server::new(backend, serve)?;
         let (done, mut metrics) = server.run_trace(generate(&trace))?;
-        print_serve_outcome(&done, &mut metrics, server.kv(), args.flag("verbose"));
+        print_serve_outcome(&done, &mut metrics, args.flag("verbose"));
         return Ok(());
     }
     serve_pjrt(&args)
@@ -190,7 +185,7 @@ fn serve_pjrt(args: &Args) -> anyhow::Result<()> {
     let trace = serve_trace_cfg(args, exec.manifest.model.vocab_size);
     let mut server = Server::new(exec, serve_cfg(args))?;
     let (done, mut metrics) = server.run_trace(generate(&trace))?;
-    print_serve_outcome(&done, &mut metrics, server.kv(), args.flag("verbose"));
+    print_serve_outcome(&done, &mut metrics, args.flag("verbose"));
     Ok(())
 }
 
@@ -252,7 +247,8 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
         .flag("table3", "Table III comparison")
         .flag("fig1a", "Fig 1(a) area sweep")
         .flag("fig5a", "Fig 5(a) KV access analysis")
-        .flag("fig5b", "Fig 5(b) DRAM reduction grid")
+        .flag("fig5b", "Fig 5(b) DRAM reduction grid (analytic)")
+        .flag("fig5b-serving", "Fig 5(b) measured end-to-end on a served trace")
         .flag("gemv", "host bitplane-vs-reference GEMV perf (timed, not in --all)")
         .flag("all", "everything except --gemv");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
@@ -261,6 +257,7 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
             || args.flag("fig1a")
             || args.flag("fig5a")
             || args.flag("fig5b")
+            || args.flag("fig5b-serving")
             || args.flag("gemv"));
 
     // prefer the measured ROM sparsity if artifacts exist
@@ -279,6 +276,9 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
     }
     if all || args.flag("fig5b") {
         println!("{}", fig5b_report());
+    }
+    if all || args.flag("fig5b-serving") {
+        println!("{}", fig5b_serving_report());
     }
     if args.flag("gemv") {
         // timed study — explicit opt-in only (quick mode)

@@ -27,6 +27,7 @@ pub fn fig1a_points() -> Vec<ModelPoint> {
     pts
 }
 
+/// Render the Fig 1(a) area sweep (models × nodes).
 pub fn fig1a_report(hw: &HardwareConfig) -> String {
     let mut t = Table::new("Fig 1(a) — CiROM silicon area (cm²) by model and node")
         .header(&["Model", "Params", "65nm", "28nm", "14nm", "Feasible@14nm"]);

@@ -1,0 +1,184 @@
+//! Fig 5(b), end to end: the external-DRAM access reduction measured
+//! from a *served* trace through the store-backed `HostBackend`,
+//! placed next to the analytic model's value.
+//!
+//! The analytic path (`kvcache::simulate_reduction`, exact 43.6% at
+//! seq 128 / 32 buffered) assumes every token of an S-token sequence
+//! is written once and each decode step reads all prior tokens. The
+//! serving path differs only where real serving differs: the prompt's
+//! tokens are written during prefill whose attention reads stay in
+//! on-chip activation buffers (no memory reads counted), so a short
+//! prompt keeps the measured point within a fraction of a percentage
+//! point of the analytic one — that agreement is asserted end-to-end
+//! in `tests/serve_offline.rs`.
+
+use crate::config::{ModelConfig, ServeConfig};
+use crate::coordinator::Server;
+use crate::energy::KvEnergy;
+use crate::kvcache::{simulate_reduction, KvStoreStats};
+use crate::runtime::HostBackend;
+use crate::trace::Request;
+use crate::util::table::{fmt_pct, Table};
+
+/// Outcome of one measured serving run at a Fig 5(b) operating point.
+#[derive(Debug, Clone)]
+pub struct Fig5bServing {
+    /// Sequence-length cap of the run (`ServeConfig::max_seq`).
+    pub seq_len: usize,
+    /// Early tokens buffered on-die.
+    pub ondie_tokens: usize,
+    /// Prompt length of every request (prefill writes, no reads).
+    pub prompt_len: usize,
+    /// Requests served.
+    pub requests: usize,
+    /// Tokens emitted by the trace.
+    pub tokens_out: u64,
+    /// Measured external-access reduction from the store's counters.
+    pub measured: f64,
+    /// The analytic model's value at (seq_len, ondie_tokens).
+    pub analytic: f64,
+    /// Full store statistics (evictions, retention health, energy).
+    pub kv: KvStoreStats,
+}
+
+/// Serve a closed batch of `n_requests` full-length sequences at the
+/// (seq_len, ondie_tokens) operating point on a fabricated `sim-tiny`
+/// host model and measure the reduction on the store's actual
+/// accesses. Deterministic per seed.
+pub fn fig5b_serving_study(
+    seq_len: usize,
+    ondie_tokens: usize,
+    n_requests: usize,
+    seed: u64,
+) -> anyhow::Result<Fig5bServing> {
+    let model = ModelConfig::sim_tiny();
+    anyhow::ensure!(
+        seq_len <= model.max_seq,
+        "seq_len {seq_len} exceeds sim-tiny context {}",
+        model.max_seq
+    );
+    anyhow::ensure!(n_requests >= 1, "need at least one request");
+    // short prompts keep the serving path close to the analytic model
+    // (prefill reads are not memory reads — module docs)
+    let prompt_len = 8.min(seq_len.max(2) - 1);
+    let serve = ServeConfig {
+        max_batches: n_requests,
+        prefill_len: prompt_len,
+        max_seq: seq_len,
+        ondie_tokens,
+        seed,
+        ..ServeConfig::default()
+    };
+    // misaligned buffers (ondie_tokens not a multiple of the block
+    // size) are rejected by ServeConfig::validate inside Server::new:
+    // placement is per block start, so they would effectively round up
+    // and the analytic column would not be the quantity measured
+    let backend = HostBackend::new(model.clone(), seed)?;
+    let mut server = Server::new(backend, serve)?;
+    let reqs: Vec<Request> = (0..n_requests)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_s: 0.0,
+            prompt: (0..prompt_len)
+                .map(|t| ((i * 31 + t * 7 + 1) % model.vocab_size) as i32)
+                .collect(),
+            max_new_tokens: seq_len - prompt_len,
+        })
+        .collect();
+    let (done, metrics) = server.run_trace(reqs)?;
+    anyhow::ensure!(done.len() == n_requests, "trace did not complete");
+    let kv = metrics.kv.clone().expect("host backend measures KV stats");
+    Ok(Fig5bServing {
+        seq_len,
+        ondie_tokens,
+        prompt_len,
+        requests: n_requests,
+        tokens_out: metrics.tokens_out,
+        measured: kv.external_reduction(),
+        analytic: simulate_reduction(seq_len, ondie_tokens),
+        kv,
+    })
+}
+
+/// Fig 5(b) reproduced from a real served trace at the paper's
+/// operating point (seq 128, 32 buffered), next to the analytic value.
+pub fn fig5b_serving_report() -> String {
+    let r = match fig5b_serving_study(128, 32, 3, 0xF5B) {
+        Ok(r) => r,
+        Err(e) => return format!("fig5b_serving failed: {e:#}\n"),
+    };
+    let energy = KvEnergy::from_stats(&r.kv);
+    let mut t = Table::new(&format!(
+        "Fig 5(b) end-to-end — external DRAM access reduction measured on a served trace \
+         (sim-tiny, {} requests, prompt {}, seq {})",
+        r.requests, r.prompt_len, r.seq_len
+    ))
+    .header(&["quantity", "measured (serving)", "analytic model"]);
+    t.row(&[
+        format!("reduction @ (seq {}, {} buffered)", r.seq_len, r.ondie_tokens),
+        fmt_pct(r.measured),
+        format!("{} (paper: 43.6%)", fmt_pct(r.analytic)),
+    ]);
+    t.row(&[
+        "on-die / external accesses".into(),
+        format!(
+            "{} / {}",
+            r.kv.accesses.ondie_reads + r.kv.accesses.ondie_writes,
+            r.kv.accesses.external_accesses()
+        ),
+        "—".into(),
+    ]);
+    t.row(&[
+        "KV energy (on-die / external)".into(),
+        format!("{:.3e} J / {:.3e} J", energy.ondie_j, energy.external_j),
+        "—".into(),
+    ]);
+    let mut out = t.render();
+    out.push_str(&format!(
+        "tokens served {}; evictions {}, early-block spills {}, retention failures {}, \
+         explicit refreshes {}; |measured - analytic| = {:.2} pp\n",
+        r.tokens_out,
+        r.kv.evictions,
+        r.kv.spilled_early_blocks,
+        r.kv.retention_failures,
+        r.kv.explicit_refreshes,
+        (r.measured - r.analytic).abs() * 100.0,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_point_lands_on_the_paper_value() {
+        // the acceptance gate's twin at a smaller shape to keep the
+        // unit suite fast: seq 64, 16 buffered (analytic 43.8%)
+        let r = fig5b_serving_study(64, 16, 2, 7).unwrap();
+        assert_eq!(r.kv.retention_failures, 0);
+        assert!(
+            (r.measured - r.analytic).abs() < 0.01,
+            "measured {} vs analytic {}",
+            r.measured,
+            r.analytic
+        );
+        assert!(r.kv.accesses.external_accesses() > 0);
+        assert!(r.kv.accesses.ondie_reads > 0);
+    }
+
+    #[test]
+    fn misaligned_buffer_is_rejected_not_silently_rounded() {
+        // 20 is not a multiple of the 8-token block: placement would
+        // effectively buffer 24 tokens, so the comparison must refuse
+        assert!(fig5b_serving_study(64, 20, 1, 1).is_err());
+    }
+
+    #[test]
+    fn report_renders_measured_and_analytic_columns() {
+        let s = fig5b_serving_report();
+        assert!(s.contains("measured (serving)"), "{s}");
+        assert!(s.contains("43.6%"), "{s}");
+        assert!(s.contains("retention failures 0"), "{s}");
+    }
+}

@@ -17,7 +17,9 @@ use crate::util::table::Table;
 /// One measured (shape × sparsity) point.
 #[derive(Debug, Clone)]
 pub struct GemvPerfPoint {
+    /// Fan-in of the measured shape.
     pub rows: usize,
+    /// Fan-out of the measured shape.
     pub cols: usize,
     /// Target zero fraction the weights were drawn at.
     pub sparsity: f64,
@@ -32,10 +34,12 @@ pub struct GemvPerfPoint {
 }
 
 impl GemvPerfPoint {
+    /// Bitplane GEMV speedup over the reference kernel.
     pub fn speedup(&self) -> f64 {
         self.ref_ns / self.plane_ns
     }
 
+    /// Batched-GEMM per-row speedup over the reference kernel.
     pub fn gemm_speedup(&self) -> f64 {
         self.ref_ns / self.gemm_row_ns
     }

@@ -1,14 +1,17 @@
 //! Paper table/figure renderers — each function regenerates one
 //! published artifact from the simulators (see DESIGN.md §4 for the
-//! experiment index).
+//! experiment index). `fig5b_serving_report` goes one step further and
+//! re-measures the Fig 5(b) point on a real served trace.
 
 mod fig1a;
 mod fig5b;
+mod fig5b_serving;
 mod gemv_perf;
 mod table3;
 
 pub use fig1a::fig1a_report;
 pub use fig5b::{fig5a_report, fig5b_report};
+pub use fig5b_serving::{fig5b_serving_report, fig5b_serving_study, Fig5bServing};
 pub use gemv_perf::{
     gemv_perf_json, gemv_perf_report, gemv_perf_study, gemv_perf_table, GemvPerfPoint,
 };

@@ -13,11 +13,17 @@ use crate::util::table::Table;
 /// One comparison row.
 #[derive(Debug, Clone)]
 pub struct Table3Row {
+    /// Design name / citation.
     pub label: &'static str,
+    /// Implementation node.
     pub node: TechNode,
+    /// Compute domain (digital / analog).
     pub domain: &'static str,
+    /// Reported supply voltage(s).
     pub voltage: &'static str,
+    /// Workload/model class.
     pub model_type: &'static str,
+    /// Storage density descriptor (bits per cell).
     pub bit_per_cell: &'static str,
     /// TOPS/W as published (at the design's own node).
     pub eff_tops_w: f64,
@@ -25,7 +31,9 @@ pub struct Table3Row {
     pub eff_tops_w_alt: Option<f64>,
     /// Bit density as published (kb/mm²), if reported.
     pub density_kb_mm2: Option<f64>,
+    /// Has KV-cache management (paper's ✓ column).
     pub kv_optimized: bool,
+    /// Needs no weight reload/update at runtime.
     pub update_free: bool,
 }
 

@@ -11,8 +11,8 @@
 //! [`Hidden`](InferenceBackend::Hidden) types.
 //!
 //! Two implementations ship in-tree (DESIGN.md §9):
-//! * [`ModelExecutor`](super::ModelExecutor) (`pjrt` feature) — the
-//!   compiled-artifact runtime, the CiROM deployment model.
+//! * `ModelExecutor` (`pjrt` feature) — the compiled-artifact
+//!   runtime, the CiROM deployment model.
 //! * [`HostBackend`](super::HostBackend) (always built) — a small
 //!   BitNet-style partitioned transformer on the word-parallel bitplane
 //!   kernel engine, so the whole serving stack runs offline under
@@ -20,15 +20,20 @@
 
 use anyhow::Result;
 
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, ServeConfig};
+use crate::kvcache::KvStoreStats;
 
 /// Decode progress every backend's per-sequence KV state must expose.
 /// `pos` is the number of positions already written (the next token's
 /// KV lands there); `prompt_len` is fixed after prefill.
 pub trait SequenceState {
+    /// Positions already written (the next token's KV lands here).
     fn pos(&self) -> usize;
+    /// Set the decode position.
     fn set_pos(&mut self, pos: usize);
+    /// Prompt length fixed at prefill.
     fn prompt_len(&self) -> usize;
+    /// Record the prompt length after prefill.
     fn set_prompt_len(&mut self, len: usize);
 }
 
@@ -57,18 +62,22 @@ pub fn top_k_f32(data: &[f32], k: usize) -> Vec<usize> {
 /// type rather than an associated one.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Logits {
+    /// One logit per vocabulary entry.
     pub data: Vec<f32>,
 }
 
 impl Logits {
+    /// Wrap a raw logit vector.
     pub fn new(data: Vec<f32>) -> Self {
         Logits { data }
     }
 
+    /// Vocabulary size.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when no logits are present.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -106,6 +115,7 @@ pub trait InferenceBackend {
     /// backends typically allow up to `model().max_seq`).
     fn prefill_len(&self) -> usize;
 
+    /// Pipeline stages the model is partitioned into.
     fn n_partitions(&self) -> usize {
         self.model().n_partitions
     }
@@ -116,6 +126,30 @@ pub trait InferenceBackend {
     /// false and let the serving clock skip idle gaps.
     fn realtime(&self) -> bool {
         false
+    }
+
+    /// Rebuild the backend's tiered KV store (if it has one) for a
+    /// serving deployment: on-die capacity, early-token threshold,
+    /// page size and quantization all come from the [`ServeConfig`].
+    /// The server calls this once at construction, before any state
+    /// exists. Backends with opaque device-side KV (the PJRT runtime)
+    /// keep the no-op default.
+    fn configure_kv(&self, _serve: &ServeConfig) -> Result<()> {
+        Ok(())
+    }
+
+    /// Advance the KV store's DR-eDRAM retention clock to `now_s`
+    /// (modeled hardware seconds). The serving loop calls this once
+    /// per token round; a stalled loop then surfaces retention
+    /// failures on the next KV read. No-op without a store.
+    fn advance_kv_clock(&self, _now_s: f64) {}
+
+    /// Measured KV-tier statistics (accesses, evictions, retention
+    /// health, energy), if this backend's KV lives in a
+    /// [`crate::kvcache::KvStore`]. `None` for backends whose KV is
+    /// opaque to the host.
+    fn kv_stats(&self) -> Option<KvStoreStats> {
+        None
     }
 
     /// Fresh (zeroed) per-sequence KV state.

@@ -2,20 +2,26 @@
 //! [`InferenceBackend`]: a small BitNet-style partitioned transformer
 //! whose ternary projections run on the word-parallel bitplane kernel
 //! engine ([`TernaryMatrix`] GEMV/GEMM, DESIGN.md §8), with f32
-//! attention + RMSNorm and real per-sequence KV tensors.
+//! attention + RMSNorm, and per-sequence KV held in the tiered
+//! [`KvStore`] (DESIGN.md §10): K/V rows are 8-bit quantized into
+//! paged blocks that live in DR eDRAM or spill to external DRAM, so a
+//! served trace *measures* the paper's KV-placement claims instead of
+//! modeling them on the side. Attention reads dequantize per block;
+//! because rows are quantized once at append time, prefill and chunked
+//! decode still agree bit-exactly (invariant 4).
 //!
 //! Weights are fabricated deterministically from a [`ModelConfig`] +
 //! seed: absmean-quantized gaussians scaled by 1/√fan_in, which
 //! reproduces the ~30% zero-weight statistics of a real BitNet b1.58
 //! mask set. The model is random, not trained — what it exercises is
 //! the *serving machinery*: continuous batching, the partition
-//! pipeline, KV/eDRAM accounting and metrics all run end-to-end under
-//! tier-1 with no artifacts and no PJRT. Intended for the simulation
-//! configs (`sim-tiny` and friends); fabricating a billion-parameter
-//! config works but allocates the full f32 embedding table, and each
-//! [`HostState`] allocates `n_layers × 2 × max_seq × kv_dim` f32 of
-//! real KV — clamp `ModelConfig::max_seq` to the context you actually
-//! serve before constructing (the `bitrom --host` CLI paths do).
+//! pipeline, the KV data plane with live retention checking, and
+//! metrics all run end-to-end under tier-1 with no artifacts and no
+//! PJRT. KV pages are allocated on demand (a [`HostState`] starts
+//! empty), but fabricating a billion-parameter config still allocates
+//! the full f32 embedding table — clamp `ModelConfig::max_seq` to the
+//! context you actually serve before constructing (the `bitrom --host`
+//! CLI paths do).
 //!
 //! Optionally ([`HostBackend::with_cirom_events`]) every projection is
 //! routed through the `cirom` macro/bank circuit simulators instead of
@@ -24,12 +30,14 @@
 //! bit-identical, only the speed (and the [`EventCounters`]) differ.
 
 use std::cell::RefCell;
+use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
 use crate::bitnet::{absmax_quantize, QuantizedActs, TernaryMatrix};
 use crate::cirom::{EventCounters, MacroBank};
-use crate::config::{MacroGeometry, ModelConfig};
+use crate::config::{MacroGeometry, ModelConfig, ServeConfig};
+use crate::kvcache::{KvSeq, KvStore, KvStoreConfig, KvStoreStats};
 use crate::util::rng::Rng;
 
 use super::backend::{InferenceBackend, Logits, SequenceState};
@@ -71,16 +79,35 @@ struct Layer {
     w_down: Projection,
 }
 
-/// Per-sequence KV state: one f32 K and V tensor per layer, row `t` of
-/// each holding token `t`'s `kv_dim` entries.
+/// Per-sequence state: block tables into the backend's shared
+/// [`KvStore`] (the K/V rows themselves live there, quantized and
+/// tiered) plus decode progress. Dropping the state retires its pages
+/// back to the store, so on-die tier capacity is recycled across
+/// requests.
 pub struct HostState {
-    /// [n_layers] flat tensors of `max_seq * kv_dim`.
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    /// Per-layer block tables into `store`.
+    kv: KvSeq,
+    /// The store that owns this state's pages.
+    store: Rc<RefCell<KvStore>>,
+    /// Dequantization scratch reused across layers and decode steps
+    /// (gather would otherwise re-allocate twice per layer per token).
+    kbuf: Vec<f32>,
+    vbuf: Vec<f32>,
     /// Number of positions already written (next token goes here).
     pub pos: usize,
     /// Prompt length after prefill.
     pub prompt_len: usize,
+}
+
+impl Drop for HostState {
+    fn drop(&mut self) {
+        // recycle this sequence's pages; try_borrow so an unwind that
+        // interrupted a store operation degrades to a capacity leak
+        // instead of a double panic
+        if let Ok(mut store) = self.store.try_borrow_mut() {
+            store.retire_seq(&mut self.kv);
+        }
+    }
 }
 
 impl SequenceState for HostState {
@@ -98,6 +125,8 @@ impl SequenceState for HostState {
     }
 }
 
+/// The offline serving backend: fabricated ternary weights on the
+/// bitplane kernels, KV in the tiered quantized store (module docs).
 pub struct HostBackend {
     model: ModelConfig,
     /// Token embedding table, `vocab_size × d_model` row-major f32.
@@ -109,6 +138,11 @@ pub struct HostBackend {
     /// accumulated circuit events across every projection executed.
     /// RefCell because the serving API takes `&self` (single-threaded).
     events: Option<RefCell<EventCounters>>,
+    /// The tiered KV store every sequence's K/V rows live in. The
+    /// outer RefCell lets [`InferenceBackend::configure_kv`] swap in a
+    /// deployment-sized store; states keep an `Rc` to the store that
+    /// allocated their pages, so a swap never orphans live sequences.
+    store: RefCell<Rc<RefCell<KvStore>>>,
     seed: u64,
 }
 
@@ -171,22 +205,32 @@ impl HostBackend {
             })
             .collect();
         let head = Projection::fabricate(d, model.vocab_size, &mut rng, g);
+        let store = KvStore::new(KvStoreConfig::for_model(&model));
         Ok(HostBackend {
             events: geom.map(|_| RefCell::new(EventCounters::new())),
             embed,
             layers,
             head,
+            store: RefCell::new(Rc::new(RefCell::new(store))),
             model,
             seed,
         })
     }
 
+    /// The weight-fabrication seed.
     pub fn seed(&self) -> u64 {
         self.seed
     }
 
+    /// The architecture this backend was fabricated for.
     pub fn model(&self) -> &ModelConfig {
         &self.model
+    }
+
+    /// Handle to the current KV store (accounting inspection; new
+    /// states allocate their pages here).
+    pub fn kv_store(&self) -> Rc<RefCell<KvStore>> {
+        self.store.borrow().clone()
     }
 
     /// Mean zero-weight fraction across every fabricated projection
@@ -218,6 +262,7 @@ impl HostBackend {
         self.events.as_ref().map(|e| e.borrow().clone())
     }
 
+    /// Zero the accumulated circuit events (event mode only).
     pub fn reset_events(&self) {
         if let Some(e) = &self.events {
             *e.borrow_mut() = EventCounters::new();
@@ -260,8 +305,8 @@ impl HostBackend {
     }
 
     /// Multi-head causal attention for one query row: keys/values are
-    /// the cached rows `0..n_ctx` of this layer's K/V tensors (GQA maps
-    /// query head `h` to KV head `h / (n_heads / n_kv_heads)`).
+    /// rows `0..n_ctx` of the gathered (dequantized) K/V buffers (GQA
+    /// maps query head `h` to KV head `h / (n_heads / n_kv_heads)`).
     fn attention(&self, q: &[f32], k: &[f32], v: &[f32], n_ctx: usize) -> Vec<f32> {
         let m = &self.model;
         let hd = m.head_dim();
@@ -303,36 +348,51 @@ impl HostBackend {
     }
 
     /// One transformer block over `xs.len()` consecutive token rows
-    /// whose absolute positions start at `base_pos`: writes this
-    /// layer's KV rows, then pre-norm attention + SwiGLU MLP with
-    /// residuals. Row `r` attends causally over positions
-    /// `0..=base_pos + r`.
+    /// whose absolute positions start at `base_pos`: appends this
+    /// layer's K/V rows to the store (quantize-on-write), gathers the
+    /// context back (dequantize-on-read, with tier accounting and the
+    /// retention check on decode reads), then pre-norm attention +
+    /// SwiGLU MLP with residuals. Row `r` attends causally over
+    /// positions `0..=base_pos + r`.
     fn layer_rows(
         &self,
         li: usize,
         xs: &[Vec<f32>],
         state: &mut HostState,
         base_pos: usize,
-    ) -> Vec<Vec<f32>> {
+        is_prefill: bool,
+    ) -> Result<Vec<Vec<f32>>> {
         let layer = &self.layers[li];
-        let kv_dim = self.model.kv_dim();
         assert!(
             base_pos + xs.len() <= self.model.max_seq,
             "KV write past max_seq"
+        );
+        assert_eq!(
+            state.kv.len(li),
+            base_pos,
+            "KV append out of order in layer {li}"
         );
         let xns: Vec<Vec<f32>> = xs.iter().map(|x| rmsnorm(x)).collect();
         let qs = self.project_rows(&layer.wq, &xns);
         let ks = self.project_rows(&layer.wk, &xns);
         let vs = self.project_rows(&layer.wv, &xns);
-        for (r, (kk, vv)) in ks.iter().zip(&vs).enumerate() {
-            let at = (base_pos + r) * kv_dim;
-            state.k[li][at..at + kv_dim].copy_from_slice(kk);
-            state.v[li][at..at + kv_dim].copy_from_slice(vv);
+        let n_ctx = base_pos + xs.len();
+        {
+            let mut store = state.store.borrow_mut();
+            for (kk, vv) in ks.iter().zip(&vs) {
+                store.append(&mut state.kv, li, kk, vv);
+            }
+            // prefill attention reads on-chip activation buffers, so
+            // only decode gathers count as (retention-checked) memory
+            // reads — the Fig 5(a) convention
+            store
+                .gather(&state.kv, li, n_ctx, !is_prefill, &mut state.kbuf, &mut state.vbuf)
+                .map_err(|e| anyhow!("DR-eDRAM retention violated during decode: {e}"))?;
         }
         let attns: Vec<Vec<f32>> = qs
             .iter()
             .enumerate()
-            .map(|(r, q)| self.attention(q, &state.k[li], &state.v[li], base_pos + r + 1))
+            .map(|(r, q)| self.attention(q, &state.kbuf, &state.vbuf, base_pos + r + 1))
             .collect();
         let os = self.project_rows(&layer.wo, &attns);
         let mut x1: Vec<Vec<f32>> = xs
@@ -354,7 +414,7 @@ impl HostBackend {
                 *xi += di;
             }
         }
-        x1
+        Ok(x1)
     }
 
     fn embed_rows(&self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
@@ -394,11 +454,32 @@ impl InferenceBackend for HostBackend {
         self.model.max_seq
     }
 
+    /// Swap in a deployment-sized store (on-die capacity, early-token
+    /// threshold, page size, quantization from the [`ServeConfig`]).
+    /// States created before the swap keep their original store alive
+    /// through their `Rc` until they retire.
+    fn configure_kv(&self, serve: &ServeConfig) -> Result<()> {
+        let cfg = KvStoreConfig::for_serve(&self.model, serve)?;
+        *self.store.borrow_mut() = Rc::new(RefCell::new(KvStore::new(cfg)));
+        Ok(())
+    }
+
+    fn advance_kv_clock(&self, now_s: f64) {
+        self.store.borrow().borrow_mut().set_now(now_s);
+    }
+
+    fn kv_stats(&self) -> Option<KvStoreStats> {
+        Some(self.store.borrow().borrow().stats())
+    }
+
     fn new_state(&self) -> Result<HostState> {
-        let n = self.model.max_seq * self.model.kv_dim();
+        let store = self.store.borrow().clone();
+        let kv = store.borrow().new_seq();
         Ok(HostState {
-            k: (0..self.model.n_layers).map(|_| vec![0f32; n]).collect(),
-            v: (0..self.model.n_layers).map(|_| vec![0f32; n]).collect(),
+            kv,
+            store,
+            kbuf: Vec::new(),
+            vbuf: Vec::new(),
             pos: 0,
             prompt_len: 0,
         })
@@ -427,9 +508,9 @@ impl InferenceBackend for HostBackend {
         anyhow::ensure!(part < self.n_partitions(), "partition {part} out of range");
         anyhow::ensure!(!h.is_empty(), "empty prefill hidden");
         let lpp = self.model.layers_per_partition();
-        let mut rows = self.layer_rows(part * lpp, h, state, 0);
+        let mut rows = self.layer_rows(part * lpp, h, state, 0, true)?;
         for li in part * lpp + 1..(part + 1) * lpp {
-            rows = self.layer_rows(li, &rows, state, 0);
+            rows = self.layer_rows(li, &rows, state, 0, true)?;
         }
         Ok(rows)
     }
@@ -445,9 +526,9 @@ impl InferenceBackend for HostBackend {
         anyhow::ensure!(h.len() == 1, "decode hidden must be a single row");
         anyhow::ensure!(pos < self.model.max_seq, "position {pos} past max_seq");
         let lpp = self.model.layers_per_partition();
-        let mut rows = self.layer_rows(part * lpp, h, state, pos);
+        let mut rows = self.layer_rows(part * lpp, h, state, pos, false)?;
         for li in part * lpp + 1..(part + 1) * lpp {
-            rows = self.layer_rows(li, &rows, state, pos);
+            rows = self.layer_rows(li, &rows, state, pos, false)?;
         }
         Ok(rows)
     }
@@ -507,8 +588,9 @@ mod tests {
     fn prefill_equals_chunked_prefill_plus_decode() {
         // DESIGN.md invariant 4 on the host backend: batched-GEMM
         // prefill rows and single-row decode steps must produce the
-        // same activations (the bitplane GEMM is bit-identical per
-        // row, quantization is per-row, attention order is shared).
+        // same activations. This now also covers the KV store: rows
+        // are quantized once at append time, so the dequantized view
+        // is identical no matter when it is gathered.
         let b = HostBackend::new(micro(), 3).unwrap();
         let prompt = [5, 9, 2, 40, 11, 7];
         let (_, full) = b.prefill(&prompt).unwrap();
@@ -561,7 +643,9 @@ mod tests {
 
     #[test]
     fn states_are_isolated_across_sequences() {
-        // interleaved decoding of two sequences must equal the solo runs
+        // interleaved decoding of two sequences must equal the solo
+        // runs — per-sequence block tables into the shared store are
+        // fully isolated
         let b = HostBackend::new(micro(), 9).unwrap();
         let solo_a = b.generate_greedy(&[1, 2, 3], 5).unwrap();
         let solo_b = b.generate_greedy(&[30, 20], 5).unwrap();
@@ -577,5 +661,54 @@ mod tests {
         }
         assert_eq!(out_a, solo_a);
         assert_eq!(out_b, solo_b);
+    }
+
+    #[test]
+    fn generation_is_invariant_to_kv_placement() {
+        // tier placement (on-die vs spilled) must never change the
+        // model's numerics: a store with a starved on-die tier (all
+        // blocks spill) generates the same tokens as the default
+        let roomy = HostBackend::new(micro(), 21).unwrap();
+        let starved = HostBackend::new(micro(), 21).unwrap();
+        starved
+            .configure_kv(&ServeConfig {
+                max_seq: 32,
+                prefill_len: 16,
+                ondie_tokens: 16,
+                kv_edram_bytes: 0, // nothing fits on-die
+                ..ServeConfig::default()
+            })
+            .unwrap();
+        let prompt = [4, 8, 15, 16];
+        let a = roomy.generate_greedy(&prompt, 10).unwrap();
+        let b = starved.generate_greedy(&prompt, 10).unwrap();
+        assert_eq!(a, b, "placement changed generated tokens");
+        let stats = starved.kv_stats().unwrap();
+        assert_eq!(stats.accesses.ondie_writes, 0);
+        assert!(stats.accesses.external_writes > 0);
+        assert!(stats.spilled_early_blocks > 0);
+    }
+
+    #[test]
+    fn state_drop_recycles_ondie_pages() {
+        let b = HostBackend::new(micro(), 13).unwrap();
+        let store = b.kv_store();
+        {
+            let (_state, _) = b.prefill(&[1, 2, 3, 4, 5]).unwrap();
+            assert!(store.borrow().ondie_blocks_in_use() > 0);
+        }
+        assert_eq!(store.borrow().ondie_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn kv_stats_track_decode_traffic() {
+        let b = HostBackend::new(micro(), 2).unwrap();
+        b.generate_greedy(&[1, 2, 3], 6).unwrap();
+        let stats = b.kv_stats().unwrap();
+        // 3 prompt + 5 decode-written tokens, per layer
+        assert_eq!(stats.accesses.ondie_writes + stats.accesses.external_writes, 8 * 2);
+        assert!(stats.accesses.ondie_reads > 0);
+        assert_eq!(stats.retention_failures, 0);
+        assert_eq!(stats.quant_bits, 8);
     }
 }

@@ -10,36 +10,56 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::ModelConfig;
 use crate::util::json::Json;
 
+/// One compiled artifact (an AOT-compiled HLO program on disk).
 #[derive(Debug, Clone)]
 pub struct ArtifactInfo {
+    /// Artifact name (e.g. `"prefill_p0"`).
     pub name: String,
+    /// Path to the serialized program.
     pub file: PathBuf,
+    /// Content hash recorded at compile time.
     pub sha256: String,
+    /// File size in bytes.
     pub bytes: u64,
 }
 
 /// The golden trace the python side recorded (integration oracle).
 #[derive(Debug, Clone)]
 pub struct Golden {
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Greedy continuation the python model produced.
     pub generated: Vec<i32>,
+    /// Last-position prefill logits for numeric comparison.
     pub prefill_last_logits: Vec<f32>,
 }
 
+/// Parsed `manifest.json`: the compile path's description of an
+/// artifact directory.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Model architecture the artifacts were compiled for.
     pub model: ModelConfig,
+    /// Fixed prefill shape of the compiled executables.
     pub prefill_len: usize,
+    /// Seed the weights were fabricated/trained from.
     pub weight_seed: u64,
+    /// Zero-weight fraction of the compiled mask set.
     pub rom_sparsity: f64,
+    /// Whether the pallas kernel path compiled the programs.
     pub pallas_kernel: bool,
+    /// Whether a trained checkpoint (vs seed weights) was baked in.
     pub trained_checkpoint: bool,
+    /// Every compiled program in the directory.
     pub artifacts: Vec<ArtifactInfo>,
+    /// Golden trace for integration testing, if recorded.
     pub golden: Option<Golden>,
 }
 
 impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::parse_file(&dir.join("manifest.json"))
             .context("loading artifacts manifest (run `make artifacts`)")?;
@@ -153,6 +173,7 @@ impl Manifest {
         Ok(())
     }
 
+    /// Look up an artifact by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
         self.artifacts
             .iter()

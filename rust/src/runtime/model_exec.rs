@@ -17,7 +17,7 @@ use super::tensor::{i32_scalar, tokens_to_literal, TensorF32};
 /// Per-sequence decoding state: the KV literals for every partition and
 /// the current absolute position.
 pub struct DecodeState {
-    /// [n_partitions] cache pairs, each [L_p, max_seq, kv_heads, hd].
+    /// `[n_partitions]` cache pairs, each `[L_p, max_seq, kv_heads, hd]`.
     k: Vec<xla::Literal>,
     v: Vec<xla::Literal>,
     /// Number of positions already written (next token goes here).
@@ -31,10 +31,14 @@ pub struct DecodeState {
 pub struct FusedState {
     k: xla::Literal,
     v: xla::Literal,
+    /// Positions already written.
     pub pos: usize,
 }
 
+/// The PJRT artifact runtime: compiled executables loaded once,
+/// weights resident as constants (the CiROM deployment model).
 pub struct ModelExecutor {
+    /// The artifact manifest this executor was loaded from.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     embed_prefill: xla::PjRtLoadedExecutable,
@@ -48,6 +52,7 @@ pub struct ModelExecutor {
     /// absent in older artifact sets.
     fused_prefill: Option<xla::PjRtLoadedExecutable>,
     fused_decode: Option<xla::PjRtLoadedExecutable>,
+    /// Wall time of the load+compile power-on (s).
     pub load_time_s: f64,
 }
 
@@ -100,10 +105,12 @@ impl ModelExecutor {
         })
     }
 
+    /// True when fused whole-model executables are available.
     pub fn has_fused(&self) -> bool {
         self.fused_prefill.is_some() && self.fused_decode.is_some()
     }
 
+    /// Pipeline partitions in the compiled model.
     pub fn n_partitions(&self) -> usize {
         self.manifest.model.n_partitions
     }

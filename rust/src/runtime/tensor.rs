@@ -5,16 +5,20 @@ use anyhow::Result;
 /// A host-side f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorF32 {
+    /// Shape (row-major).
     pub dims: Vec<usize>,
+    /// Flat element storage.
     pub data: Vec<f32>,
 }
 
 impl TensorF32 {
+    /// Tensor from shape + data (length-checked).
     pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
         TensorF32 { dims, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(dims: Vec<usize>) -> Self {
         let n = dims.iter().product();
         TensorF32 {
@@ -23,19 +27,23 @@ impl TensorF32 {
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Convert to an xla literal of the same shape.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 
+    /// Convert from an xla literal, imposing `dims`.
     pub fn from_literal(lit: &xla::Literal, dims: Vec<usize>) -> Result<Self> {
         let data = lit.to_vec::<f32>()?;
         anyhow::ensure!(
@@ -59,7 +67,7 @@ impl TensorF32 {
     }
 }
 
-/// i32 token vector → Literal of shape [n].
+/// i32 token vector → Literal of shape `[n]`.
 pub fn tokens_to_literal(tokens: &[i32]) -> Result<xla::Literal> {
     let dims = [tokens.len() as i64];
     Ok(xla::Literal::vec1(tokens).reshape(&dims)?)

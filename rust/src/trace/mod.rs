@@ -7,24 +7,34 @@ use crate::util::rng::Rng;
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Request id (stable across the trace).
     pub id: u64,
     /// Arrival time (s) relative to trace start.
     pub arrival_s: f64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Generation budget.
     pub max_new_tokens: usize,
 }
 
 /// Trace generator parameters.
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
+    /// Requests to generate.
     pub n_requests: usize,
+    /// Minimum prompt length.
     pub prompt_len_min: usize,
+    /// Maximum prompt length.
     pub prompt_len_max: usize,
+    /// Minimum generation budget.
     pub gen_len_min: usize,
+    /// Maximum generation budget.
     pub gen_len_max: usize,
+    /// Vocabulary to draw prompt tokens from.
     pub vocab_size: usize,
     /// Mean arrival rate (req/s); 0 = all arrive at t=0 (closed batch).
     pub arrival_rate: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 

@@ -5,14 +5,20 @@
 
 use std::collections::BTreeMap;
 
+/// One declared option or flag.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// Option name (without the `--`).
     pub name: &'static str,
+    /// Help text.
     pub help: &'static str,
+    /// Default value (None for flags).
     pub default: Option<&'static str>,
+    /// True for boolean flags.
     pub is_flag: bool,
 }
 
+/// Parsed argument values.
 #[derive(Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
@@ -20,6 +26,7 @@ pub struct Args {
     positional: Vec<String>,
 }
 
+/// Declarative parser: declare options/flags, then parse.
 #[derive(Debug)]
 pub struct ArgParser {
     program: &'static str,
@@ -28,6 +35,7 @@ pub struct ArgParser {
 }
 
 impl ArgParser {
+    /// Parser for `program` with a one-line description.
     pub fn new(program: &'static str, about: &'static str) -> Self {
         ArgParser {
             program,
@@ -36,6 +44,7 @@ impl ArgParser {
         }
     }
 
+    /// Declare a `--name <value>` option with a default.
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
         self.specs.push(ArgSpec {
             name,
@@ -46,6 +55,7 @@ impl ArgParser {
         self
     }
 
+    /// Declare a boolean `--name` flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(ArgSpec {
             name,
@@ -56,6 +66,7 @@ impl ArgParser {
         self
     }
 
+    /// Render the help text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
         for spec in &self.specs {
@@ -117,6 +128,7 @@ impl ArgParser {
         Ok(args)
     }
 
+    /// Parse the process arguments, exiting with usage on error.
     pub fn parse_env(&self) -> Args {
         // skip argv[0]; examples under `cargo run --example` see clean argv
         match self.parse_from(std::env::args().skip(1)) {
@@ -130,37 +142,44 @@ impl ArgParser {
 }
 
 impl Args {
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key` (panics if undeclared).
     pub fn str(&self, key: &str) -> &str {
         self.get(key)
             .unwrap_or_else(|| panic!("missing option --{key} (no default)"))
     }
 
+    /// `--key` parsed as usize.
     pub fn usize(&self, key: &str) -> usize {
         self.str(key)
             .parse()
             .unwrap_or_else(|e| panic!("--{key}: {e}"))
     }
 
+    /// `--key` parsed as u64.
     pub fn u64(&self, key: &str) -> u64 {
         self.str(key)
             .parse()
             .unwrap_or_else(|e| panic!("--{key}: {e}"))
     }
 
+    /// `--key` parsed as f64.
     pub fn f64(&self, key: &str) -> f64 {
         self.str(key)
             .parse()
             .unwrap_or_else(|e| panic!("--{key}: {e}"))
     }
 
+    /// True when `--key` was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Positional (non-option) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -8,20 +8,29 @@ use std::time::{Duration, Instant};
 
 use super::stats::Percentiles;
 
+/// One benchmark's measured latency distribution.
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Iterations measured.
     pub iters: u64,
+    /// Mean per-iteration latency (ns).
     pub mean_ns: f64,
+    /// Median latency (ns).
     pub median_ns: f64,
+    /// 95th-percentile latency (ns).
     pub p95_ns: f64,
+    /// Fastest observed iteration (ns).
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// Iterations per second at the mean latency.
     pub fn per_sec(&self) -> f64 {
         1e9 / self.mean_ns
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>12} iters  mean {:>12}  median {:>12}  p95 {:>12}  ({:.1}/s)",
@@ -35,6 +44,7 @@ impl BenchResult {
     }
 }
 
+/// Format nanoseconds with an adaptive unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -47,6 +57,7 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Benchmark runner configuration (warmup + measurement budget).
 pub struct Bench {
     warmup: Duration,
     measure: Duration,
@@ -64,6 +75,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Short-budget configuration (CI smoke mode).
     pub fn quick() -> Self {
         Bench {
             warmup: Duration::from_millis(50),
@@ -72,6 +84,7 @@ impl Bench {
         }
     }
 
+    /// Override the measurement budget.
     pub fn with_measure(mut self, d: Duration) -> Self {
         self.measure = d;
         self

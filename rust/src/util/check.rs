@@ -9,10 +9,12 @@ use super::rng::Rng;
 
 /// Generator handle passed to property closures.
 pub struct Gen {
+    /// Deterministic source driving the case.
     pub rng: Rng,
     /// Simplification level 0 (full size) ..= 3 (tiny). Generators are
     /// expected to scale their output size down with this.
     pub level: u32,
+    /// Seed that replays this exact case.
     pub case_seed: u64,
 }
 
@@ -23,28 +25,34 @@ impl Gen {
         self.rng.usize(1, max)
     }
 
+    /// Uniform usize in `[lo, hi]`.
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.rng.usize(lo, hi)
     }
 
+    /// Uniform f64 in `[0, 1)`.
     pub fn f64(&mut self) -> f64 {
         self.rng.f64()
     }
 
+    /// Random trit with the given zero probability.
     pub fn trit(&mut self, p_zero: f64) -> i8 {
         self.rng.trit(p_zero)
     }
 
+    /// Random trit vector.
     pub fn vec_trits(&mut self, len: usize, p_zero: f64) -> Vec<i8> {
         (0..len).map(|_| self.rng.trit(p_zero)).collect()
     }
 
+    /// Random i8 vector in `[lo, hi]`.
     pub fn vec_i8(&mut self, len: usize, lo: i8, hi: i8) -> Vec<i8> {
         (0..len)
             .map(|_| self.rng.i64(lo as i64, hi as i64) as i8)
             .collect()
     }
 
+    /// Standard-normal f32 vector.
     pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
         (0..len).map(|_| self.rng.normal() as f32).collect()
     }
@@ -93,6 +101,7 @@ macro_rules! prop_assert {
     };
 }
 
+/// `prop_assert!` for equality, reporting both operands on failure.
 #[macro_export]
 macro_rules! prop_assert_eq {
     ($a:expr, $b:expr) => {{

@@ -8,19 +8,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A JSON value (numbers are f64, objects are ordered maps).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for stable output).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with its byte offset.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the failure.
     pub offset: usize,
 }
 
@@ -35,6 +45,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---- accessors -----------------------------------------------------
 
+    /// Object field lookup (None for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -51,6 +62,7 @@ impl Json {
         Some(cur)
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -58,14 +70,17 @@ impl Json {
         }
     }
 
+    /// Number coerced to usize, if representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Number coerced to i64, if representable.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -73,6 +88,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -80,6 +96,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -87,6 +104,7 @@ impl Json {
         }
     }
 
+    /// Object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -96,24 +114,29 @@ impl Json {
 
     // ---- builders ------------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build a number array.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
     }
 
     // ---- parsing -------------------------------------------------------
 
+    /// Parse a complete JSON document.
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: input.as_bytes(),
@@ -128,6 +151,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Read and parse a JSON file.
     pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
@@ -136,12 +160,14 @@ impl Json {
 
     // ---- writing --------------------------------------------------------
 
+    /// Render with two-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
         out
     }
 
+    /// Render without whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, false);

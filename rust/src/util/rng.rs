@@ -4,12 +4,14 @@
 //! macro simulator's synthetic inputs. Seeded runs are fully
 //! reproducible across platforms (pure integer arithmetic).
 
+/// xoshiro256++ generator state.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
 }
 
 impl Rng {
+    /// Seed the generator (splitmix64 state expansion).
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion of the seed, per the xoshiro reference.
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -25,6 +27,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
             .rotate_left(23)
@@ -53,19 +56,23 @@ impl Rng {
         lo + (((self.next_u64() as u128 * span as u128) >> 64) as u64)
     }
 
+    /// Uniform usize in `[lo, hi]` inclusive.
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range(lo as u64, hi as u64) as usize
     }
 
+    /// Uniform i64 in `[lo, hi]` inclusive.
     pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo <= hi);
         lo + self.range(0, (hi - lo) as u64) as i64
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
 
+    /// Uniformly pick one element.
     pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.usize(0, items.len() - 1)]
     }
@@ -94,6 +101,7 @@ impl Rng {
         }
     }
 
+    /// Fisher–Yates shuffle in place.
     pub fn shuffle<T>(&mut self, items: &mut [T]) {
         for i in (1..items.len()).rev() {
             let j = self.usize(0, i);

@@ -12,6 +12,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Summary {
             n: 0,
@@ -22,6 +23,7 @@ impl Summary {
         }
     }
 
+    /// Fold in one sample.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -31,14 +33,17 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Unbiased sample variance.
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -47,10 +52,12 @@ impl Summary {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest sample (0 when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -59,6 +66,7 @@ impl Summary {
         }
     }
 
+    /// Largest sample (0 when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -76,19 +84,23 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
+    /// Empty reservoir.
     pub fn new() -> Self {
         Default::default()
     }
 
+    /// Record one sample.
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
         self.sorted = false;
     }
 
+    /// Samples recorded.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -111,6 +123,7 @@ impl Percentiles {
         self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
     }
 
+    /// The 50th percentile.
     pub fn median(&mut self) -> f64 {
         self.pct(50.0)
     }
@@ -127,6 +140,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Histogram over `[lo, hi)` with `n_buckets` equal buckets.
     pub fn new(lo: f64, hi: f64, n_buckets: usize) -> Self {
         assert!(hi > lo && n_buckets > 0);
         Histogram {
@@ -138,6 +152,7 @@ impl Histogram {
         }
     }
 
+    /// Record one sample into its bucket.
     pub fn add(&mut self, x: f64) {
         if x < self.lo {
             self.underflow += 1;
@@ -151,10 +166,12 @@ impl Histogram {
         }
     }
 
+    /// Per-bucket counts (underflow/overflow excluded).
     pub fn bucket_counts(&self) -> &[u64] {
         &self.buckets
     }
 
+    /// All samples recorded, including under/overflow.
     pub fn total(&self) -> u64 {
         self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
     }

@@ -1,6 +1,7 @@
 //! Aligned text tables for report output (paper tables/figures are
 //! regenerated as text rows that mirror the published layout).
 
+/// Builder for an aligned text table.
 #[derive(Debug, Default)]
 pub struct Table {
     title: String,
@@ -9,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with a title line.
     pub fn new(title: &str) -> Self {
         Table {
             title: title.to_string(),
@@ -16,26 +18,31 @@ impl Table {
         }
     }
 
+    /// Set the header row.
     pub fn header(mut self, cols: &[&str]) -> Self {
         self.header = cols.iter().map(|s| s.to_string()).collect();
         self
     }
 
+    /// Append a data row.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Append a data row of string slices.
     pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
         self.rows
             .push(cells.iter().map(|s| s.to_string()).collect());
         self
     }
 
+    /// Data rows added so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render title + aligned rows as text.
     pub fn render(&self) -> String {
         let n_cols = self
             .header
@@ -96,10 +103,12 @@ pub fn fmt_f(x: f64, digits: usize) -> String {
     format!("{:.*}", digits, x)
 }
 
+/// Format a fraction as a percentage like `43.6%`.
 pub fn fmt_pct(x: f64) -> String {
     format!("{:.1}%", 100.0 * x)
 }
 
+/// Format with an SI magnitude suffix (k/M/G/T).
 pub fn fmt_si(x: f64) -> String {
     let (val, suffix) = if x.abs() >= 1e12 {
         (x / 1e12, "T")

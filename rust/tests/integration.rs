@@ -126,11 +126,11 @@ fn server_completes_trace_with_healthy_edram() {
     }
     assert_eq!(metrics.requests_done as usize, n);
     assert!(metrics.tokens_per_s() > 0.0);
-    // DR-eDRAM invariants held for the whole run
-    assert_eq!(server.kv().edram().retention_failures, 0);
-    assert_eq!(server.kv().edram().explicit_refreshes, 0);
-    // KV placement actually moved traffic on-die
-    assert!(server.kv().stats.external_reduction() > 0.2);
+    // the PJRT executor's KV is opaque to the host, so no measured
+    // tier statistics are reported (the host backend path measures
+    // them — see tests/serve_offline.rs)
+    assert!(metrics.kv.is_none());
+    assert!(server.kv_stats().is_none());
 }
 
 #[test]

@@ -1,13 +1,14 @@
 //! End-to-end offline serving tests (default features — no PJRT, no
 //! artifacts): full request traces through `Server<HostBackend>`,
 //! exercising continuous batching, the partition pipeline (validated
-//! every round, DESIGN.md §7.8), KV/eDRAM accounting and metrics under
-//! tier-1. The ISSUE-2 acceptance path.
+//! every round, DESIGN.md §7.8), the tiered quantized KV store (the
+//! serving data plane, DESIGN.md §10) and metrics under tier-1.
 
 use std::time::Instant;
 
 use bitrom::config::{ModelConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, Server};
+use bitrom::kvcache::simulate_reduction;
 use bitrom::runtime::{HostBackend, InferenceBackend};
 use bitrom::trace::{generate, Request, TraceConfig};
 
@@ -69,13 +70,96 @@ fn full_trace_completes_with_healthy_edram_and_metrics() {
     assert_eq!(metrics.decode_time.count(), metrics.tokens_out - n as u64);
     assert!(metrics.prefill_time.mean() > 0.0);
 
-    // DR-eDRAM invariants held for the whole run (DESIGN.md inv. 5)
-    assert_eq!(server.kv().edram().retention_failures, 0);
-    assert_eq!(server.kv().edram().explicit_refreshes, 0);
+    // DR-eDRAM invariants held for the whole run (DESIGN.md inv. 5),
+    // measured on the store's actual accesses
+    let kv = metrics.kv.as_ref().expect("host backend measures KV stats");
+    assert_eq!(kv.retention_failures, 0);
+    assert_eq!(kv.explicit_refreshes, 0);
     // KV placement actually split traffic on-die vs external
-    assert!(server.kv().stats.ondie_reads > 0);
-    assert!(server.kv().stats.external_reads > 0);
-    assert!(server.kv().stats.external_reduction() > 0.1);
+    assert!(kv.accesses.ondie_reads > 0);
+    assert!(kv.accesses.external_reads > 0);
+    assert!(kv.external_reduction() > 0.1);
+    assert!(kv.kv_energy_j() > 0.0);
+    // every completed request retired its pages back to the store
+    assert_eq!(server.kv_stats().unwrap().ondie_blocks_in_use, 0);
+}
+
+#[test]
+fn served_kv_reduction_matches_analytic_fig5b_point() {
+    // THE end-to-end acceptance point: a real served trace through the
+    // store-backed HostBackend at the paper's (seq 128, 32 buffered)
+    // operating point must measure an external-access reduction within
+    // one percentage point of the analytic Fig 5(b) value (43.6%),
+    // with zero retention failures. Short prompts keep the measured
+    // path close to the model: prefill attention reads stay in
+    // on-chip activation buffers, so only their writes are counted.
+    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+    let serve = ServeConfig {
+        max_batches: 3,
+        prefill_len: 8,
+        max_seq: 128,
+        ondie_tokens: 32,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(backend, serve).unwrap();
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            id: i,
+            arrival_s: 0.0,
+            prompt: (0..8).map(|t| ((i * 31 + t * 7 + 1) % 256) as i32).collect(),
+            max_new_tokens: 120,
+        })
+        .collect();
+    let (done, metrics) = server.run_trace(reqs).unwrap();
+    assert_eq!(done.len(), 3);
+    for r in &done {
+        // sequences ran to the full context (prompt 8 + 119 decode
+        // writes + the final sampled token = 128-token sequences)
+        assert_eq!(r.tokens.len(), 120);
+    }
+
+    let kv = metrics.kv.as_ref().expect("host backend measures KV stats");
+    assert_eq!(kv.retention_failures, 0, "DR argument violated");
+    assert_eq!(kv.explicit_refreshes, 0);
+    assert_eq!(kv.evictions, 0, "13.5 MB tier must not overflow here");
+    let measured = kv.external_reduction();
+    let analytic = simulate_reduction(128, 32);
+    assert!((analytic - 0.436).abs() < 0.0005, "analytic model moved");
+    assert!(
+        (measured - analytic).abs() < 0.01,
+        "measured {measured:.4} vs analytic {analytic:.4} — more than 1pp apart"
+    );
+}
+
+#[test]
+fn starved_edram_tier_evicts_but_tokens_are_unchanged() {
+    // an on-die tier too small for the working set must spill/evict —
+    // and because tier placement never touches stored values, the
+    // generated tokens must be identical to the roomy-tier run
+    let run = |edram_bytes: u64| {
+        let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+        let serve = ServeConfig {
+            max_batches: 4,
+            kv_edram_bytes: edram_bytes,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let (done, metrics) = server.run_trace(trace(8, 0.0, 13)).unwrap();
+        (by_id(done), metrics.kv.unwrap())
+    };
+    let (roomy_done, roomy_kv) = run(13_500_000);
+    // a few KiB: room for only a handful of blocks across 6 layers
+    let (tiny_done, tiny_kv) = run(4096);
+    assert_eq!(roomy_kv.evictions, 0);
+    assert!(
+        tiny_kv.evictions > 0 || tiny_kv.spilled_early_blocks > 0,
+        "starved tier must overflow"
+    );
+    assert!(tiny_kv.external_reduction() < roomy_kv.external_reduction());
+    assert_eq!(roomy_done.len(), tiny_done.len());
+    for (a, b) in roomy_done.iter().zip(&tiny_done) {
+        assert_eq!(a.tokens, b.tokens, "placement changed request {}", a.id);
+    }
 }
 
 #[test]
