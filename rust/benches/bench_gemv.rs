@@ -8,22 +8,8 @@
 //!
 //! Override the output path with BITROM_BENCH_OUT.
 
-use std::path::PathBuf;
-
 use bitrom::report::{gemv_perf_json, gemv_perf_study, gemv_perf_table};
-
-fn out_path() -> PathBuf {
-    if let Ok(p) = std::env::var("BITROM_BENCH_OUT") {
-        return PathBuf::from(p);
-    }
-    // cargo runs benches with cwd = the package root (rust/); the
-    // record lives at the repository root next to EXPERIMENTS.md
-    if PathBuf::from("../ROADMAP.md").exists() {
-        PathBuf::from("../BENCH_gemv.json")
-    } else {
-        PathBuf::from("BENCH_gemv.json")
-    }
-}
+use bitrom::util::bench::bench_out_path;
 
 fn main() {
     let points = gemv_perf_study(false);
@@ -43,7 +29,7 @@ fn main() {
         );
     }
 
-    let path = out_path();
+    let path = bench_out_path("BENCH_gemv.json");
     let json = gemv_perf_json(&points, "bench_gemv");
     match std::fs::write(&path, json.to_string_pretty() + "\n") {
         Ok(()) => println!("recorded {}", path.display()),

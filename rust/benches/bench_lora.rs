@@ -1,0 +1,143 @@
+//! Multi-tenant LoRA serving cost, measured end-to-end: the same
+//! workload through `Server<HostBackend>` with 0 vs N tenant adapters
+//! (identical prompts/budgets — adapter ids are assigned post-hoc so
+//! the two runs differ only in the deltas), plus the task-switch
+//! traffic and the measured per-token adapter op overhead. Emits
+//! `BENCH_lora.json` at the repository root so the adapter-serving
+//! trajectory is recorded across PRs.
+//!
+//!   cargo bench --bench bench_lora            # full trace
+//!   BITROM_BENCH_QUICK=1 cargo bench --bench bench_lora
+//!
+//! Override the output path with BITROM_BENCH_OUT.
+
+use bitrom::config::{ModelConfig, ServeConfig};
+use bitrom::coordinator::Server;
+use bitrom::lora::{AdapterRegistry, LoraConfig};
+use bitrom::runtime::HostBackend;
+use bitrom::trace::{generate, Request, TraceConfig};
+use bitrom::util::bench::bench_out_path;
+use bitrom::util::json::Json;
+
+struct Point {
+    adapters: usize,
+    tokens_per_s: f64,
+    tokens: u64,
+    measured_overhead: f64,
+    cold_loads: u64,
+    bytes_streamed: u64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BITROM_BENCH_QUICK").is_ok();
+    let (n_requests, gen_len) = if quick { (8, 12) } else { (24, 32) };
+    let model = ModelConfig::sim_tiny();
+    let lora = LoraConfig::paper();
+    let base_trace: Vec<Request> = generate(&TraceConfig {
+        n_requests,
+        gen_len_min: gen_len.min(8),
+        gen_len_max: gen_len,
+        vocab_size: model.vocab_size,
+        ..TraceConfig::default()
+    });
+
+    println!(
+        "== bench_lora: Server<HostBackend> with tenant adapters, {n_requests} requests, \
+         gen <= {gen_len} =="
+    );
+    let mut points = Vec::new();
+    let mut base_tput = 0.0f64;
+    for n_adapters in [0usize, 4] {
+        let backend = if n_adapters > 0 {
+            let reg = AdapterRegistry::fabricate(&model, &lora, n_adapters, 0xADA9)?;
+            HostBackend::with_adapters(model.clone(), 0xB17, reg)?
+        } else {
+            HostBackend::new(model.clone(), 0xB17)?
+        };
+        let serve = ServeConfig {
+            max_batches: 6,
+            n_adapters,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve)?;
+        // identical workload; only the adapter binding differs
+        let mut reqs = base_trace.clone();
+        if n_adapters > 0 {
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.adapter_id = Some((i % n_adapters) as u32);
+            }
+        }
+        let (done, metrics) = server.run_trace(reqs)?;
+        assert_eq!(done.len(), n_requests, "every request must complete");
+        let tput = metrics.tokens_per_s();
+        if n_adapters == 0 {
+            base_tput = tput;
+        }
+        let lora_stats = metrics.lora.unwrap_or_default();
+        println!(
+            "  {n_adapters} adapters: {:>8.1} tok/s  (x{:.2} vs base)  \
+             measured op overhead {:.2}%  cold loads {}  streamed {} B",
+            tput,
+            tput / base_tput.max(1e-9),
+            lora_stats.measured_op_overhead() * 100.0,
+            lora_stats.cold_loads,
+            lora_stats.bytes_streamed,
+        );
+        if n_adapters > 0 {
+            assert!(lora_stats.binds as usize >= n_requests.min(n_adapters));
+        }
+        points.push(Point {
+            adapters: n_adapters,
+            tokens_per_s: tput,
+            tokens: metrics.tokens_out,
+            measured_overhead: lora_stats.measured_op_overhead(),
+            cold_loads: lora_stats.cold_loads,
+            bytes_streamed: lora_stats.bytes_streamed,
+        });
+    }
+
+    let analytic = lora.op_overhead_vs_host_projections(&model);
+    let adapter_bytes = lora.storage_bytes(&model);
+    let reload_bytes = AdapterRegistry::full_reload_bytes_for(&model);
+    println!(
+        "analytic op overhead {:.2}% | adapter {} B vs full reload {} B per task switch",
+        analytic * 100.0,
+        adapter_bytes,
+        reload_bytes,
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("bench_lora")),
+        ("model", Json::str(model.name.clone())),
+        ("quick", Json::Bool(quick)),
+        ("requests", Json::num(n_requests as f64)),
+        ("gen_len", Json::num(gen_len as f64)),
+        ("analytic_overhead", Json::num(analytic)),
+        ("adapter_bytes", Json::num(adapter_bytes as f64)),
+        ("full_reload_bytes", Json::num(reload_bytes as f64)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("adapters", Json::num(p.adapters as f64)),
+                            ("tokens_per_s", Json::num(p.tokens_per_s)),
+                            ("tokens", Json::num(p.tokens as f64)),
+                            ("measured_overhead", Json::num(p.measured_overhead)),
+                            ("cold_loads", Json::num(p.cold_loads as f64)),
+                            ("bytes_streamed", Json::num(p.bytes_streamed as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path = bench_out_path("BENCH_lora.json");
+    match std::fs::write(&path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("recorded {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    Ok(())
+}

@@ -10,26 +10,12 @@
 //!
 //! Override the output path with BITROM_BENCH_OUT.
 
-use std::path::PathBuf;
-
 use bitrom::config::{ModelConfig, ServeConfig};
 use bitrom::coordinator::Server;
 use bitrom::runtime::HostBackend;
 use bitrom::trace::{generate, TraceConfig};
+use bitrom::util::bench::bench_out_path;
 use bitrom::util::json::Json;
-
-fn out_path() -> PathBuf {
-    if let Ok(p) = std::env::var("BITROM_BENCH_OUT") {
-        return PathBuf::from(p);
-    }
-    // cargo runs benches with cwd = the package root (rust/); the
-    // record lives at the repository root next to EXPERIMENTS.md
-    if PathBuf::from("../ROADMAP.md").exists() {
-        PathBuf::from("../BENCH_serve.json")
-    } else {
-        PathBuf::from("BENCH_serve.json")
-    }
-}
 
 struct Point {
     batches: usize,
@@ -123,7 +109,7 @@ fn main() -> anyhow::Result<()> {
             ),
         ),
     ]);
-    let path = out_path();
+    let path = bench_out_path("BENCH_serve.json");
     match std::fs::write(&path, json.to_string_pretty() + "\n") {
         Ok(()) => println!("recorded {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

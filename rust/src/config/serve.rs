@@ -2,11 +2,12 @@
 //! 6 partitions, up to 6 in-flight batches, sequence length 128 with 32
 //! early tokens buffered on-die).
 
+use crate::lora::LoraConfig;
 use crate::util::json::Json;
 
 /// Knobs of one serving deployment: batching, sequence shape, KV-cache
-/// placement/paging/quantization, sampling, and the modeled hardware
-/// token cadence.
+/// placement/paging/quantization, multi-tenant adapters, sampling, and
+/// the modeled hardware token cadence.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
     /// Max batches in flight through the partition pipeline (paper: 6).
@@ -25,6 +26,15 @@ pub struct ServeConfig {
     pub kv_quant_bits: usize,
     /// On-die KV tier capacity in bytes (paper §V-B: 13.5 MB).
     pub kv_edram_bytes: u64,
+    /// Tenant LoRA adapters resident in the deployment (0 = adapter
+    /// serving disabled; requests then carry no `adapter_id`).
+    pub n_adapters: usize,
+    /// Adapter rank when `n_adapters > 0` (paper: 16).
+    pub adapter_rank: usize,
+    /// Adapter placement as `lora::Proj` short names (paper: `"VOD"`;
+    /// the same grammar `LoraConfig::placement_str` emits and the
+    /// `--placements` CLI flag takes).
+    pub adapter_placement: String,
     /// Greedy decoding (argmax) vs top-k sampling.
     pub top_k: usize,
     /// Sampling seed (ignored for greedy).
@@ -47,6 +57,9 @@ impl Default for ServeConfig {
             kv_block_tokens: 8,
             kv_quant_bits: 8,
             kv_edram_bytes: 13_500_000,
+            n_adapters: 0,
+            adapter_rank: 16,
+            adapter_placement: "VOD".into(),
             top_k: 1,
             seed: 0,
             hw_tbt_s: 0.005,
@@ -84,9 +97,31 @@ impl ServeConfig {
         // the KV store's quant-mode parser is the single source of
         // truth for which widths exist
         crate::kvcache::KvQuant::from_bits(self.kv_quant_bits)?;
+        // ... and lora's placement parser for which site strings do
+        if self.n_adapters > 0 {
+            anyhow::ensure!(self.adapter_rank >= 1, "adapter_rank must be >= 1");
+            LoraConfig::parse_placements(&self.adapter_placement)?;
+        }
         anyhow::ensure!(self.top_k >= 1, "top_k must be >= 1");
         anyhow::ensure!(self.hw_tbt_s > 0.0, "hw_tbt_s must be positive");
         Ok(())
+    }
+
+    /// The adapter configuration of this deployment (`None` when
+    /// adapter serving is disabled): the parsed placement at
+    /// [`Self::adapter_rank`], with the paper's 6-bit weights / 8-bit
+    /// activations.
+    pub fn lora_config(&self) -> anyhow::Result<Option<LoraConfig>> {
+        if self.n_adapters == 0 {
+            return Ok(None);
+        }
+        anyhow::ensure!(self.adapter_rank >= 1, "adapter_rank must be >= 1");
+        Ok(Some(LoraConfig {
+            placement: LoraConfig::parse_placements(&self.adapter_placement)?,
+            rank: self.adapter_rank,
+            weight_bits: 6,
+            act_bits: 8,
+        }))
     }
 
     /// Serialize to JSON (all fields).
@@ -99,6 +134,9 @@ impl ServeConfig {
             ("kv_block_tokens", Json::num(self.kv_block_tokens as f64)),
             ("kv_quant_bits", Json::num(self.kv_quant_bits as f64)),
             ("kv_edram_bytes", Json::num(self.kv_edram_bytes as f64)),
+            ("n_adapters", Json::num(self.n_adapters as f64)),
+            ("adapter_rank", Json::num(self.adapter_rank as f64)),
+            ("adapter_placement", Json::str(self.adapter_placement.clone())),
             ("top_k", Json::num(self.top_k as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("hw_tbt_s", Json::num(self.hw_tbt_s)),
@@ -120,6 +158,13 @@ impl ServeConfig {
                 .get("kv_edram_bytes")
                 .and_then(Json::as_f64)
                 .unwrap_or(d.kv_edram_bytes as f64) as u64,
+            n_adapters: get("n_adapters", d.n_adapters),
+            adapter_rank: get("adapter_rank", d.adapter_rank),
+            adapter_placement: j
+                .get("adapter_placement")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.adapter_placement)
+                .to_string(),
             top_k: get("top_k", d.top_k),
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
             hw_tbt_s: j.get("hw_tbt_s").and_then(Json::as_f64).unwrap_or(d.hw_tbt_s),
@@ -162,6 +207,40 @@ mod tests {
         let mut c = ServeConfig::default();
         c.ondie_tokens = 20;
         assert!(c.validate().is_err());
+        // adapter knobs are only checked when adapters are enabled
+        let mut c = ServeConfig::default();
+        c.adapter_placement = "VOX".into();
+        assert!(c.validate().is_ok());
+        c.n_adapters = 2;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.n_adapters = 2;
+        c.adapter_rank = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lora_config_mirrors_the_adapter_knobs() {
+        let c = ServeConfig::default();
+        assert!(c.lora_config().unwrap().is_none(), "adapters off by default");
+        let c = ServeConfig {
+            n_adapters: 3,
+            adapter_rank: 4,
+            adapter_placement: "od".into(),
+            ..ServeConfig::default()
+        };
+        let lora = c.lora_config().unwrap().unwrap();
+        assert_eq!(lora.rank, 4);
+        assert_eq!(lora.placement_str(), "OD", "canonical short names");
+        assert_eq!(lora.weight_bits, 6, "paper Fig 6(a): 6-bit suffices");
+        // the paper deployment's default placement parses to VOD
+        let paper = ServeConfig {
+            n_adapters: 1,
+            ..ServeConfig::default()
+        };
+        let lora = paper.lora_config().unwrap().unwrap();
+        assert_eq!(lora.placement, crate::lora::LoraConfig::paper().placement);
+        assert_eq!(lora.rank, 16);
     }
 
     #[test]
@@ -174,6 +253,9 @@ mod tests {
             kv_block_tokens: 4,
             kv_quant_bits: 32,
             kv_edram_bytes: 1 << 20,
+            n_adapters: 3,
+            adapter_rank: 8,
+            adapter_placement: "QKGU".into(),
             top_k: 4,
             seed: 99,
             hw_tbt_s: 0.002,

@@ -149,6 +149,7 @@ mod tests {
             arrival_s: arrival,
             prompt: vec![1, 2, 3],
             max_new_tokens: 4,
+            adapter_id: None,
         }
     }
 
@@ -218,5 +219,29 @@ mod tests {
     #[should_panic(expected = "empty slot")]
     fn releasing_free_slot_panics() {
         Batcher::new(1).release(0);
+    }
+
+    #[test]
+    fn admission_is_fifo_and_tenant_blind() {
+        // mixed adapter_ids ride the same FIFO queue: admission order
+        // and slot assignment never depend on the tenant, so no
+        // adapter can starve another (fairness is arrival order)
+        let mut b = Batcher::new(2);
+        let tenants = [Some(1u32), None, Some(0), Some(1), None];
+        for (i, &t) in tenants.iter().enumerate() {
+            b.submit(Request {
+                adapter_id: t,
+                ..req(i as u64, 0.0)
+            });
+        }
+        assert_eq!(b.admit(0.0), vec![0, 1]);
+        assert_eq!(b.slot(0).request.as_ref().unwrap().adapter_id, Some(1));
+        assert_eq!(b.slot(1).request.as_ref().unwrap().adapter_id, None);
+        let (r0, _, _) = b.release(0);
+        assert_eq!(r0.id, 0);
+        // the freed slot takes the FIFO head regardless of tenant
+        assert_eq!(b.admit(0.0), vec![0]);
+        let got = b.slot(0).request.as_ref().unwrap();
+        assert_eq!((got.id, got.adapter_id), (2, Some(0)));
     }
 }

@@ -1,9 +1,10 @@
 //! Serving metrics: TTFT (time to first token), TBT (token-between-
 //! token), throughput, compute-time summaries, and the measured
-//! KV-tier statistics (accesses, evictions, retention health, energy)
-//! read back from the backend's KV store after a trace.
+//! KV-tier and adapter-serving statistics read back from the
+//! backend's KV store / adapter registry after a trace.
 
 use crate::kvcache::KvStoreStats;
+use crate::lora::LoraServeStats;
 use crate::util::stats::{Percentiles, Summary};
 use crate::util::table::fmt_pct;
 
@@ -31,6 +32,12 @@ pub struct ServeMetrics {
     /// health and memory energy. `None` when the backend's KV is
     /// opaque to the host (the PJRT runtime).
     pub kv: Option<KvStoreStats>,
+    /// Measured adapter-serving statistics for the trace: tenant
+    /// binds, cold-load streaming against the tiered memory model, and
+    /// the adapter/base MACs actually executed (the measured per-token
+    /// op overhead). `None` when the backend serves no adapter
+    /// registry.
+    pub lora: Option<LoraServeStats>,
 }
 
 impl ServeMetrics {
@@ -109,6 +116,21 @@ impl ServeMetrics {
                 kv.kv_energy_j(),
             ));
         }
+        if let Some(lora) = &self.lora {
+            if lora.binds > 0 {
+                out.push_str(&format!(
+                    "\nLoRA  binds={} cold-loads={} ({} B streamed, {:.3e} J); \
+                     adapter/base MACs {}/{} = {} measured op overhead",
+                    lora.binds,
+                    lora.cold_loads,
+                    lora.bytes_streamed,
+                    lora.stream_energy_j,
+                    lora.adapter_macs,
+                    lora.base_macs,
+                    fmt_pct(lora.measured_op_overhead()),
+                ));
+            }
+        }
         out
     }
 }
@@ -164,5 +186,28 @@ mod tests {
         let r = m.report();
         assert!(r.contains("external reduction"), "{r}");
         assert!(r.contains("evictions=0"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_lora_section_only_when_adapters_served() {
+        let mut m = ServeMetrics::new();
+        m.record_ttft(0.1);
+        assert!(!m.report().contains("LoRA"), "no registry, no section");
+        // a registry that saw zero binds stays silent too (invariant 7
+        // runs report identically to adapter-free runs)
+        m.lora = Some(LoraServeStats::default());
+        assert!(!m.report().contains("LoRA"));
+        m.lora = Some(LoraServeStats {
+            binds: 3,
+            cold_loads: 2,
+            bytes_streamed: 1024,
+            stream_energy_j: 1e-9,
+            adapter_macs: 100,
+            base_macs: 10_000,
+            adapter_rows: 12,
+        });
+        let r = m.report();
+        assert!(r.contains("binds=3"), "{r}");
+        assert!(r.contains("1.0%"), "measured overhead rendered: {r}");
     }
 }

@@ -10,6 +10,7 @@ use anyhow::{Context, Result};
 
 use crate::config::ServeConfig;
 use crate::kvcache::KvStoreStats;
+use crate::lora::LoraServeStats;
 use crate::runtime::{InferenceBackend, Logits, SequenceState};
 use crate::trace::Request;
 use crate::util::rng::Rng;
@@ -25,6 +26,8 @@ pub struct CompletedRequest {
     pub id: u64,
     /// Prompt length in tokens.
     pub prompt_len: usize,
+    /// Tenant adapter the request decoded under (`None` = base model).
+    pub adapter_id: Option<u32>,
     /// Generated token ids.
     pub tokens: Vec<i32>,
     /// Admission-to-first-token (s).
@@ -80,6 +83,12 @@ impl<B: InferenceBackend> Server<B> {
         self.backend.kv_stats()
     }
 
+    /// Measured adapter-serving statistics so far (None for backends
+    /// without an adapter registry).
+    pub fn lora_stats(&self) -> Option<LoraServeStats> {
+        self.backend.lora_stats()
+    }
+
     fn sample(&mut self, logits: &Logits) -> i32 {
         if self.serve.top_k <= 1 {
             logits.argmax() as i32
@@ -127,10 +136,11 @@ impl<B: InferenceBackend> Server<B> {
 
         let mut done = Vec::new();
         let mut metrics = ServeMetrics::new();
-        // baseline so metrics.kv reports THIS trace's traffic even if
-        // the same server runs multiple traces (store counters are
-        // lifetime-accumulated)
+        // baselines so metrics.kv / metrics.lora report THIS trace's
+        // traffic even if the same server runs multiple traces
+        // (store and registry counters are lifetime-accumulated)
         let kv_baseline = self.backend.kv_stats();
+        let lora_baseline = self.backend.lora_stats();
         let t0 = Instant::now();
         // The serving clock is wall time plus any idle skip: an offline
         // backend (realtime() == false) jumps straight over gaps before
@@ -198,7 +208,13 @@ impl<B: InferenceBackend> Server<B> {
                     };
                     hidden[slot] = Some(h);
                     if states[slot].is_none() {
-                        states[slot] = Some(self.backend.new_state()?);
+                        let mut state = self.backend.new_state()?;
+                        // bind the request's tenant adapter before any
+                        // partition runs: the adapter shapes every
+                        // projection of the sequence, prefill included
+                        let adapter = batcher.slot(slot).request.as_ref().unwrap().adapter_id;
+                        self.backend.bind_adapter(&mut state, adapter)?;
+                        states[slot] = Some(state);
                     }
                 }
                 let h_in = hidden[slot].take().expect("pipeline order broken");
@@ -270,6 +286,7 @@ impl<B: InferenceBackend> Server<B> {
                     done.push(CompletedRequest {
                         id: req.id,
                         prompt_len: req.prompt.len(),
+                        adapter_id: req.adapter_id,
                         tokens,
                         ttft_s: slot_ttft[slot],
                         latency_s: t_now - admitted_at,
@@ -280,6 +297,10 @@ impl<B: InferenceBackend> Server<B> {
 
         metrics.wall_s = now(skipped_s);
         metrics.kv = match (self.backend.kv_stats(), &kv_baseline) {
+            (Some(end), Some(start)) => Some(end.since(start)),
+            (end, _) => end,
+        };
+        metrics.lora = match (self.backend.lora_stats(), &lora_baseline) {
             (Some(end), Some(start)) => Some(end.since(start)),
             (end, _) => end,
         };
@@ -344,6 +365,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt: vec![1 + i as i32, 2, 3],
                 max_new_tokens: 4,
+                adapter_id: None,
             })
             .collect();
         let (done, mut metrics) = server.run_trace(reqs).unwrap();
@@ -387,6 +409,7 @@ mod tests {
                     arrival_s: 0.0,
                     prompt: vec![off + i as i32, 2, 3],
                     max_new_tokens: 4,
+                    adapter_id: None,
                 })
                 .collect()
         };
@@ -396,5 +419,65 @@ mod tests {
         assert_eq!(k1.accesses.total_accesses(), k2.accesses.total_accesses());
         assert!(k2.kv_energy_j() > 0.0);
         assert!((k1.kv_energy_j() - k2.kv_energy_j()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adapter_request_on_plain_backend_fails_loudly() {
+        // a trace carrying adapter ids must not silently decode on the
+        // base model when the backend has no registry
+        let backend = HostBackend::new(micro(), 2).unwrap();
+        let serve = ServeConfig {
+            max_batches: 1,
+            prefill_len: 8,
+            max_seq: 32,
+            ondie_tokens: 8,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let reqs = vec![Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            adapter_id: Some(0),
+        }];
+        assert!(server.run_trace(reqs).is_err());
+    }
+
+    #[test]
+    fn lora_metrics_are_per_trace_not_registry_lifetime() {
+        use crate::lora::{AdapterRegistry, LoraConfig};
+        let reg = AdapterRegistry::fabricate(&micro(), &LoraConfig::paper(), 2, 5).unwrap();
+        let backend = HostBackend::with_adapters(micro(), 2, reg).unwrap();
+        let serve = ServeConfig {
+            max_batches: 2,
+            prefill_len: 8,
+            max_seq: 32,
+            ondie_tokens: 8,
+            n_adapters: 2,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let reqs = || -> Vec<Request> {
+            (0..2)
+                .map(|i| Request {
+                    id: i,
+                    arrival_s: 0.0,
+                    prompt: vec![1 + i as i32, 2, 3],
+                    max_new_tokens: 4,
+                    adapter_id: Some(i as u32),
+                })
+                .collect()
+        };
+        let (done1, m1) = server.run_trace(reqs()).unwrap();
+        let (_, m2) = server.run_trace(reqs()).unwrap();
+        assert!(done1.iter().any(|r| r.adapter_id == Some(1)));
+        let (l1, l2) = (m1.lora.unwrap(), m2.lora.unwrap());
+        assert_eq!(l1.binds, 2);
+        assert_eq!(l2.binds, 2);
+        assert_eq!(l1.cold_loads, 2, "first trace streams both tenants");
+        assert_eq!(l2.cold_loads, 0, "second trace binds resident tenants for free");
+        assert_eq!(l1.adapter_macs, l2.adapter_macs, "identical work per trace");
+        assert!(l1.measured_op_overhead() > 0.0);
     }
 }

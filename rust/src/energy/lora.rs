@@ -1,0 +1,88 @@
+//! Adapter task-switch energy: the joule face of the reload-free
+//! claim. Switching a sequence to another tenant's LoRA adapter costs
+//! at most one cold stream of that adapter's quantized bytes over the
+//! external interface (and nothing once resident); a weight-loaded
+//! accelerator would instead re-read its entire parameter set. This
+//! type extracts the measured switch energy from a [`LoraServeStats`]
+//! snapshot and prices the hypothetical reload on the same interface,
+//! so `report::lora_serving` can show both next to each other.
+
+use crate::dram::DramParams;
+use crate::lora::LoraServeStats;
+
+/// Joule breakdown of a trace's adapter-switch traffic.
+#[derive(Debug, Clone, Default)]
+pub struct AdapterEnergy {
+    /// Energy spent streaming adapter weights on cold loads (J).
+    pub stream_j: f64,
+    /// Bytes streamed by those cold loads.
+    pub bytes_streamed: u64,
+    /// Cold loads that caused the streaming.
+    pub cold_loads: u64,
+}
+
+impl AdapterEnergy {
+    /// Extract the switch energy from a registry's measured statistics.
+    pub fn from_stats(stats: &LoraServeStats) -> Self {
+        AdapterEnergy {
+            stream_j: stats.stream_energy_j,
+            bytes_streamed: stats.bytes_streamed,
+            cold_loads: stats.cold_loads,
+        }
+    }
+
+    /// Mean energy of one cold task switch, J.
+    pub fn per_cold_load_j(&self) -> f64 {
+        if self.cold_loads == 0 {
+            0.0
+        } else {
+            self.stream_j / self.cold_loads as f64
+        }
+    }
+
+    /// What a full weight reload of `reload_bytes` would cost on the
+    /// same external interface — the price BitROM's fixed mask set
+    /// never pays.
+    pub fn reload_j(reload_bytes: u64, dram: &DramParams) -> f64 {
+        reload_bytes as f64 * dram.read_pj_per_byte * 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::lora::{AdapterRegistry, LoraConfig};
+
+    #[test]
+    fn extracts_the_measured_switch_traffic() {
+        let stats = LoraServeStats {
+            binds: 5,
+            cold_loads: 2,
+            bytes_streamed: 2048,
+            stream_energy_j: 4e-8,
+            ..LoraServeStats::default()
+        };
+        let e = AdapterEnergy::from_stats(&stats);
+        assert_eq!(e.bytes_streamed, 2048);
+        assert!((e.per_cold_load_j() - 2e-8).abs() < 1e-20);
+        assert_eq!(AdapterEnergy::from_stats(&LoraServeStats::default()).per_cold_load_j(), 0.0);
+    }
+
+    #[test]
+    fn cold_switch_is_far_cheaper_than_a_full_reload() {
+        // the paper's deployment target: streaming the 6-bit VOD r16
+        // adapter vs re-reading the whole packed ternary mask set over
+        // the same LPDDR-class interface
+        let falcon = ModelConfig::falcon3_1b();
+        let dram = DramParams::default();
+        let switch_j =
+            LoraConfig::paper().storage_bytes(&falcon) as f64 * dram.read_pj_per_byte * 1e-12;
+        let reload_j =
+            AdapterEnergy::reload_j(AdapterRegistry::full_reload_bytes_for(&falcon), &dram);
+        assert!(
+            switch_j * 10.0 < reload_j,
+            "switch {switch_j} J vs reload {reload_j} J"
+        );
+    }
+}

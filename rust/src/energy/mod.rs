@@ -7,12 +7,16 @@
 //! `config::hardware` module docs for exactly which constants are
 //! fitted vs derived. [`KvEnergy`] adds the memory side: the measured
 //! KV-cache energy of a served trace, split by tier (the energy face
-//! of the Fig 5(b) claim).
+//! of the Fig 5(b) claim). [`AdapterEnergy`] prices tenant task
+//! switches (cold adapter streams vs the full weight reload they
+//! replace — the energy face of the reload-free claim).
 
 mod area;
 mod kv;
+mod lora;
 mod model;
 
 pub use area::{area_estimate, AreaEstimate, ModelPoint};
 pub use kv::KvEnergy;
+pub use lora::AdapterEnergy;
 pub use model::{EnergyBreakdown, EnergyModel, PerfEstimate};

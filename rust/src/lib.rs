@@ -27,8 +27,14 @@
 //!   serving's KV actually lives in, the analytic placement model, and
 //!   the DR-eDRAM refresh-on-read argument checked live on every
 //!   decode read.
+//! * [`lora`] — the adapter layer (DESIGN.md §11): overhead
+//!   accounting, the multi-tenant [`lora::AdapterRegistry`] served
+//!   end-to-end by the host backend (per-sequence low-rank deltas on
+//!   the bitplane base projections, reload-free task switching), and
+//!   the merged-projection host compute.
 //! * [`energy`] — analytical energy/area model (Table III, Fig 1a)
-//!   plus the measured KV memory energy ([`energy::KvEnergy`]).
+//!   plus the measured KV memory energy ([`energy::KvEnergy`]) and
+//!   adapter task-switch energy ([`energy::AdapterEnergy`]).
 //! * [`util`] — offline substrates (json, args, rng, stats, bench,
 //!   property-check harness, tables).
 

@@ -1,12 +1,32 @@
-//! LoRA domain-adapter accounting (paper §III-C, Table I/II overhead
-//! claims) plus the digital adapter compute model.
+//! LoRA domain adapters (paper §III-C): overhead accounting, the
+//! digital adapter compute model, and the multi-tenant serving path.
 //!
-//! The adapters themselves are *trained* in the python build path
-//! (`compile/train_lora.py`); this module owns the hardware-side
-//! arithmetic: parameter/op overhead for any placement, and the
-//! 4-input multiplier-adder unit model used in the energy accounting.
+//! Three layers:
+//!
+//! * [`LoraConfig`] / [`Proj`] — parameter/op/storage overhead for any
+//!   rank and placement (Table I/II), plus the placement-string
+//!   grammar the CLI shares ([`LoraConfig::placement_str`] ↔
+//!   [`LoraConfig::parse_placements`]).
+//! * [`AdapterRegistry`] — seeded, deterministic per-tenant adapter
+//!   weights served end-to-end by `runtime::HostBackend` (bound per
+//!   sequence via `runtime::InferenceBackend::bind_adapter`), with
+//!   residency/task-switch accounting against the tiered memory model
+//!   and measured MAC counters ([`LoraServeStats`]).
+//! * [`MergedProjection`] / [`apply_adapter_delta`] — the host compute
+//!   of one adapted projection: bitplane base GEMV/GEMM plus the
+//!   rank-r f32 correction. The registry path and the merged path
+//!   apply the *same* delta helper, so the two can never diverge
+//!   (property-tested in this module's tests).
+//!
+//! Production adapters are *trained* in the python build path
+//! (`compile/train_lora.py`); fabricated registry adapters exercise
+//! the serving machinery deterministically.
 
-use crate::bitnet::TernaryMatrix;
+mod registry;
+
+pub use registry::{AdapterPair, AdapterRegistry, LoraServeStats};
+
+use crate::bitnet::{QuantizedActs, TernaryMatrix};
 use crate::config::ModelConfig;
 
 /// The seven adapter sites (paper Table II columns).
@@ -53,6 +73,35 @@ impl Proj {
         }
     }
 
+    /// Inverse of [`Self::short`] (case-insensitive) — the grammar of
+    /// placement strings like `"VOD"` in configs and CLI flags.
+    pub fn from_short(c: char) -> Option<Proj> {
+        match c.to_ascii_uppercase() {
+            'Q' => Some(Proj::Q),
+            'K' => Some(Proj::K),
+            'V' => Some(Proj::V),
+            'O' => Some(Proj::O),
+            'G' => Some(Proj::Gate),
+            'U' => Some(Proj::Up),
+            'D' => Some(Proj::Down),
+            _ => None,
+        }
+    }
+
+    /// Dense index of this site in [`Self::ALL`] order (the
+    /// [`AdapterRegistry`]'s per-layer site-table slot).
+    pub fn site_index(self) -> usize {
+        match self {
+            Proj::Q => 0,
+            Proj::K => 1,
+            Proj::V => 2,
+            Proj::O => 3,
+            Proj::Gate => 4,
+            Proj::Up => 5,
+            Proj::Down => 6,
+        }
+    }
+
     /// (fan_in, fan_out) of this projection in `cfg`.
     pub fn dims(self, cfg: &ModelConfig) -> (usize, usize) {
         let d = cfg.d_model;
@@ -96,9 +145,26 @@ impl LoraConfig {
         }
     }
 
-    /// Compact placement label like `"VOD"`.
+    /// Compact placement label like `"VOD"` — exactly the string
+    /// [`Self::parse_placements`] (and the `--placements` CLI flag)
+    /// accepts, so labels round-trip.
     pub fn placement_str(&self) -> String {
         self.placement.iter().map(|p| p.short()).collect()
+    }
+
+    /// Parse a placement string (`Proj` short names, e.g. `"VOD"`,
+    /// case-insensitive); rejects unknown and duplicate sites.
+    pub fn parse_placements(s: &str) -> anyhow::Result<Vec<Proj>> {
+        let mut out = Vec::new();
+        for c in s.trim().chars() {
+            let p = Proj::from_short(c).ok_or_else(|| {
+                anyhow::anyhow!("unknown projection site {c:?} (expected letters from QKVOGUD)")
+            })?;
+            anyhow::ensure!(!out.contains(&p), "duplicate projection site {c:?}");
+            out.push(p);
+        }
+        anyhow::ensure!(!out.is_empty(), "empty placement string");
+        Ok(out)
     }
 
     /// Extra adapter parameters across the whole model.
@@ -154,6 +220,51 @@ pub fn adapter_cycles(fan_in: usize, fan_out: usize, rank: usize) -> u64 {
     (macs + 3) / 4
 }
 
+/// Add the low-rank delta `(x·A)·B·(α/r)` into `y`, where `x` is the
+/// dequantized view of `acts` (`values · scale`). This is THE adapter
+/// application: [`MergedProjection`] and the `HostBackend` registry
+/// path both call it, so merged and dynamically-bound adapters are
+/// bit-identical by construction. Zero activation digits and zero
+/// intermediate terms are skipped (the 4-input unit idles on zeros).
+pub fn apply_adapter_delta(
+    acts: &QuantizedActs,
+    a: &[f32],
+    b: &[f32],
+    rank: usize,
+    alpha: f32,
+    y: &mut [f32],
+) {
+    if rank == 0 {
+        return;
+    }
+    let fan_out = y.len();
+    debug_assert_eq!(a.len(), acts.values.len() * rank, "A shape mismatch");
+    debug_assert_eq!(b.len(), rank * fan_out, "B shape mismatch");
+    let gain = alpha / rank as f32;
+    // t = x · A  (dequantized activations)
+    let mut t = vec![0f32; rank];
+    for (r, &xv) in acts.values.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let xf = xv as f32 * acts.scale;
+        let arow = &a[r * rank..(r + 1) * rank];
+        for (tj, &aj) in t.iter_mut().zip(arow) {
+            *tj += xf * aj;
+        }
+    }
+    // y += (t · B) · (α/r)
+    for (j, &tj) in t.iter().enumerate() {
+        if tj == 0.0 {
+            continue;
+        }
+        let brow = &b[j * fan_out..(j + 1) * fan_out];
+        for (yc, &bc) in y.iter_mut().zip(brow) {
+            *yc += tj * bc * gain;
+        }
+    }
+}
+
 /// A ROM-resident ternary base projection merged with a digital LoRA
 /// adapter: `y = scale_x · scale_w · (x · W) + (x · A) · B · (α/r)`.
 ///
@@ -190,20 +301,20 @@ impl MergedProjection {
         }
     }
 
-    /// Forward one activation vector.
-    pub fn forward(&self, acts: &crate::bitnet::QuantizedActs) -> Vec<f32> {
+    /// Forward one activation vector (delegates to the batched path,
+    /// so the cached bitplane view is reused — no scalar fallback).
+    pub fn forward(&self, acts: &QuantizedActs) -> Vec<f32> {
         self.forward_batch(std::slice::from_ref(acts)).pop().unwrap()
     }
 
     /// Forward a batch of activation vectors. The base term goes
     /// through the batched bitplane GEMM so weight-mask decoding
-    /// amortizes across the batch; the adapter term is `O(rank·(fan_in
-    /// + fan_out))` per row and stays dense f32.
-    pub fn forward_batch(&self, acts: &[crate::bitnet::QuantizedActs]) -> Vec<Vec<f32>> {
-        let (fan_out, rank) = (self.base.cols, self.rank);
+    /// amortizes across the batch; the adapter term is the shared
+    /// [`apply_adapter_delta`] — `O(rank·(fan_in + fan_out))` per row,
+    /// dense f32.
+    pub fn forward_batch(&self, acts: &[QuantizedActs]) -> Vec<Vec<f32>> {
         let batch: Vec<&[i32]> = acts.iter().map(|q| q.values.as_slice()).collect();
         let base_int = self.base.gemm(&batch);
-        let gain = self.alpha / rank.max(1) as f32;
         acts.iter()
             .zip(base_int)
             .map(|(q, yi)| {
@@ -211,30 +322,7 @@ impl MergedProjection {
                     .into_iter()
                     .map(|v| v as f32 * q.scale * self.base.scale)
                     .collect();
-                if rank > 0 {
-                    // t = x · A  (dequantized activations)
-                    let mut t = vec![0f32; rank];
-                    for (r, &xv) in q.values.iter().enumerate() {
-                        if xv == 0 {
-                            continue;
-                        }
-                        let xf = xv as f32 * q.scale;
-                        let arow = &self.a[r * rank..(r + 1) * rank];
-                        for (tj, &aj) in t.iter_mut().zip(arow) {
-                            *tj += xf * aj;
-                        }
-                    }
-                    // y += (t · B) · (α/r)
-                    for (j, &tj) in t.iter().enumerate() {
-                        if tj == 0.0 {
-                            continue;
-                        }
-                        let brow = &self.b[j * fan_out..(j + 1) * fan_out];
-                        for (yc, &bc) in y.iter_mut().zip(brow) {
-                            *yc += tj * bc * gain;
-                        }
-                    }
-                }
+                apply_adapter_delta(q, &self.a, &self.b, self.rank, self.alpha, &mut y);
                 y
             })
             .collect()
@@ -313,6 +401,55 @@ mod tests {
     #[test]
     fn placement_string() {
         assert_eq!(LoraConfig::paper().placement_str(), "VOD");
+    }
+
+    #[test]
+    fn placement_strings_round_trip_with_the_parser() {
+        // the CLI's --placements grammar IS placement_str's output
+        for s in ["VOD", "QKGU", "D", "QKVOGUD"] {
+            let parsed = LoraConfig::parse_placements(s).unwrap();
+            let cfg = LoraConfig {
+                placement: parsed,
+                ..LoraConfig::paper()
+            };
+            assert_eq!(cfg.placement_str(), s);
+        }
+        // case-insensitive in, canonical out
+        let lower = LoraConfig::parse_placements("vod").unwrap();
+        assert_eq!(lower, LoraConfig::paper().placement);
+        assert!(LoraConfig::parse_placements("VX").is_err());
+        assert!(LoraConfig::parse_placements("VV").is_err());
+        assert!(LoraConfig::parse_placements("").is_err());
+    }
+
+    #[test]
+    fn site_index_is_dense_and_matches_all_order() {
+        for (i, p) in Proj::ALL.iter().enumerate() {
+            assert_eq!(p.site_index(), i);
+            assert_eq!(Proj::from_short(p.short().chars().next().unwrap()), Some(*p));
+        }
+        assert_eq!(Proj::from_short('x'), None);
+    }
+
+    #[test]
+    fn dynamic_delta_equals_merged_projection_bitwise() {
+        // the registry path (base GEMV + apply_adapter_delta) and the
+        // merged path must agree bit-for-bit: they share the helper,
+        // and this pins the contract
+        let m = merged_fixture(40, 64, 24, 8);
+        let mut rng = crate::util::rng::Rng::new(41);
+        for _ in 0..5 {
+            let x: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            let q = crate::bitnet::absmax_quantize(&x, 8);
+            let mut dynamic: Vec<f32> = m
+                .base
+                .gemv(&q.values)
+                .into_iter()
+                .map(|v| v as f32 * q.scale * m.base.scale)
+                .collect();
+            apply_adapter_delta(&q, &m.a, &m.b, m.rank, m.alpha, &mut dynamic);
+            assert_eq!(dynamic, m.forward(&q), "dynamic != merged");
+        }
     }
 
     fn merged_fixture(seed: u64, fan_in: usize, fan_out: usize, rank: usize) -> MergedProjection {

@@ -1,0 +1,407 @@
+//! Multi-tenant adapter registry — the serving-side home of the
+//! paper's §III-C LoRA pillar.
+//!
+//! The base ternary weights are fixed in ROM; what makes them usable
+//! across downstream tasks is a small per-tenant low-rank correction
+//! on a few projection sites. [`AdapterRegistry`] holds those
+//! corrections for every tenant of a deployment: seeded, deterministic
+//! A/B factor pairs at a [`LoraConfig`]'s rank/placement, fabricated
+//! once and never mutated (adapters are as reload-free as the mask
+//! set once resident).
+//!
+//! Residency is accounted against the tiered memory model: adapters
+//! are stored quantized (`LoraConfig::weight_bits`) behind the
+//! external-DRAM interface and stream on-die the *first* time a
+//! sequence binds them (a cold load, counted in bytes and joules via
+//! [`DramParams`]); every later bind is a pointer swap that moves zero
+//! bytes — task switching without weight reload, the paper's headline
+//! serving claim. [`LoraServeStats`] also counts the adapter and base
+//! MACs actually executed at adapter sites, so a served trace
+//! *measures* the per-token op overhead that
+//! [`LoraConfig::op_overhead_vs_host_projections`] models
+//! (`report::lora_serving` places the two side by side).
+
+use std::cell::RefCell;
+
+use crate::config::ModelConfig;
+use crate::dram::DramParams;
+use crate::util::rng::Rng;
+
+use super::{LoraConfig, Proj};
+
+/// One adapter site's factor pair: `a` is the down-projection
+/// (row-major `[fan_in × rank]`), `b` the up-projection
+/// (`[rank × fan_out]`).
+#[derive(Debug, Clone)]
+pub struct AdapterPair {
+    /// Down-projection, row-major `[fan_in × rank]`.
+    pub a: Vec<f32>,
+    /// Up-projection, row-major `[rank × fan_out]`.
+    pub b: Vec<f32>,
+}
+
+/// One tenant's full adapter set: per layer, per projection site.
+struct Adapter {
+    /// `sites[layer][Proj::site_index()]` — `None` off the placement.
+    sites: Vec<[Option<AdapterPair>; 7]>,
+}
+
+/// Measured adapter-serving statistics: task-switch traffic against
+/// the tiered memory model plus the MACs actually executed at adapter
+/// sites. Counters are lifetime-accumulated (like the KV store's);
+/// [`LoraServeStats::since`] extracts a per-trace delta.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoraServeStats {
+    /// Sequences bound to an adapter (one per adapter-carrying
+    /// request; base-model sequences do not count).
+    pub binds: u64,
+    /// Binds that found the adapter non-resident and streamed its
+    /// quantized weights over the external interface.
+    pub cold_loads: u64,
+    /// Bytes streamed by cold loads.
+    pub bytes_streamed: u64,
+    /// Energy of the cold-load streaming (J, external-DRAM reads).
+    pub stream_energy_j: f64,
+    /// Low-rank correction MACs executed (`fan_in·r + r·fan_out` per
+    /// activation row per site).
+    pub adapter_macs: u64,
+    /// Base-projection MACs executed at the same sites for the same
+    /// rows (`fan_in·fan_out` each) — the denominator of the paper's
+    /// "0.7% of their corresponding projection layers" claim.
+    pub base_macs: u64,
+    /// Activation rows that passed through at least one adapter site.
+    pub adapter_rows: u64,
+}
+
+impl LoraServeStats {
+    /// Measured per-token adapter op overhead: adapter MACs as a
+    /// fraction of the base MACs of the projections they attach to —
+    /// the executed twin of
+    /// [`LoraConfig::op_overhead_vs_host_projections`].
+    pub fn measured_op_overhead(&self) -> f64 {
+        if self.base_macs == 0 {
+            0.0
+        } else {
+            self.adapter_macs as f64 / self.base_macs as f64
+        }
+    }
+
+    /// Counter delta since the `start` snapshot (per-trace reporting).
+    pub fn since(&self, start: &Self) -> Self {
+        LoraServeStats {
+            binds: self.binds.saturating_sub(start.binds),
+            cold_loads: self.cold_loads.saturating_sub(start.cold_loads),
+            bytes_streamed: self.bytes_streamed.saturating_sub(start.bytes_streamed),
+            stream_energy_j: (self.stream_energy_j - start.stream_energy_j).max(0.0),
+            adapter_macs: self.adapter_macs.saturating_sub(start.adapter_macs),
+            base_macs: self.base_macs.saturating_sub(start.base_macs),
+            adapter_rows: self.adapter_rows.saturating_sub(start.adapter_rows),
+        }
+    }
+}
+
+/// Seeded, deterministic multi-tenant adapter store (module docs).
+/// Weights are immutable after fabrication; residency and MAC
+/// accounting live in interior-mutable counters because the serving
+/// API hands out `&self` (single-threaded, like the event counters).
+pub struct AdapterRegistry {
+    model: ModelConfig,
+    lora: LoraConfig,
+    alpha: f32,
+    adapters: Vec<Adapter>,
+    dram: DramParams,
+    resident: RefCell<Vec<bool>>,
+    stats: RefCell<LoraServeStats>,
+}
+
+impl AdapterRegistry {
+    /// Fabricate `n_adapters` deterministic tenant adapters for
+    /// `model` at `lora`'s rank/placement. Factor entries are
+    /// gaussians scaled `0.5/√fan_in` (A) and `0.5/√rank` (B), so the
+    /// applied delta perturbs projections strongly enough to
+    /// specialize generation without destabilizing it. α follows the
+    /// common 2·rank convention.
+    pub fn fabricate(
+        model: &ModelConfig,
+        lora: &LoraConfig,
+        n_adapters: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(n_adapters >= 1, "need at least one adapter");
+        anyhow::ensure!(lora.rank >= 1, "adapter rank must be >= 1");
+        anyhow::ensure!(!lora.placement.is_empty(), "empty adapter placement");
+        let mut rng = Rng::new(seed);
+        let adapters = (0..n_adapters)
+            .map(|_| {
+                let sites = (0..model.n_layers)
+                    .map(|_| {
+                        let mut layer: [Option<AdapterPair>; 7] = std::array::from_fn(|_| None);
+                        for &p in &lora.placement {
+                            let (fi, fo) = p.dims(model);
+                            let sa = 0.5 / (fi as f64).sqrt();
+                            let sb = 0.5 / (lora.rank as f64).sqrt();
+                            let a = (0..fi * lora.rank)
+                                .map(|_| (rng.normal() * sa) as f32)
+                                .collect();
+                            let b = (0..lora.rank * fo)
+                                .map(|_| (rng.normal() * sb) as f32)
+                                .collect();
+                            layer[p.site_index()] = Some(AdapterPair { a, b });
+                        }
+                        layer
+                    })
+                    .collect();
+                Adapter { sites }
+            })
+            .collect();
+        Ok(AdapterRegistry {
+            model: model.clone(),
+            lora: lora.clone(),
+            alpha: 2.0 * lora.rank as f32,
+            adapters,
+            dram: DramParams::default(),
+            resident: RefCell::new(vec![false; n_adapters]),
+            stats: RefCell::new(LoraServeStats::default()),
+        })
+    }
+
+    /// Tenant adapters loaded.
+    pub fn n_adapters(&self) -> usize {
+        self.adapters.len()
+    }
+
+    /// The rank/placement/quantization configuration.
+    pub fn lora(&self) -> &LoraConfig {
+        &self.lora
+    }
+
+    /// LoRA scaling factor α (the delta is scaled α/rank).
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    /// The architecture the adapters were fabricated for.
+    pub fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    /// Check the registry fits `model`'s projection shapes (a backend
+    /// constructor precondition).
+    pub fn compatible_with(&self, model: &ModelConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.model.n_layers == model.n_layers
+                && self.model.d_model == model.d_model
+                && self.model.kv_dim() == model.kv_dim()
+                && self.model.d_ff == model.d_ff,
+            "adapter registry fabricated for {:?} does not fit model {:?}",
+            self.model.name,
+            model.name
+        );
+        Ok(())
+    }
+
+    /// The factor pair at (`adapter`, `layer`, `proj`), if that site
+    /// carries one.
+    pub fn site(&self, adapter: u32, layer: usize, proj: Proj) -> Option<&AdapterPair> {
+        self.adapters.get(adapter as usize)?.sites.get(layer)?[proj.site_index()].as_ref()
+    }
+
+    /// Bind `adapter` to a sequence: validates the id, counts the
+    /// task switch, and streams the adapter's quantized bytes on-die
+    /// if this is its first use (cold load). Resident adapters bind
+    /// for free — no weights move.
+    pub fn bind(&self, adapter: u32) -> anyhow::Result<()> {
+        let idx = adapter as usize;
+        anyhow::ensure!(
+            idx < self.adapters.len(),
+            "adapter {adapter} out of range ({} loaded)",
+            self.adapters.len()
+        );
+        let mut stats = self.stats.borrow_mut();
+        stats.binds += 1;
+        let mut resident = self.resident.borrow_mut();
+        if !resident[idx] {
+            resident[idx] = true;
+            let bytes = self.adapter_bytes();
+            stats.cold_loads += 1;
+            stats.bytes_streamed += bytes;
+            stats.stream_energy_j += bytes as f64 * self.dram.read_pj_per_byte * 1e-12;
+        }
+        Ok(())
+    }
+
+    /// Record the MACs of applying one adapter site to `rows`
+    /// activation rows (called by the backend at the point of
+    /// execution, so the measured overhead reflects the sites actually
+    /// wired in).
+    pub fn record_site_macs(&self, rows: u64, fan_in: usize, fan_out: usize) {
+        let r = self.lora.rank as u64;
+        let mut stats = self.stats.borrow_mut();
+        stats.adapter_macs += rows * (fan_in as u64 * r + r * fan_out as u64);
+        stats.base_macs += rows * fan_in as u64 * fan_out as u64;
+        stats.adapter_rows += rows;
+    }
+
+    /// Snapshot of the accumulated statistics.
+    pub fn stats(&self) -> LoraServeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Quantized storage of ONE tenant adapter (what a cold task
+    /// switch streams).
+    pub fn adapter_bytes(&self) -> u64 {
+        self.lora.storage_bytes(&self.model)
+    }
+
+    /// On-die bytes currently held by resident adapters.
+    pub fn resident_bytes(&self) -> u64 {
+        let n = self.resident.borrow().iter().filter(|&&r| r).count();
+        n as u64 * self.adapter_bytes()
+    }
+
+    /// What a full weight reload would move instead: every ROM-held
+    /// ternary parameter at the 1.6 b/trit packed encoding.
+    pub fn full_reload_bytes(&self) -> u64 {
+        Self::full_reload_bytes_for(&self.model)
+    }
+
+    /// [`Self::full_reload_bytes`] for any architecture (no registry
+    /// needed).
+    pub fn full_reload_bytes_for(model: &ModelConfig) -> u64 {
+        (model.rom_param_count() + 4) / 5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::sim_tiny()
+    }
+
+    fn paper() -> LoraConfig {
+        LoraConfig::paper()
+    }
+
+    #[test]
+    fn fabrication_is_deterministic_per_seed() {
+        let m = tiny();
+        let a = AdapterRegistry::fabricate(&m, &paper(), 2, 7).unwrap();
+        let b = AdapterRegistry::fabricate(&m, &paper(), 2, 7).unwrap();
+        let c = AdapterRegistry::fabricate(&m, &paper(), 2, 8).unwrap();
+        let pa = a.site(1, 3, Proj::O).unwrap();
+        let pb = b.site(1, 3, Proj::O).unwrap();
+        let pc = c.site(1, 3, Proj::O).unwrap();
+        assert_eq!(pa.a, pb.a);
+        assert_eq!(pa.b, pb.b);
+        assert_ne!(pa.a, pc.a);
+        // distinct tenants get distinct weights
+        let p0 = a.site(0, 3, Proj::O).unwrap();
+        assert_ne!(pa.a, p0.a);
+    }
+
+    #[test]
+    fn sites_follow_the_placement() {
+        let m = tiny();
+        let reg = AdapterRegistry::fabricate(&m, &paper(), 1, 1).unwrap();
+        for li in 0..m.n_layers {
+            for p in Proj::ALL {
+                let on = paper().placement.contains(&p);
+                assert_eq!(reg.site(0, li, p).is_some(), on, "{p:?} layer {li}");
+            }
+        }
+        // shapes match the model's projection dims
+        let (fi, fo) = Proj::Down.dims(&m);
+        let pair = reg.site(0, 0, Proj::Down).unwrap();
+        assert_eq!(pair.a.len(), fi * 16);
+        assert_eq!(pair.b.len(), 16 * fo);
+        // out-of-range lookups are None, not panics
+        assert!(reg.site(1, 0, Proj::Down).is_none());
+        assert!(reg.site(0, m.n_layers, Proj::Down).is_none());
+    }
+
+    #[test]
+    fn bind_streams_once_then_switches_free() {
+        let reg = AdapterRegistry::fabricate(&tiny(), &paper(), 3, 2).unwrap();
+        reg.bind(1).unwrap();
+        reg.bind(1).unwrap();
+        reg.bind(2).unwrap();
+        let s = reg.stats();
+        assert_eq!(s.binds, 3);
+        assert_eq!(s.cold_loads, 2);
+        assert_eq!(s.bytes_streamed, 2 * reg.adapter_bytes());
+        assert!(s.stream_energy_j > 0.0);
+        assert_eq!(reg.resident_bytes(), 2 * reg.adapter_bytes());
+        assert!(reg.bind(3).is_err(), "id past the registry must fail");
+    }
+
+    #[test]
+    fn mac_accounting_matches_the_analytic_overhead() {
+        let m = tiny();
+        let lora = paper();
+        let reg = AdapterRegistry::fabricate(&m, &lora, 1, 3).unwrap();
+        // apply every placement site of every layer to 5 rows, as one
+        // served token round does
+        for _li in 0..m.n_layers {
+            for &p in &lora.placement {
+                let (fi, fo) = p.dims(&m);
+                reg.record_site_macs(5, fi, fo);
+            }
+        }
+        let s = reg.stats();
+        assert_eq!(s.adapter_rows, 5 * (m.n_layers * lora.placement.len()) as u64);
+        let analytic = lora.op_overhead_vs_host_projections(&m);
+        let measured = s.measured_op_overhead();
+        assert!(
+            (measured - analytic).abs() < 1e-12,
+            "measured {measured} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn stats_delta_since_snapshot() {
+        let reg = AdapterRegistry::fabricate(&tiny(), &paper(), 2, 4).unwrap();
+        reg.bind(0).unwrap();
+        let snap = reg.stats();
+        reg.bind(0).unwrap();
+        reg.record_site_macs(1, 8, 4);
+        let d = reg.stats().since(&snap);
+        assert_eq!(d.binds, 1);
+        assert_eq!(d.cold_loads, 0, "adapter 0 was already resident");
+        assert_eq!(d.bytes_streamed, 0);
+        assert_eq!(d.adapter_rows, 1);
+    }
+
+    #[test]
+    fn switch_bytes_are_a_small_fraction_of_a_full_reload() {
+        // the reload-vs-switch claim at the paper's deployment target:
+        // a cold task switch streams the 6-bit VOD r16 adapter, ~1.7%
+        // of re-loading the packed ternary mask set
+        let falcon = ModelConfig::falcon3_1b();
+        let adapter = LoraConfig::paper().storage_bytes(&falcon);
+        let reload = AdapterRegistry::full_reload_bytes_for(&falcon);
+        let ratio = adapter as f64 / reload as f64;
+        assert!(ratio < 0.05, "adapter/reload ratio {ratio}");
+        // even on the tiny sim model (rank 16 is huge next to d=128)
+        // the switch stays well under a reload
+        let reg = AdapterRegistry::fabricate(&tiny(), &paper(), 1, 5).unwrap();
+        assert!(reg.adapter_bytes() * 2 < reg.full_reload_bytes());
+    }
+
+    #[test]
+    fn registry_rejects_degenerate_configs() {
+        let m = tiny();
+        assert!(AdapterRegistry::fabricate(&m, &paper(), 0, 1).is_err());
+        let mut zero_rank = paper();
+        zero_rank.rank = 0;
+        assert!(AdapterRegistry::fabricate(&m, &zero_rank, 1, 1).is_err());
+        let mut nowhere = paper();
+        nowhere.placement.clear();
+        assert!(AdapterRegistry::fabricate(&m, &nowhere, 1, 1).is_err());
+        // model-shape mismatch is caught by compatible_with
+        let reg = AdapterRegistry::fabricate(&m, &paper(), 1, 1).unwrap();
+        assert!(reg.compatible_with(&ModelConfig::falcon3_1b()).is_err());
+        assert!(reg.compatible_with(&m).is_ok());
+    }
+}

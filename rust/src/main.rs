@@ -11,9 +11,10 @@ use std::path::PathBuf;
 
 use bitrom::config::{HardwareConfig, ModelConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
+use bitrom::lora::AdapterRegistry;
 use bitrom::report::{
     fig1a_report, fig5a_report, fig5b_report, fig5b_serving_report, gemv_perf_report,
-    table3_report,
+    lora_serving_report, table3_report,
 };
 use bitrom::runtime::{HostBackend, InferenceBackend, Manifest};
 #[cfg(feature = "pjrt")]
@@ -60,10 +61,13 @@ fn print_help() {
          USAGE: bitrom <command> [options]\n\n\
          COMMANDS:\n\
          \x20 serve     run a synthetic request trace through the 6-stage pipeline\n\
-         \x20           (--host serves offline on the fabricated HostBackend)\n\
-         \x20 generate  greedy-generate from a prompt (token ids; --host = offline)\n\
+         \x20           (--host serves offline on the fabricated HostBackend;\n\
+         \x20           --adapters N serves N tenant LoRA adapters reload-free)\n\
+         \x20 generate  greedy-generate from a prompt (token ids; --host = offline;\n\
+         \x20           --adapter K binds tenant K's adapter)\n\
          \x20 report    print paper tables/figures (--table3 --fig1a --fig5a --fig5b\n\
-         \x20           --fig5b-serving = Fig 5(b) measured on a real served trace)\n\
+         \x20           --fig5b-serving = Fig 5(b) measured on a real served trace;\n\
+         \x20           --lora-serving = adapter overhead + reload-vs-switch)\n\
          \x20 verify    replay the python golden trace and compare\n\
          \x20 info      artifact + config summary\n\n\
          Artifacts default to ./artifacts (override with BITROM_ARTIFACTS\n\
@@ -79,7 +83,7 @@ fn artifacts_dir(args: &bitrom::util::args::Args) -> PathBuf {
     }
 }
 
-fn serve_trace_cfg(args: &Args, vocab: usize) -> TraceConfig {
+fn serve_trace_cfg(args: &Args, vocab: usize, n_adapters: usize) -> TraceConfig {
     TraceConfig {
         n_requests: args.usize("requests"),
         gen_len_min: args.usize("gen").min(8),
@@ -87,6 +91,7 @@ fn serve_trace_cfg(args: &Args, vocab: usize) -> TraceConfig {
         arrival_rate: args.f64("rate"),
         seed: args.u64("seed"),
         vocab_size: vocab,
+        n_adapters,
         ..TraceConfig::default()
     }
 }
@@ -99,18 +104,38 @@ fn serve_cfg(args: &Args) -> ServeConfig {
     }
 }
 
-/// Fabricate the offline backend for a `--host` invocation (shared by
-/// `serve` and `generate`). `max_context` caps the model's sequence
-/// length at what the invocation can actually use: KV pages are
-/// allocated on demand in the tiered store, but the serving config's
-/// `max_seq` must fit inside the model's, and a smaller context keeps
-/// the early-token placement meaningful for short runs.
-fn host_backend(args: &Args, max_context: usize) -> anyhow::Result<HostBackend> {
+/// Resolve the model config for a `--host` invocation. `max_context`
+/// caps the model's sequence length at what the invocation can
+/// actually use: KV pages are allocated on demand in the tiered store,
+/// but the serving config's `max_seq` must fit inside the model's, and
+/// a smaller context keeps the early-token placement meaningful for
+/// short runs.
+fn host_model(args: &Args, max_context: usize) -> anyhow::Result<ModelConfig> {
     let mut model = ModelConfig::named(args.str("model"))
         .ok_or_else(|| anyhow::anyhow!("unknown model {:?}", args.str("model")))?
         .with_divisible_partitions();
     model.max_seq = model.max_seq.min(max_context.max(1));
-    HostBackend::new(model, args.u64("seed"))
+    Ok(model)
+}
+
+/// Fabricate the offline backend for a `--host` invocation (shared by
+/// `serve` and `generate`), with `n_adapters` tenant adapters when
+/// requested (rank/placement from `serve`'s adapter knobs).
+fn host_backend(
+    args: &Args,
+    max_context: usize,
+    serve: &ServeConfig,
+) -> anyhow::Result<HostBackend> {
+    let model = host_model(args, max_context)?;
+    let seed = args.u64("seed");
+    match serve.lora_config()? {
+        Some(lora) => {
+            let registry =
+                AdapterRegistry::fabricate(&model, &lora, serve.n_adapters, seed ^ 0xADA9)?;
+            HostBackend::with_adapters(model, seed, registry)
+        }
+        None => HostBackend::new(model, seed),
+    }
 }
 
 fn print_serve_outcome(done: &[CompletedRequest], metrics: &mut ServeMetrics, verbose: bool) {
@@ -149,13 +174,19 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("rate", "0", "arrival rate (req/s, 0 = closed batch)")
         .opt("seed", "1", "trace seed")
         .opt("model", "sim-tiny", "model config for --host")
+        .opt("adapters", "0", "tenant LoRA adapters to serve (--host; 0 = off)")
+        .opt("adapter-rank", "16", "adapter rank (with --adapters)")
+        .opt("placements", "VOD", "adapter placement sites (letters from QKVOGUD)")
         .flag("host", "serve on the offline HostBackend (no artifacts/PJRT needed)")
         .flag("verbose", "per-request output");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
 
     if args.flag("host") {
-        let serve = serve_cfg(&args);
-        let backend = host_backend(&args, serve.max_seq)?;
+        let mut serve = serve_cfg(&args);
+        serve.n_adapters = args.usize("adapters");
+        serve.adapter_rank = args.usize("adapter-rank");
+        serve.adapter_placement = args.str("placements").to_string();
+        let backend = host_backend(&args, serve.max_seq, &serve)?;
         println!(
             "fabricated host model {} ({} params, {} partitions, ROM sparsity {:.1}%)",
             backend.model().name,
@@ -163,7 +194,18 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             backend.model().n_partitions,
             backend.rom_sparsity() * 100.0,
         );
-        let trace = serve_trace_cfg(&args, backend.model().vocab_size);
+        if let Some(reg) = backend.adapters() {
+            println!(
+                "serving {} tenant adapters (rank {} on {}, {} B each quantized; \
+                 full weight reload would be {} B)",
+                reg.n_adapters(),
+                reg.lora().rank,
+                reg.lora().placement_str(),
+                reg.adapter_bytes(),
+                reg.full_reload_bytes(),
+            );
+        }
+        let trace = serve_trace_cfg(&args, backend.model().vocab_size, serve.n_adapters);
         let mut server = Server::new(backend, serve)?;
         let (done, mut metrics) = server.run_trace(generate(&trace))?;
         print_serve_outcome(&done, &mut metrics, args.flag("verbose"));
@@ -174,6 +216,10 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn serve_pjrt(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.usize("adapters") == 0,
+        "--adapters needs --host: the PJRT executor serves no adapter registry"
+    );
     let exec = ModelExecutor::load(&artifacts_dir(args))?;
     println!(
         "loaded {} artifacts in {:.2}s (model {}, {} partitions)",
@@ -182,7 +228,7 @@ fn serve_pjrt(args: &Args) -> anyhow::Result<()> {
         exec.manifest.model.name,
         exec.n_partitions()
     );
-    let trace = serve_trace_cfg(args, exec.manifest.model.vocab_size);
+    let trace = serve_trace_cfg(args, exec.manifest.model.vocab_size, 0);
     let mut server = Server::new(exec, serve_cfg(args))?;
     let (done, mut metrics) = server.run_trace(generate(&trace))?;
     print_serve_outcome(&done, &mut metrics, args.flag("verbose"));
@@ -205,6 +251,8 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("n", "16", "tokens to generate")
         .opt("model", "sim-tiny", "model config for --host")
         .opt("seed", "1", "weight seed for --host")
+        .opt("adapter", "", "tenant adapter id to bind (--host; empty = base model)")
+        .opt("adapters", "4", "tenant adapters fabricated when --adapter is set")
         .flag("host", "generate on the offline HostBackend");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
     let prompt: Vec<i32> = args
@@ -212,14 +260,27 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
         .split(',')
         .map(|s| s.trim().parse())
         .collect::<Result<_, _>>()?;
+    let adapter: Option<u32> = match args.str("adapter") {
+        "" => None,
+        s => Some(s.parse()?),
+    };
 
     if args.flag("host") {
-        let backend = host_backend(&args, prompt.len() + args.usize("n"))?;
-        let out = backend.generate_greedy(&prompt, args.usize("n"))?;
+        let mut serve = ServeConfig::default();
+        if adapter.is_some() {
+            // fabricate enough tenants to cover the requested id
+            serve.n_adapters = args.usize("adapters").max(adapter.unwrap_or(0) as usize + 1);
+        }
+        let backend = host_backend(&args, prompt.len() + args.usize("n"), &serve)?;
+        let out = backend.generate_greedy_bound(&prompt, args.usize("n"), adapter)?;
         println!("prompt:    {prompt:?}");
+        if let Some(id) = adapter {
+            println!("adapter:   tenant {id} (task switch without weight reload)");
+        }
         println!("generated: {out:?}");
         return Ok(());
     }
+    anyhow::ensure!(adapter.is_none(), "--adapter needs --host");
     generate_pjrt(&args, &prompt)
 }
 
@@ -249,6 +310,7 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
         .flag("fig5a", "Fig 5(a) KV access analysis")
         .flag("fig5b", "Fig 5(b) DRAM reduction grid (analytic)")
         .flag("fig5b-serving", "Fig 5(b) measured end-to-end on a served trace")
+        .flag("lora-serving", "multi-tenant adapter overhead + reload-vs-switch, measured")
         .flag("gemv", "host bitplane-vs-reference GEMV perf (timed, not in --all)")
         .flag("all", "everything except --gemv");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
@@ -258,6 +320,7 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
             || args.flag("fig5a")
             || args.flag("fig5b")
             || args.flag("fig5b-serving")
+            || args.flag("lora-serving")
             || args.flag("gemv"));
 
     // prefer the measured ROM sparsity if artifacts exist
@@ -279,6 +342,9 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
     }
     if all || args.flag("fig5b-serving") {
         println!("{}", fig5b_serving_report());
+    }
+    if all || args.flag("lora-serving") {
+        println!("{}", lora_serving_report());
     }
     if args.flag("gemv") {
         // timed study — explicit opt-in only (quick mode)

@@ -83,6 +83,7 @@ pub fn fig5b_serving_study(
                 .map(|t| ((i * 31 + t * 7 + 1) % model.vocab_size) as i32)
                 .collect(),
             max_new_tokens: seq_len - prompt_len,
+            adapter_id: None,
         })
         .collect();
     let (done, metrics) = server.run_trace(reqs)?;

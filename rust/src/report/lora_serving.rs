@@ -1,0 +1,213 @@
+//! Multi-tenant LoRA serving, measured end-to-end: a mixed-tenant
+//! trace through the adapter-capable `Server<HostBackend>`, with the
+//! measured per-token adapter op overhead placed next to the analytic
+//! [`LoraConfig::op_overhead_vs_host_projections`] model, and the
+//! reload-vs-switch comparison that lands the paper's headline claim
+//! as numbers: a cold task switch streams one adapter's quantized
+//! bytes, a resident switch streams nothing, and a full weight reload
+//! (what a conventional weight-loaded accelerator would pay to change
+//! tasks) moves the entire packed mask set.
+//!
+//! The measured overhead comes from MAC counters incremented at the
+//! point of execution ([`AdapterRegistry::record_site_macs`]), so the
+//! comparison verifies the wiring — the sites actually applied, at
+//! the dims actually projected — not a formula against itself.
+
+use crate::config::{ModelConfig, ServeConfig};
+use crate::coordinator::Server;
+use crate::dram::DramParams;
+use crate::energy::AdapterEnergy;
+use crate::lora::{AdapterRegistry, LoraConfig, LoraServeStats};
+use crate::runtime::HostBackend;
+use crate::trace::{generate, TraceConfig};
+use crate::util::table::{fmt_pct, Table};
+
+/// Outcome of one measured multi-tenant serving run.
+#[derive(Debug, Clone)]
+pub struct LoraServing {
+    /// Tenant adapters resident in the deployment.
+    pub n_adapters: usize,
+    /// Requests served (each bound to a uniformly drawn tenant).
+    pub requests: usize,
+    /// Tokens emitted by the trace.
+    pub tokens_out: u64,
+    /// Measured per-token adapter op overhead (executed adapter MACs /
+    /// executed base MACs at the adapter sites).
+    pub measured_overhead: f64,
+    /// The analytic model's value for the same rank/placement/model.
+    pub analytic_overhead: f64,
+    /// Quantized bytes of ONE tenant adapter (a cold switch's stream).
+    pub adapter_bytes: u64,
+    /// Bytes a full weight reload would move (packed ternary mask set).
+    pub full_reload_bytes: u64,
+    /// Full measured adapter statistics for the trace.
+    pub stats: LoraServeStats,
+}
+
+/// Serve a closed batch of `n_requests` mixed-tenant requests on a
+/// fabricated `sim-tiny` host model carrying `n_adapters` adapters at
+/// the paper configuration (rank 16 on V/O/Down, 6-bit weights), and
+/// measure adapter overhead and task-switch traffic from the
+/// registry's counters. Deterministic per seed.
+pub fn lora_serving_study(
+    n_adapters: usize,
+    n_requests: usize,
+    seed: u64,
+) -> anyhow::Result<LoraServing> {
+    anyhow::ensure!(n_adapters >= 1, "need at least one tenant adapter");
+    anyhow::ensure!(n_requests >= 1, "need at least one request");
+    let model = ModelConfig::sim_tiny();
+    let lora = LoraConfig::paper();
+    let registry = AdapterRegistry::fabricate(&model, &lora, n_adapters, seed ^ 0xADA9)?;
+    let analytic = lora.op_overhead_vs_host_projections(&model);
+    let adapter_bytes = registry.adapter_bytes();
+    let full_reload_bytes = registry.full_reload_bytes();
+    let backend = HostBackend::with_adapters(model.clone(), seed, registry)?;
+    let serve = ServeConfig {
+        max_batches: n_requests.min(4),
+        n_adapters,
+        seed,
+        ..ServeConfig::default()
+    };
+    let trace = generate(&TraceConfig {
+        n_requests,
+        n_adapters,
+        gen_len_min: 8,
+        gen_len_max: 16,
+        vocab_size: model.vocab_size,
+        seed,
+        ..TraceConfig::default()
+    });
+    let mut server = Server::new(backend, serve)?;
+    let (done, metrics) = server.run_trace(trace)?;
+    anyhow::ensure!(done.len() == n_requests, "trace did not complete");
+    let stats = metrics.lora.expect("adapter-serving backend measures LoRA stats");
+    Ok(LoraServing {
+        n_adapters,
+        requests: n_requests,
+        tokens_out: metrics.tokens_out,
+        measured_overhead: stats.measured_op_overhead(),
+        analytic_overhead: analytic,
+        adapter_bytes,
+        full_reload_bytes,
+        stats,
+    })
+}
+
+/// The multi-tenant adapter-serving report: measured-vs-analytic
+/// per-token overhead and the reload-vs-switch comparison, plus the
+/// same comparison scaled analytically to the paper's Falcon3-1B
+/// deployment target.
+pub fn lora_serving_report() -> String {
+    let r = match lora_serving_study(4, 12, 0x10ada) {
+        Ok(r) => r,
+        Err(e) => return format!("lora_serving failed: {e:#}\n"),
+    };
+    let energy = AdapterEnergy::from_stats(&r.stats);
+    let reload_j = AdapterEnergy::reload_j(r.full_reload_bytes, &DramParams::default());
+    let mut t = Table::new(&format!(
+        "Multi-tenant LoRA serving — measured on a served trace (sim-tiny, {} tenants, \
+         {} requests, rank 16 on VOD)",
+        r.n_adapters, r.requests
+    ))
+    .header(&["quantity", "measured (serving)", "analytic model"]);
+    t.row(&[
+        "per-token adapter op overhead".into(),
+        fmt_pct(r.measured_overhead),
+        format!("{} (paper: 0.7% at Falcon3 shapes)", fmt_pct(r.analytic_overhead)),
+    ]);
+    t.row(&[
+        "adapter / base MACs at the sites".into(),
+        format!("{} / {}", r.stats.adapter_macs, r.stats.base_macs),
+        "—".into(),
+    ]);
+    t.row(&[
+        "cold task switch (adapter stream)".into(),
+        format!(
+            "{} B x {} loads ({:.3e} J)",
+            r.adapter_bytes, r.stats.cold_loads, energy.stream_j
+        ),
+        "—".into(),
+    ]);
+    t.row(&[
+        "resident task switch".into(),
+        format!("0 B x {} binds (reload-free)", r.stats.binds - r.stats.cold_loads),
+        "—".into(),
+    ]);
+    t.row(&[
+        "hypothetical full weight reload".into(),
+        "never happens".into(),
+        format!("{} B ({:.3e} J) per switch", r.full_reload_bytes, reload_j),
+    ]);
+    let mut out = t.render();
+    out.push_str(&format!(
+        "tokens served {}; binds {}, cold loads {}, adapter rows {}; \
+         |measured - analytic| = {:.2e} relative\n",
+        r.tokens_out,
+        r.stats.binds,
+        r.stats.cold_loads,
+        r.stats.adapter_rows,
+        (r.measured_overhead - r.analytic_overhead).abs() / r.analytic_overhead.max(1e-300),
+    ));
+    // the same claim at the deployment target, analytically
+    let falcon = ModelConfig::falcon3_1b();
+    let lora = LoraConfig::paper();
+    let fa = lora.storage_bytes(&falcon);
+    let fr = AdapterRegistry::full_reload_bytes_for(&falcon);
+    out.push_str(&format!(
+        "falcon3-1b (analytic): adapter {} B vs reload {} B — a cold switch moves \
+         {} of a reload ({:.1}x cheaper); op overhead {}\n",
+        fa,
+        fr,
+        fmt_pct(fa as f64 / fr as f64),
+        fr as f64 / fa as f64,
+        fmt_pct(lora.op_overhead_vs_host_projections(&falcon)),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_overhead_lands_on_the_analytic_value() {
+        // the acceptance gate's unit twin: measured per-token adapter
+        // overhead within 10% relative of the analytic model at the
+        // paper configuration (the MAC counters make it exact, so 10%
+        // leaves room only for real wiring regressions)
+        let r = lora_serving_study(3, 6, 0xADA).unwrap();
+        assert!(r.analytic_overhead > 0.0);
+        let rel = (r.measured_overhead - r.analytic_overhead).abs() / r.analytic_overhead;
+        assert!(
+            rel < 0.10,
+            "measured {} vs analytic {} ({} relative)",
+            r.measured_overhead,
+            r.analytic_overhead,
+            rel
+        );
+        assert_eq!(r.stats.binds as usize, r.requests);
+        assert!(r.stats.adapter_rows > 0);
+    }
+
+    #[test]
+    fn cold_loads_stream_each_tenant_once() {
+        let r = lora_serving_study(2, 8, 0x5EED).unwrap();
+        assert!(r.stats.cold_loads <= 2);
+        assert_eq!(
+            r.stats.bytes_streamed,
+            r.stats.cold_loads * r.adapter_bytes,
+            "streaming must be per cold load, not per bind"
+        );
+        assert!(r.stats.binds >= r.stats.cold_loads);
+        assert!(r.adapter_bytes < r.full_reload_bytes);
+    }
+
+    #[test]
+    fn report_renders_measured_and_analytic_columns() {
+        let s = lora_serving_report();
+        assert!(s.contains("measured (serving)"), "{s}");
+        assert!(s.contains("reload-free"), "{s}");
+        assert!(s.contains("falcon3-1b (analytic)"), "{s}");
+    }
+}

@@ -1,12 +1,15 @@
 //! Paper table/figure renderers — each function regenerates one
 //! published artifact from the simulators (see DESIGN.md §4 for the
-//! experiment index). `fig5b_serving_report` goes one step further and
-//! re-measures the Fig 5(b) point on a real served trace.
+//! experiment index). `fig5b_serving_report` and
+//! `lora_serving_report` go one step further and re-measure their
+//! claims (the Fig 5(b) point; the adapter overhead and
+//! reload-vs-switch comparison) on real served traces.
 
 mod fig1a;
 mod fig5b;
 mod fig5b_serving;
 mod gemv_perf;
+mod lora_serving;
 mod table3;
 
 pub use fig1a::fig1a_report;
@@ -15,4 +18,5 @@ pub use fig5b_serving::{fig5b_serving_report, fig5b_serving_study, Fig5bServing}
 pub use gemv_perf::{
     gemv_perf_json, gemv_perf_report, gemv_perf_study, gemv_perf_table, GemvPerfPoint,
 };
+pub use lora_serving::{lora_serving_report, lora_serving_study, LoraServing};
 pub use table3::{table3_report, Table3Row};

@@ -22,6 +22,7 @@ use anyhow::Result;
 
 use crate::config::{ModelConfig, ServeConfig};
 use crate::kvcache::KvStoreStats;
+use crate::lora::LoraServeStats;
 
 /// Decode progress every backend's per-sequence KV state must expose.
 /// `pos` is the number of positions already written (the next token's
@@ -152,6 +153,30 @@ pub trait InferenceBackend {
         None
     }
 
+    /// Bind a tenant's LoRA adapter (or `None` for the frozen base
+    /// model) to a fresh sequence, *before* its prefill runs — the
+    /// adapter shapes every projection the sequence executes, so a
+    /// late bind would split its KV history across tasks. Task
+    /// switching is reload-free by construction: nothing in this call
+    /// (or anywhere in the API) can move a base weight. The default
+    /// accepts only `None`; backends with an
+    /// [`crate::lora::AdapterRegistry`] override it.
+    fn bind_adapter(&self, _state: &mut Self::State, adapter: Option<u32>) -> Result<()> {
+        anyhow::ensure!(
+            adapter.is_none(),
+            "this backend serves no LoRA adapters (requested adapter {})",
+            adapter.unwrap_or_default()
+        );
+        Ok(())
+    }
+
+    /// Measured adapter-serving statistics (binds, cold-load
+    /// streaming, executed adapter/base MACs), if this backend serves
+    /// an [`crate::lora::AdapterRegistry`]. `None` otherwise.
+    fn lora_stats(&self) -> Option<LoraServeStats> {
+        None
+    }
+
     /// Fresh (zeroed) per-sequence KV state.
     fn new_state(&self) -> Result<Self::State>;
 
@@ -192,8 +217,16 @@ pub trait InferenceBackend {
     /// Full prefill: the prompt through every partition in order;
     /// returns (state, last-token logits).
     fn prefill(&self, prompt: &[i32]) -> Result<(Self::State, Logits)> {
+        self.prefill_bound(prompt, None)
+    }
+
+    /// [`Self::prefill`] with a tenant adapter bound to the fresh
+    /// sequence first (the single-stream twin of what the serving
+    /// loop does per admitted request).
+    fn prefill_bound(&self, prompt: &[i32], adapter: Option<u32>) -> Result<(Self::State, Logits)> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let mut state = self.new_state()?;
+        self.bind_adapter(&mut state, adapter)?;
         let mut h = self.embed_prompt(prompt)?;
         for part in 0..self.n_partitions() {
             h = self.run_partition_prefill(part, &h, &mut state)?;
@@ -221,7 +254,19 @@ pub trait InferenceBackend {
     /// Greedy generation through the partitioned path (prefill + decode
     /// steps; always produces at least the prefill's first token).
     fn generate_greedy(&self, prompt: &[i32], n_new: usize) -> Result<Vec<i32>> {
-        let (mut state, logits) = self.prefill(prompt)?;
+        self.generate_greedy_bound(prompt, n_new, None)
+    }
+
+    /// [`Self::generate_greedy`] under a tenant adapter — the whole
+    /// sequence (prefill and every decode step) runs with the
+    /// adapter's low-rank deltas applied.
+    fn generate_greedy_bound(
+        &self,
+        prompt: &[i32],
+        n_new: usize,
+        adapter: Option<u32>,
+    ) -> Result<Vec<i32>> {
+        let (mut state, logits) = self.prefill_bound(prompt, adapter)?;
         let mut out = Vec::with_capacity(n_new.max(1));
         let mut tok = logits.argmax() as i32;
         out.push(tok);
@@ -373,5 +418,22 @@ mod tests {
         let out = b.generate_greedy(&[1, 2, 3], 4).unwrap();
         assert_eq!(out.len(), 4);
         assert!(out.iter().all(|&t| (t as usize) < b.model.vocab_size));
+    }
+
+    #[test]
+    fn default_bind_accepts_only_the_base_model() {
+        // a backend without adapter support must reject Some(_) loudly
+        // instead of silently serving the base model for a tenant
+        let b = MockBackend::new();
+        let mut state = b.new_state().unwrap();
+        assert!(b.bind_adapter(&mut state, None).is_ok());
+        assert!(b.bind_adapter(&mut state, Some(0)).is_err());
+        assert!(b.prefill_bound(&[1, 2], Some(3)).is_err());
+        assert!(b.generate_greedy_bound(&[1, 2], 4, Some(1)).is_err());
+        // the bound drivers with None are exactly the plain drivers
+        let plain = b.generate_greedy(&[1, 2, 3], 4).unwrap();
+        let bound = b.generate_greedy_bound(&[1, 2, 3], 4, None).unwrap();
+        assert_eq!(plain, bound);
+        assert!(b.lora_stats().is_none());
     }
 }

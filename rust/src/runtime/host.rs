@@ -28,6 +28,15 @@
 //! the bitplane fast path, so a served trace doubles as an
 //! event-counting energy study — the two paths are property-tested
 //! bit-identical, only the speed (and the [`EventCounters`]) differ.
+//!
+//! Multi-tenant LoRA serving ([`HostBackend::with_adapters`], DESIGN.md
+//! §11): a sequence bound to a tenant adapter via
+//! [`InferenceBackend::bind_adapter`] gets that tenant's rank-r f32
+//! deltas applied on top of the ternary base projections at the
+//! registry's placement sites — per sequence, so one batch freely
+//! mixes tenants. The base weights never move (task switching is
+//! reload-free), and with no adapter bound the compute path is
+//! bit-identical to an adapter-free build (invariant 7).
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -38,6 +47,7 @@ use crate::bitnet::{absmax_quantize, QuantizedActs, TernaryMatrix};
 use crate::cirom::{EventCounters, MacroBank};
 use crate::config::{MacroGeometry, ModelConfig, ServeConfig};
 use crate::kvcache::{KvSeq, KvStore, KvStoreConfig, KvStoreStats};
+use crate::lora::{apply_adapter_delta, AdapterRegistry, LoraServeStats, Proj};
 use crate::util::rng::Rng;
 
 use super::backend::{InferenceBackend, Logits, SequenceState};
@@ -97,6 +107,11 @@ pub struct HostState {
     pub pos: usize,
     /// Prompt length after prefill.
     pub prompt_len: usize,
+    /// Tenant LoRA adapter bound to this sequence (`None` = the frozen
+    /// base model). Set once by `bind_adapter` before prefill; every
+    /// projection the sequence executes applies this tenant's deltas
+    /// at the registry's placement sites.
+    pub adapter: Option<u32>,
 }
 
 impl Drop for HostState {
@@ -143,6 +158,12 @@ pub struct HostBackend {
     /// deployment-sized store; states keep an `Rc` to the store that
     /// allocated their pages, so a swap never orphans live sequences.
     store: RefCell<Rc<RefCell<KvStore>>>,
+    /// Present iff constructed with [`Self::with_adapters`]: the
+    /// multi-tenant adapter weights plus residency/MAC accounting.
+    /// When absent (or a sequence is bound to `None`) the compute
+    /// path is the unmodified base path — adapter-disabled serving is
+    /// bit-identical to an adapter-free build (DESIGN.md invariant 7).
+    lora: Option<AdapterRegistry>,
     seed: u64,
 }
 
@@ -159,17 +180,37 @@ fn silu(v: f32) -> f32 {
 impl HostBackend {
     /// Fabricate a model on the bitplane fast path.
     pub fn new(model: ModelConfig, seed: u64) -> Result<Self> {
-        Self::build(model, seed, None)
+        Self::build(model, seed, None, None)
     }
 
     /// Fabricate a model whose projections run through the `cirom`
     /// macro/bank simulators with the given geometry, counting energy
     /// events (orders of magnitude slower; same integers).
     pub fn with_cirom_events(model: ModelConfig, seed: u64, geom: MacroGeometry) -> Result<Self> {
-        Self::build(model, seed, Some(geom))
+        Self::build(model, seed, Some(geom), None)
     }
 
-    fn build(model: ModelConfig, seed: u64, geom: Option<MacroGeometry>) -> Result<Self> {
+    /// Fabricate a model that serves the registry's tenant adapters:
+    /// sequences bound to an adapter id get that tenant's low-rank
+    /// deltas applied at the registry's placement sites; unbound
+    /// sequences run the identical base path. The registry is
+    /// fabricated from its own seed, so the base weights here match
+    /// [`Self::new`] with the same `(model, seed)` exactly.
+    pub fn with_adapters(
+        model: ModelConfig,
+        seed: u64,
+        adapters: AdapterRegistry,
+    ) -> Result<Self> {
+        adapters.compatible_with(&model)?;
+        Self::build(model, seed, None, Some(adapters))
+    }
+
+    fn build(
+        model: ModelConfig,
+        seed: u64,
+        geom: Option<MacroGeometry>,
+        lora: Option<AdapterRegistry>,
+    ) -> Result<Self> {
         anyhow::ensure!(
             model.n_layers > 0 && model.n_layers % model.n_partitions == 0,
             "n_layers {} must be a positive multiple of n_partitions {}",
@@ -212,9 +253,15 @@ impl HostBackend {
             layers,
             head,
             store: RefCell::new(Rc::new(RefCell::new(store))),
+            lora,
             model,
             seed,
         })
+    }
+
+    /// The tenant adapter registry, if this backend serves adapters.
+    pub fn adapters(&self) -> Option<&AdapterRegistry> {
+        self.lora.as_ref()
     }
 
     /// The weight-fabrication seed.
@@ -272,9 +319,14 @@ impl HostBackend {
     /// f32 → f32 projection: absmax-quantize the activation, exact
     /// integer GEMV (bitplane or event-counted macro bank), rescale.
     fn project(&self, p: &Projection, x: &[f32]) -> Vec<f32> {
-        let acts = absmax_quantize(x, self.model.act_bits);
+        self.project_q(p, &absmax_quantize(x, self.model.act_bits))
+    }
+
+    /// Projection of one already-quantized activation row (bitplane
+    /// GEMV or event-counted macro bank), rescaled to f32.
+    fn project_q(&self, p: &Projection, acts: &QuantizedActs) -> Vec<f32> {
         let y = match (&p.bank, &self.events) {
-            (Some(bank), Some(ev)) => bank.gemv(&acts, &mut ev.borrow_mut()),
+            (Some(bank), Some(ev)) => bank.gemv(acts, &mut ev.borrow_mut()),
             _ => p.w.gemv(&acts.values),
         };
         let s = acts.scale * p.w.scale;
@@ -286,22 +338,66 @@ impl HostBackend {
     /// the result is bit-identical to mapping [`Self::project`] —
     /// prefill and decode agree exactly (invariant 4).
     fn project_rows(&self, p: &Projection, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        if self.events.is_some() {
-            return xs.iter().map(|x| self.project(p, x)).collect();
-        }
         let qs: Vec<QuantizedActs> = xs
             .iter()
             .map(|x| absmax_quantize(x, self.model.act_bits))
             .collect();
+        self.project_rows_q(p, &qs)
+    }
+
+    /// [`Self::project_rows`] over pre-quantized rows: batched
+    /// bitplane GEMM on the fast path, per-row event-counted GEMV in
+    /// event mode — rows are independent either way.
+    fn project_rows_q(&self, p: &Projection, qs: &[QuantizedActs]) -> Vec<Vec<f32>> {
+        if self.events.is_some() {
+            return qs.iter().map(|q| self.project_q(p, q)).collect();
+        }
         let ints: Vec<&[i32]> = qs.iter().map(|q| q.values.as_slice()).collect();
         p.w.gemm(&ints)
             .into_iter()
-            .zip(&qs)
+            .zip(qs)
             .map(|(y, q)| {
                 let s = q.scale * p.w.scale;
                 y.into_iter().map(|v| v as f32 * s).collect()
             })
             .collect()
+    }
+
+    /// Batched projection with the bound tenant's low-rank delta
+    /// applied when (`li`, `proj`) is an adapter site: base term via
+    /// the usual bitplane/event path, then the shared
+    /// [`apply_adapter_delta`] per row from the *same* quantized
+    /// activations (so merged and dynamic adapters agree bit-exactly,
+    /// and prefill ≡ chunked decode survives — the delta is a pure
+    /// per-row function). Off-site or unbound calls take the
+    /// unmodified base path.
+    fn project_rows_site(
+        &self,
+        p: &Projection,
+        xs: &[Vec<f32>],
+        li: usize,
+        proj: Proj,
+        adapter: Option<u32>,
+    ) -> Vec<Vec<f32>> {
+        let pair = match (&self.lora, adapter) {
+            (Some(reg), Some(id)) => reg.site(id, li, proj),
+            _ => None,
+        };
+        let pair = match pair {
+            Some(pair) => pair,
+            None => return self.project_rows(p, xs),
+        };
+        let reg = self.lora.as_ref().expect("adapter site implies a registry");
+        let qs: Vec<QuantizedActs> = xs
+            .iter()
+            .map(|x| absmax_quantize(x, self.model.act_bits))
+            .collect();
+        let mut ys = self.project_rows_q(p, &qs);
+        for (q, y) in qs.iter().zip(ys.iter_mut()) {
+            apply_adapter_delta(q, &pair.a, &pair.b, reg.lora().rank, reg.alpha(), y);
+        }
+        reg.record_site_macs(xs.len() as u64, p.w.rows, p.w.cols);
+        ys
     }
 
     /// Multi-head causal attention for one query row: keys/values are
@@ -372,10 +468,11 @@ impl HostBackend {
             base_pos,
             "KV append out of order in layer {li}"
         );
+        let adapter = state.adapter;
         let xns: Vec<Vec<f32>> = xs.iter().map(|x| rmsnorm(x)).collect();
-        let qs = self.project_rows(&layer.wq, &xns);
-        let ks = self.project_rows(&layer.wk, &xns);
-        let vs = self.project_rows(&layer.wv, &xns);
+        let qs = self.project_rows_site(&layer.wq, &xns, li, Proj::Q, adapter);
+        let ks = self.project_rows_site(&layer.wk, &xns, li, Proj::K, adapter);
+        let vs = self.project_rows_site(&layer.wv, &xns, li, Proj::V, adapter);
         let n_ctx = base_pos + xs.len();
         {
             let mut store = state.store.borrow_mut();
@@ -394,21 +491,21 @@ impl HostBackend {
             .enumerate()
             .map(|(r, q)| self.attention(q, &state.kbuf, &state.vbuf, base_pos + r + 1))
             .collect();
-        let os = self.project_rows(&layer.wo, &attns);
+        let os = self.project_rows_site(&layer.wo, &attns, li, Proj::O, adapter);
         let mut x1: Vec<Vec<f32>> = xs
             .iter()
             .zip(&os)
             .map(|(x, o)| x.iter().zip(o).map(|(a, b)| a + b).collect())
             .collect();
         let xn2: Vec<Vec<f32>> = x1.iter().map(|x| rmsnorm(x)).collect();
-        let gates = self.project_rows(&layer.w_gate, &xn2);
-        let ups = self.project_rows(&layer.w_up, &xn2);
+        let gates = self.project_rows_site(&layer.w_gate, &xn2, li, Proj::Gate, adapter);
+        let ups = self.project_rows_site(&layer.w_up, &xn2, li, Proj::Up, adapter);
         let acts: Vec<Vec<f32>> = gates
             .iter()
             .zip(&ups)
             .map(|(g, u)| g.iter().zip(u).map(|(a, b)| silu(*a) * b).collect())
             .collect();
-        let downs = self.project_rows(&layer.w_down, &acts);
+        let downs = self.project_rows_site(&layer.w_down, &acts, li, Proj::Down, adapter);
         for (x, d) in x1.iter_mut().zip(&downs) {
             for (xi, di) in x.iter_mut().zip(d) {
                 *xi += di;
@@ -472,6 +569,29 @@ impl InferenceBackend for HostBackend {
         Some(self.store.borrow().borrow().stats())
     }
 
+    /// Point the sequence at a tenant adapter (validated against the
+    /// registry, which also accounts the task switch: a cold load
+    /// streams the adapter's quantized bytes once, a resident bind
+    /// moves nothing). `None` always succeeds and serves the base
+    /// model; `Some` without a registry is an error.
+    fn bind_adapter(&self, state: &mut HostState, adapter: Option<u32>) -> Result<()> {
+        match (&self.lora, adapter) {
+            (_, None) => state.adapter = None,
+            (Some(reg), Some(id)) => {
+                reg.bind(id)?;
+                state.adapter = Some(id);
+            }
+            (None, Some(id)) => {
+                anyhow::bail!("no adapter registry loaded (requested adapter {id})")
+            }
+        }
+        Ok(())
+    }
+
+    fn lora_stats(&self) -> Option<LoraServeStats> {
+        self.lora.as_ref().map(|reg| reg.stats())
+    }
+
     fn new_state(&self) -> Result<HostState> {
         let store = self.store.borrow().clone();
         let kv = store.borrow().new_seq();
@@ -482,6 +602,7 @@ impl InferenceBackend for HostBackend {
             vbuf: Vec::new(),
             pos: 0,
             prompt_len: 0,
+            adapter: None,
         })
     }
 
@@ -698,6 +819,115 @@ mod tests {
             assert!(store.borrow().ondie_blocks_in_use() > 0);
         }
         assert_eq!(store.borrow().ondie_blocks_in_use(), 0);
+    }
+
+    fn micro_registry(n_adapters: usize, seed: u64) -> AdapterRegistry {
+        AdapterRegistry::fabricate(&micro(), &crate::lora::LoraConfig::paper(), n_adapters, seed)
+            .unwrap()
+    }
+
+    #[test]
+    fn unbound_adapter_backend_is_bit_identical_to_plain() {
+        // DESIGN.md invariant 7 at the backend level: carrying a
+        // registry changes nothing until a sequence actually binds
+        let plain = HostBackend::new(micro(), 11).unwrap();
+        let adapted = HostBackend::with_adapters(micro(), 11, micro_registry(2, 99)).unwrap();
+        let prompt = [3, 14, 15, 9];
+        let a = plain.generate_greedy(&prompt, 8).unwrap();
+        let b = adapted.generate_greedy_bound(&prompt, 8, None).unwrap();
+        assert_eq!(a, b, "unbound serving must match the adapter-free build");
+        let stats = adapted.lora_stats().unwrap();
+        assert_eq!(stats.binds, 0);
+        assert_eq!(stats.adapter_macs, 0);
+        assert!(plain.lora_stats().is_none());
+    }
+
+    #[test]
+    fn bound_adapters_specialize_generation() {
+        let b = HostBackend::with_adapters(micro(), 11, micro_registry(2, 99)).unwrap();
+        let prompt = [3, 14, 15, 9];
+        let base = b.generate_greedy_bound(&prompt, 8, None).unwrap();
+        let t0 = b.generate_greedy_bound(&prompt, 8, Some(0)).unwrap();
+        let t1 = b.generate_greedy_bound(&prompt, 8, Some(1)).unwrap();
+        assert!(
+            t0 != base || t1 != base,
+            "adapter deltas at the paper placement had no effect on generation"
+        );
+        assert!(t0.iter().chain(&t1).all(|&t| (t as usize) < 64));
+        // binding out of range or without a registry fails loudly
+        let mut state = b.new_state().unwrap();
+        assert!(b.bind_adapter(&mut state, Some(2)).is_err());
+        let plain = HostBackend::new(micro(), 11).unwrap();
+        let mut state = plain.new_state().unwrap();
+        assert!(plain.bind_adapter(&mut state, Some(0)).is_err());
+    }
+
+    #[test]
+    fn adapter_prefill_equals_chunked_prefill_plus_decode() {
+        // invariant 4 extended to bound sequences: the delta is a pure
+        // per-row function of the row's own quantization, so prefill
+        // and chunked decode still agree bit-exactly
+        let b = HostBackend::with_adapters(micro(), 3, micro_registry(1, 31)).unwrap();
+        let prompt = [5, 9, 2, 40, 11, 7];
+        let (_, full) = b.prefill_bound(&prompt, Some(0)).unwrap();
+        let (mut state, _) = b.prefill_bound(&prompt[..2], Some(0)).unwrap();
+        let mut last = None;
+        for &t in &prompt[2..] {
+            last = Some(b.decode_step(&mut state, t).unwrap());
+        }
+        let inc = last.unwrap();
+        let max_err = full
+            .data
+            .iter()
+            .zip(&inc.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-5, "adapter prefill/decode divergence {max_err}");
+        assert_eq!(full.argmax(), inc.argmax());
+    }
+
+    #[test]
+    fn adapter_states_are_isolated_across_tenants() {
+        // interleaved decoding of two tenants must equal their solo
+        // bound runs — the adapter binding is per sequence
+        let b = HostBackend::with_adapters(micro(), 9, micro_registry(2, 17)).unwrap();
+        let solo_a = b.generate_greedy_bound(&[1, 2, 3], 5, Some(0)).unwrap();
+        let solo_b = b.generate_greedy_bound(&[30, 20], 5, Some(1)).unwrap();
+        let (mut sa, la) = b.prefill_bound(&[1, 2, 3], Some(0)).unwrap();
+        let (mut sb, lb) = b.prefill_bound(&[30, 20], Some(1)).unwrap();
+        let (mut ta, mut tb) = (la.argmax() as i32, lb.argmax() as i32);
+        let (mut out_a, mut out_b) = (vec![ta], vec![tb]);
+        for _ in 1..5 {
+            ta = b.decode_step(&mut sa, ta).unwrap().argmax() as i32;
+            tb = b.decode_step(&mut sb, tb).unwrap().argmax() as i32;
+            out_a.push(ta);
+            out_b.push(tb);
+        }
+        assert_eq!(out_a, solo_a);
+        assert_eq!(out_b, solo_b);
+    }
+
+    #[test]
+    fn adapter_mac_accounting_tracks_execution() {
+        let b = HostBackend::with_adapters(micro(), 5, micro_registry(2, 7)).unwrap();
+        b.generate_greedy_bound(&[4, 5, 6], 4, Some(1)).unwrap();
+        b.generate_greedy_bound(&[4, 5, 6], 2, Some(1)).unwrap();
+        let s = b.lora_stats().unwrap();
+        assert_eq!(s.binds, 2);
+        assert_eq!(s.cold_loads, 1, "second bind of the same tenant is free");
+        let reg = b.adapters().unwrap();
+        assert_eq!(s.bytes_streamed, reg.adapter_bytes());
+        // token rows through the 3 VOD sites of both layers: first run
+        // processes 3 prompt + 3 decode rows, second 3 + 1, per layer
+        // per site
+        let rows = (3 + 3 + 3 + 1) * micro().n_layers as u64 * 3;
+        assert_eq!(s.adapter_rows, rows);
+        let analytic = reg.lora().op_overhead_vs_host_projections(&micro());
+        assert!(
+            (s.measured_op_overhead() - analytic).abs() < 1e-12,
+            "measured {} vs analytic {analytic}",
+            s.measured_op_overhead()
+        );
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! * [`HostBackend`] (always built) — a BitNet-style partitioned
 //!   transformer on the word-parallel bitplane kernels with f32
 //!   attention, fabricated from a `ModelConfig` + seed; its KV lives
-//!   in the tiered quantized `kvcache::KvStore`. The whole serving
-//!   stack runs offline on it under tier-1.
+//!   in the tiered quantized `kvcache::KvStore`, and it can serve a
+//!   multi-tenant `lora::AdapterRegistry` (per-sequence adapters bound
+//!   via [`InferenceBackend::bind_adapter`]). The whole serving stack
+//!   runs offline on it under tier-1.
 //! * `ModelExecutor` (`pjrt` feature) — loads the AOT HLO artifacts
 //!   (the "mask set") once at startup and executes them via the PJRT C
 //!   API; weights live inside the compiled executables as constants,

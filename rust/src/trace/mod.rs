@@ -15,6 +15,10 @@ pub struct Request {
     pub prompt: Vec<i32>,
     /// Generation budget.
     pub max_new_tokens: usize,
+    /// Tenant LoRA adapter this request decodes under (`None` = the
+    /// frozen base model). Bound per sequence before prefill via
+    /// `runtime::InferenceBackend::bind_adapter`.
+    pub adapter_id: Option<u32>,
 }
 
 /// Trace generator parameters.
@@ -34,6 +38,11 @@ pub struct TraceConfig {
     pub vocab_size: usize,
     /// Mean arrival rate (req/s); 0 = all arrive at t=0 (closed batch).
     pub arrival_rate: f64,
+    /// Tenant adapters to spread requests across (uniform draw of
+    /// `adapter_id` in `0..n_adapters`); 0 = no request carries an
+    /// adapter, and the generated trace is byte-identical to one from
+    /// a build without adapter support.
+    pub n_adapters: usize,
     /// Generator seed.
     pub seed: u64,
 }
@@ -48,6 +57,7 @@ impl Default for TraceConfig {
             gen_len_max: 64,
             vocab_size: 256,
             arrival_rate: 0.0,
+            n_adapters: 0,
             seed: 1,
         }
     }
@@ -72,6 +82,15 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
                     .map(|_| rng.usize(0, cfg.vocab_size - 1) as i32)
                     .collect(),
                 max_new_tokens: rng.usize(cfg.gen_len_min, cfg.gen_len_max),
+                // drawn last (and only when enabled) so traces with
+                // n_adapters == 0 consume exactly the pre-adapter
+                // random stream — adapter-disabled traces stay
+                // byte-identical (DESIGN.md invariant 7)
+                adapter_id: if cfg.n_adapters > 0 {
+                    Some(rng.usize(0, cfg.n_adapters - 1) as u32)
+                } else {
+                    None
+                },
             }
         })
         .collect()
@@ -109,6 +128,42 @@ mod tests {
     fn closed_batch_arrives_at_zero() {
         let reqs = generate(&TraceConfig::default());
         assert!(reqs.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn no_adapters_means_no_adapter_ids() {
+        assert!(generate(&TraceConfig::default()).iter().all(|r| r.adapter_id.is_none()));
+    }
+
+    #[test]
+    fn adapter_ids_cover_the_tenant_range() {
+        let cfg = TraceConfig {
+            n_requests: 64,
+            n_adapters: 3,
+            ..TraceConfig::default()
+        };
+        let reqs = generate(&cfg);
+        let mut seen = [false; 3];
+        for r in &reqs {
+            let id = r.adapter_id.expect("every request carries a tenant") as usize;
+            assert!(id < 3);
+            seen[id] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 draws must hit all 3 tenants");
+    }
+
+    #[test]
+    fn adapter_draws_do_not_perturb_the_workload_shape() {
+        // the adapter id is drawn after a request's other fields, so
+        // request i's prompt/budget match the adapter-free trace up
+        // through request i's own draws... request 0 is identical.
+        let base = generate(&TraceConfig::default());
+        let with = generate(&TraceConfig {
+            n_adapters: 2,
+            ..TraceConfig::default()
+        });
+        assert_eq!(base[0].prompt, with[0].prompt);
+        assert_eq!(base[0].max_new_tokens, with[0].max_new_tokens);
     }
 
     #[test]

@@ -137,6 +137,21 @@ pub fn bench_config() -> Bench {
     }
 }
 
+/// Where a bench binary should write its JSON record: BITROM_BENCH_OUT
+/// if set, else `file` at the repository root (cargo runs benches with
+/// cwd = the package root `rust/`, one level below it), else the
+/// current directory. Shared by every record-emitting bench target.
+pub fn bench_out_path(file: &str) -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("BITROM_BENCH_OUT") {
+        return std::path::PathBuf::from(p);
+    }
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        std::path::PathBuf::from("..").join(file)
+    } else {
+        std::path::PathBuf::from(file)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
