@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: compare a freshly generated BENCH_*.json
+against its committed snapshot in BENCH_baseline/.
+
+Every bench binary records a top-level ``gates`` object of scale-free,
+higher-is-better metrics (speedups and throughput ratios measured
+within one run on one machine — unlike absolute tok/s or ns, these are
+comparable across CI runners). This script fails the job when any
+metric shared by the fresh record and the baseline has dropped by more
+than the tolerance.
+
+Usage:
+    python3 ci/check_bench.py BENCH_gemv.json [BENCH_baseline/BENCH_gemv.json]
+
+    (the baseline path defaults to BENCH_baseline/<fresh basename>)
+
+Knobs (documented in EXPERIMENTS.md §Threads):
+    BITROM_BENCH_GATE=off   skip the gate entirely (local experiments,
+                            emergency override for a flaky runner)
+    BITROM_BENCH_TOL=0.25   relative drop tolerated before failing
+                            (default 0.25; quick-mode records — those
+                            with "quick": true — default to 0.40, since
+                            their short measurement windows are noisy)
+
+Metrics present in only one of the two files are reported and skipped,
+not failed: quick and full sweeps measure different shape sets, and new
+gates need one green run before they can be baselined. Baselines are
+conservative floors seeded from early CI history — ratchet them up as
+the history accumulates (copy a healthy run's gates over the snapshot).
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv):
+    if os.environ.get("BITROM_BENCH_GATE", "").lower() in ("off", "0", "false"):
+        print("check_bench: BITROM_BENCH_GATE=off — gate skipped")
+        return 0
+    if len(argv) < 2 or len(argv) > 3:
+        print(__doc__)
+        return 2
+
+    fresh_path = argv[1]
+    base_path = (
+        argv[2]
+        if len(argv) == 3
+        else os.path.join("BENCH_baseline", os.path.basename(fresh_path))
+    )
+    if not os.path.exists(fresh_path):
+        print(f"check_bench: FAIL — fresh record {fresh_path} was not generated")
+        return 1
+    if not os.path.exists(base_path):
+        print(f"check_bench: no baseline at {base_path} — nothing to gate (commit one)")
+        return 0
+
+    fresh = load(fresh_path)
+    base = load(base_path)
+    fresh_gates = fresh.get("gates", {})
+    base_gates = base.get("gates", {})
+    if not fresh_gates:
+        print(f"check_bench: FAIL — {fresh_path} carries no gates object")
+        return 1
+
+    quick = bool(fresh.get("quick", False))
+    default_tol = 0.40 if quick else 0.25
+    tol = float(os.environ.get("BITROM_BENCH_TOL", default_tol))
+
+    shared = sorted(set(fresh_gates) & set(base_gates))
+    skipped = sorted(set(fresh_gates) ^ set(base_gates))
+    failures = []
+    print(
+        f"check_bench: {fresh_path} vs {base_path} "
+        f"(tolerance {tol:.0%}{', quick mode' if quick else ''})"
+    )
+    for name in shared:
+        got, want = float(fresh_gates[name]), float(base_gates[name])
+        floor = want * (1.0 - tol)
+        verdict = "ok" if got >= floor else "REGRESSION"
+        print(f"  {name:<40} {got:8.3f} vs baseline {want:8.3f} (floor {floor:.3f}) {verdict}")
+        if got < floor:
+            failures.append(name)
+    for name in skipped:
+        where = "baseline" if name in base_gates else "fresh record"
+        print(f"  {name:<40} only in {where} — skipped")
+
+    if not shared:
+        print("check_bench: WARNING — no shared gate metrics; the gate is vacuous")
+        return 0
+    if failures:
+        print(
+            f"check_bench: FAIL — {len(failures)} metric(s) regressed more than {tol:.0%}: "
+            + ", ".join(failures)
+        )
+        print("  (override once with BITROM_BENCH_GATE=off; tune with BITROM_BENCH_TOL)")
+        return 1
+    print(f"check_bench: OK — {len(shared)} metric(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -31,6 +31,7 @@ struct RunStats {
 
 fn run(
     batches: usize,
+    threads: usize,
     model: &ModelConfig,
     trace_cfg: &TraceConfig,
     seed: u64,
@@ -38,6 +39,7 @@ fn run(
     let backend = HostBackend::new(model.clone(), seed)?;
     let serve = ServeConfig {
         max_batches: batches,
+        threads,
         ..ServeConfig::default()
     };
     let mut server = Server::new(backend, serve)?;
@@ -62,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         .opt("gen", "32", "max new tokens")
         .opt("seed", "1", "trace + weight seed")
         .opt("adapters", "2", "tenant LoRA adapters for the multi-tenant pass (0 = skip)")
+        .opt("threads", "0", "worker threads (0 = BITROM_THREADS or serial)")
         .flag("events", "also run the trace through the cirom event-counting path")
         .parse_env();
 
@@ -103,8 +106,9 @@ fn main() -> anyhow::Result<()> {
         }
     );
 
+    let threads = args.usize("threads");
     println!("\n-- 6-batch pipeline (paper configuration) --");
-    let six = run(6, &model, &trace_cfg, seed)?;
+    let six = run(6, threads, &model, &trace_cfg, seed)?;
     println!(
         "fabricated ROM sparsity {} | throughput {:.1} tok/s | median TBT {:.3} ms | \
          KV external reduction {} | explicit eDRAM refreshes {}",
@@ -117,7 +121,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(six.refreshes, 0, "DR eDRAM must need no explicit refreshes");
 
     println!("\n-- single-batch baseline (pipeline ablation) --");
-    let one = run(1, &model, &trace_cfg, seed)?;
+    let one = run(1, threads, &model, &trace_cfg, seed)?;
     println!(
         "throughput {:.1} tok/s | median TBT {:.3} ms",
         one.tokens_per_s,
@@ -128,11 +132,31 @@ fn main() -> anyhow::Result<()> {
         six.tokens_per_s / one.tokens_per_s.max(1e-9)
     );
 
+    let width_probe = ServeConfig {
+        threads,
+        ..ServeConfig::default()
+    };
+    let resolved = width_probe.resolved_threads();
+    if resolved != 1 {
+        // thread ablation: the same 6-batch trace on the serial engine.
+        // Tokens are bit-identical at any width (DESIGN.md §12) — only
+        // the throughput moves. Skipped entirely when the deployment
+        // already resolves to the serial engine.
+        println!("\n-- serial baseline (threads ablation, width 1) --");
+        let serial = run(6, 1, &model, &trace_cfg, seed)?;
+        println!(
+            "throughput {:.1} tok/s | parallel speedup {:.2}x at {resolved} worker thread(s)",
+            serial.tokens_per_s,
+            six.tokens_per_s / serial.tokens_per_s.max(1e-9),
+        );
+    }
+
     let n_adapters = args.usize("adapters");
     if n_adapters > 0 {
         println!("\n-- multi-tenant LoRA pass ({n_adapters} adapters, rank 16 on VOD) --");
         let serve = ServeConfig {
             n_adapters,
+            threads,
             ..ServeConfig::default()
         };
         let lora = serve.lora_config()?.expect("adapters enabled");

@@ -1,14 +1,20 @@
 //! Host GEMV/GEMM kernel benchmarks: per-trit base-3 reference vs the
 //! word-parallel bitplane engine at LLaMA-shaped sizes across
-//! sparsities (EXPERIMENTS.md §Perf). Emits `BENCH_gemv.json` at the
-//! repository root so the perf trajectory is recorded across PRs.
+//! sparsities, plus the kernel threads sweep (sharded GEMM at 1/2/4
+//! pool workers — EXPERIMENTS.md §Perf, §Threads). Emits
+//! `BENCH_gemv.json` at the repository root so the perf trajectory is
+//! recorded across PRs; its `gates` object feeds the CI
+//! perf-regression gate (`ci/check_bench.py` vs `BENCH_baseline/`).
 //!
 //!   cargo bench --bench bench_gemv            # full sweep (~minutes)
 //!   BITROM_BENCH_QUICK=1 cargo bench --bench bench_gemv
 //!
 //! Override the output path with BITROM_BENCH_OUT.
 
-use bitrom::report::{gemv_perf_json, gemv_perf_study, gemv_perf_table};
+use bitrom::report::{
+    gemm_threads_sweep, gemm_threads_table, gemv_perf_json, gemv_perf_study, gemv_perf_table,
+    threads_speedup,
+};
 use bitrom::util::bench::bench_out_path;
 
 fn main() {
@@ -29,8 +35,20 @@ fn main() {
         );
     }
 
+    // kernel threads sweep: sharded GEMM vs the serial kernel (always
+    // at the full 2048x2048 shape so fork cost is amortized; every
+    // width is asserted bit-identical before timing)
+    let tpoints = gemm_threads_sweep(false);
+    println!("{}", gemm_threads_table(&tpoints));
+    if let Some(s4) = threads_speedup(&tpoints, 4) {
+        println!(
+            "4-thread gemm speedup: {s4:.2}x {}",
+            if s4 > 1.5 { "(PASS: > 1.5x bar)" } else { "(BELOW the 1.5x bar!)" }
+        );
+    }
+
     let path = bench_out_path("BENCH_gemv.json");
-    let json = gemv_perf_json(&points, "bench_gemv");
+    let json = gemv_perf_json(&points, &tpoints, "bench_gemv");
     match std::fs::write(&path, json.to_string_pretty() + "\n") {
         Ok(()) => println!("recorded {}", path.display()),
         Err(e) => eprintln!("could not write {}: {e}", path.display()),

@@ -2,9 +2,13 @@
 //! workload through `Server<HostBackend>` with 0 vs N tenant adapters
 //! (identical prompts/budgets — adapter ids are assigned post-hoc so
 //! the two runs differ only in the deltas), plus the task-switch
-//! traffic and the measured per-token adapter op overhead. Emits
-//! `BENCH_lora.json` at the repository root so the adapter-serving
-//! trajectory is recorded across PRs.
+//! traffic and the measured per-token adapter op overhead. The
+//! adapter-serving point is also swept across 1/4 worker threads
+//! (DESIGN.md §12) — adapter accounting merges per-op, so the measured
+//! overhead and switch traffic must not move with the width. Emits
+//! `BENCH_lora.json` at the repository root; its `gates` object feeds
+//! the CI perf-regression gate (`ci/check_bench.py` vs
+//! `BENCH_baseline/`).
 //!
 //!   cargo bench --bench bench_lora            # full trace
 //!   BITROM_BENCH_QUICK=1 cargo bench --bench bench_lora
@@ -21,6 +25,7 @@ use bitrom::util::json::Json;
 
 struct Point {
     adapters: usize,
+    threads: usize,
     tokens_per_s: f64,
     tokens: u64,
     measured_overhead: f64,
@@ -47,7 +52,11 @@ fn main() -> anyhow::Result<()> {
     );
     let mut points = Vec::new();
     let mut base_tput = 0.0f64;
-    for n_adapters in [0usize, 4] {
+    let mut adapters_serial_tput = 0.0f64;
+    let mut serial_overhead = 0.0f64;
+    // (0 adapters, serial) is the baseline; the 4-adapter point is
+    // swept across worker-thread widths — identical workload per run
+    for (n_adapters, threads) in [(0usize, 1usize), (4, 1), (4, 2), (4, 4)] {
         let backend = if n_adapters > 0 {
             let reg = AdapterRegistry::fabricate(&model, &lora, n_adapters, 0xADA9)?;
             HostBackend::with_adapters(model.clone(), 0xB17, reg)?
@@ -57,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         let serve = ServeConfig {
             max_batches: 6,
             n_adapters,
+            threads,
             ..ServeConfig::default()
         };
         let mut server = Server::new(backend, serve)?;
@@ -74,8 +84,12 @@ fn main() -> anyhow::Result<()> {
             base_tput = tput;
         }
         let lora_stats = metrics.lora.unwrap_or_default();
+        if n_adapters > 0 && threads == 1 {
+            adapters_serial_tput = tput;
+            serial_overhead = lora_stats.measured_op_overhead();
+        }
         println!(
-            "  {n_adapters} adapters: {:>8.1} tok/s  (x{:.2} vs base)  \
+            "  {n_adapters} adapters @ {threads} thread(s): {:>8.1} tok/s  (x{:.2} vs base)  \
              measured op overhead {:.2}%  cold loads {}  streamed {} B",
             tput,
             tput / base_tput.max(1e-9),
@@ -85,9 +99,15 @@ fn main() -> anyhow::Result<()> {
         );
         if n_adapters > 0 {
             assert!(lora_stats.binds as usize >= n_requests.min(n_adapters));
+            // per-op merged accounting is thread-count-invariant
+            assert!(
+                (lora_stats.measured_op_overhead() - serial_overhead).abs() < 1e-12,
+                "adapter accounting moved with thread width"
+            );
         }
         points.push(Point {
             adapters: n_adapters,
+            threads,
             tokens_per_s: tput,
             tokens: metrics.tokens_out,
             measured_overhead: lora_stats.measured_op_overhead(),
@@ -104,6 +124,17 @@ fn main() -> anyhow::Result<()> {
         analytic * 100.0,
         adapter_bytes,
         reload_bytes,
+    );
+
+    let adapter_ratio = adapters_serial_tput / base_tput.max(1e-9);
+    let threads_4v1 = points
+        .iter()
+        .find(|p| p.adapters > 0 && p.threads == 4)
+        .map(|p| p.tokens_per_s / adapters_serial_tput.max(1e-9))
+        .unwrap_or(0.0);
+    println!(
+        "adapter throughput ratio {adapter_ratio:.2} (serial) | \
+         threads speedup {threads_4v1:.2}x (4 threads, 4 adapters)"
     );
 
     let json = Json::obj(vec![
@@ -123,6 +154,7 @@ fn main() -> anyhow::Result<()> {
                     .map(|p| {
                         Json::obj(vec![
                             ("adapters", Json::num(p.adapters as f64)),
+                            ("threads", Json::num(p.threads as f64)),
                             ("tokens_per_s", Json::num(p.tokens_per_s)),
                             ("tokens", Json::num(p.tokens as f64)),
                             ("measured_overhead", Json::num(p.measured_overhead)),
@@ -132,6 +164,13 @@ fn main() -> anyhow::Result<()> {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                ("adapter_throughput_ratio", Json::num(adapter_ratio)),
+                ("lora_threads_speedup_4v1", Json::num(threads_4v1)),
+            ]),
         ),
     ]);
     let path = bench_out_path("BENCH_lora.json");

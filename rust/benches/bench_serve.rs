@@ -1,9 +1,17 @@
-//! Offline serving throughput vs in-flight batch count: the same trace
-//! through `Server<HostBackend>` at 1/2/4/6 slots — the §V-B "pipeline
-//! keeps all partitions busy" claim measured end-to-end (batcher +
-//! pipeline + KV accounting included), no artifacts needed. Emits
-//! `BENCH_serve.json` at the repository root so the serving-perf
-//! trajectory is recorded across PRs.
+//! Offline serving throughput, measured end-to-end through
+//! `Server<HostBackend>` (batcher + pipeline + KV accounting, no
+//! artifacts needed) along two axes:
+//!
+//! * **batches** — the same trace at 1/2/4/6 in-flight slots (the §V-B
+//!   "pipeline keeps all partitions busy" claim), serial engine;
+//! * **threads** — the same trace at the paper's 6 slots across
+//!   1/2/4 worker threads (the parallel execution engine, DESIGN.md
+//!   §12). Tokens are asserted bit-identical across widths before any
+//!   number is recorded.
+//!
+//! Emits `BENCH_serve.json` at the repository root; its `gates` object
+//! (scale-free speedups) feeds the CI perf-regression gate
+//! (`ci/check_bench.py` vs `BENCH_baseline/`).
 //!
 //!   cargo bench --bench bench_serve            # full trace
 //!   BITROM_BENCH_QUICK=1 cargo bench --bench bench_serve
@@ -19,10 +27,55 @@ use bitrom::util::json::Json;
 
 struct Point {
     batches: usize,
+    threads: usize,
     tokens_per_s: f64,
     tbt_p50_ms: f64,
     tbt_p95_ms: f64,
     tokens: u64,
+}
+
+fn run_point(
+    model: &ModelConfig,
+    trace_cfg: &TraceConfig,
+    batches: usize,
+    threads: usize,
+) -> anyhow::Result<(Point, Vec<(u64, Vec<i32>)>)> {
+    let backend = HostBackend::new(model.clone(), 0xB17)?;
+    let serve = ServeConfig {
+        max_batches: batches,
+        threads,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(backend, serve)?;
+    let (done, mut metrics) = server.run_trace(generate(trace_cfg))?;
+    assert_eq!(done.len(), trace_cfg.n_requests, "every request must complete");
+    let kv = metrics.kv.as_ref().expect("host backend measures KV stats");
+    assert_eq!(kv.retention_failures, 0);
+    let mut tokens: Vec<(u64, Vec<i32>)> = done.into_iter().map(|r| (r.id, r.tokens)).collect();
+    tokens.sort_by_key(|(id, _)| *id);
+    Ok((
+        Point {
+            batches,
+            threads,
+            tokens_per_s: metrics.tokens_per_s(),
+            tbt_p50_ms: metrics.tbt.pct(50.0) * 1e3,
+            tbt_p95_ms: metrics.tbt.pct(95.0) * 1e3,
+            tokens: metrics.tokens_out,
+        },
+        tokens,
+    ))
+}
+
+fn point_json(p: &Point, vs: f64) -> Json {
+    Json::obj(vec![
+        ("batches", Json::num(p.batches as f64)),
+        ("threads", Json::num(p.threads as f64)),
+        ("tokens_per_s", Json::num(p.tokens_per_s)),
+        ("tbt_p50_ms", Json::num(p.tbt_p50_ms)),
+        ("tbt_p95_ms", Json::num(p.tbt_p95_ms)),
+        ("tokens", Json::num(p.tokens as f64)),
+        ("speedup_vs_base", Json::num(vs)),
+    ])
 }
 
 fn main() -> anyhow::Result<()> {
@@ -38,48 +91,68 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!(
-        "== bench_serve: offline Server<HostBackend>, {} requests, gen <= {gen_len} ==",
-        n_requests
+        "== bench_serve: offline Server<HostBackend>, {n_requests} requests, gen <= {gen_len} =="
     );
-    let mut points = Vec::new();
+
+    // axis 1: batching ablation on the serial engine
+    println!("-- batches sweep (threads = 1) --");
+    let mut batch_points = Vec::new();
     let mut single = 0.0f64;
     for batches in [1usize, 2, 4, 6] {
-        let backend = HostBackend::new(model.clone(), 0xB17)?;
-        let serve = ServeConfig {
-            max_batches: batches,
-            ..ServeConfig::default()
-        };
-        let mut server = Server::new(backend, serve)?;
-        let (done, mut metrics) = server.run_trace(generate(&trace_cfg))?;
-        assert_eq!(done.len(), n_requests, "every request must complete");
-        let kv = metrics.kv.as_ref().expect("host backend measures KV stats");
-        assert_eq!(kv.retention_failures, 0);
-        let tput = metrics.tokens_per_s();
+        let (p, _) = run_point(&model, &trace_cfg, batches, 1)?;
         if batches == 1 {
-            single = tput;
+            single = p.tokens_per_s;
         }
         println!(
             "  {batches} batches: {:>8.1} tok/s  (x{:.2} vs single)  \
              TBT p50 {:.3} ms  p95 {:.3} ms",
-            tput,
-            tput / single.max(1e-9),
-            metrics.tbt.pct(50.0) * 1e3,
-            metrics.tbt.pct(95.0) * 1e3,
+            p.tokens_per_s,
+            p.tokens_per_s / single.max(1e-9),
+            p.tbt_p50_ms,
+            p.tbt_p95_ms,
         );
-        points.push(Point {
-            batches,
-            tokens_per_s: tput,
-            tbt_p50_ms: metrics.tbt.pct(50.0) * 1e3,
-            tbt_p95_ms: metrics.tbt.pct(95.0) * 1e3,
-            tokens: metrics.tokens_out,
-        });
+        batch_points.push(p);
+    }
+    let best = batch_points.iter().map(|p| p.tokens_per_s).fold(0f64, f64::max);
+    println!("batching speedup: {:.2}x (best vs 1 slot)", best / single.max(1e-9));
+
+    // axis 2: threads sweep at the paper's 6 slots — tokens must be
+    // bit-identical at every width (DESIGN.md §12) before any
+    // throughput is recorded
+    println!("-- threads sweep (batches = 6) --");
+    let mut thread_points = Vec::new();
+    let mut serial_6 = 0.0f64;
+    let mut serial_tokens: Vec<(u64, Vec<i32>)> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let (p, tokens) = run_point(&model, &trace_cfg, 6, threads)?;
+        if threads == 1 {
+            serial_6 = p.tokens_per_s;
+            serial_tokens = tokens;
+        } else {
+            assert_eq!(tokens, serial_tokens, "served tokens diverged at {threads} threads");
+        }
+        println!(
+            "  {threads} threads: {:>8.1} tok/s  (x{:.2} vs serial)  \
+             TBT p50 {:.3} ms  p95 {:.3} ms",
+            p.tokens_per_s,
+            p.tokens_per_s / serial_6.max(1e-9),
+            p.tbt_p50_ms,
+            p.tbt_p95_ms,
+        );
+        thread_points.push(p);
     }
 
-    let best = points.iter().map(|p| p.tokens_per_s).fold(0f64, f64::max);
-    println!(
-        "batching speedup: {:.2}x (best vs 1 slot)",
-        best / single.max(1e-9)
-    );
+    let speedup_6v1 = batch_points
+        .iter()
+        .find(|p| p.batches == 6)
+        .map(|p| p.tokens_per_s / single.max(1e-9))
+        .unwrap_or(0.0);
+    let threads_4v1 = thread_points
+        .iter()
+        .find(|p| p.threads == 4)
+        .map(|p| p.tokens_per_s / serial_6.max(1e-9))
+        .unwrap_or(0.0);
+    println!("threads speedup: {threads_4v1:.2}x (4 threads vs serial at 6 batches)");
 
     let json = Json::obj(vec![
         ("bench", Json::str("bench_serve")),
@@ -90,23 +163,27 @@ fn main() -> anyhow::Result<()> {
         (
             "points",
             Json::Arr(
-                points
+                batch_points
                     .iter()
-                    .map(|p| {
-                        Json::obj(vec![
-                            ("batches", Json::num(p.batches as f64)),
-                            ("tokens_per_s", Json::num(p.tokens_per_s)),
-                            ("tbt_p50_ms", Json::num(p.tbt_p50_ms)),
-                            ("tbt_p95_ms", Json::num(p.tbt_p95_ms)),
-                            ("tokens", Json::num(p.tokens as f64)),
-                            (
-                                "speedup_vs_1",
-                                Json::num(p.tokens_per_s / single.max(1e-9)),
-                            ),
-                        ])
-                    })
+                    .map(|p| point_json(p, p.tokens_per_s / single.max(1e-9)))
                     .collect(),
             ),
+        ),
+        (
+            "threads_points",
+            Json::Arr(
+                thread_points
+                    .iter()
+                    .map(|p| point_json(p, p.tokens_per_s / serial_6.max(1e-9)))
+                    .collect(),
+            ),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                ("batching_speedup_6v1", Json::num(speedup_6v1)),
+                ("threads_speedup_4v1", Json::num(threads_4v1)),
+            ]),
         ),
     ]);
     let path = bench_out_path("BENCH_serve.json");

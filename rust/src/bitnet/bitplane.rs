@@ -21,12 +21,20 @@
 
 use super::pack::PackedTrits;
 use super::Trit;
+use crate::util::pool::{chunk_bounds, Pool};
 
 /// Above this many populated lanes in a 64-row word, a straight
 /// whole-word sign-select pass beats per-set-bit iteration (the
 /// bit-iteration loop costs ~2 dependent ops per set bit; the dense
 /// pass streams all lanes branch-free).
 const DENSE_WORD_CUTOVER: u32 = 32;
+
+/// Below this many weights a kernel stays serial no matter what width
+/// the caller's pool requests: a `thread::scope` fork costs tens of
+/// microseconds, which dwarfs a small GEMV. The cutoff only affects
+/// speed — sharding is bit-identical at any width (each output column
+/// is always accumulated whole, in row order, by exactly one worker).
+const PAR_MIN_WEIGHTS: usize = 64 * 1024;
 
 /// A ternary weight matrix decomposed into per-column sign bitplanes.
 #[derive(Debug, Clone, PartialEq)]
@@ -156,19 +164,57 @@ impl BitplaneMatrix {
     }
 
     /// Integer GEMV, bit-identical to `ref_gemv`: `y[c] = Σ_r x[r]·w[r][c]`
-    /// with exact i64 accumulation.
+    /// with exact i64 accumulation. Shards output columns across the
+    /// process-default pool ([`Pool::from_env`], serial unless
+    /// `BITROM_THREADS` is set).
     pub fn gemv(&self, x: &[i32]) -> Vec<i64> {
+        self.gemv_with(x, &Pool::from_env())
+    }
+
+    /// [`Self::gemv`] on an explicit pool. Each worker owns a
+    /// contiguous column range; a column's i64 accumulation is always
+    /// performed whole and in row order by one worker, so the result
+    /// is bit-identical at every width (tested at 1/2/4/7 threads).
+    pub fn gemv_with(&self, x: &[i32], pool: &Pool) -> Vec<i64> {
         let mut y = vec![0i64; self.cols];
-        self.gemv_into(x, &mut y);
+        self.gemv_into_with(x, &mut y, pool);
         y
     }
 
     /// GEMV into a caller-provided output buffer (overwrites `y`).
     pub fn gemv_into(&self, x: &[i32], y: &mut [i64]) {
+        self.gemv_into_with(x, y, &Pool::from_env());
+    }
+
+    /// [`Self::gemv_into`] on an explicit pool: the output slice is
+    /// split into per-worker column chunks (disjoint `&mut` views into
+    /// the same buffer — no copies, no stitching).
+    pub fn gemv_into_with(&self, x: &[i32], y: &mut [i64], pool: &Pool) {
         assert_eq!(x.len(), self.rows, "gemv dim mismatch");
         assert_eq!(y.len(), self.cols, "gemv output dim mismatch");
+        let width = self.shard_width(pool);
+        if width <= 1 {
+            self.gemv_cols(x, 0, self.cols, y);
+            return;
+        }
+        let cols = self.cols;
+        std::thread::scope(|scope| {
+            let mut rest: &mut [i64] = y;
+            for w in 0..width {
+                let (lo, hi) = chunk_bounds(cols, width, w);
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                scope.spawn(move || self.gemv_cols(x, lo, hi, chunk));
+            }
+        });
+    }
+
+    /// Serial GEMV over columns `[c0, c1)` into `out` (`out[c - c0]` =
+    /// column `c`) — the one accumulation loop every GEMV path runs.
+    fn gemv_cols(&self, x: &[i32], c0: usize, c1: usize, out: &mut [i64]) {
+        debug_assert_eq!(out.len(), c1 - c0);
         let wpc = self.words_per_col;
-        for (c, out) in y.iter_mut().enumerate() {
+        for (c, out) in (c0..c1).zip(out.iter_mut()) {
             let base = c * wpc;
             let pcol = &self.plus[base..base + wpc];
             let mcol = &self.minus[base..base + wpc];
@@ -205,27 +251,68 @@ impl BitplaneMatrix {
         }
     }
 
+    /// Effective shard width for this matrix on `pool`: serial below
+    /// [`PAR_MIN_WEIGHTS`], else capped at one column per worker.
+    fn shard_width(&self, pool: &Pool) -> usize {
+        if self.rows * self.cols < PAR_MIN_WEIGHTS {
+            return 1;
+        }
+        pool.threads().min(self.cols).max(1)
+    }
+
     /// Batched integer GEMM over activation rows, bit-identical to
-    /// mapping `ref_gemv` over `xs`.
+    /// mapping `ref_gemv` over `xs`. Shards output columns across the
+    /// process-default pool ([`Pool::from_env`]).
     ///
     /// The win over repeated `gemv` calls: each column word's bit
     /// pattern is decoded ONCE into (row, sign) pairs and replayed
     /// across the whole batch, so mask iteration amortizes over the
     /// batch dimension (the LoRA merge, report, and KV-study paths all
     /// push multiple activation rows through the same weights).
-    pub fn gemm<X: AsRef<[i32]>>(&self, xs: &[X]) -> Vec<Vec<i64>> {
+    pub fn gemm<X: AsRef<[i32]> + Sync>(&self, xs: &[X]) -> Vec<Vec<i64>> {
+        self.gemm_with(xs, &Pool::from_env())
+    }
+
+    /// [`Self::gemm`] on an explicit pool. Workers own contiguous
+    /// column ranges of every batch row; per-column accumulation order
+    /// is exactly the serial kernel's, so results are bit-identical at
+    /// every width (tested at 1/2/4/7 threads).
+    pub fn gemm_with<X: AsRef<[i32]> + Sync>(&self, xs: &[X], pool: &Pool) -> Vec<Vec<i64>> {
         for x in xs {
             assert_eq!(x.as_ref().len(), self.rows, "gemm dim mismatch");
         }
-        let mut ys = vec![vec![0i64; self.cols]; xs.len()];
         if xs.is_empty() {
-            return ys;
+            return Vec::new();
         }
+        let width = self.shard_width(pool);
+        if width <= 1 {
+            return self.gemm_cols(xs, 0, self.cols);
+        }
+        let cols = self.cols;
+        let parts = pool.run(width, |w| {
+            let (lo, hi) = chunk_bounds(cols, width, w);
+            self.gemm_cols(xs, lo, hi)
+        });
+        // stitch the per-worker column chunks back into full rows
+        let mut ys: Vec<Vec<i64>> = (0..xs.len()).map(|_| Vec::with_capacity(cols)).collect();
+        for part in parts {
+            for (y, chunk) in ys.iter_mut().zip(part) {
+                y.extend(chunk);
+            }
+        }
+        ys
+    }
+
+    /// Serial batched GEMM over columns `[c0, c1)`: returns
+    /// `[batch][c1 - c0]` partial rows — the one accumulation loop
+    /// every GEMM path runs.
+    fn gemm_cols<X: AsRef<[i32]>>(&self, xs: &[X], c0: usize, c1: usize) -> Vec<Vec<i64>> {
+        let mut ys = vec![vec![0i64; c1 - c0]; xs.len()];
         let wpc = self.words_per_col;
         // decoded (row, sign) scratch for one 64-row word
         let mut rows_buf = [0usize; 64];
         let mut sign_buf = [0i64; 64];
-        for c in 0..self.cols {
+        for c in c0..c1 {
             let base = c * wpc;
             let pcol = &self.plus[base..base + wpc];
             let mcol = &self.minus[base..base + wpc];
@@ -244,7 +331,7 @@ impl BitplaneMatrix {
                             let sign = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
                             acc += sign * xv as i64;
                         }
-                        ys[b][c] += acc;
+                        ys[b][c - c0] += acc;
                     }
                 } else {
                     let mut n = 0usize;
@@ -262,7 +349,7 @@ impl BitplaneMatrix {
                         for k in 0..n {
                             acc += sign_buf[k] * x[rows_buf[k]] as i64;
                         }
-                        ys[b][c] += acc;
+                        ys[b][c - c0] += acc;
                     }
                 }
             }
@@ -491,5 +578,74 @@ mod tests {
     #[should_panic(expected = "dim mismatch")]
     fn dim_mismatch_panics() {
         BitplaneMatrix::from_trits(2, 2, &[0; 4]).gemv(&[1]);
+    }
+
+    /// A shape big enough (≥ PAR_MIN_WEIGHTS) that the pooled paths
+    /// genuinely fork workers instead of hitting the serial cutoff.
+    fn parallel_case() -> (BitplaneMatrix, Vec<i32>, Vec<Vec<i32>>) {
+        let mut rng = crate::util::rng::Rng::new(0x7AE);
+        let (rows, cols) = (1031, 130); // >64k weights, ∤64 rows, odd cols
+        let trits: Vec<Trit> = (0..rows * cols).map(|_| rng.trit(0.3)).collect();
+        let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+        let xs: Vec<Vec<i32>> = (0..5)
+            .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
+            .collect();
+        (BitplaneMatrix::from_trits(rows, cols, &trits), x, xs)
+    }
+
+    #[test]
+    fn sharded_gemv_is_bit_identical_at_every_width() {
+        // DESIGN.md §12: each output column is accumulated whole by one
+        // worker, so sharding cannot change a single bit
+        let (plane, x, _) = parallel_case();
+        let serial = plane.gemv_with(&x, &Pool::serial());
+        for threads in [2usize, 4, 7, 64] {
+            let got = plane.gemv_with(&x, &Pool::new(threads));
+            assert_eq!(got, serial, "gemv diverged at {threads} threads");
+        }
+        // the into-buffer variant shards the same way
+        let mut y = vec![0i64; plane.cols()];
+        plane.gemv_into_with(&x, &mut y, &Pool::new(4));
+        assert_eq!(y, serial);
+    }
+
+    #[test]
+    fn sharded_gemm_is_bit_identical_at_every_width() {
+        let (plane, _, xs) = parallel_case();
+        let serial = plane.gemm_with(&xs, &Pool::serial());
+        for threads in [2usize, 4, 7] {
+            let got = plane.gemm_with(&xs, &Pool::new(threads));
+            assert_eq!(got, serial, "gemm diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn sharded_kernels_handle_degenerate_shapes() {
+        let pool = Pool::new(7);
+        // 0-row matrix: every column accumulates nothing
+        let zero_rows = BitplaneMatrix::from_trits(0, 5, &[]);
+        assert_eq!(zero_rows.gemv_with(&[], &pool), vec![0i64; 5]);
+        // 0-column matrix: empty output
+        let zero_cols = BitplaneMatrix::from_trits(4, 0, &[]);
+        assert!(zero_cols.gemv_with(&[1, 2, 3, 4], &pool).is_empty());
+        // 1-row matrix with far more workers than rows or columns
+        let one_row = BitplaneMatrix::from_trits(1, 3, &[1, -1, 0]);
+        assert_eq!(one_row.gemv_with(&[5], &pool), vec![5, -5, 0]);
+        assert_eq!(
+            one_row.gemm_with(&[vec![2], vec![-3]], &Pool::new(64)),
+            vec![vec![2, -2, 0], vec![-3, 3, 0]]
+        );
+    }
+
+    #[test]
+    fn small_matrices_stay_on_the_serial_path() {
+        // below PAR_MIN_WEIGHTS the pooled call must not fork (perf
+        // guard); behaviorally it is indistinguishable — assert the
+        // results anyway so the cutoff can never change semantics
+        let plane = BitplaneMatrix::from_trits(3, 2, &[1, -1, 0, 1, -1, 0]);
+        assert_eq!(plane.shard_width(&Pool::new(8)), 1);
+        assert_eq!(plane.gemv_with(&[2, 3, 5], &Pool::new(8)), plane.gemv(&[2, 3, 5]));
+        let (big, _, _) = parallel_case();
+        assert!(big.shard_width(&Pool::new(8)) > 1);
     }
 }

@@ -123,7 +123,7 @@ impl MacroBank {
     }
 
     /// Batched functional GEMM across the whole bank.
-    pub fn gemm_functional<X: AsRef<[i32]>>(&self, batch: &[X]) -> Vec<Vec<i64>> {
+    pub fn gemm_functional<X: AsRef<[i32]> + Sync>(&self, batch: &[X]) -> Vec<Vec<i64>> {
         self.planes.gemm(batch)
     }
 }

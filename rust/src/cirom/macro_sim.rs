@@ -164,7 +164,7 @@ impl BitRomMacro {
     }
 
     /// Batched functional GEMM on the bitplane twin.
-    pub fn gemm_functional<X: AsRef<[i32]>>(&self, batch: &[X]) -> Vec<Vec<i64>> {
+    pub fn gemm_functional<X: AsRef<[i32]> + Sync>(&self, batch: &[X]) -> Vec<Vec<i64>> {
         self.planes().gemm(batch)
     }
 

@@ -37,6 +37,13 @@ pub struct ServeConfig {
     pub adapter_placement: String,
     /// Greedy decoding (argmax) vs top-k sampling.
     pub top_k: usize,
+    /// Worker threads for the parallel execution engine (DESIGN.md
+    /// §12): per-slot round execution in the server plus kernel
+    /// column-sharding in the backend. `0` = inherit the process
+    /// default (`BITROM_THREADS`, else 1); `1` = the serial path.
+    /// Thread count never changes served tokens or merged counters —
+    /// only throughput.
+    pub threads: usize,
     /// Sampling seed (ignored for greedy).
     pub seed: u64,
     /// Modeled hardware token-between-token time (s) used to advance
@@ -61,6 +68,7 @@ impl Default for ServeConfig {
             adapter_rank: 16,
             adapter_placement: "VOD".into(),
             top_k: 1,
+            threads: 0,
             seed: 0,
             hw_tbt_s: 0.005,
         }
@@ -107,6 +115,17 @@ impl ServeConfig {
         Ok(())
     }
 
+    /// The worker-pool width this deployment resolves to: the explicit
+    /// [`Self::threads`] knob, else the process default
+    /// (`BITROM_THREADS`, else 1 = serial).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::pool::env_threads()
+        } else {
+            self.threads
+        }
+    }
+
     /// The adapter configuration of this deployment (`None` when
     /// adapter serving is disabled): the parsed placement at
     /// [`Self::adapter_rank`], with the paper's 6-bit weights / 8-bit
@@ -138,6 +157,7 @@ impl ServeConfig {
             ("adapter_rank", Json::num(self.adapter_rank as f64)),
             ("adapter_placement", Json::str(self.adapter_placement.clone())),
             ("top_k", Json::num(self.top_k as f64)),
+            ("threads", Json::num(self.threads as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("hw_tbt_s", Json::num(self.hw_tbt_s)),
         ])
@@ -166,6 +186,7 @@ impl ServeConfig {
                 .unwrap_or(&d.adapter_placement)
                 .to_string(),
             top_k: get("top_k", d.top_k),
+            threads: get("threads", d.threads),
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
             hw_tbt_s: j.get("hw_tbt_s").and_then(Json::as_f64).unwrap_or(d.hw_tbt_s),
         };
@@ -257,11 +278,29 @@ mod tests {
             adapter_rank: 8,
             adapter_placement: "QKGU".into(),
             top_k: 4,
+            threads: 3,
             seed: 99,
             hw_tbt_s: 0.002,
         };
         let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn threads_resolve_explicit_over_process_default() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.threads, 0, "auto by default");
+        // explicit widths win over the env default
+        c.threads = 4;
+        assert_eq!(c.resolved_threads(), 4);
+        assert!(c.validate().is_ok());
+        // 0 defers to the process default (serial unless BITROM_THREADS
+        // is set in the environment)
+        c.threads = 0;
+        assert!(c.resolved_threads() >= 1);
+        // old configs without the field parse to auto
+        let j = Json::parse(r#"{"max_batches": 2}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().threads, 0);
     }
 
     #[test]

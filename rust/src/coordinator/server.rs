@@ -3,6 +3,18 @@
 //! so the DR-eDRAM retention argument is live-checked on every decode
 //! read. Generic over [`InferenceBackend`] — the same loop serves the
 //! PJRT artifact runtime and the offline host transformer.
+//!
+//! Execution is parallel per token round (DESIGN.md §12): each active
+//! slot's chain of pipeline stages (embed → partitions 0..P−1) runs as
+//! one unit of work on the worker pool — the software twin of the
+//! hardware pipeline's skewed lanes, which likewise never share a
+//! sequence between stages concurrently. Everything order-sensitive
+//! stays on the coordinator thread: admission, state creation and
+//! adapter binding, KV page *allocation* (via
+//! [`InferenceBackend::reserve_kv`], in slot order, so shared-tier
+//! placement is deterministic), the retention clock, sampling (one Rng,
+//! slot order), and metrics. Served tokens and all merged counters are
+//! therefore bit-identical at any `ServeConfig::threads` width.
 
 use std::time::Instant;
 
@@ -13,6 +25,7 @@ use crate::kvcache::KvStoreStats;
 use crate::lora::LoraServeStats;
 use crate::runtime::{InferenceBackend, Logits, SequenceState};
 use crate::trace::Request;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 use super::batcher::{Batcher, SlotState};
@@ -65,11 +78,19 @@ impl<B: InferenceBackend> Server<B> {
             "serve max_seq exceeds model max_seq"
         );
         backend.configure_kv(&serve)?;
+        // one width for the whole engine: the server's per-slot rounds
+        // and the backend's sharded kernels (1 = the serial path)
+        backend.set_threads(serve.resolved_threads());
         Ok(Server {
             rng: Rng::new(serve.seed),
             serve,
             backend,
         })
+    }
+
+    /// The worker-pool width this server executes rounds at.
+    pub fn threads(&self) -> usize {
+        self.serve.resolved_threads()
     }
 
     /// The backend this server schedules onto.
@@ -100,11 +121,21 @@ impl<B: InferenceBackend> Server<B> {
 
     /// Run a trace to completion (continuous batching). Returns the
     /// completed requests and serving metrics.
+    ///
+    /// Rounds execute across the deployment's worker pool (module
+    /// docs); `Sync`/`Send` bounds let workers borrow the backend and
+    /// take exclusive `&mut` access to their slot's state.
     pub fn run_trace(
         &mut self,
         requests: Vec<Request>,
-    ) -> Result<(Vec<CompletedRequest>, ServeMetrics)> {
+    ) -> Result<(Vec<CompletedRequest>, ServeMetrics)>
+    where
+        B: Sync,
+        B::State: Send,
+        B::Hidden: Send,
+    {
         let n_parts = self.backend.n_partitions();
+        let pool = Pool::new(self.serve.resolved_threads());
         let mut batcher = Batcher::new(self.serve.max_batches);
         for r in requests {
             anyhow::ensure!(
@@ -179,7 +210,10 @@ impl<B: InferenceBackend> Server<B> {
                 continue;
             }
 
-            // one token round through the partition pipeline
+            // one token round through the partition pipeline; the
+            // schedule models the hardware's skewed lanes and is still
+            // validated every round — execution collapses each lane's
+            // stage chain onto one pool worker (module docs)
             let sched = PipelineSchedule::for_round(&active, n_parts);
             sched
                 .validate(n_parts)
@@ -190,43 +224,57 @@ impl<B: InferenceBackend> Server<B> {
             hw_time += self.serve.hw_tbt_s;
             self.backend.advance_kv_clock(hw_time);
 
-            // per-slot hidden activations flowing between stages
+            // coordinator-side, in slot order (deterministic at any
+            // pool width): create + bind fresh prefill states, then
+            // reserve the round's KV pages so tier placement never
+            // depends on worker interleaving
+            for &slot in &active {
+                let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
+                if is_prefill && states[slot].is_none() {
+                    let mut state = self.backend.new_state()?;
+                    // bind the request's tenant adapter before any
+                    // partition runs: the adapter shapes every
+                    // projection of the sequence, prefill included
+                    let adapter = batcher.slot(slot).request.as_ref().unwrap().adapter_id;
+                    self.backend.bind_adapter(&mut state, adapter)?;
+                    states[slot] = Some(state);
+                }
+                let n_tokens = if is_prefill {
+                    batcher.slot(slot).request.as_ref().unwrap().prompt.len()
+                } else {
+                    1
+                };
+                self.backend.reserve_kv(states[slot].as_mut().unwrap(), n_tokens)?;
+            }
+
+            // per-slot round execution (embed + every partition stage)
+            // across the pool; each worker owns its slot's state
+            let backend = &self.backend;
+            let batcher_ref = &batcher;
+            let items: Vec<(usize, &mut B::State)> = states
+                .iter_mut()
+                .enumerate()
+                .filter(|(slot, s)| active.contains(slot) && s.is_some())
+                .map(|(slot, s)| (slot, s.as_mut().unwrap()))
+                .collect();
+            let round: Vec<(usize, Result<B::Hidden>, f64)> = pool.map(items, |(slot, state)| {
+                let t_op = Instant::now();
+                let sref = batcher_ref.slot(slot);
+                let prompt = if sref.state == SlotState::NeedsPrefill {
+                    Some(sref.request.as_ref().unwrap().prompt.as_slice())
+                } else {
+                    None
+                };
+                let h = run_slot_round(backend, n_parts, prompt, last_tok[slot], state);
+                (slot, h, t_op.elapsed().as_secs_f64())
+            });
+
+            // per-slot hidden activations for the head/sampling phase
             let mut hidden: Vec<Option<B::Hidden>> =
                 (0..self.serve.max_batches).map(|_| None).collect();
-
-            for op in &sched.ops {
-                let slot = op.slot;
-                let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
-                let t_op = Instant::now();
-                if op.partition == 0 {
-                    // entering the pipeline: embed
-                    let h = if is_prefill {
-                        let prompt = &batcher.slot(slot).request.as_ref().unwrap().prompt;
-                        self.backend.embed_prompt(prompt)?
-                    } else {
-                        self.backend.embed_token(last_tok[slot])?
-                    };
-                    hidden[slot] = Some(h);
-                    if states[slot].is_none() {
-                        let mut state = self.backend.new_state()?;
-                        // bind the request's tenant adapter before any
-                        // partition runs: the adapter shapes every
-                        // projection of the sequence, prefill included
-                        let adapter = batcher.slot(slot).request.as_ref().unwrap().adapter_id;
-                        self.backend.bind_adapter(&mut state, adapter)?;
-                        states[slot] = Some(state);
-                    }
-                }
-                let h_in = hidden[slot].take().expect("pipeline order broken");
-                let state = states[slot].as_mut().unwrap();
-                let h_out = if is_prefill {
-                    self.backend.run_partition_prefill(op.partition, &h_in, state)?
-                } else {
-                    let pos = state.pos();
-                    self.backend.run_partition_decode(op.partition, &h_in, pos, state)?
-                };
-                hidden[slot] = Some(h_out);
-                slot_compute[slot] += t_op.elapsed().as_secs_f64();
+            for (slot, h, compute_s) in round {
+                slot_compute[slot] += compute_s;
+                hidden[slot] = Some(h?);
             }
 
             // head + sampling per slot (KV reads/writes already ran —
@@ -312,6 +360,32 @@ impl<B: InferenceBackend> Server<B> {
         }
         Ok((done, metrics))
     }
+}
+
+/// One slot's full token round: embed (prompt or last token), then its
+/// chain of partition stages in order — the unit of work a pool worker
+/// executes. `prompt` is `Some` for the prefill round, `None` for
+/// decode (which runs every stage at the slot's current fixed `pos`;
+/// the coordinator advances `pos` afterwards in the sampling phase).
+fn run_slot_round<B: InferenceBackend>(
+    backend: &B,
+    n_parts: usize,
+    prompt: Option<&[i32]>,
+    last_tok: i32,
+    state: &mut B::State,
+) -> Result<B::Hidden> {
+    let mut h = match prompt {
+        Some(p) => backend.embed_prompt(p)?,
+        None => backend.embed_token(last_tok)?,
+    };
+    let pos = state.pos();
+    for part in 0..n_parts {
+        h = match prompt {
+            Some(_) => backend.run_partition_prefill(part, &h, state)?,
+            None => backend.run_partition_decode(part, &h, pos, state)?,
+        };
+    }
+    Ok(h)
 }
 
 #[cfg(test)]

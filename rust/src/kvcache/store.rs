@@ -368,20 +368,41 @@ impl KvStore {
         }
     }
 
+    /// Pre-allocate (and tier-place) the blocks covering the next
+    /// `n_tokens` appends to `layer`. Placement — on-die vs spill,
+    /// including any eviction — is decided *now*, so a serving
+    /// coordinator that reserves every sequence's round in a fixed
+    /// slot order makes block placement deterministic no matter how
+    /// worker threads later interleave the actual [`Self::append`]
+    /// calls (DESIGN.md §12). Reserving is idempotent for already-
+    /// covered tokens and counts nothing: writes are accounted when
+    /// the rows actually land.
+    pub fn reserve(&mut self, seq: &mut KvSeq, layer: usize, n_tokens: usize) {
+        let bt = self.cfg.block_tokens;
+        let need = (seq.lens[layer] + n_tokens).div_ceil(bt);
+        for bi in seq.tables[layer].len()..need {
+            let id = self.alloc_block(bi * bt);
+            seq.tables[layer].push(id);
+        }
+    }
+
     /// Append the next token's K/V rows for `layer` (token index =
     /// tokens appended to that layer so far). Counts one tier write at
-    /// the current clock. Rows must be exactly `kv_dim` wide.
+    /// the current clock. Rows must be exactly `kv_dim` wide. Uses the
+    /// block [`Self::reserve`] placed for this token if one exists;
+    /// otherwise allocates (and places) the block here.
     pub fn append(&mut self, seq: &mut KvSeq, layer: usize, k_row: &[f32], v_row: &[f32]) {
         let d = self.cfg.kv_dim;
         assert_eq!(k_row.len(), d, "K row width {} != kv_dim {d}", k_row.len());
         assert_eq!(v_row.len(), d, "V row width {} != kv_dim {d}", v_row.len());
         let token = seq.lens[layer];
         let bt = self.cfg.block_tokens;
-        if token % bt == 0 {
-            let id = self.alloc_block(token);
+        let bi = token / bt;
+        if seq.tables[layer].len() <= bi {
+            let id = self.alloc_block(bi * bt);
             seq.tables[layer].push(id);
         }
-        let id = *seq.tables[layer].last().expect("block table empty after alloc");
+        let id = seq.tables[layer][bi];
         let slot = token - self.blocks[id].as_ref().unwrap().first_token;
         let block = self.blocks[id].as_mut().unwrap();
         match &mut block.data {
@@ -891,6 +912,61 @@ mod tests {
         assert_eq!(stats.ondie_blocks_in_use, 2);
         assert_eq!(stats.evictions, 0);
         assert_eq!(stats.spilled_early_blocks, 0);
+    }
+
+    #[test]
+    fn reserve_pins_placement_before_append() {
+        // reservation allocates + places blocks without counting writes
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        store.reserve(&mut seq, 0, 10); // 3 blocks of 4 tokens
+        assert_eq!(store.ondie_blocks_in_use(), 2, "tokens 0..8 on-die");
+        assert_eq!(store.stats().accesses.ondie_writes, 0, "reserve writes nothing");
+        // re-reserving covered tokens is a no-op
+        store.reserve(&mut seq, 0, 4);
+        assert_eq!(store.ondie_blocks_in_use(), 2);
+        // appends land in the reserved blocks and only then count
+        let rows = fill(&mut store, &mut seq, 10, 21);
+        let stats = store.stats();
+        assert_eq!(stats.accesses.ondie_writes, 8 * 2, "both layers' early tokens");
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 10, false, &mut k, &mut v).unwrap();
+        let absmax = rows[0].iter().fold(0f32, |m, &x| m.max(x.abs()));
+        assert!((rows[0][0] - k[0]).abs() <= absmax * (0.5 / 127.0 + 1e-6));
+    }
+
+    #[test]
+    fn reserved_and_lazy_runs_place_blocks_identically() {
+        // a reserve-then-append run and a plain append run must end in
+        // the same tier state and counters — so the serving loop's
+        // coordinator-side reservation is invisible to accounting
+        let run = |reserve: bool| {
+            let mut store = KvStore::new(two_block_cfg());
+            let mut seq = store.new_seq();
+            if reserve {
+                store.reserve(&mut seq, 0, 12);
+            }
+            fill(&mut store, &mut seq, 12, 5);
+            let s = store.stats();
+            (
+                s.accesses.ondie_writes,
+                s.accesses.external_writes,
+                s.evictions,
+                s.spilled_early_blocks,
+                s.ondie_blocks_in_use,
+            )
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn retirement_recycles_reserved_but_unused_blocks() {
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        store.reserve(&mut seq, 0, 8);
+        assert_eq!(store.ondie_blocks_in_use(), 2);
+        store.retire_seq(&mut seq);
+        assert_eq!(store.ondie_blocks_in_use(), 0, "unused reservations recycled");
     }
 
     #[test]

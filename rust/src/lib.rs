@@ -16,7 +16,9 @@
 //! * [`coordinator`] — the serving layer: dynamic batcher, the 6-stage
 //!   macro-partition pipeline (paper §V-B), metrics, and the
 //!   [`coordinator::Server`], generic over the backend — all of it
-//!   tier-1-tested offline via `Server<HostBackend>`.
+//!   tier-1-tested offline via `Server<HostBackend>`. Token rounds run
+//!   per-slot-parallel on the worker pool, bit-identically at any
+//!   width (DESIGN.md §12).
 //! * [`bitnet`] — ternary substrate: packed storage, quantizers, the
 //!   golden `ref_gemv`, and the word-parallel [`bitnet::BitplaneMatrix`]
 //!   kernel engine that every host-side functional compute path runs on.
@@ -36,7 +38,8 @@
 //!   plus the measured KV memory energy ([`energy::KvEnergy`]) and
 //!   adapter task-switch energy ([`energy::AdapterEnergy`]).
 //! * [`util`] — offline substrates (json, args, rng, stats, bench,
-//!   property-check harness, tables).
+//!   property-check harness, tables, and the [`util::pool`]
+//!   scoped-thread worker pool the parallel execution engine runs on).
 
 #![warn(missing_docs)]
 

@@ -21,7 +21,7 @@
 //! [`LoraConfig::op_overhead_vs_host_projections`] models
 //! (`report::lora_serving` places the two side by side).
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use crate::config::ModelConfig;
 use crate::dram::DramParams;
@@ -102,16 +102,20 @@ impl LoraServeStats {
 
 /// Seeded, deterministic multi-tenant adapter store (module docs).
 /// Weights are immutable after fabrication; residency and MAC
-/// accounting live in interior-mutable counters because the serving
-/// API hands out `&self` (single-threaded, like the event counters).
+/// accounting live behind `Mutex`es because the serving API hands out
+/// `&self` and partition stages may execute on worker threads
+/// (DESIGN.md §12). Each op's tally is merged in one brief critical
+/// section, and every counter is a commutative sum (residency flips
+/// once, monotonically), so totals are bit-identical at any thread
+/// count.
 pub struct AdapterRegistry {
     model: ModelConfig,
     lora: LoraConfig,
     alpha: f32,
     adapters: Vec<Adapter>,
     dram: DramParams,
-    resident: RefCell<Vec<bool>>,
-    stats: RefCell<LoraServeStats>,
+    resident: Mutex<Vec<bool>>,
+    stats: Mutex<LoraServeStats>,
 }
 
 impl AdapterRegistry {
@@ -160,8 +164,8 @@ impl AdapterRegistry {
             alpha: 2.0 * lora.rank as f32,
             adapters,
             dram: DramParams::default(),
-            resident: RefCell::new(vec![false; n_adapters]),
-            stats: RefCell::new(LoraServeStats::default()),
+            resident: Mutex::new(vec![false; n_adapters]),
+            stats: Mutex::new(LoraServeStats::default()),
         })
     }
 
@@ -217,9 +221,9 @@ impl AdapterRegistry {
             "adapter {adapter} out of range ({} loaded)",
             self.adapters.len()
         );
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().expect("adapter stats poisoned");
         stats.binds += 1;
-        let mut resident = self.resident.borrow_mut();
+        let mut resident = self.resident.lock().expect("adapter residency poisoned");
         if !resident[idx] {
             resident[idx] = true;
             let bytes = self.adapter_bytes();
@@ -233,10 +237,11 @@ impl AdapterRegistry {
     /// Record the MACs of applying one adapter site to `rows`
     /// activation rows (called by the backend at the point of
     /// execution, so the measured overhead reflects the sites actually
-    /// wired in).
+    /// wired in). One brief lock per op — the per-op tally commutes,
+    /// so totals are thread-count-invariant.
     pub fn record_site_macs(&self, rows: u64, fan_in: usize, fan_out: usize) {
         let r = self.lora.rank as u64;
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().expect("adapter stats poisoned");
         stats.adapter_macs += rows * (fan_in as u64 * r + r * fan_out as u64);
         stats.base_macs += rows * fan_in as u64 * fan_out as u64;
         stats.adapter_rows += rows;
@@ -244,7 +249,7 @@ impl AdapterRegistry {
 
     /// Snapshot of the accumulated statistics.
     pub fn stats(&self) -> LoraServeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("adapter stats poisoned").clone()
     }
 
     /// Quantized storage of ONE tenant adapter (what a cold task
@@ -255,7 +260,8 @@ impl AdapterRegistry {
 
     /// On-die bytes currently held by resident adapters.
     pub fn resident_bytes(&self) -> u64 {
-        let n = self.resident.borrow().iter().filter(|&&r| r).count();
+        let resident = self.resident.lock().expect("adapter residency poisoned");
+        let n = resident.iter().filter(|&&r| r).count();
         n as u64 * self.adapter_bytes()
     }
 

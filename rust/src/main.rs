@@ -99,6 +99,7 @@ fn serve_trace_cfg(args: &Args, vocab: usize, n_adapters: usize) -> TraceConfig 
 fn serve_cfg(args: &Args) -> ServeConfig {
     ServeConfig {
         max_batches: args.usize("batches"),
+        threads: args.usize("threads"),
         seed: args.u64("seed"),
         ..ServeConfig::default()
     }
@@ -177,6 +178,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("adapters", "0", "tenant LoRA adapters to serve (--host; 0 = off)")
         .opt("adapter-rank", "16", "adapter rank (with --adapters)")
         .opt("placements", "VOD", "adapter placement sites (letters from QKVOGUD)")
+        .opt("threads", "0", "worker threads (0 = BITROM_THREADS or serial; width-invariant tokens)")
         .flag("host", "serve on the offline HostBackend (no artifacts/PJRT needed)")
         .flag("verbose", "per-request output");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
@@ -188,11 +190,13 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         serve.adapter_placement = args.str("placements").to_string();
         let backend = host_backend(&args, serve.max_seq, &serve)?;
         println!(
-            "fabricated host model {} ({} params, {} partitions, ROM sparsity {:.1}%)",
+            "fabricated host model {} ({} params, {} partitions, ROM sparsity {:.1}%, \
+             {} worker thread(s))",
             backend.model().name,
             backend.model().param_count(),
             backend.model().n_partitions,
             backend.rom_sparsity() * 100.0,
+            serve.resolved_threads(),
         );
         if let Some(reg) = backend.adapters() {
             println!(
@@ -253,6 +257,7 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("seed", "1", "weight seed for --host")
         .opt("adapter", "", "tenant adapter id to bind (--host; empty = base model)")
         .opt("adapters", "4", "tenant adapters fabricated when --adapter is set")
+        .opt("threads", "0", "kernel worker threads (0 = BITROM_THREADS or serial)")
         .flag("host", "generate on the offline HostBackend");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
     let prompt: Vec<i32> = args
@@ -272,6 +277,7 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
             serve.n_adapters = args.usize("adapters").max(adapter.unwrap_or(0) as usize + 1);
         }
         let backend = host_backend(&args, prompt.len() + args.usize("n"), &serve)?;
+        backend.set_threads(args.usize("threads"));
         let out = backend.generate_greedy_bound(&prompt, args.usize("n"), adapter)?;
         println!("prompt:    {prompt:?}");
         if let Some(id) = adapter {

@@ -11,6 +11,7 @@
 use crate::bitnet::{ref_gemv, TernaryMatrix};
 use crate::util::bench::{bench_config, Bench};
 use crate::util::json::Json;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 
@@ -123,11 +124,130 @@ pub fn gemv_perf_report(quick: bool) -> String {
     gemv_perf_table(&gemv_perf_study(quick))
 }
 
-/// JSON record (the `BENCH_gemv.json` payload).
-pub fn gemv_perf_json(points: &[GemvPerfPoint], source: &str) -> Json {
+/// One measured point of the kernel threads sweep: the batched GEMM at
+/// a fixed LLaMA shape, sharded across `threads` pool workers.
+#[derive(Debug, Clone)]
+pub struct GemmThreadsPoint {
+    /// Fan-in of the swept shape.
+    pub rows: usize,
+    /// Fan-out of the swept shape.
+    pub cols: usize,
+    /// Target zero fraction the weights were drawn at.
+    pub sparsity: f64,
+    /// Pool width the GEMM was sharded across (1 = the serial kernel).
+    pub threads: usize,
+    /// Mean ns per whole batched GEMM call at this width.
+    pub gemm_ns: f64,
+}
+
+/// Thread widths the sweep measures (1 is the serial baseline; the
+/// acceptance bar is >1.5× GEMM throughput at 4 threads on CI).
+pub const THREADS_SWEEP: [usize; 3] = [1, 2, 4];
+
+/// Kernel threads sweep (DESIGN.md §12, EXPERIMENTS.md §Threads): the
+/// batched GEMM at 2048×2048 / 30% sparsity across [`THREADS_SWEEP`]
+/// pool widths. The shape stays large even in quick mode so the fork
+/// cost is amortized and the sweep measures sharding, not spawn
+/// overhead. Every width is first asserted bit-identical to the serial
+/// kernel.
+pub fn gemm_threads_sweep(quick: bool) -> Vec<GemmThreadsPoint> {
+    let bench = if quick { Bench::quick() } else { bench_config() };
+    let (rows, cols, sparsity) = (2048usize, 2048usize, 0.3f64);
+    let mut rng = Rng::new(0x6E3B);
+    let w = TernaryMatrix::random(rows, cols, sparsity, &mut rng);
+    let batch: Vec<Vec<i32>> = (0..GEMM_BATCH)
+        .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
+        .collect();
+    let serial = w.gemm_with(&batch, &Pool::serial());
+    THREADS_SWEEP
+        .iter()
+        .map(|&threads| {
+            let pool = Pool::new(threads);
+            // correctness gate before any timing (invariant: sharding
+            // is bit-identical at every width)
+            assert_eq!(
+                w.gemm_with(&batch, &pool),
+                serial,
+                "sharded gemm diverged at {threads} threads"
+            );
+            let r = bench.run(&format!("gemm_t{threads}"), || w.gemm_with(&batch, &pool));
+            GemmThreadsPoint {
+                rows,
+                cols,
+                sparsity,
+                threads,
+                gemm_ns: r.mean_ns,
+            }
+        })
+        .collect()
+}
+
+/// Render the threads sweep as a table (speedups vs the width-1 row).
+pub fn gemm_threads_table(points: &[GemmThreadsPoint]) -> String {
+    let serial_ns = points
+        .iter()
+        .find(|p| p.threads == 1)
+        .map(|p| p.gemm_ns)
+        .unwrap_or(f64::NAN);
+    let mut t = Table::new("Sharded GEMM — threads vs throughput (batch = 8)").header(&[
+        "shape",
+        "sparsity",
+        "threads",
+        "gemm",
+        "speedup vs 1",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{}x{}", p.rows, p.cols),
+            format!("{:.1}", p.sparsity),
+            format!("{}", p.threads),
+            crate::util::bench::fmt_ns(p.gemm_ns),
+            format!("{:.2}x", serial_ns / p.gemm_ns),
+        ]);
+    }
+    t.render()
+}
+
+/// The scale-free speedup of the `threads`-wide GEMM over the serial
+/// one (the metric the CI perf gate tracks — machine-comparable,
+/// unlike absolute ns).
+pub fn threads_speedup(points: &[GemmThreadsPoint], threads: usize) -> Option<f64> {
+    let serial = points.iter().find(|p| p.threads == 1)?.gemm_ns;
+    let wide = points.iter().find(|p| p.threads == threads)?.gemm_ns;
+    Some(serial / wide)
+}
+
+/// JSON record (the `BENCH_gemv.json` payload). `gates` holds the
+/// scale-free higher-is-better metrics `ci/check_bench.py` compares
+/// against the committed `BENCH_baseline/` snapshot.
+pub fn gemv_perf_json(
+    points: &[GemvPerfPoint],
+    threads_points: &[GemmThreadsPoint],
+    source: &str,
+) -> Json {
+    let mut gates: Vec<(String, Json)> = Vec::new();
+    for p in points {
+        gates.push((
+            format!("speedup/{}x{}/{}", p.rows, p.cols, p.sparsity),
+            Json::num(p.speedup()),
+        ));
+        gates.push((
+            format!("gemm_speedup/{}x{}/{}", p.rows, p.cols, p.sparsity),
+            Json::num(p.gemm_speedup()),
+        ));
+    }
+    for &t in &THREADS_SWEEP[1..] {
+        if let Some(s) = threads_speedup(threads_points, t) {
+            gates.push((format!("gemm_threads_speedup_{t}v1"), Json::num(s)));
+        }
+    }
+    let gates_obj = Json::Obj(gates.into_iter().collect());
     Json::obj(vec![
         ("bench", Json::str("gemv")),
         ("source", Json::str(source)),
+        // short measurement windows are noisy; the CI gate widens its
+        // tolerance when this flag is set
+        ("quick", Json::Bool(std::env::var("BITROM_BENCH_QUICK").is_ok())),
         ("gemm_batch", Json::num(GEMM_BATCH as f64)),
         (
             "points",
@@ -149,6 +269,24 @@ pub fn gemv_perf_json(points: &[GemvPerfPoint], source: &str) -> Json {
                     .collect(),
             ),
         ),
+        (
+            "threads_sweep",
+            Json::Arr(
+                threads_points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("rows", Json::num(p.rows as f64)),
+                            ("cols", Json::num(p.cols as f64)),
+                            ("sparsity", Json::num(p.sparsity)),
+                            ("threads", Json::num(p.threads as f64)),
+                            ("gemm_ns", Json::num(p.gemm_ns)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("gates", gates_obj),
     ])
 }
 
@@ -175,17 +313,47 @@ mod tests {
         assert!((p.gemm_speedup() - 20.0).abs() < 1e-9);
     }
 
+    fn fake_threads_sweep() -> Vec<GemmThreadsPoint> {
+        THREADS_SWEEP
+            .iter()
+            .map(|&threads| GemmThreadsPoint {
+                rows: 2048,
+                cols: 2048,
+                sparsity: 0.3,
+                threads,
+                gemm_ns: 8_000_000.0 / threads as f64,
+            })
+            .collect()
+    }
+
     #[test]
     fn table_and_json_render() {
         let pts = vec![fake_point()];
         let table = gemv_perf_table(&pts);
         assert!(table.contains("2048x2048"));
         assert!(table.contains("16.0x"));
-        let j = gemv_perf_json(&pts, "unit-test");
+        let j = gemv_perf_json(&pts, &fake_threads_sweep(), "unit-test");
         assert_eq!(j.at(&["bench"]).unwrap().as_str(), Some("gemv"));
         let first = &j.get("points").unwrap().as_arr().unwrap()[0];
         assert_eq!(first.get("rows").unwrap().as_usize(), Some(2048));
         assert!(first.get("speedup").unwrap().as_f64().unwrap() > 15.0);
+        // the CI perf gate reads scale-free metrics from `gates`
+        let gates = j.get("gates").unwrap();
+        let g = gates.get("speedup/2048x2048/0.3").unwrap().as_f64().unwrap();
+        assert!((g - 16.0).abs() < 1e-9);
+        let t4 = gates.get("gemm_threads_speedup_4v1").unwrap().as_f64().unwrap();
+        assert!((t4 - 4.0).abs() < 1e-9, "ideal fake sweep scales linearly");
+    }
+
+    #[test]
+    fn threads_sweep_table_and_speedup_derive() {
+        let pts = fake_threads_sweep();
+        assert_eq!(threads_speedup(&pts, 2), Some(2.0));
+        assert_eq!(threads_speedup(&pts, 4), Some(4.0));
+        assert_eq!(threads_speedup(&pts, 16), None, "unmeasured width");
+        let table = gemm_threads_table(&pts);
+        assert!(table.contains("2048x2048"), "{table}");
+        assert!(table.contains("4.00x"), "{table}");
     }
 
     #[test]

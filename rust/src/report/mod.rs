@@ -16,7 +16,8 @@ pub use fig1a::fig1a_report;
 pub use fig5b::{fig5a_report, fig5b_report};
 pub use fig5b_serving::{fig5b_serving_report, fig5b_serving_study, Fig5bServing};
 pub use gemv_perf::{
-    gemv_perf_json, gemv_perf_report, gemv_perf_study, gemv_perf_table, GemvPerfPoint,
+    gemm_threads_sweep, gemm_threads_table, gemv_perf_json, gemv_perf_report, gemv_perf_study,
+    gemv_perf_table, threads_speedup, GemmThreadsPoint, GemvPerfPoint, THREADS_SWEEP,
 };
 pub use lora_serving::{lora_serving_report, lora_serving_study, LoraServing};
 pub use table3::{table3_report, Table3Row};

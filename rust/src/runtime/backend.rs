@@ -145,6 +145,26 @@ pub trait InferenceBackend {
     /// failures on the next KV read. No-op without a store.
     fn advance_kv_clock(&self, _now_s: f64) {}
 
+    /// Shard this backend's kernels across `threads` workers (0 keeps
+    /// the current width). The server calls this once at construction
+    /// with the deployment's resolved `ServeConfig::threads`; backends
+    /// without host-side kernels keep the no-op default. Width must
+    /// never change results — only speed (DESIGN.md §12).
+    fn set_threads(&self, _threads: usize) {}
+
+    /// Pre-allocate KV pages for this sequence's next `n_tokens`
+    /// positions across every layer, deciding their tier placement
+    /// *now*. The serving loop calls this on the coordinator thread in
+    /// slot order before each token round, so shared-capacity
+    /// placement (and any eviction) is deterministic even when the
+    /// round's partition stages then run on worker threads — KV-store
+    /// *allocation* stays a coordinator-side mutation (DESIGN.md §12).
+    /// Backends without a host-side store keep the no-op default;
+    /// reserving never changes stored values or access counts.
+    fn reserve_kv(&self, _state: &mut Self::State, _n_tokens: usize) -> Result<()> {
+        Ok(())
+    }
+
     /// Measured KV-tier statistics (accesses, evictions, retention
     /// health, energy), if this backend's KV lives in a
     /// [`crate::kvcache::KvStore`]. `None` for backends whose KV is

@@ -37,9 +37,19 @@
 //! mixes tenants. The base weights never move (task switching is
 //! reload-free), and with no adapter bound the compute path is
 //! bit-identical to an adapter-free build (invariant 7).
+//!
+//! The backend is `Sync` and its states are `Send` (DESIGN.md §12):
+//! the serving loop runs per-slot prefill/decode rounds on worker
+//! threads while admission, KV *allocation* (via
+//! [`InferenceBackend::reserve_kv`]), and sampling stay on the
+//! coordinator. Projections shard their output columns across the
+//! configured worker pool ([`InferenceBackend::set_threads`] /
+//! `BITROM_THREADS`); event and adapter counters are tallied per op
+//! and merged under a lock — all counters are commutative integer
+//! sums, so totals are bit-identical at every thread count.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Result};
 
@@ -48,6 +58,7 @@ use crate::cirom::{EventCounters, MacroBank};
 use crate::config::{MacroGeometry, ModelConfig, ServeConfig};
 use crate::kvcache::{KvSeq, KvStore, KvStoreConfig, KvStoreStats};
 use crate::lora::{apply_adapter_delta, AdapterRegistry, LoraServeStats, Proj};
+use crate::util::pool::{env_threads, Pool};
 use crate::util::rng::Rng;
 
 use super::backend::{InferenceBackend, Logits, SequenceState};
@@ -97,8 +108,10 @@ struct Layer {
 pub struct HostState {
     /// Per-layer block tables into `store`.
     kv: KvSeq,
-    /// The store that owns this state's pages.
-    store: Rc<RefCell<KvStore>>,
+    /// The store that owns this state's pages (shared with the backend
+    /// and every sibling sequence; `Mutex` because partition stages of
+    /// different slots may run on worker threads).
+    store: Arc<Mutex<KvStore>>,
     /// Dequantization scratch reused across layers and decode steps
     /// (gather would otherwise re-allocate twice per layer per token).
     kbuf: Vec<f32>,
@@ -116,10 +129,10 @@ pub struct HostState {
 
 impl Drop for HostState {
     fn drop(&mut self) {
-        // recycle this sequence's pages; try_borrow so an unwind that
-        // interrupted a store operation degrades to a capacity leak
-        // instead of a double panic
-        if let Ok(mut store) = self.store.try_borrow_mut() {
+        // recycle this sequence's pages; a poisoned lock (a worker
+        // panicked mid-store-op) degrades to a capacity leak instead
+        // of a double panic
+        if let Ok(mut store) = self.store.lock() {
             store.retire_seq(&mut self.kv);
         }
     }
@@ -151,19 +164,27 @@ pub struct HostBackend {
     head: Projection,
     /// Present iff constructed with [`Self::with_cirom_events`]:
     /// accumulated circuit events across every projection executed.
-    /// RefCell because the serving API takes `&self` (single-threaded).
-    events: Option<RefCell<EventCounters>>,
+    /// Each op tallies into a local counter and merges it here under
+    /// the lock — integer sums commute, so the totals are identical at
+    /// any thread count (DESIGN.md §12).
+    events: Option<Mutex<EventCounters>>,
     /// The tiered KV store every sequence's K/V rows live in. The
-    /// outer RefCell lets [`InferenceBackend::configure_kv`] swap in a
-    /// deployment-sized store; states keep an `Rc` to the store that
+    /// outer RwLock lets [`InferenceBackend::configure_kv`] swap in a
+    /// deployment-sized store; states keep an `Arc` to the store that
     /// allocated their pages, so a swap never orphans live sequences.
-    store: RefCell<Rc<RefCell<KvStore>>>,
+    store: RwLock<Arc<Mutex<KvStore>>>,
     /// Present iff constructed with [`Self::with_adapters`]: the
     /// multi-tenant adapter weights plus residency/MAC accounting.
     /// When absent (or a sequence is bound to `None`) the compute
     /// path is the unmodified base path — adapter-disabled serving is
     /// bit-identical to an adapter-free build (DESIGN.md invariant 7).
     lora: Option<AdapterRegistry>,
+    /// Kernel worker-pool width (1 = serial). Seeded from
+    /// `BITROM_THREADS` at construction; the server overrides it with
+    /// the deployment's `ServeConfig::threads` via
+    /// [`InferenceBackend::set_threads`]. Width changes speed, never
+    /// results.
+    threads: AtomicUsize,
     seed: u64,
 }
 
@@ -248,15 +269,26 @@ impl HostBackend {
         let head = Projection::fabricate(d, model.vocab_size, &mut rng, g);
         let store = KvStore::new(KvStoreConfig::for_model(&model));
         Ok(HostBackend {
-            events: geom.map(|_| RefCell::new(EventCounters::new())),
+            events: geom.map(|_| Mutex::new(EventCounters::new())),
             embed,
             layers,
             head,
-            store: RefCell::new(Rc::new(RefCell::new(store))),
+            store: RwLock::new(Arc::new(Mutex::new(store))),
             lora,
+            threads: AtomicUsize::new(env_threads()),
             model,
             seed,
         })
+    }
+
+    /// The kernel worker pool at the currently configured width.
+    fn pool(&self) -> Pool {
+        Pool::new(self.threads.load(Ordering::Relaxed))
+    }
+
+    /// Currently configured kernel worker count.
+    pub fn threads(&self) -> usize {
+        self.threads.load(Ordering::Relaxed)
     }
 
     /// The tenant adapter registry, if this backend serves adapters.
@@ -276,8 +308,8 @@ impl HostBackend {
 
     /// Handle to the current KV store (accounting inspection; new
     /// states allocate their pages here).
-    pub fn kv_store(&self) -> Rc<RefCell<KvStore>> {
-        self.store.borrow().clone()
+    pub fn kv_store(&self) -> Arc<Mutex<KvStore>> {
+        self.store.read().expect("KV store handle poisoned").clone()
     }
 
     /// Mean zero-weight fraction across every fabricated projection
@@ -306,13 +338,15 @@ impl HostBackend {
     /// Snapshot of the accumulated circuit events (None on the bitplane
     /// fast path).
     pub fn events(&self) -> Option<EventCounters> {
-        self.events.as_ref().map(|e| e.borrow().clone())
+        self.events
+            .as_ref()
+            .map(|e| e.lock().expect("event counters poisoned").clone())
     }
 
     /// Zero the accumulated circuit events (event mode only).
     pub fn reset_events(&self) {
         if let Some(e) = &self.events {
-            *e.borrow_mut() = EventCounters::new();
+            *e.lock().expect("event counters poisoned") = EventCounters::new();
         }
     }
 
@@ -323,11 +357,18 @@ impl HostBackend {
     }
 
     /// Projection of one already-quantized activation row (bitplane
-    /// GEMV or event-counted macro bank), rescaled to f32.
+    /// GEMV or event-counted macro bank), rescaled to f32. Event mode
+    /// tallies the op into a local counter and merges it under the
+    /// lock — one brief critical section per op, order-independent.
     fn project_q(&self, p: &Projection, acts: &QuantizedActs) -> Vec<f32> {
         let y = match (&p.bank, &self.events) {
-            (Some(bank), Some(ev)) => bank.gemv(acts, &mut ev.borrow_mut()),
-            _ => p.w.gemv(&acts.values),
+            (Some(bank), Some(ev)) => {
+                let mut tally = EventCounters::new();
+                let y = bank.gemv(acts, &mut tally);
+                ev.lock().expect("event counters poisoned").merge(&tally);
+                y
+            }
+            _ => p.w.gemv_with(&acts.values, &self.pool()),
         };
         let s = acts.scale * p.w.scale;
         y.into_iter().map(|v| v as f32 * s).collect()
@@ -353,7 +394,7 @@ impl HostBackend {
             return qs.iter().map(|q| self.project_q(p, q)).collect();
         }
         let ints: Vec<&[i32]> = qs.iter().map(|q| q.values.as_slice()).collect();
-        p.w.gemm(&ints)
+        p.w.gemm_with(&ints, &self.pool())
             .into_iter()
             .zip(qs)
             .map(|(y, q)| {
@@ -475,7 +516,7 @@ impl HostBackend {
         let vs = self.project_rows_site(&layer.wv, &xns, li, Proj::V, adapter);
         let n_ctx = base_pos + xs.len();
         {
-            let mut store = state.store.borrow_mut();
+            let mut store = state.store.lock().expect("KV store lock poisoned");
             for (kk, vv) in ks.iter().zip(&vs) {
                 store.append(&mut state.kv, li, kk, vv);
             }
@@ -554,19 +595,44 @@ impl InferenceBackend for HostBackend {
     /// Swap in a deployment-sized store (on-die capacity, early-token
     /// threshold, page size, quantization from the [`ServeConfig`]).
     /// States created before the swap keep their original store alive
-    /// through their `Rc` until they retire.
+    /// through their `Arc` until they retire.
     fn configure_kv(&self, serve: &ServeConfig) -> Result<()> {
         let cfg = KvStoreConfig::for_serve(&self.model, serve)?;
-        *self.store.borrow_mut() = Rc::new(RefCell::new(KvStore::new(cfg)));
+        *self.store.write().expect("KV store handle poisoned") =
+            Arc::new(Mutex::new(KvStore::new(cfg)));
         Ok(())
     }
 
     fn advance_kv_clock(&self, now_s: f64) {
-        self.store.borrow().borrow_mut().set_now(now_s);
+        self.kv_store().lock().expect("KV store lock poisoned").set_now(now_s);
     }
 
     fn kv_stats(&self) -> Option<KvStoreStats> {
-        Some(self.store.borrow().borrow().stats())
+        Some(self.kv_store().lock().expect("KV store lock poisoned").stats())
+    }
+
+    /// Shard kernels across `threads` workers (0 keeps the current
+    /// width; 1 is the serial path). Bit-identical at any width.
+    fn set_threads(&self, threads: usize) {
+        if threads >= 1 {
+            self.threads.store(threads, Ordering::Relaxed);
+        }
+    }
+
+    /// Pre-place the blocks for this sequence's next `n_tokens`
+    /// positions in every layer (coordinator-side KV allocation —
+    /// module docs / DESIGN.md §12). Never counts accesses or changes
+    /// values; appends from worker threads then land in the reserved
+    /// blocks.
+    fn reserve_kv(&self, state: &mut HostState, n_tokens: usize) -> Result<()> {
+        if n_tokens == 0 {
+            return Ok(());
+        }
+        let mut store = state.store.lock().expect("KV store lock poisoned");
+        for li in 0..self.model.n_layers {
+            store.reserve(&mut state.kv, li, n_tokens);
+        }
+        Ok(())
     }
 
     /// Point the sequence at a tenant adapter (validated against the
@@ -593,8 +659,8 @@ impl InferenceBackend for HostBackend {
     }
 
     fn new_state(&self) -> Result<HostState> {
-        let store = self.store.borrow().clone();
-        let kv = store.borrow().new_seq();
+        let store = self.kv_store();
+        let kv = store.lock().expect("KV store lock poisoned").new_seq();
         Ok(HostState {
             kv,
             store,
@@ -816,9 +882,81 @@ mod tests {
         let store = b.kv_store();
         {
             let (_state, _) = b.prefill(&[1, 2, 3, 4, 5]).unwrap();
-            assert!(store.borrow().ondie_blocks_in_use() > 0);
+            assert!(store.lock().unwrap().ondie_blocks_in_use() > 0);
         }
-        assert_eq!(store.borrow().ondie_blocks_in_use(), 0);
+        assert_eq!(store.lock().unwrap().ondie_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn backend_is_sync_and_states_are_send() {
+        // the serving loop's parallel rounds depend on exactly these
+        // bounds (DESIGN.md §12); a RefCell/Rc regression breaks them
+        fn takes_sync<T: Sync + Send>() {}
+        fn takes_send<T: Send>() {}
+        takes_sync::<HostBackend>();
+        takes_send::<HostState>();
+    }
+
+    /// MLP projections at/above the kernels' parallel cutoff, so the
+    /// pooled paths genuinely fork inside the backend.
+    fn wide() -> ModelConfig {
+        ModelConfig {
+            name: "host-wide".into(),
+            n_layers: 2,
+            d_model: 128,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 512,
+            vocab_size: 64,
+            max_seq: 32,
+            n_partitions: 2,
+            act_bits: 8,
+        }
+    }
+
+    #[test]
+    fn generation_is_invariant_to_kernel_thread_count() {
+        // sharded projections must emit bit-identical logits: compare
+        // full generations at 1/2/4/7 kernel workers on a model whose
+        // MLP shapes clear the parallel cutoff
+        let prompt = [7, 3, 11];
+        let serial = {
+            let b = HostBackend::new(wide(), 17).unwrap();
+            b.set_threads(1);
+            b.generate_greedy(&prompt, 6).unwrap()
+        };
+        for threads in [2usize, 4, 7] {
+            let b = HostBackend::new(wide(), 17).unwrap();
+            b.set_threads(threads);
+            assert_eq!(b.threads(), threads);
+            assert_eq!(
+                b.generate_greedy(&prompt, 6).unwrap(),
+                serial,
+                "generation diverged at {threads} kernel threads"
+            );
+        }
+    }
+
+    #[test]
+    fn reserve_kv_never_changes_results_or_counts() {
+        // reserving a round's pages up front (what the serving
+        // coordinator does) is invisible to both numerics and access
+        // accounting
+        let plain = HostBackend::new(micro(), 23).unwrap();
+        let reserved = HostBackend::new(micro(), 23).unwrap();
+        let prompt = [9, 4, 2, 30];
+        let (_, l_plain) = plain.prefill(&prompt).unwrap();
+        let mut state = reserved.new_state().unwrap();
+        reserved.reserve_kv(&mut state, prompt.len()).unwrap();
+        let mut h = reserved.embed_prompt(&prompt).unwrap();
+        for part in 0..reserved.n_partitions() {
+            h = reserved.run_partition_prefill(part, &h, &mut state).unwrap();
+        }
+        let l_res = reserved.head_at(&h, prompt.len() - 1).unwrap();
+        assert_eq!(l_plain, l_res, "reservation changed logits");
+        let (a, b) = (plain.kv_stats().unwrap(), reserved.kv_stats().unwrap());
+        assert_eq!(a.accesses.ondie_writes, b.accesses.ondie_writes);
+        assert_eq!(a.accesses.external_writes, b.accesses.external_writes);
     }
 
     fn micro_registry(n_adapters: usize, seed: u64) -> AdapterRegistry {

@@ -2,13 +2,16 @@
 //!
 //! This repository builds fully offline with only the `xla` and `anyhow`
 //! crates available, so the usual ecosystem pieces (serde, clap, rand,
-//! criterion, proptest) are implemented here from scratch — each module
-//! is small, tested, and exactly as capable as this project needs.
+//! criterion, proptest, rayon) are implemented here from scratch — each
+//! module is small, tested, and exactly as capable as this project
+//! needs. [`pool`] is the crate-wide parallel execution substrate
+//! (DESIGN.md §12).
 
 pub mod args;
 pub mod bench;
 pub mod check;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,262 @@
+//! Scoped-thread worker pool — the crate-wide parallel execution
+//! substrate (std-only, no new dependencies).
+//!
+//! A [`Pool`] is a *width*, not a set of live threads: every
+//! fork-join call spawns `width` scoped workers (`std::thread::scope`),
+//! splits the task range into contiguous chunks in index order, and
+//! reassembles results in that same order. Scoped threads let workers
+//! borrow the caller's data (weight planes, activation rows, per-slot
+//! KV states) with no `Arc` cloning and no `'static` bounds, and the
+//! static in-order chunking makes the decomposition deterministic: a
+//! task's results never depend on which worker ran it or when.
+//!
+//! Width resolution: `BITROM_THREADS` (read once per process) is the
+//! default everywhere; serving overrides it per deployment through
+//! `ServeConfig::threads` / `--threads`. Width 1 is *exactly* the
+//! serial path — no scope, no spawn, the closure runs inline on the
+//! caller's thread — so single-threaded behavior is byte-for-byte the
+//! pre-pool code path.
+//!
+//! Nesting is legal: a worker may itself fork a pool (the serving loop
+//! shards slots across workers whose kernel calls shard columns). Each
+//! fork is an independent `thread::scope`, so nested use cannot
+//! deadlock — the cost is only transient oversubscription, which the
+//! kernel-side work cutoffs keep small.
+//!
+//! Determinism contract (DESIGN.md §12): the pool itself never
+//! reorders results. Callers keep bit-identity across widths by
+//! ensuring each task's computation is independent of the others —
+//! the bitplane kernels (per-column exact i64 accumulation) and the
+//! serving loop (per-slot sequence state, coordinator-side KV
+//! placement) both do.
+
+use std::sync::OnceLock;
+
+/// Process-wide default worker count: `BITROM_THREADS` if set to a
+/// positive integer, else 1 (serial). Read once and cached — changing
+/// the variable after the first call has no effect.
+pub fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("BITROM_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1)
+    })
+}
+
+/// The contiguous sub-range of `0..n` that worker `w` of `width` owns
+/// (`[w·n/width, (w+1)·n/width)` — covers `0..n` exactly, near-even,
+/// in index order).
+pub fn chunk_bounds(n: usize, width: usize, w: usize) -> (usize, usize) {
+    debug_assert!(w < width);
+    (w * n / width, (w + 1) * n / width)
+}
+
+/// A fork-join worker pool of a fixed width (module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool of `threads` workers (0 is clamped to 1 = serial).
+    pub fn new(threads: usize) -> Self {
+        Pool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Pool at the process default width ([`env_threads`]).
+    pub fn from_env() -> Self {
+        Pool::new(env_threads())
+    }
+
+    /// The always-serial pool (width 1, inline execution).
+    pub fn serial() -> Self {
+        Pool::new(1)
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when calls run inline on the caller's thread.
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Run `f(0), f(1), …, f(tasks-1)` across the pool and return the
+    /// results in task order. Tasks are split into contiguous chunks
+    /// (one per worker); width 1 or `tasks <= 1` runs inline.
+    ///
+    /// A panicking task propagates the panic to the caller after the
+    /// scope joins every worker.
+    pub fn run<T, F>(&self, tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let width = self.threads.min(tasks);
+        if width <= 1 {
+            return (0..tasks).map(f).collect();
+        }
+        let chunked: Vec<Vec<T>> = std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<_> = (0..width)
+                .map(|w| {
+                    let (lo, hi) = chunk_bounds(tasks, width, w);
+                    scope.spawn(move || (lo..hi).map(f).collect::<Vec<T>>())
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        });
+        chunked.into_iter().flatten().collect()
+    }
+
+    /// Map `f` over owned `items` across the pool, returning results
+    /// in item order. Like [`Pool::run`] but each task consumes its
+    /// item — the serving loop uses this to hand each worker exclusive
+    /// `&mut` access to one slot's sequence state.
+    pub fn map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(I) -> T + Sync,
+    {
+        let n = items.len();
+        let width = self.threads.min(n);
+        if width <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        // split into in-order chunks of owned items, one per worker
+        let mut chunks: Vec<Vec<I>> = Vec::with_capacity(width);
+        let mut items = items.into_iter();
+        for w in 0..width {
+            let (lo, hi) = chunk_bounds(n, width, w);
+            chunks.push(items.by_ref().take(hi - lo).collect());
+        }
+        let chunked: Vec<Vec<T>> = std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| scope.spawn(move || chunk.into_iter().map(f).collect::<Vec<T>>()))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        });
+        chunked.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_is_clamped_to_at_least_one() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert!(Pool::new(0).is_serial());
+        assert_eq!(Pool::serial().threads(), 1);
+        assert!(Pool::new(4).threads() == 4 && !Pool::new(4).is_serial());
+    }
+
+    #[test]
+    fn chunks_cover_the_range_in_order() {
+        for n in [0usize, 1, 5, 7, 64, 100] {
+            for width in [1usize, 2, 3, 4, 7, 13] {
+                let mut next = 0;
+                for w in 0..width {
+                    let (lo, hi) = chunk_bounds(n, width, w);
+                    assert_eq!(lo, next, "gap at n={n} width={width} w={w}");
+                    assert!(hi >= lo);
+                    next = hi;
+                }
+                assert_eq!(next, n, "range not covered at n={n} width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_preserves_task_order_at_every_width() {
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for threads in [1usize, 2, 4, 7, 128] {
+            let got = Pool::new(threads).run(100, |i| i * i);
+            assert_eq!(got, want, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn run_handles_degenerate_task_counts() {
+        let p = Pool::new(4);
+        assert!(p.run(0, |i| i).is_empty());
+        assert_eq!(p.run(1, |i| i + 10), vec![10]);
+        // more workers than tasks: width collapses to the task count
+        assert_eq!(Pool::new(64).run(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn map_consumes_items_in_order() {
+        let items: Vec<String> = (0..17).map(|i| format!("it{i}")).collect();
+        let want: Vec<String> = items.iter().map(|s| format!("{s}!")).collect();
+        for threads in [1usize, 2, 4, 7] {
+            let got = Pool::new(threads).map(items.clone(), |s| format!("{s}!"));
+            assert_eq!(got, want, "threads {threads}");
+        }
+        assert!(Pool::new(3).map(Vec::<u8>::new(), |b| b).is_empty());
+    }
+
+    #[test]
+    fn map_supports_exclusive_mutable_items() {
+        // the serving-loop pattern: each item carries &mut to disjoint
+        // state; workers mutate concurrently without any locking
+        let mut cells = vec![0u64; 9];
+        let items: Vec<(usize, &mut u64)> = cells.iter_mut().enumerate().collect();
+        Pool::new(4).map(items, |(i, c)| *c = i as u64 + 1);
+        assert_eq!(cells, (1..=9).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn nested_forks_join_cleanly() {
+        // a worker may fork its own pool (parallel serve step calling
+        // sharded kernels): results stay ordered at both levels
+        let got = Pool::new(4).run(6, |outer| {
+            let inner = Pool::new(3).run(5, |i| (outer * 10 + i) as u64);
+            inner.iter().sum::<u64>()
+        });
+        let want: Vec<u64> = (0..6)
+            .map(|o| (0..5).map(|i| (o * 10 + i) as u64).sum())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_caller() {
+        let res = std::panic::catch_unwind(|| {
+            Pool::new(2).run(4, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(res.is_err(), "panic must not be swallowed");
+    }
+
+    #[test]
+    fn env_default_is_serial_when_unset() {
+        // the test environment does not set BITROM_THREADS; the cached
+        // default must then be the serial width (and from_env agrees)
+        if std::env::var("BITROM_THREADS").is_err() {
+            assert_eq!(env_threads(), 1);
+            assert!(Pool::from_env().is_serial());
+        }
+    }
+}

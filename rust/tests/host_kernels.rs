@@ -8,6 +8,7 @@ use bitrom::bitnet::{absmax_quantize, ref_gemv, BitplaneMatrix, TernaryMatrix};
 use bitrom::cirom::{BitRomMacro, EventCounters, MacroBank};
 use bitrom::config::MacroGeometry;
 use bitrom::lora::MergedProjection;
+use bitrom::util::pool::Pool;
 use bitrom::util::rng::Rng;
 
 #[test]
@@ -21,6 +22,28 @@ fn bitplane_engine_matches_reference_across_llama_shapes() {
             let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
             assert_eq!(w.gemv(&x), ref_gemv(&x, &w), "{rows}x{cols} s={sparsity}");
         }
+    }
+}
+
+#[test]
+fn sharded_kernels_match_reference_at_every_width() {
+    // DESIGN.md §12 at the integration level: the pooled TernaryMatrix
+    // paths agree with the golden reference at 1/2/4/7 workers,
+    // including a shape big enough to genuinely fork and widths far
+    // beyond the column count
+    let mut rng = Rng::new(0x12E2);
+    let (rows, cols) = (1024, 96); // ≥ the kernels' parallel cutoff
+    let w = TernaryMatrix::random(rows, cols, 0.3, &mut rng);
+    let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+    let want = ref_gemv(&x, &w);
+    let xs: Vec<Vec<i32>> = (0..4)
+        .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
+        .collect();
+    let want_gemm: Vec<Vec<i64>> = xs.iter().map(|r| ref_gemv(r, &w)).collect();
+    for threads in [1usize, 2, 4, 7, 256] {
+        let pool = Pool::new(threads);
+        assert_eq!(w.gemv_with(&x, &pool), want, "gemv @ {threads} threads");
+        assert_eq!(w.gemm_with(&xs, &pool), want_gemm, "gemm @ {threads} threads");
     }
 }
 

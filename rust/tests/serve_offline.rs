@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use bitrom::config::{ModelConfig, ServeConfig};
-use bitrom::coordinator::{CompletedRequest, Server};
+use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
 use bitrom::kvcache::simulate_reduction;
 use bitrom::lora::{AdapterRegistry, LoraConfig};
 use bitrom::runtime::{HostBackend, InferenceBackend};
@@ -237,6 +237,156 @@ fn sparse_trace_skips_ahead_instead_of_busy_waiting() {
     // ...but real time did not (generous margin for slow CI boxes)
     assert!(real < span, "no skip-ahead: real {real}s >= span {span}s");
     assert!(metrics.tokens_per_s() > 0.0);
+}
+
+// ---- parallel execution engine (DESIGN.md §12) ------------------------
+
+/// Tokens + the merged measured counters of one served trace — what
+/// must be bit-identical at every worker-pool width.
+fn run_at_threads(threads: usize, seed: u64) -> (Vec<CompletedRequest>, ServeMetrics) {
+    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+    let serve = ServeConfig {
+        max_batches: 4,
+        threads,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(backend, serve).unwrap();
+    let (done, metrics) = server.run_trace(trace(8, 0.0, seed)).unwrap();
+    (by_id(done), metrics)
+}
+
+#[test]
+fn serving_is_bit_identical_across_thread_counts() {
+    // THE §12 acceptance point: tokens, logits-derived choices, and
+    // every merged counter agree at 1, 2, 4, and 7 threads — the
+    // parallel engine changes throughput, never results
+    let (serial_done, serial_metrics) = run_at_threads(1, 3);
+    let serial_kv = serial_metrics.kv.as_ref().unwrap();
+    for threads in [2usize, 4, 7] {
+        let (done, metrics) = run_at_threads(threads, 3);
+        assert_eq!(done.len(), serial_done.len());
+        for (a, b) in serial_done.iter().zip(&done) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} diverged at {threads} threads", a.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+        }
+        assert_eq!(metrics.tokens_out, serial_metrics.tokens_out);
+        assert_eq!(metrics.requests_done, serial_metrics.requests_done);
+        // measured KV counters merge to the same totals: accesses,
+        // placement, health, and the (count-derived) energy
+        let kv = metrics.kv.as_ref().unwrap();
+        assert_eq!(kv.accesses.ondie_reads, serial_kv.accesses.ondie_reads, "t={threads}");
+        assert_eq!(kv.accesses.ondie_writes, serial_kv.accesses.ondie_writes);
+        assert_eq!(kv.accesses.external_reads, serial_kv.accesses.external_reads);
+        assert_eq!(kv.accesses.external_writes, serial_kv.accesses.external_writes);
+        assert_eq!(kv.evictions, serial_kv.evictions);
+        assert_eq!(kv.spilled_early_blocks, serial_kv.spilled_early_blocks);
+        assert_eq!(kv.retention_failures, 0);
+        assert_eq!(kv.kv_energy_j(), serial_kv.kv_energy_j(), "energy is count-derived");
+    }
+}
+
+#[test]
+fn sampled_serving_is_bit_identical_across_thread_counts() {
+    // top-k sampling draws from the coordinator's single Rng in slot
+    // order, so even non-greedy traces are width-invariant
+    let run = |threads: usize| {
+        let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+        let serve = ServeConfig {
+            max_batches: 3,
+            top_k: 4,
+            threads,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let (done, _) = server.run_trace(trace(6, 0.0, 5)).unwrap();
+        by_id(done)
+    };
+    let serial = run(1);
+    for threads in [2usize, 7] {
+        let done = run(threads);
+        for (a, b) in serial.iter().zip(&done) {
+            assert_eq!(a.tokens, b.tokens, "sampled request {} diverged", a.id);
+        }
+    }
+}
+
+#[test]
+fn adapter_counters_are_thread_count_invariant() {
+    // adapter accounting merges one tally per op under the registry
+    // lock; binds and cold loads run on the coordinator — so the full
+    // LoraServeStats is identical at any width
+    let run = |threads: usize| {
+        let serve = ServeConfig {
+            max_batches: 4,
+            n_adapters: 3,
+            threads,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(adapter_backend(3, 0x7ada), serve).unwrap();
+        let mut reqs = trace(7, 0.0, 11);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            // two tenants plus the base model, round-robin
+            if i % 3 != 2 {
+                r.adapter_id = Some((i % 3) as u32);
+            }
+        }
+        let (done, metrics) = server.run_trace(reqs).unwrap();
+        (by_id(done), metrics.lora.unwrap())
+    };
+    let (serial_done, serial_lora) = run(1);
+    for threads in [2usize, 4] {
+        let (done, lora) = run(threads);
+        for (a, b) in serial_done.iter().zip(&done) {
+            assert_eq!(a.tokens, b.tokens, "request {} diverged", a.id);
+            assert_eq!(a.adapter_id, b.adapter_id);
+        }
+        assert_eq!(lora, serial_lora, "adapter counters diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn nested_pools_serve_correctly_from_parallel_rounds() {
+    // a model whose MLP shapes clear the kernels' parallel cutoff:
+    // worker threads running slot rounds fork their own kernel pools
+    // (pool-in-pool), and the tokens still match the serial engine
+    let wide = ModelConfig {
+        name: "wide-nested".into(),
+        n_layers: 2,
+        d_model: 128,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 512,
+        vocab_size: 64,
+        max_seq: 128,
+        n_partitions: 2,
+        act_bits: 8,
+    };
+    let run = |threads: usize| {
+        let backend = HostBackend::new(wide.clone(), WEIGHT_SEED).unwrap();
+        let serve = ServeConfig {
+            max_batches: 3,
+            threads,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let reqs = generate(&TraceConfig {
+            n_requests: 5,
+            gen_len_min: 6,
+            gen_len_max: 10,
+            vocab_size: wide.vocab_size,
+            seed: 2,
+            ..TraceConfig::default()
+        });
+        let (done, _) = server.run_trace(reqs).unwrap();
+        by_id(done)
+    };
+    let serial = run(1);
+    let nested = run(4);
+    assert_eq!(serial.len(), nested.len());
+    for (a, b) in serial.iter().zip(&nested) {
+        assert_eq!(a.tokens, b.tokens, "nested-pool request {} diverged", a.id);
+    }
 }
 
 #[test]
