@@ -34,9 +34,19 @@ import os
 import sys
 
 
-def load(path):
-    with open(path) as f:
-        return json.load(f)
+def load(path, role):
+    """Read one bench record; on any problem return (None, one-line
+    reason) instead of letting a traceback swallow the real failure."""
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except OSError as e:
+        return None, f"{role} {path} is unreadable ({e.strerror or e})"
+    except json.JSONDecodeError as e:
+        return None, f"{role} {path} is not valid JSON (line {e.lineno}: {e.msg})"
+    if not isinstance(record, dict):
+        return None, f"{role} {path} is not a JSON object"
+    return record, None
 
 
 def main(argv):
@@ -60,10 +70,19 @@ def main(argv):
         print(f"check_bench: no baseline at {base_path} — nothing to gate (commit one)")
         return 0
 
-    fresh = load(fresh_path)
-    base = load(base_path)
+    fresh, err = load(fresh_path, "fresh record")
+    if err is None:
+        base, err = load(base_path, "baseline")
+    if err is not None:
+        print(f"check_bench: FAIL — {err}")
+        return 1
     fresh_gates = fresh.get("gates", {})
     base_gates = base.get("gates", {})
+    for name, gates, path in (("fresh record", fresh_gates, fresh_path),
+                              ("baseline", base_gates, base_path)):
+        if not isinstance(gates, dict):
+            print(f"check_bench: FAIL — {name} {path} gates is not an object")
+            return 1
     if not fresh_gates:
         print(f"check_bench: FAIL — {fresh_path} carries no gates object")
         return 1
@@ -80,7 +99,14 @@ def main(argv):
         f"(tolerance {tol:.0%}{', quick mode' if quick else ''})"
     )
     for name in shared:
-        got, want = float(fresh_gates[name]), float(base_gates[name])
+        try:
+            got, want = float(fresh_gates[name]), float(base_gates[name])
+        except (TypeError, ValueError):
+            print(
+                f"check_bench: FAIL — gate {name!r} is not numeric "
+                f"(fresh {fresh_gates[name]!r}, baseline {base_gates[name]!r})"
+            )
+            return 1
         floor = want * (1.0 - tol)
         verdict = "ok" if got >= floor else "REGRESSION"
         print(f"  {name:<40} {got:8.3f} vs baseline {want:8.3f} (floor {floor:.3f}) {verdict}")

@@ -7,7 +7,11 @@
 //! * **threads** — the same trace at the paper's 6 slots across
 //!   1/2/4 worker threads (the parallel execution engine, DESIGN.md
 //!   §12). Tokens are asserted bit-identical across widths before any
-//!   number is recorded.
+//!   number is recorded;
+//! * **faults** — the same trace under certain periodic retention
+//!   storms (DESIGN.md §13): tokens asserted bit-identical to the
+//!   fault-free run, and the recovery throughput ratio recorded as the
+//!   `fault_recovery_throughput_ratio` gate.
 //!
 //! Emits `BENCH_serve.json` at the repository root; its `gates` object
 //! (scale-free speedups) feeds the CI perf-regression gate
@@ -19,7 +23,7 @@
 //! Override the output path with BITROM_BENCH_OUT.
 
 use bitrom::config::{ModelConfig, ServeConfig};
-use bitrom::coordinator::Server;
+use bitrom::coordinator::{FaultMetrics, Server};
 use bitrom::runtime::HostBackend;
 use bitrom::trace::{generate, TraceConfig};
 use bitrom::util::bench::bench_out_path;
@@ -63,6 +67,46 @@ fn run_point(
             tokens: metrics.tokens_out,
         },
         tokens,
+    ))
+}
+
+/// The same trace under a deterministic retention-storm fault plan
+/// (DESIGN.md §13): every expiry must be recovered bit-identically, so
+/// the only observable cost is throughput — which the
+/// `fault_recovery_throughput_ratio` gate tracks.
+fn run_fault_point(
+    model: &ModelConfig,
+    trace_cfg: &TraceConfig,
+) -> anyhow::Result<(Point, Vec<(u64, Vec<i32>)>, FaultMetrics)> {
+    let backend = HostBackend::new(model.clone(), 0xB17)?;
+    let serve = ServeConfig {
+        max_batches: 6,
+        threads: 1,
+        fault_seed: 0xFA11,
+        fault_storm_p: 1.0,
+        fault_transient_p: 0.0,
+        fault_clock_skip_s: 0.1,
+        retry_max: 16,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(backend, serve)?;
+    let (done, mut metrics) = server.run_trace(generate(trace_cfg))?;
+    assert_eq!(done.len(), trace_cfg.n_requests, "the retry budget must cover every storm");
+    let kv = metrics.kv.as_ref().expect("host backend measures KV stats");
+    assert_eq!(kv.retention_failures, metrics.faults.retention_events);
+    let mut tokens: Vec<(u64, Vec<i32>)> = done.into_iter().map(|r| (r.id, r.tokens)).collect();
+    tokens.sort_by_key(|(id, _)| *id);
+    Ok((
+        Point {
+            batches: 6,
+            threads: 1,
+            tokens_per_s: metrics.tokens_per_s(),
+            tbt_p50_ms: metrics.tbt.pct(50.0) * 1e3,
+            tbt_p95_ms: metrics.tbt.pct(95.0) * 1e3,
+            tokens: metrics.tokens_out,
+        },
+        tokens,
+        metrics.faults.clone(),
     ))
 }
 
@@ -142,6 +186,28 @@ fn main() -> anyhow::Result<()> {
         thread_points.push(p);
     }
 
+    // axis 3: survivability — the same trace under certain periodic
+    // retention storms; tokens must still be bit-identical to the
+    // fault-free serial run (invariant 9), and the throughput ratio is
+    // the measured price of recompute recovery
+    println!("-- fault recovery (batches = 6, threads = 1, certain storms) --");
+    let (fault_p, fault_tokens, faults) = run_fault_point(&model, &trace_cfg)?;
+    assert_eq!(
+        fault_tokens, serial_tokens,
+        "faulted serving must recover bit-identical tokens"
+    );
+    let fault_ratio = fault_p.tokens_per_s / serial_6.max(1e-9);
+    println!(
+        "  storms: {:>8.1} tok/s  (x{:.2} vs fault-free)  \
+         {} expiries -> {} recomputes ({} tokens), {} shed",
+        fault_p.tokens_per_s,
+        fault_ratio,
+        faults.retention_events,
+        faults.recomputes,
+        faults.recomputed_tokens,
+        faults.shed.len(),
+    );
+
     let speedup_6v1 = batch_points
         .iter()
         .find(|p| p.batches == 6)
@@ -179,10 +245,24 @@ fn main() -> anyhow::Result<()> {
             ),
         ),
         (
+            "fault_point",
+            Json::obj(vec![
+                ("tokens_per_s", Json::num(fault_p.tokens_per_s)),
+                ("throughput_ratio", Json::num(fault_ratio)),
+                ("injected_skips", Json::num(faults.injected_skips as f64)),
+                ("retention_events", Json::num(faults.retention_events as f64)),
+                ("recomputes", Json::num(faults.recomputes as f64)),
+                ("recomputed_tokens", Json::num(faults.recomputed_tokens as f64)),
+                ("preemptions", Json::num(faults.preemptions as f64)),
+                ("shed", Json::num(faults.shed.len() as f64)),
+            ]),
+        ),
+        (
             "gates",
             Json::obj(vec![
                 ("batching_speedup_6v1", Json::num(speedup_6v1)),
                 ("threads_speedup_4v1", Json::num(threads_4v1)),
+                ("fault_recovery_throughput_ratio", Json::num(fault_ratio)),
             ]),
         ),
     ]);

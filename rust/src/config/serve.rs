@@ -52,6 +52,38 @@ pub struct ServeConfig {
     /// it — the energy model's Falcon3-1B estimate is ~0.4 ms/token;
     /// 5 ms is a conservative edge default (still 12x under tREF).
     pub hw_tbt_s: f64,
+    /// Fault-injection seed (DESIGN.md §13). `0` (the default) disables
+    /// injection entirely — the serving loop is then byte-identical to
+    /// a build without the fault module. Any other value seeds a
+    /// deterministic `fault::FaultPlan`.
+    pub fault_seed: u64,
+    /// Per-round probability of a retention-clock storm when a fault
+    /// plan is active (subject to the plan's cooldown).
+    pub fault_storm_p: f64,
+    /// Per-slot per-round probability of a transient backend /
+    /// adapter-load / KV-capacity fault when a plan is active.
+    pub fault_transient_p: f64,
+    /// Seconds a storm skips the DR-eDRAM retention clock forward.
+    /// Anything above `tREF - hw_tbt_s` (default tREF is 64 ms)
+    /// expires every resident on-die row.
+    pub fault_clock_skip_s: f64,
+    /// Recovery budget per request: retries granted for transient
+    /// faults, and recomputes granted for retention expiries, before
+    /// the request is shed with a typed reason.
+    pub retry_max: usize,
+    /// Admission pressure threshold in `(0, 1]`: a new request is only
+    /// admitted while `ondie_blocks_in_use / ondie_block_capacity` is
+    /// below this fraction (unless no slot is active — the first
+    /// request always admits). `0.0` (the default) disables
+    /// pressure-gated admission and keeps blind slot-count FIFO.
+    pub admit_pressure: f64,
+    /// Preempt the youngest active slot (KV swapped out to the
+    /// external tier, values intact) when measured pressure exceeds
+    /// `admit_pressure` while requests queue. Off by default.
+    pub preempt_under_pressure: bool,
+    /// Overload deadline (s): queued requests waiting longer are shed
+    /// with `FailReason::Overload`. `0.0` (the default) never sheds.
+    pub shed_after_s: f64,
 }
 
 impl Default for ServeConfig {
@@ -71,6 +103,14 @@ impl Default for ServeConfig {
             threads: 0,
             seed: 0,
             hw_tbt_s: 0.005,
+            fault_seed: 0,
+            fault_storm_p: 0.25,
+            fault_transient_p: 0.05,
+            fault_clock_skip_s: 0.1,
+            retry_max: 3,
+            admit_pressure: 0.0,
+            preempt_under_pressure: false,
+            shed_after_s: 0.0,
         }
     }
 }
@@ -112,6 +152,40 @@ impl ServeConfig {
         }
         anyhow::ensure!(self.top_k >= 1, "top_k must be >= 1");
         anyhow::ensure!(self.hw_tbt_s > 0.0, "hw_tbt_s must be positive");
+        // fault/degradation knobs are only checked when they are on
+        if self.fault_seed != 0 {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&self.fault_storm_p),
+                "fault_storm_p must be in [0, 1]"
+            );
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&self.fault_transient_p),
+                "fault_transient_p must be in [0, 1]"
+            );
+            anyhow::ensure!(
+                self.fault_clock_skip_s >= 0.0,
+                "fault_clock_skip_s must be >= 0"
+            );
+            // invariant 9's bit-identical-recovery guarantee needs
+            // deterministic sampling: a recovered sequence re-derives
+            // its remaining tokens, which only matches the fault-free
+            // twin under greedy decoding
+            anyhow::ensure!(
+                self.top_k == 1,
+                "fault injection requires greedy decoding (top_k = 1)"
+            );
+        }
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.admit_pressure),
+            "admit_pressure must be in [0, 1]"
+        );
+        anyhow::ensure!(self.shed_after_s >= 0.0, "shed_after_s must be >= 0");
+        if self.preempt_under_pressure {
+            anyhow::ensure!(
+                self.admit_pressure > 0.0,
+                "preempt_under_pressure needs admit_pressure > 0 (the trigger threshold)"
+            );
+        }
         Ok(())
     }
 
@@ -160,6 +234,14 @@ impl ServeConfig {
             ("threads", Json::num(self.threads as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("hw_tbt_s", Json::num(self.hw_tbt_s)),
+            ("fault_seed", Json::num(self.fault_seed as f64)),
+            ("fault_storm_p", Json::num(self.fault_storm_p)),
+            ("fault_transient_p", Json::num(self.fault_transient_p)),
+            ("fault_clock_skip_s", Json::num(self.fault_clock_skip_s)),
+            ("retry_max", Json::num(self.retry_max as f64)),
+            ("admit_pressure", Json::num(self.admit_pressure)),
+            ("preempt_under_pressure", Json::Bool(self.preempt_under_pressure)),
+            ("shed_after_s", Json::num(self.shed_after_s)),
         ])
     }
 
@@ -189,6 +271,32 @@ impl ServeConfig {
             threads: get("threads", d.threads),
             seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
             hw_tbt_s: j.get("hw_tbt_s").and_then(Json::as_f64).unwrap_or(d.hw_tbt_s),
+            fault_seed: j.get("fault_seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            fault_storm_p: j
+                .get("fault_storm_p")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.fault_storm_p),
+            fault_transient_p: j
+                .get("fault_transient_p")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.fault_transient_p),
+            fault_clock_skip_s: j
+                .get("fault_clock_skip_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.fault_clock_skip_s),
+            retry_max: get("retry_max", d.retry_max),
+            admit_pressure: j
+                .get("admit_pressure")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.admit_pressure),
+            preempt_under_pressure: j
+                .get("preempt_under_pressure")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.preempt_under_pressure),
+            shed_after_s: j
+                .get("shed_after_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.shed_after_s),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -281,9 +389,49 @@ mod tests {
             threads: 3,
             seed: 99,
             hw_tbt_s: 0.002,
+            fault_seed: 41,
+            fault_storm_p: 0.5,
+            fault_transient_p: 0.125,
+            fault_clock_skip_s: 0.25,
+            retry_max: 5,
+            admit_pressure: 0.75,
+            preempt_under_pressure: true,
+            shed_after_s: 1.5,
         };
         let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn fault_knobs_validate_only_when_enabled() {
+        // a bad storm probability is ignored while injection is off...
+        let mut c = ServeConfig::default();
+        c.fault_storm_p = 7.0;
+        assert!(c.validate().is_ok());
+        // ...and rejected once a seed turns the plan on
+        c.fault_seed = 1;
+        assert!(c.validate().is_err());
+        // injection demands greedy decoding (bit-identical recovery)
+        let mut c = ServeConfig::default();
+        c.fault_seed = 1;
+        assert!(c.validate().is_ok());
+        c.top_k = 4;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.admit_pressure = 1.5;
+        assert!(c.validate().is_err());
+        // preemption needs a pressure threshold to trigger on
+        let mut c = ServeConfig::default();
+        c.preempt_under_pressure = true;
+        assert!(c.validate().is_err());
+        c.admit_pressure = 0.5;
+        assert!(c.validate().is_ok());
+        // old configs without the fields parse to injection-off
+        let j = Json::parse(r#"{"max_batches": 2}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.fault_seed, 0);
+        assert_eq!(c.admit_pressure, 0.0);
+        assert!(!c.preempt_under_pressure);
     }
 
     #[test]

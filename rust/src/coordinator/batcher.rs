@@ -137,6 +137,22 @@ impl Batcher {
     pub fn all_idle(&self) -> bool {
         self.queue.is_empty() && self.slots.iter().all(|s| s.state == SlotState::Free)
     }
+
+    /// Overload shedding: pop queued requests that have waited longer
+    /// than `max_wait` seconds (FIFO head first, so shedding preserves
+    /// arrival order for everyone behind). Returns the shed requests;
+    /// the caller accounts them with a typed reason (DESIGN.md §13).
+    pub fn drop_queued_older_than(&mut self, now: f64, max_wait: f64) -> Vec<Request> {
+        let mut shed = Vec::new();
+        while let Some(head) = self.queue.front() {
+            if head.arrival_s + max_wait < now {
+                shed.push(self.queue.pop_front().expect("non-empty queue head"));
+            } else {
+                break;
+            }
+        }
+        shed
+    }
 }
 
 #[cfg(test)]
@@ -219,6 +235,22 @@ mod tests {
     #[should_panic(expected = "empty slot")]
     fn releasing_free_slot_panics() {
         Batcher::new(1).release(0);
+    }
+
+    #[test]
+    fn overload_shedding_drops_only_expired_queue_heads() {
+        let mut b = Batcher::new(1);
+        b.submit(req(0, 0.0));
+        b.submit(req(1, 0.5));
+        b.submit(req(2, 5.0));
+        // at t=2 with a 1s deadline: #0 (waited 2s) and #1 (1.5s) shed,
+        // #2 hasn't even arrived
+        let shed = b.drop_queued_older_than(2.0, 1.0);
+        assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.queued(), 1);
+        assert_eq!(b.next_arrival(), Some(5.0));
+        // nothing more to shed
+        assert!(b.drop_queued_older_than(2.0, 1.0).is_empty());
     }
 
     #[test]

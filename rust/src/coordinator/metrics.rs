@@ -1,12 +1,93 @@
 //! Serving metrics: TTFT (time to first token), TBT (token-between-
-//! token), throughput, compute-time summaries, and the measured
+//! token), throughput, compute-time summaries, the measured
 //! KV-tier and adapter-serving statistics read back from the
-//! backend's KV store / adapter registry after a trace.
+//! backend's KV store / adapter registry after a trace, and — when a
+//! fault plan or degradation policy is active — the fault/recovery
+//! accounting ([`FaultMetrics`]) with per-request shed reasons
+//! ([`FailReason`]).
 
 use crate::kvcache::KvStoreStats;
 use crate::lora::LoraServeStats;
 use crate::util::stats::{Percentiles, Summary};
 use crate::util::table::fmt_pct;
+
+/// Why one request was failed/shed instead of completed (DESIGN.md
+/// §13). Every non-completion is accounted under exactly one of these —
+/// invariant 9's "typed reason".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// DR-eDRAM retention expired and the recompute budget ran out.
+    Retention,
+    /// Transient backend faults exhausted the retry budget.
+    Backend,
+    /// Transient adapter cold-load faults exhausted the retry budget.
+    AdapterLoad,
+    /// KV capacity faults exhausted the retry budget.
+    KvCapacity,
+    /// Shed from the admission queue after waiting past the overload
+    /// deadline.
+    Overload,
+}
+
+impl std::fmt::Display for FailReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailReason::Retention => write!(f, "retention"),
+            FailReason::Backend => write!(f, "backend"),
+            FailReason::AdapterLoad => write!(f, "adapter-load"),
+            FailReason::KvCapacity => write!(f, "kv-capacity"),
+            FailReason::Overload => write!(f, "overload"),
+        }
+    }
+}
+
+/// One shed/failed request: its trace id and the typed reason.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedRequest {
+    /// The request's trace id.
+    pub id: u64,
+    /// Why it was shed.
+    pub reason: FailReason,
+}
+
+/// Fault-injection and degradation accounting for one served trace.
+/// All-zero (the `Default`) when no fault plan or pressure policy was
+/// configured — the report then prints no Faults section, keeping
+/// fault-free output byte-identical.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct FaultMetrics {
+    /// Retention-clock storm skips injected by the plan.
+    pub injected_skips: u64,
+    /// Transient faults injected by the plan (before retry handling).
+    pub injected_transients: u64,
+    /// Retention expiries observed on KV reads (each maps 1:1 onto a
+    /// `KvStore` retention failure).
+    pub retention_events: u64,
+    /// Sequences recovered by dropping their expired KV and replaying
+    /// prompt + emitted tokens (bit-identical by invariant 4).
+    pub recomputes: u64,
+    /// Tokens re-derived by those recomputes.
+    pub recomputed_tokens: u64,
+    /// Transient-fault retries granted (skip-round backoff).
+    pub retries: u64,
+    /// Active slots preempted under memory pressure (KV swapped out to
+    /// the external tier; values intact, no recompute).
+    pub preemptions: u64,
+    /// KV blocks demoted by those preemptions.
+    pub demoted_blocks: u64,
+    /// Admissions deferred because measured KV pressure was above the
+    /// configured threshold.
+    pub admission_deferrals: u64,
+    /// Requests shed with their typed reasons, in shed order.
+    pub shed: Vec<ShedRequest>,
+}
+
+impl FaultMetrics {
+    /// Shed-request count per reason (for reports and gates).
+    pub fn shed_count(&self, reason: FailReason) -> u64 {
+        self.shed.iter().filter(|s| s.reason == reason).count() as u64
+    }
+}
 
 /// Aggregate metrics of one served trace.
 #[derive(Debug, Default)]
@@ -38,6 +119,10 @@ pub struct ServeMetrics {
     /// op overhead). `None` when the backend serves no adapter
     /// registry.
     pub lora: Option<LoraServeStats>,
+    /// Fault-injection and degradation accounting (DESIGN.md §13).
+    /// Stays all-zero — and absent from the report — when no fault
+    /// plan or pressure policy is configured.
+    pub faults: FaultMetrics,
 }
 
 impl ServeMetrics {
@@ -116,6 +201,27 @@ impl ServeMetrics {
                 kv.kv_energy_j(),
             ));
         }
+        if self.faults != FaultMetrics::default() {
+            let f = &self.faults;
+            out.push_str(&format!(
+                "\nFault injected skips={} transients={}; retention events={} \
+                 recomputes={} ({} tokens) retries={}; preemptions={} \
+                 (blocks demoted={}) deferrals={}; shed={}",
+                f.injected_skips,
+                f.injected_transients,
+                f.retention_events,
+                f.recomputes,
+                f.recomputed_tokens,
+                f.retries,
+                f.preemptions,
+                f.demoted_blocks,
+                f.admission_deferrals,
+                f.shed.len(),
+            ));
+            for s in &f.shed {
+                out.push_str(&format!("\n      shed request {} ({})", s.id, s.reason));
+            }
+        }
         if let Some(lora) = &self.lora {
             if lora.binds > 0 {
                 out.push_str(&format!(
@@ -186,6 +292,38 @@ mod tests {
         let r = m.report();
         assert!(r.contains("external reduction"), "{r}");
         assert!(r.contains("evictions=0"), "{r}");
+    }
+
+    #[test]
+    fn report_includes_fault_section_only_when_something_happened() {
+        let mut m = ServeMetrics::new();
+        m.record_ttft(0.1);
+        assert!(!m.report().contains("Fault"), "quiet run, no section");
+        m.faults.retention_events = 2;
+        m.faults.recomputes = 2;
+        m.faults.shed.push(ShedRequest {
+            id: 7,
+            reason: FailReason::Overload,
+        });
+        let r = m.report();
+        assert!(r.contains("retention events=2"), "{r}");
+        assert!(r.contains("shed request 7 (overload)"), "{r}");
+        assert_eq!(m.faults.shed_count(FailReason::Overload), 1);
+        assert_eq!(m.faults.shed_count(FailReason::Backend), 0);
+    }
+
+    #[test]
+    fn fail_reasons_render_distinctly() {
+        let all = [
+            FailReason::Retention,
+            FailReason::Backend,
+            FailReason::AdapterLoad,
+            FailReason::KvCapacity,
+            FailReason::Overload,
+        ];
+        let shown: std::collections::BTreeSet<String> =
+            all.iter().map(|r| r.to_string()).collect();
+        assert_eq!(shown.len(), all.len());
     }
 
     #[test]

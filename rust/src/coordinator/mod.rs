@@ -24,6 +24,6 @@ mod pipeline;
 mod server;
 
 pub use batcher::{Batcher, SlotState};
-pub use metrics::ServeMetrics;
+pub use metrics::{FailReason, FaultMetrics, ServeMetrics, ShedRequest};
 pub use pipeline::{PipelineSchedule, StageOp};
 pub use server::{CompletedRequest, Server};

@@ -15,13 +15,26 @@
 //! placement is deterministic), the retention clock, sampling (one Rng,
 //! slot order), and metrics. Served tokens and all merged counters are
 //! therefore bit-identical at any `ServeConfig::threads` width.
+//!
+//! Survivability (DESIGN.md §13, invariant 9): with a seeded
+//! [`FaultPlan`] and/or the degradation knobs active, the loop gates
+//! admission on measured KV pressure, preempts the youngest slot's KV
+//! to the external tier under pressure, retries transiently-faulted
+//! slots with bounded backoff, recovers retention-expired sequences by
+//! recomputing them (bit-identical by invariant 4), and sheds what it
+//! cannot recover with a typed [`FailReason`] — never a panic. All of
+//! it is coordinator-side and keyed off round indices and the plan's
+//! fixed draw schedule, so faulted runs are as deterministic as
+//! fault-free ones. With every knob at its default the loop is
+//! byte-identical to a build without the fault module.
 
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::ServeConfig;
-use crate::kvcache::KvStoreStats;
+use crate::fault::{FaultKind, FaultPlan};
+use crate::kvcache::{KvError, KvStoreStats};
 use crate::lora::LoraServeStats;
 use crate::runtime::{InferenceBackend, Logits, SequenceState};
 use crate::trace::Request;
@@ -29,8 +42,18 @@ use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 use super::batcher::{Batcher, SlotState};
-use super::metrics::ServeMetrics;
+use super::metrics::{FailReason, ServeMetrics, ShedRequest};
 use super::pipeline::PipelineSchedule;
+
+/// The typed shed reason an injected transient fault escalates to when
+/// its retry budget runs out.
+fn fail_reason(kind: FaultKind) -> FailReason {
+    match kind {
+        FaultKind::Backend => FailReason::Backend,
+        FaultKind::AdapterLoad => FailReason::AdapterLoad,
+        FaultKind::KvExhausted => FailReason::KvCapacity,
+    }
+}
 
 /// A finished request with its timings.
 #[derive(Debug, Clone)]
@@ -164,6 +187,17 @@ impl<B: InferenceBackend> Server<B> {
             slot_ttft.push(0.0);
             slot_compute.push(0.0);
         }
+        // Survivability bookkeeping (DESIGN.md §13) — all per-request,
+        // reset at admission. `backoff_until` and the retry/recompute
+        // budgets are indexed by the coordinator's round counter, never
+        // wall time, so faulted schedules replay deterministically.
+        let mut retries: Vec<usize> = vec![0; self.serve.max_batches];
+        let mut recomputes_used: Vec<usize> = vec![0; self.serve.max_batches];
+        let mut backoff_until: Vec<u64> = vec![0; self.serve.max_batches];
+        let mut admit_seq: Vec<u64> = vec![0; self.serve.max_batches];
+        let mut admit_counter: u64 = 0;
+        let mut round_no: u64 = 0;
+        let mut plan = FaultPlan::from_serve(&self.serve);
 
         let mut done = Vec::new();
         let mut metrics = ServeMetrics::new();
@@ -187,9 +221,42 @@ impl<B: InferenceBackend> Server<B> {
         let mut hw_time = 0.0f64;
 
         while !batcher.all_idle() {
-            for slot in batcher.admit(now(skipped_s)) {
-                states[slot] = None;
-                slot_compute[slot] = 0.0;
+            let t_now = now(skipped_s);
+            // overload shedding: queued requests past their deadline
+            // leave with a typed reason instead of waiting forever
+            // (off at the default shed_after_s == 0)
+            if self.serve.shed_after_s > 0.0 {
+                for r in batcher.drop_queued_older_than(t_now, self.serve.shed_after_s) {
+                    metrics.faults.shed.push(ShedRequest {
+                        id: r.id,
+                        reason: FailReason::Overload,
+                    });
+                }
+                // shedding may have drained the system entirely
+                if batcher.all_idle() {
+                    break;
+                }
+            }
+            // admission, gated on measured KV pressure when the knob is
+            // set — but never deferred when every slot is free, or a
+            // full store could deadlock the queue
+            let gate_admission = self.serve.admit_pressure > 0.0
+                && self.kv_pressure() >= self.serve.admit_pressure
+                && !batcher.active_slots().is_empty();
+            if gate_admission {
+                if batcher.next_arrival().is_some_and(|a| a <= t_now) {
+                    metrics.faults.admission_deferrals += 1;
+                }
+            } else {
+                for slot in batcher.admit(t_now) {
+                    states[slot] = None;
+                    slot_compute[slot] = 0.0;
+                    retries[slot] = 0;
+                    recomputes_used[slot] = 0;
+                    backoff_until[slot] = 0;
+                    admit_counter += 1;
+                    admit_seq[slot] = admit_counter;
+                }
             }
             let active = batcher.active_slots();
             if active.is_empty() {
@@ -210,25 +277,94 @@ impl<B: InferenceBackend> Server<B> {
                 continue;
             }
 
+            // preemption under pressure: demote the youngest slot's KV
+            // to the external DRAM tier (invariant 6: tier placement
+            // never changes numerics, so the sequence keeps decoding
+            // from external rows — reload-free, no recompute)
+            if self.serve.preempt_under_pressure
+                && batcher.queued() > 0
+                && self.kv_pressure() >= self.serve.admit_pressure
+            {
+                let victim = active.iter().copied().max_by_key(|&s| admit_seq[s]);
+                if let Some(state) = victim.and_then(|v| states[v].as_mut()) {
+                    let demoted = self.backend.swap_out_kv(state)?;
+                    if demoted > 0 {
+                        metrics.faults.preemptions += 1;
+                        metrics.faults.demoted_blocks += demoted;
+                    }
+                }
+            }
+
+            // draw this round's fault schedule (a fixed number of Rng
+            // draws per round, so the schedule depends only on the seed
+            // and the round index — DESIGN.md §13)
+            round_no += 1;
+            let round_faults = plan.as_mut().map(|p| p.next_round());
+
+            // injected transient faults and backoff: a faulted slot
+            // skips the round *before* any state mutation (so the retry
+            // is safe), with exponentially growing round waits; past
+            // retry_max it is shed with the fault's typed reason
+            let mut runnable: Vec<usize> = Vec::with_capacity(active.len());
+            match &round_faults {
+                None => runnable.extend_from_slice(&active),
+                Some(f) => {
+                    let mut shed_now: Vec<(usize, FailReason)> = Vec::new();
+                    for &slot in &active {
+                        if backoff_until[slot] > round_no {
+                            continue;
+                        }
+                        match f.transient.get(slot).copied().flatten() {
+                            None => runnable.push(slot),
+                            Some(kind) => {
+                                metrics.faults.injected_transients += 1;
+                                if retries[slot] >= self.serve.retry_max {
+                                    shed_now.push((slot, fail_reason(kind)));
+                                } else {
+                                    retries[slot] += 1;
+                                    metrics.faults.retries += 1;
+                                    let wait = 1u64 << ((retries[slot] - 1).min(3) as u32);
+                                    backoff_until[slot] = round_no + wait;
+                                }
+                            }
+                        }
+                    }
+                    for (slot, reason) in shed_now {
+                        let (req, _, _) = batcher.release(slot);
+                        states[slot] = None;
+                        metrics.faults.shed.push(ShedRequest { id: req.id, reason });
+                    }
+                }
+            }
+
             // one token round through the partition pipeline; the
             // schedule models the hardware's skewed lanes and is still
             // validated every round — execution collapses each lane's
             // stage chain onto one pool worker (module docs)
-            let sched = PipelineSchedule::for_round(&active, n_parts);
-            sched
-                .validate(n_parts)
-                .map_err(|e| anyhow::anyhow!("pipeline invariant violated: {e}"))?;
+            if !runnable.is_empty() {
+                let sched = PipelineSchedule::for_round(&runnable, n_parts);
+                sched
+                    .validate(n_parts)
+                    .map_err(|e| anyhow::anyhow!("pipeline invariant violated: {e}"))?;
+            }
 
             // advance the retention clock before the round's KV
-            // accesses: one hw_tbt per pipeline token round
+            // accesses: one hw_tbt per pipeline token round, plus any
+            // injected retention-storm skip (DR-eDRAM clock gap)
             hw_time += self.serve.hw_tbt_s;
+            if let Some(f) = &round_faults {
+                if f.clock_skip_s > 0.0 {
+                    hw_time += f.clock_skip_s;
+                    metrics.faults.injected_skips += 1;
+                }
+            }
             self.backend.advance_kv_clock(hw_time);
 
             // coordinator-side, in slot order (deterministic at any
             // pool width): create + bind fresh prefill states, then
             // reserve the round's KV pages so tier placement never
             // depends on worker interleaving
-            for &slot in &active {
+            for &slot in &runnable {
                 let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
                 if is_prefill && states[slot].is_none() {
                     let mut state = self.backend.new_state()?;
@@ -254,7 +390,7 @@ impl<B: InferenceBackend> Server<B> {
             let items: Vec<(usize, &mut B::State)> = states
                 .iter_mut()
                 .enumerate()
-                .filter(|(slot, s)| active.contains(slot) && s.is_some())
+                .filter(|(slot, s)| runnable.contains(slot) && s.is_some())
                 .map(|(slot, s)| (slot, s.as_mut().unwrap()))
                 .collect();
             let round: Vec<(usize, Result<B::Hidden>, f64)> = pool.map(items, |(slot, state)| {
@@ -269,18 +405,88 @@ impl<B: InferenceBackend> Server<B> {
                 (slot, h, t_op.elapsed().as_secs_f64())
             });
 
-            // per-slot hidden activations for the head/sampling phase
+            // per-slot hidden activations for the head/sampling phase.
+            // This is the failure interception point: with a fault plan
+            // active, a retention expiry is classified via the typed
+            // KvError payload and recovered; every other error — and
+            // any error without a plan — stays fatal, exactly as before
             let mut hidden: Vec<Option<B::Hidden>> =
                 (0..self.serve.max_batches).map(|_| None).collect();
+            let mut to_recover: Vec<usize> = Vec::new();
             for (slot, h, compute_s) in round {
                 slot_compute[slot] += compute_s;
-                hidden[slot] = Some(h?);
+                match h {
+                    Ok(h) => hidden[slot] = Some(h),
+                    Err(e) => {
+                        let retention = plan.is_some()
+                            && e.downcast_ref::<KvError>()
+                                .is_some_and(|k| matches!(k, KvError::Retention(_)));
+                        if !retention {
+                            return Err(e);
+                        }
+                        slot_compute[slot] = 0.0;
+                        to_recover.push(slot);
+                    }
+                }
+            }
+
+            // retention recovery, coordinator-side in slot order: the
+            // expired state is dropped (its pages retire — a retry in
+            // place would see the failed round's partial appends) and
+            // the sequence is recomputed from its prompt plus every
+            // token it already emitted. Invariant 4 (prefill ≡ chunked
+            // decode) makes the rebuilt KV bit-identical, so the
+            // request's remaining tokens match its fault-free twin.
+            for slot in to_recover {
+                states[slot] = None;
+                metrics.faults.retention_events += 1;
+                if recomputes_used[slot] >= self.serve.retry_max {
+                    let (req, _, _) = batcher.release(slot);
+                    metrics.faults.shed.push(ShedRequest {
+                        id: req.id,
+                        reason: FailReason::Retention,
+                    });
+                    continue;
+                }
+                recomputes_used[slot] += 1;
+                metrics.faults.recomputes += 1;
+                let sref = batcher.slot(slot);
+                let req = sref.request.as_ref().expect("active slot has a request");
+                if sref.state == SlotState::NeedsPrefill {
+                    // expired before the first token: the slot stays
+                    // NeedsPrefill and next round re-runs the prefill
+                    // on a fresh state
+                    continue;
+                }
+                // replay = prompt + all emitted tokens except the last
+                // (which still seeds the next decode round unchanged)
+                let out = &sref.output;
+                let replay: Vec<i32> = req
+                    .prompt
+                    .iter()
+                    .chain(out[..out.len() - 1].iter())
+                    .copied()
+                    .collect();
+                let mut st = self.backend.new_state()?;
+                self.backend.bind_adapter(&mut st, req.adapter_id)?;
+                self.backend.reserve_kv(&mut st, replay.len())?;
+                // one prefill-shaped pass rebuilds the KV rows; the
+                // hidden state is discarded — the last token is known
+                run_slot_round(&self.backend, n_parts, Some(&replay), 0, &mut st)?;
+                st.set_pos(replay.len());
+                st.set_prompt_len(req.prompt.len());
+                states[slot] = Some(st);
+                metrics.faults.recomputed_tokens += replay.len() as u64;
             }
 
             // head + sampling per slot (KV reads/writes already ran —
             // and were tier-accounted — inside the partition stages)
-            for &slot in &active {
-                let h = hidden[slot].take().expect("missing hidden after round");
+            for &slot in &runnable {
+                let h = match hidden[slot].take() {
+                    Some(h) => h,
+                    // recovered or shed this round: no token to sample
+                    None => continue,
+                };
                 let state = states[slot].as_mut().unwrap();
                 let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
                 let logits = if is_prefill {
@@ -354,11 +560,36 @@ impl<B: InferenceBackend> Server<B> {
         };
         // DR-eDRAM health postcondition (DESIGN.md invariant 5): a
         // violation would already have erred out of a decode read, but
-        // assert the measured counters agree
+        // assert the measured counters agree. Under a fault plan the
+        // analogue (invariant 9) is that every store-counted expiry was
+        // observed and recovered or shed by the coordinator.
         if let Some(kv) = &metrics.kv {
-            anyhow::ensure!(kv.retention_failures == 0, "retention failures occurred");
+            if plan.is_none() {
+                anyhow::ensure!(kv.retention_failures == 0, "retention failures occurred");
+            } else {
+                anyhow::ensure!(
+                    kv.retention_failures == metrics.faults.retention_events,
+                    "unaccounted retention failures: store counted {}, coordinator handled {}",
+                    kv.retention_failures,
+                    metrics.faults.retention_events
+                );
+            }
         }
         Ok((done, metrics))
+    }
+
+    /// Measured on-die KV occupancy in [0, 1] — the admission /
+    /// preemption pressure signal. Backends with opaque device-side KV
+    /// report 0 (the knobs are inert there); a store configured with
+    /// zero on-die capacity reports 1 (always under pressure).
+    fn kv_pressure(&self) -> f64 {
+        self.backend.kv_stats().map_or(0.0, |s| {
+            if s.ondie_block_capacity == 0 {
+                1.0
+            } else {
+                s.ondie_blocks_in_use as f64 / s.ondie_block_capacity as f64
+            }
+        })
     }
 }
 

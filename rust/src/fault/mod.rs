@@ -1,0 +1,222 @@
+//! Deterministic fault injection for the serving plane (DESIGN.md §13).
+//!
+//! A [`FaultPlan`] is a seeded schedule of adverse events — DR-eDRAM
+//! retention-clock skips ("storms"), transient backend / adapter-load /
+//! KV-capacity failures — consumed by `coordinator::Server::run_trace`
+//! one [`RoundFaults`] per token round. The plan draws a **fixed**
+//! number of random values per round (one storm draw plus one draw per
+//! batch slot, active or not), so the injected schedule depends only on
+//! the seed and the round index: it is byte-identical across `--threads`
+//! widths and across reruns, which is what lets invariant 9 assert that
+//! a faulted run's surviving tokens match the fault-free twin exactly.
+//!
+//! The plan injects *causes*; the server owns the *policy* (recompute
+//! recovery, bounded retry with backoff, shedding) and the accounting
+//! (`ServeMetrics::faults`). With no plan configured (`fault_seed == 0`)
+//! nothing in this module runs and serving behavior is unchanged.
+
+use crate::config::ServeConfig;
+use crate::util::rng::Rng;
+
+/// Rounds after a storm during which the next storm is suppressed, so
+/// a high `fault_storm_p` produces periodic storms instead of a
+/// permanent clock stall no sequence could ever survive. The
+/// suppressed rounds still consume their storm draw, keeping the
+/// random stream length per round fixed.
+pub const STORM_COOLDOWN_ROUNDS: u64 = 6;
+
+/// One class of injected transient failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The backend's token round fails transiently (compute fabric).
+    Backend,
+    /// An adapter cold load fails transiently (stream interrupted).
+    AdapterLoad,
+    /// KV slab/row allocation fails transiently (capacity exhausted).
+    KvExhausted,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultKind::Backend => write!(f, "backend"),
+            FaultKind::AdapterLoad => write!(f, "adapter-load"),
+            FaultKind::KvExhausted => write!(f, "kv-exhausted"),
+        }
+    }
+}
+
+/// The faults injected into one token round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundFaults {
+    /// Extra seconds added to the DR-eDRAM hardware clock this round
+    /// (0.0 = no storm). A skip larger than the retention window minus
+    /// the round time expires every resident on-die row at once.
+    pub clock_skip_s: f64,
+    /// Per-slot transient failure, indexed by batch slot id.
+    pub transient: Vec<Option<FaultKind>>,
+}
+
+impl RoundFaults {
+    /// True when this round injects nothing.
+    pub fn is_quiet(&self) -> bool {
+        self.clock_skip_s == 0.0 && self.transient.iter().all(Option::is_none)
+    }
+}
+
+/// A seeded, deterministic fault schedule (module docs).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    rng: Rng,
+    n_slots: usize,
+    storm_p: f64,
+    transient_p: f64,
+    clock_skip_s: f64,
+    rounds_since_storm: u64,
+}
+
+impl FaultPlan {
+    /// Plan over `n_slots` batch slots from explicit parameters.
+    /// Probabilities are clamped to `[0, 1]`.
+    pub fn new(
+        seed: u64,
+        n_slots: usize,
+        storm_p: f64,
+        transient_p: f64,
+        clock_skip_s: f64,
+    ) -> Self {
+        FaultPlan {
+            rng: Rng::new(seed),
+            n_slots,
+            storm_p: storm_p.clamp(0.0, 1.0),
+            transient_p: transient_p.clamp(0.0, 1.0),
+            clock_skip_s: clock_skip_s.max(0.0),
+            rounds_since_storm: STORM_COOLDOWN_ROUNDS,
+        }
+    }
+
+    /// Plan configured by a [`ServeConfig`], or `None` when
+    /// `fault_seed == 0` (fault injection off — the default).
+    pub fn from_serve(cfg: &ServeConfig) -> Option<Self> {
+        if cfg.fault_seed == 0 {
+            return None;
+        }
+        Some(FaultPlan::new(
+            cfg.fault_seed,
+            cfg.max_batches,
+            cfg.fault_storm_p,
+            cfg.fault_transient_p,
+            cfg.fault_clock_skip_s,
+        ))
+    }
+
+    /// Draw the next round's faults. Always consumes exactly
+    /// `1 + n_slots` generator values regardless of what fires.
+    pub fn next_round(&mut self) -> RoundFaults {
+        let storm_draw = self.rng.f64();
+        let storm = storm_draw < self.storm_p && self.rounds_since_storm >= STORM_COOLDOWN_ROUNDS;
+        if storm {
+            self.rounds_since_storm = 0;
+        } else {
+            self.rounds_since_storm += 1;
+        }
+        let transient: Vec<Option<FaultKind>> = (0..self.n_slots)
+            .map(|_| {
+                // one u64 per slot: top 53 bits decide, low bits pick the kind
+                let r = self.rng.next_u64();
+                let p = (r >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                if p < self.transient_p {
+                    Some(match r % 3 {
+                        0 => FaultKind::Backend,
+                        1 => FaultKind::AdapterLoad,
+                        _ => FaultKind::KvExhausted,
+                    })
+                } else {
+                    None
+                }
+            })
+            .collect();
+        RoundFaults {
+            clock_skip_s: if storm { self.clock_skip_s } else { 0.0 },
+            transient,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(seed: u64, storm_p: f64, transient_p: f64) -> FaultPlan {
+        FaultPlan::new(seed, 4, storm_p, transient_p, 0.1)
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let mut a = plan(7, 0.5, 0.3);
+        let mut b = plan(7, 0.5, 0.3);
+        for _ in 0..200 {
+            assert_eq!(a.next_round(), b.next_round());
+        }
+        let mut c = plan(8, 0.5, 0.3);
+        assert!((0..200).any(|_| a.next_round() != c.next_round()));
+    }
+
+    #[test]
+    fn zero_probabilities_inject_nothing() {
+        let mut p = plan(3, 0.0, 0.0);
+        for _ in 0..100 {
+            assert!(p.next_round().is_quiet());
+        }
+    }
+
+    #[test]
+    fn certain_storms_respect_the_cooldown() {
+        let mut p = plan(5, 1.0, 0.0);
+        let skips: Vec<bool> = (0..40).map(|_| p.next_round().clock_skip_s > 0.0).collect();
+        assert!(skips[0], "first round must storm at p = 1");
+        // storms are spaced exactly one cooldown apart
+        for (i, &s) in skips.iter().enumerate() {
+            assert_eq!(s, i as u64 % (STORM_COOLDOWN_ROUNDS + 1) == 0, "round {i}");
+        }
+    }
+
+    #[test]
+    fn transients_fire_at_roughly_the_configured_rate() {
+        let mut p = plan(11, 0.0, 0.25);
+        let n = 4000u32;
+        let hits: u32 = (0..n / 4)
+            .map(|_| p.next_round().transient.iter().flatten().count() as u32)
+            .sum();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.03, "transient fraction {frac}");
+    }
+
+    #[test]
+    fn all_fault_kinds_appear() {
+        let mut p = plan(13, 0.0, 1.0);
+        let mut seen = [false; 3];
+        for _ in 0..50 {
+            for k in p.next_round().transient.into_iter().flatten() {
+                seen[match k {
+                    FaultKind::Backend => 0,
+                    FaultKind::AdapterLoad => 1,
+                    FaultKind::KvExhausted => 2,
+                }] = true;
+            }
+        }
+        assert_eq!(seen, [true; 3]);
+    }
+
+    #[test]
+    fn from_serve_is_off_by_default() {
+        let cfg = ServeConfig::default();
+        assert!(FaultPlan::from_serve(&cfg).is_none());
+        let on = ServeConfig {
+            fault_seed: 9,
+            ..ServeConfig::default()
+        };
+        let mut p = FaultPlan::from_serve(&on).expect("seeded plan");
+        assert_eq!(p.next_round().transient.len(), on.max_batches);
+    }
+}

@@ -28,7 +28,7 @@ mod store;
 mod study;
 
 pub use manager::{KvCacheManager, KvStats};
-pub use store::{KvQuant, KvSeq, KvStore, KvStoreConfig, KvStoreStats};
+pub use store::{KvError, KvQuant, KvSeq, KvStore, KvStoreConfig, KvStoreStats};
 pub use study::{
     closed_form_reduction, reduction_sweep, simulate_reduction, SweepPoint, PAPER_BUFFERS,
     PAPER_SEQ_LENS,

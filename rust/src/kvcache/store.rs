@@ -29,6 +29,12 @@
 //! moves never change stored values, so placement is invisible to the
 //! model's numerics.
 //!
+//! Every fallible store operation returns a typed [`KvError`] instead
+//! of panicking: retention expiry, free-slab references, double
+//! demotions, and row-accounting corruption are all classifiable by
+//! the serving layer, which recovers or sheds one request instead of
+//! tearing down the server (DESIGN.md §13).
+//!
 //! Quantization is per *token row*, not per whole block: a row's
 //! stored value is fixed at append time and never revised, which keeps
 //! dequantization time-invariant — prefill and chunked decode see
@@ -41,6 +47,61 @@ use crate::dram::{DramParams, ExternalDram};
 use crate::edram::{DrEdram, RetentionError};
 
 use super::KvStats;
+
+/// Typed failure of a KV-store operation (DESIGN.md §13). Every
+/// capacity/eviction edge that used to panic surfaces here instead, so
+/// the serving layer can classify a failure (recover, retry, or shed
+/// one request) without ever tearing down the whole server. The
+/// variant survives `anyhow` wrapping — the host backend raises these
+/// via `anyhow::Error::new`, and the coordinator gets the typed value
+/// back with `downcast_ref::<KvError>()`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum KvError {
+    /// A DR-eDRAM row was read past its retention deadline — the
+    /// stored KV is gone; the sequence must be recomputed or shed.
+    Retention(RetentionError),
+    /// A block table referenced a slab slot holding no block (retired
+    /// or never-allocated page — e.g. a double-retire race).
+    FreeBlock {
+        /// The offending slab index.
+        id: usize,
+    },
+    /// Asked to demote a block that already lives in external DRAM.
+    EvictExternal {
+        /// The offending slab index.
+        id: usize,
+    },
+    /// Row accounting corrupted: an eviction freed no allocatable
+    /// on-die range.
+    RowAccounting {
+        /// Rows one block needs.
+        need_rows: usize,
+    },
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::Retention(e) => write!(f, "KV retention expiry: {e}"),
+            KvError::FreeBlock { id } => write!(f, "KV block {id} is not mapped in the slab"),
+            KvError::EvictExternal { id } => {
+                write!(f, "KV block {id} is already in external DRAM")
+            }
+            KvError::RowAccounting { need_rows } => {
+                write!(f, "KV eviction freed no {need_rows}-row eDRAM range")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            KvError::Retention(e) => Some(e),
+            _ => None,
+        }
+    }
+}
 
 /// KV element encoding inside a block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -377,21 +438,34 @@ impl KvStore {
     /// calls (DESIGN.md §12). Reserving is idempotent for already-
     /// covered tokens and counts nothing: writes are accounted when
     /// the rows actually land.
-    pub fn reserve(&mut self, seq: &mut KvSeq, layer: usize, n_tokens: usize) {
+    pub fn reserve(
+        &mut self,
+        seq: &mut KvSeq,
+        layer: usize,
+        n_tokens: usize,
+    ) -> Result<(), KvError> {
         let bt = self.cfg.block_tokens;
         let need = (seq.lens[layer] + n_tokens).div_ceil(bt);
         for bi in seq.tables[layer].len()..need {
-            let id = self.alloc_block(bi * bt);
+            let id = self.alloc_block(bi * bt)?;
             seq.tables[layer].push(id);
         }
+        Ok(())
     }
 
     /// Append the next token's K/V rows for `layer` (token index =
     /// tokens appended to that layer so far). Counts one tier write at
     /// the current clock. Rows must be exactly `kv_dim` wide. Uses the
     /// block [`Self::reserve`] placed for this token if one exists;
-    /// otherwise allocates (and places) the block here.
-    pub fn append(&mut self, seq: &mut KvSeq, layer: usize, k_row: &[f32], v_row: &[f32]) {
+    /// otherwise allocates (and places) the block here. Fails typed
+    /// ([`KvError`]) on slab/placement corruption instead of panicking.
+    pub fn append(
+        &mut self,
+        seq: &mut KvSeq,
+        layer: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<(), KvError> {
         let d = self.cfg.kv_dim;
         assert_eq!(k_row.len(), d, "K row width {} != kv_dim {d}", k_row.len());
         assert_eq!(v_row.len(), d, "V row width {} != kv_dim {d}", v_row.len());
@@ -399,12 +473,12 @@ impl KvStore {
         let bt = self.cfg.block_tokens;
         let bi = token / bt;
         if seq.tables[layer].len() <= bi {
-            let id = self.alloc_block(bi * bt);
+            let id = self.alloc_block(bi * bt)?;
             seq.tables[layer].push(id);
         }
         let id = seq.tables[layer][bi];
-        let slot = token - self.blocks[id].as_ref().unwrap().first_token;
-        let block = self.blocks[id].as_mut().unwrap();
+        let block = self.blocks[id].as_mut().ok_or(KvError::FreeBlock { id })?;
+        let slot = token - block.first_token;
         match &mut block.data {
             BlockData::F32 { k, v } => {
                 k[slot * d..(slot + 1) * d].copy_from_slice(k_row);
@@ -416,10 +490,10 @@ impl KvStore {
             }
         }
         block.len += 1;
+        let tier = block.tier;
         seq.lens[layer] = token + 1;
         // account the write on the block's tier
         let bytes = self.cfg.bytes_per_token();
-        let tier = self.blocks[id].as_ref().unwrap().tier;
         match tier {
             Tier::OnDie { row_base } => {
                 self.write_token_rows(row_base, slot, bytes);
@@ -430,6 +504,7 @@ impl KvStore {
                 self.stats.external_writes += 1;
             }
         }
+        Ok(())
     }
 
     /// Dequantize tokens `0..n_ctx` of `layer` into `k_out`/`v_out`
@@ -440,10 +515,10 @@ impl KvStore {
     /// for every token except the newest (its KV feeds from the
     /// datapath registers — Fig 5(a) convention), and on-die rows pass
     /// through the DR-eDRAM retention check at the current clock:
-    /// reading refreshes, a stall past tREF returns the row's
-    /// [`RetentionError`]. Prefill attention reads on-chip activation
-    /// buffers, so the serving path gathers with `count_reads = false`
-    /// there.
+    /// reading refreshes, a stall past tREF returns the row's expiry as
+    /// [`KvError::Retention`]. Prefill attention reads on-chip
+    /// activation buffers, so the serving path gathers with
+    /// `count_reads = false` there.
     pub fn gather(
         &mut self,
         seq: &KvSeq,
@@ -452,7 +527,7 @@ impl KvStore {
         count_reads: bool,
         k_out: &mut Vec<f32>,
         v_out: &mut Vec<f32>,
-    ) -> Result<(), RetentionError> {
+    ) -> Result<(), KvError> {
         let d = self.cfg.kv_dim;
         let bt = self.cfg.block_tokens;
         assert!(
@@ -470,10 +545,11 @@ impl KvStore {
             let slot = t % bt;
             // newest token forwards from the datapath registers
             if count_reads && t + 1 < n_ctx {
-                let tier = self.blocks[id].as_ref().unwrap().tier;
+                let tier = self.blocks[id].as_ref().ok_or(KvError::FreeBlock { id })?.tier;
                 match tier {
                     Tier::OnDie { row_base } => {
-                        self.read_token_rows(row_base, slot, bytes)?;
+                        self.read_token_rows(row_base, slot, bytes)
+                            .map_err(KvError::Retention)?;
                         self.stats.ondie_reads += 1;
                     }
                     Tier::External => {
@@ -482,7 +558,7 @@ impl KvStore {
                     }
                 }
             }
-            let block = self.blocks[id].as_ref().unwrap();
+            let block = self.blocks[id].as_ref().ok_or(KvError::FreeBlock { id })?;
             match &block.data {
                 BlockData::F32 { k, v } => {
                     k_out.extend_from_slice(&k[slot * d..(slot + 1) * d]);
@@ -525,12 +601,34 @@ impl KvStore {
         &self.dram
     }
 
+    /// Swap a whole sequence out of the on-die tier: every resident
+    /// block is demoted to external DRAM (counted as evictions, like
+    /// capacity-driven demotions), freeing its eDRAM rows for other
+    /// sequences. Already-external blocks are skipped, so demoting
+    /// twice is a no-op. Returns the number of blocks demoted. Stored
+    /// values are untouched — a swapped-out sequence reads back
+    /// bit-identical KV (placement never changes numerics), which is
+    /// what makes preemption recovery reload-free (DESIGN.md §13).
+    pub fn demote_seq(&mut self, seq: &KvSeq) -> Result<u64, KvError> {
+        let mut demoted = 0;
+        for table in &seq.tables {
+            for &id in table {
+                let block = self.blocks[id].as_ref().ok_or(KvError::FreeBlock { id })?;
+                if matches!(block.tier, Tier::OnDie { .. }) {
+                    self.evict(id)?;
+                    demoted += 1;
+                }
+            }
+        }
+        Ok(demoted)
+    }
+
     // ---- internals ------------------------------------------------------
 
     /// Allocate a slab slot + tier placement for a block whose first
     /// token is `first_token`.
-    fn alloc_block(&mut self, first_token: usize) -> usize {
-        let tier = self.place(first_token);
+    fn alloc_block(&mut self, first_token: usize) -> Result<usize, KvError> {
+        let tier = self.place(first_token)?;
         let bt = self.cfg.block_tokens;
         let d = self.cfg.kv_dim;
         let data = match self.cfg.quant {
@@ -551,7 +649,7 @@ impl KvStore {
             tier,
             data,
         };
-        match self.free_ids.pop() {
+        Ok(match self.free_ids.pop() {
             Some(id) => {
                 self.blocks[id] = Some(block);
                 id
@@ -560,29 +658,31 @@ impl KvStore {
                 self.blocks.push(Some(block));
                 self.blocks.len() - 1
             }
-        }
+        })
     }
 
     /// Early-token-on-die placement with eviction on overflow.
-    fn place(&mut self, first_token: usize) -> Tier {
+    fn place(&mut self, first_token: usize) -> Result<Tier, KvError> {
         if first_token >= self.cfg.ondie_tokens {
-            return Tier::External;
+            return Ok(Tier::External);
         }
         if let Some(row_base) = self.alloc_rows() {
             self.ondie_in_use += 1;
-            return Tier::OnDie { row_base };
+            return Ok(Tier::OnDie { row_base });
         }
         // Tier full: demote the resident block covering the latest
         // tokens, if it is later than the incoming block (early tokens
         // are re-read the most — they win across all live sequences).
         if let Some(victim) = self.latest_ondie_block(first_token) {
-            self.evict(victim);
-            let row_base = self.alloc_rows().expect("eviction freed a row range");
+            self.evict(victim)?;
+            let row_base = self.alloc_rows().ok_or(KvError::RowAccounting {
+                need_rows: self.cfg.rows_per_block(),
+            })?;
             self.ondie_in_use += 1;
-            return Tier::OnDie { row_base };
+            return Ok(Tier::OnDie { row_base });
         }
         self.spilled_early_blocks += 1;
-        Tier::External
+        Ok(Tier::External)
     }
 
     fn alloc_rows(&mut self) -> Option<usize> {
@@ -620,19 +720,22 @@ impl KvStore {
     /// written out (external traffic + energy, tracked separately from
     /// the token-granular access stats), its eDRAM rows are freed. The
     /// stored values are untouched — placement never changes numerics.
-    fn evict(&mut self, id: usize) {
+    /// Fails typed on a free slab slot or an already-external block
+    /// (double-evict), instead of panicking.
+    fn evict(&mut self, id: usize) -> Result<(), KvError> {
         let (row_base, len) = {
-            let b = self.blocks[id].as_ref().expect("evicting a free block");
+            let b = self.blocks[id].as_ref().ok_or(KvError::FreeBlock { id })?;
             match b.tier {
                 Tier::OnDie { row_base } => (row_base, b.len),
-                Tier::External => unreachable!("evicting an external block"),
+                Tier::External => return Err(KvError::EvictExternal { id }),
             }
         };
         self.dram.write(len as u64 * self.cfg.bytes_per_token());
         self.ondie_free.push(row_base);
         self.ondie_in_use -= 1;
         self.evictions += 1;
-        self.blocks[id].as_mut().unwrap().tier = Tier::External;
+        self.blocks[id].as_mut().ok_or(KvError::FreeBlock { id })?.tier = Tier::External;
+        Ok(())
     }
 
     /// eDRAM rows covering token `slot` of a block at `row_base`.
@@ -719,7 +822,7 @@ mod tests {
         for _ in 0..n {
             let (k, v) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
             for layer in 0..layers {
-                store.append(seq, layer, &k, &v);
+                store.append(seq, layer, &k, &v).unwrap();
             }
             rows.push(k);
             rows.push(v);
@@ -768,7 +871,7 @@ mod tests {
         let mut store = KvStore::new(cfg());
         let mut seq = store.new_seq();
         let z = vec![0f32; 8];
-        store.append(&mut seq, 0, &z, &z);
+        store.append(&mut seq, 0, &z, &z).unwrap();
         let (mut k, mut v) = (Vec::new(), Vec::new());
         store.gather(&seq, 0, 1, false, &mut k, &mut v).unwrap();
         assert!(k.iter().chain(&v).all(|&x| x == 0.0));
@@ -786,7 +889,7 @@ mod tests {
             store.set_now(t as f64 * tbt);
             let (kr, vr) = (rand_row(&mut rng, d), rand_row(&mut rng, d));
             for layer in 0..layers {
-                store.append(seq, layer, &kr, &vr);
+                store.append(seq, layer, &kr, &vr).unwrap();
                 store
                     .gather(seq, layer, t + 1, true, &mut k, &mut v)
                     .expect("retention violated");
@@ -836,7 +939,10 @@ mod tests {
         store.gather(&seq, 0, 4, true, &mut k, &mut v).unwrap();
         store.set_now(0.05 + 0.1); // 100 ms stall > tREF
         let err = store.gather(&seq, 0, 4, true, &mut k, &mut v);
-        assert!(err.is_err(), "expired read must fail");
+        assert!(
+            matches!(err, Err(KvError::Retention(_))),
+            "expired read must fail typed, got {err:?}"
+        );
         assert_eq!(store.stats().retention_failures, 1);
     }
 
@@ -919,11 +1025,11 @@ mod tests {
         // reservation allocates + places blocks without counting writes
         let mut store = KvStore::new(cfg());
         let mut seq = store.new_seq();
-        store.reserve(&mut seq, 0, 10); // 3 blocks of 4 tokens
+        store.reserve(&mut seq, 0, 10).unwrap(); // 3 blocks of 4 tokens
         assert_eq!(store.ondie_blocks_in_use(), 2, "tokens 0..8 on-die");
         assert_eq!(store.stats().accesses.ondie_writes, 0, "reserve writes nothing");
         // re-reserving covered tokens is a no-op
-        store.reserve(&mut seq, 0, 4);
+        store.reserve(&mut seq, 0, 4).unwrap();
         assert_eq!(store.ondie_blocks_in_use(), 2);
         // appends land in the reserved blocks and only then count
         let rows = fill(&mut store, &mut seq, 10, 21);
@@ -944,7 +1050,7 @@ mod tests {
             let mut store = KvStore::new(two_block_cfg());
             let mut seq = store.new_seq();
             if reserve {
-                store.reserve(&mut seq, 0, 12);
+                store.reserve(&mut seq, 0, 12).unwrap();
             }
             fill(&mut store, &mut seq, 12, 5);
             let s = store.stats();
@@ -963,7 +1069,7 @@ mod tests {
     fn retirement_recycles_reserved_but_unused_blocks() {
         let mut store = KvStore::new(cfg());
         let mut seq = store.new_seq();
-        store.reserve(&mut seq, 0, 8);
+        store.reserve(&mut seq, 0, 8).unwrap();
         assert_eq!(store.ondie_blocks_in_use(), 2);
         store.retire_seq(&mut seq);
         assert_eq!(store.ondie_blocks_in_use(), 0, "unused reservations recycled");
@@ -983,6 +1089,55 @@ mod tests {
         store.gather(&seq, 0, 4, false, &mut k2, &mut v2).unwrap();
         assert_eq!(k1, k2);
         assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn demote_seq_swaps_out_preserving_values() {
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        fill(&mut store, &mut seq, 8, 17);
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 8, false, &mut k1, &mut v1).unwrap();
+        let demoted = store.demote_seq(&seq).unwrap();
+        assert!(demoted > 0, "early blocks were on-die");
+        assert_eq!(store.ondie_blocks_in_use(), 0);
+        // demoting again is a no-op (all blocks already external)
+        assert_eq!(store.demote_seq(&seq).unwrap(), 0);
+        // swap-out moved bytes but not values
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 8, false, &mut k2, &mut v2).unwrap();
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        assert_eq!(store.stats().evictions, demoted);
+    }
+
+    #[test]
+    fn demoted_blocks_survive_a_retention_stall() {
+        // a swapped-out sequence no longer depends on the retention
+        // clock: external DRAM has no tREF
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        fill(&mut store, &mut seq, 4, 19);
+        store.demote_seq(&seq).unwrap();
+        store.set_now(10.0); // far past tREF
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        store.gather(&seq, 0, 4, true, &mut k, &mut v).unwrap();
+        assert_eq!(store.stats().retention_failures, 0);
+    }
+
+    #[test]
+    fn kv_errors_are_typed_and_printable() {
+        let e = KvError::FreeBlock { id: 3 };
+        assert!(e.to_string().contains('3'));
+        let mut store = KvStore::new(cfg());
+        let mut seq = store.new_seq();
+        fill(&mut store, &mut seq, 4, 3);
+        store.set_now(1.0); // stall past tREF
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        match store.gather(&seq, 0, 4, true, &mut k, &mut v) {
+            Err(KvError::Retention(r)) => assert!(r.expired_for_s > 0.0),
+            other => panic!("expected a typed retention error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -37,6 +37,10 @@
 //! * [`energy`] — analytical energy/area model (Table III, Fig 1a)
 //!   plus the measured KV memory energy ([`energy::KvEnergy`]) and
 //!   adapter task-switch energy ([`energy::AdapterEnergy`]).
+//! * [`fault`] — the robustness layer's cause generator (DESIGN.md
+//!   §13): the seeded deterministic [`fault::FaultPlan`] injecting
+//!   retention-clock storms and transient backend/adapter/KV failures,
+//!   consumed by the server's recovery/shedding policy (invariant 9).
 //! * [`util`] — offline substrates (json, args, rng, stats, bench,
 //!   property-check harness, tables, and the [`util::pool`]
 //!   scoped-thread worker pool the parallel execution engine runs on).
@@ -50,6 +54,7 @@ pub mod coordinator;
 pub mod dram;
 pub mod edram;
 pub mod energy;
+pub mod fault;
 pub mod kvcache;
 pub mod lora;
 pub mod report;

@@ -89,6 +89,7 @@ fn serve_trace_cfg(args: &Args, vocab: usize, n_adapters: usize) -> TraceConfig 
         gen_len_min: args.usize("gen").min(8),
         gen_len_max: args.usize("gen"),
         arrival_rate: args.f64("rate"),
+        burst_p: args.f64("burst-p"),
         seed: args.u64("seed"),
         vocab_size: vocab,
         n_adapters,
@@ -101,6 +102,14 @@ fn serve_cfg(args: &Args) -> ServeConfig {
         max_batches: args.usize("batches"),
         threads: args.usize("threads"),
         seed: args.u64("seed"),
+        fault_seed: args.u64("fault-plan"),
+        fault_storm_p: args.f64("storm-p"),
+        fault_transient_p: args.f64("transient-p"),
+        fault_clock_skip_s: args.f64("clock-skip"),
+        retry_max: args.usize("retry-max"),
+        admit_pressure: args.f64("admit-pressure"),
+        preempt_under_pressure: args.flag("preempt"),
+        shed_after_s: args.f64("shed-after"),
         ..ServeConfig::default()
     }
 }
@@ -179,6 +188,15 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("adapter-rank", "16", "adapter rank (with --adapters)")
         .opt("placements", "VOD", "adapter placement sites (letters from QKVOGUD)")
         .opt("threads", "0", "worker threads (0 = BITROM_THREADS or serial; width-invariant tokens)")
+        .opt("fault-plan", "0", "deterministic fault-injection seed (0 = off; DESIGN.md §13)")
+        .opt("storm-p", "0.25", "per-round retention-storm probability (with --fault-plan)")
+        .opt("transient-p", "0.05", "per-slot transient-fault probability (with --fault-plan)")
+        .opt("clock-skip", "0.1", "retention clock skip per storm, seconds (with --fault-plan)")
+        .opt("retry-max", "3", "transient retries / recomputes per request before shedding")
+        .opt("admit-pressure", "0", "defer admission above this on-die KV occupancy (0 = off)")
+        .opt("shed-after", "0", "shed queued requests waiting longer than this (s; 0 = never)")
+        .opt("burst-p", "0", "trace burst probability (arrival ties; stresses admission)")
+        .flag("preempt", "demote the youngest slot's KV under pressure (with --admit-pressure)")
         .flag("host", "serve on the offline HostBackend (no artifacts/PJRT needed)")
         .flag("verbose", "per-request output");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
@@ -207,6 +225,16 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
                 reg.lora().placement_str(),
                 reg.adapter_bytes(),
                 reg.full_reload_bytes(),
+            );
+        }
+        if serve.fault_seed != 0 {
+            println!(
+                "fault plan: seed {} (storm p={} skip={}s, transient p={}, retry budget {})",
+                serve.fault_seed,
+                serve.fault_storm_p,
+                serve.fault_clock_skip_s,
+                serve.fault_transient_p,
+                serve.retry_max,
             );
         }
         let trace = serve_trace_cfg(&args, backend.model().vocab_size, serve.n_adapters);

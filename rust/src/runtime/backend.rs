@@ -173,6 +173,17 @@ pub trait InferenceBackend {
         None
     }
 
+    /// Swap this sequence's KV out of the capacity-bounded on-die tier
+    /// to external memory, freeing on-die pages for other sequences
+    /// (preemption under memory pressure, DESIGN.md §13). Stored
+    /// values must be unchanged — a preempted sequence resumes from
+    /// the external tier with bit-identical KV, no recompute. Returns
+    /// the number of blocks demoted; backends without a tiered
+    /// host-side store keep the no-op default.
+    fn swap_out_kv(&self, _state: &mut Self::State) -> Result<u64> {
+        Ok(0)
+    }
+
     /// Bind a tenant's LoRA adapter (or `None` for the frozen base
     /// model) to a fresh sequence, *before* its prefill runs — the
     /// adapter shapes every projection the sequence executes, so a
@@ -455,5 +466,7 @@ mod tests {
         let bound = b.generate_greedy_bound(&[1, 2, 3], 4, None).unwrap();
         assert_eq!(plain, bound);
         assert!(b.lora_stats().is_none());
+        // no tiered host store: swapping out demotes nothing
+        assert_eq!(b.swap_out_kv(&mut state).unwrap(), 0);
     }
 }

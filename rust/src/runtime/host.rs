@@ -51,7 +51,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::bitnet::{absmax_quantize, QuantizedActs, TernaryMatrix};
 use crate::cirom::{EventCounters, MacroBank};
@@ -308,6 +308,14 @@ impl HostBackend {
 
     /// Handle to the current KV store (accounting inspection; new
     /// states allocate their pages here).
+    ///
+    /// The `expect`s on this and every other store-lock acquisition are
+    /// documented infallibility, not a panic edge: a poisoned lock
+    /// means a worker thread already panicked while holding the store,
+    /// and since every store operation returns typed
+    /// [`KvError`](crate::kvcache::KvError)s instead of panicking
+    /// (invariant 9), that can only be a bug in
+    /// the kernels themselves — state no recovery policy could trust.
     pub fn kv_store(&self) -> Arc<Mutex<KvStore>> {
         self.store.read().expect("KV store handle poisoned").clone()
     }
@@ -518,14 +526,16 @@ impl HostBackend {
         {
             let mut store = state.store.lock().expect("KV store lock poisoned");
             for (kk, vv) in ks.iter().zip(&vs) {
-                store.append(&mut state.kv, li, kk, vv);
+                // `?` keeps the typed KvError as the anyhow payload, so
+                // the serving layer can classify the failure
+                store.append(&mut state.kv, li, kk, vv)?;
             }
             // prefill attention reads on-chip activation buffers, so
             // only decode gathers count as (retention-checked) memory
             // reads — the Fig 5(a) convention
             store
                 .gather(&state.kv, li, n_ctx, !is_prefill, &mut state.kbuf, &mut state.vbuf)
-                .map_err(|e| anyhow!("DR-eDRAM retention violated during decode: {e}"))?;
+                .context("DR-eDRAM retention violated during decode")?;
         }
         let attns: Vec<Vec<f32>> = qs
             .iter()
@@ -630,9 +640,19 @@ impl InferenceBackend for HostBackend {
         }
         let mut store = state.store.lock().expect("KV store lock poisoned");
         for li in 0..self.model.n_layers {
-            store.reserve(&mut state.kv, li, n_tokens);
+            store.reserve(&mut state.kv, li, n_tokens)?;
         }
         Ok(())
+    }
+
+    /// Demote this sequence's resident on-die KV blocks to external
+    /// DRAM via [`KvStore::demote_seq`] — the preemption swap-out.
+    /// Stored values are untouched (placement never changes numerics),
+    /// so a preempted sequence resumes bit-identically with no
+    /// recompute.
+    fn swap_out_kv(&self, state: &mut HostState) -> Result<u64> {
+        let mut store = state.store.lock().expect("KV store lock poisoned");
+        Ok(store.demote_seq(&state.kv)?)
     }
 
     /// Point the sequence at a tenant adapter (validated against the

@@ -43,6 +43,13 @@ pub struct TraceConfig {
     /// adapter, and the generated trace is byte-identical to one from
     /// a build without adapter support.
     pub n_adapters: usize,
+    /// Burst probability: with probability `burst_p` a request's
+    /// arrival collapses onto the previous request's arrival instant,
+    /// producing admission bursts that stress shedding and
+    /// pressure-gated admission (DESIGN.md §13). 0 disables bursts and
+    /// keeps the trace byte-identical to one from a build without
+    /// burst support.
+    pub burst_p: f64,
     /// Generator seed.
     pub seed: u64,
 }
@@ -58,6 +65,7 @@ impl Default for TraceConfig {
             vocab_size: 256,
             arrival_rate: 0.0,
             n_adapters: 0,
+            burst_p: 0.0,
             seed: 1,
         }
     }
@@ -69,13 +77,14 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
     assert!(cfg.gen_len_min >= 1 && cfg.gen_len_min <= cfg.gen_len_max);
     let mut rng = Rng::new(cfg.seed);
     let mut t = 0.0f64;
+    let mut prev_arrival = 0.0f64;
     (0..cfg.n_requests)
         .map(|i| {
             if cfg.arrival_rate > 0.0 {
                 t += rng.exp(cfg.arrival_rate);
             }
             let plen = rng.usize(cfg.prompt_len_min, cfg.prompt_len_max);
-            Request {
+            let mut req = Request {
                 id: i as u64,
                 arrival_s: t,
                 prompt: (0..plen)
@@ -91,7 +100,14 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
                 } else {
                     None
                 },
+            };
+            // the burst draw comes after everything else, same pattern:
+            // burst_p == 0 consumes exactly the pre-burst stream
+            if cfg.burst_p > 0.0 && rng.bool(cfg.burst_p) && i > 0 {
+                req.arrival_s = prev_arrival;
             }
+            prev_arrival = req.arrival_s;
+            req
         })
         .collect()
 }
@@ -164,6 +180,42 @@ mod tests {
         });
         assert_eq!(base[0].prompt, with[0].prompt);
         assert_eq!(base[0].max_new_tokens, with[0].max_new_tokens);
+    }
+
+    #[test]
+    fn burst_free_traces_match_the_pre_burst_stream() {
+        // burst_p == 0 must not consume any draws: the whole trace is
+        // byte-identical to one generated without burst support
+        let cfg = TraceConfig {
+            arrival_rate: 10.0,
+            n_requests: 32,
+            ..TraceConfig::default()
+        };
+        assert_eq!(cfg.burst_p, 0.0);
+        let base = generate(&cfg);
+        let explicit = generate(&TraceConfig { burst_p: 0.0, ..cfg });
+        assert_eq!(base, explicit);
+    }
+
+    #[test]
+    fn bursts_collapse_arrivals_onto_the_previous_request() {
+        let cfg = TraceConfig {
+            arrival_rate: 10.0,
+            n_requests: 64,
+            burst_p: 0.5,
+            ..TraceConfig::default()
+        };
+        let reqs = generate(&cfg);
+        let ties = reqs
+            .windows(2)
+            .filter(|w| w[1].arrival_s == w[0].arrival_s)
+            .count();
+        assert!(ties > 0, "p=0.5 over 64 requests must produce bursts");
+        // arrivals stay non-decreasing: a burst reuses an instant, it
+        // never time-travels
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Property/fuzz harness for invariant 9 (DESIGN.md §13): under ANY
+//! seeded fault schedule — retention storms, transient backend /
+//! adapter / KV faults, pressure-gated admission, preemption, starved
+//! eDRAM tiers — every request either completes with tokens
+//! bit-identical to its fault-free twin or is shed with a typed
+//! [`bitrom::coordinator::FailReason`]; never a panic, never a
+//! corrupted sequence, and the whole faulted run stays bit-identical
+//! across worker-pool widths.
+//!
+//! Cases are generated from a trace grammar × fault-schedule grammar;
+//! the harness prints the failing case seed for deterministic replay
+//! (`util::check`). `BITROM_FUZZ_CASES` bounds the case count (CI
+//! quick mode keeps it small).
+
+use bitrom::config::{ModelConfig, ServeConfig};
+use bitrom::coordinator::{CompletedRequest, FaultMetrics, ServeMetrics, Server};
+use bitrom::runtime::HostBackend;
+use bitrom::trace::{generate, Request, TraceConfig};
+use bitrom::util::check::check;
+use bitrom::{prop_assert, prop_assert_eq};
+
+const WEIGHT_SEED: u64 = 0x9917;
+
+fn fuzz_cases() -> u64 {
+    std::env::var("BITROM_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6)
+}
+
+fn run(
+    reqs: Vec<Request>,
+    serve: ServeConfig,
+) -> anyhow::Result<(Vec<CompletedRequest>, ServeMetrics)> {
+    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED)?;
+    let mut server = Server::new(backend, serve)?;
+    let (mut done, metrics) = server.run_trace(reqs)?;
+    done.sort_by_key(|r| r.id);
+    Ok((done, metrics))
+}
+
+#[test]
+fn any_fault_schedule_recovers_or_sheds_typed() {
+    check(0xFA01, fuzz_cases(), |g| {
+        // random workload — closed batch (every arrival at t = 0), so
+        // admission order is structural and the faulted run is exactly
+        // reproducible at any pool width
+        let trace_cfg = TraceConfig {
+            n_requests: g.size(6),
+            prompt_len_min: 2,
+            prompt_len_max: 2 + g.size(10),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(8),
+            vocab_size: ModelConfig::sim_tiny().vocab_size,
+            arrival_rate: 0.0,
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        // random fault schedule + degradation policy: storms that may
+        // or may not cross tREF, transient faults, a sometimes-starved
+        // on-die tier, sometimes pressure-gated admission / preemption
+        let pressure_on = g.f64() < 0.5;
+        let faulted = ServeConfig {
+            max_batches: g.usize(1, 4),
+            fault_seed: g.rng.next_u64() | 1,
+            fault_storm_p: g.f64(),
+            fault_transient_p: g.f64() * 0.3,
+            fault_clock_skip_s: if g.f64() < 0.7 { 0.1 } else { 0.02 },
+            retry_max: g.usize(2, 6),
+            admit_pressure: if pressure_on { 0.5 + 0.5 * g.f64() } else { 0.0 },
+            preempt_under_pressure: pressure_on && g.f64() < 0.5,
+            kv_edram_bytes: if g.f64() < 0.3 { 1 << 16 } else { 13_500_000 },
+            ..ServeConfig::default()
+        };
+        let clean = ServeConfig {
+            fault_seed: 0,
+            admit_pressure: 0.0,
+            preempt_under_pressure: false,
+            ..faulted.clone()
+        };
+        let reqs = generate(&trace_cfg);
+        let mut all_ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        all_ids.sort_unstable();
+
+        // the fault-free twin: completes everything, injects nothing
+        let (base_done, base_m) =
+            run(reqs.clone(), clean).map_err(|e| format!("fault-free run failed: {e:#}"))?;
+        prop_assert!(
+            base_m.faults == FaultMetrics::default(),
+            "fault-free twin counted fault activity: {:?}",
+            base_m.faults
+        );
+        prop_assert_eq!(base_done.len(), reqs.len());
+
+        // the faulted run at three pool widths — any panic or untyped
+        // error surfaces here as a failing case with its seed
+        let mut results = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let cfg = ServeConfig {
+                threads,
+                ..faulted.clone()
+            };
+            let r = run(reqs.clone(), cfg)
+                .map_err(|e| format!("faulted run (threads={threads}) failed: {e:#}"))?;
+            results.push(r);
+        }
+        let (done, m) = &results[0];
+
+        // invariant 9a: completed ∪ shed is a partition of the trace
+        let done_ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+        let shed_ids: Vec<u64> = m.faults.shed.iter().map(|s| s.id).collect();
+        let mut union: Vec<u64> = done_ids.iter().chain(&shed_ids).copied().collect();
+        union.sort_unstable();
+        prop_assert!(
+            union == all_ids,
+            "completed {done_ids:?} + shed {shed_ids:?} is not a partition of {all_ids:?}"
+        );
+
+        // invariant 9b: every completed request is bit-identical to
+        // its fault-free twin (greedy recompute recovery, invariant 4)
+        for r in done {
+            let twin = &base_done[r.id as usize];
+            prop_assert_eq!(twin.id, r.id);
+            prop_assert!(
+                twin.tokens == r.tokens,
+                "request {} diverged from its fault-free twin",
+                r.id
+            );
+        }
+
+        // invariant 9c: the faulted run itself is width-invariant —
+        // tokens AND every fault counter
+        for (threads, (done_t, m_t)) in [2usize, 4].iter().zip(&results[1..]) {
+            prop_assert_eq!(done.len(), done_t.len());
+            for (a, b) in done.iter().zip(done_t) {
+                prop_assert!(
+                    a.id == b.id && a.tokens == b.tokens,
+                    "faulted request {} diverged at {threads} threads",
+                    a.id
+                );
+            }
+            prop_assert!(
+                m.faults == m_t.faults,
+                "fault counters diverged at {threads} threads: {:?} vs {:?}",
+                m.faults,
+                m_t.faults
+            );
+            prop_assert_eq!(m.requests_done, m_t.requests_done);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quiet_fault_plans_change_nothing() {
+    // a seeded plan whose probabilities are all zero draws its fixed
+    // per-round stream but injects nothing: tokens must match the
+    // plan-free run exactly (the off ⇒ zero-behavior-change edge)
+    check(0xFA02, fuzz_cases().min(4), |g| {
+        let trace_cfg = TraceConfig {
+            n_requests: g.size(4),
+            prompt_len_min: 2,
+            prompt_len_max: 2 + g.size(8),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(6),
+            vocab_size: ModelConfig::sim_tiny().vocab_size,
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        let quiet = ServeConfig {
+            fault_seed: g.rng.next_u64() | 1,
+            fault_storm_p: 0.0,
+            fault_transient_p: 0.0,
+            ..ServeConfig::default()
+        };
+        let off = ServeConfig {
+            fault_seed: 0,
+            ..quiet.clone()
+        };
+        let reqs = generate(&trace_cfg);
+        let (base, _) = run(reqs.clone(), off).map_err(|e| format!("plan-free: {e:#}"))?;
+        let (done, m) = run(reqs, quiet).map_err(|e| format!("quiet plan: {e:#}"))?;
+        prop_assert!(
+            m.faults == FaultMetrics::default(),
+            "quiet plan counted activity: {:?}",
+            m.faults
+        );
+        prop_assert_eq!(base.len(), done.len());
+        for (a, b) in base.iter().zip(&done) {
+            prop_assert!(
+                a.tokens == b.tokens,
+                "request {} changed under a quiet plan",
+                a.id
+            );
+        }
+        Ok(())
+    });
+}

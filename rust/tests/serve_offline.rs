@@ -8,7 +8,7 @@
 use std::time::Instant;
 
 use bitrom::config::{ModelConfig, ServeConfig};
-use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
+use bitrom::coordinator::{CompletedRequest, FailReason, ServeMetrics, Server};
 use bitrom::kvcache::simulate_reduction;
 use bitrom::lora::{AdapterRegistry, LoraConfig};
 use bitrom::runtime::{HostBackend, InferenceBackend};
@@ -387,6 +387,86 @@ fn nested_pools_serve_correctly_from_parallel_rounds() {
     for (a, b) in serial.iter().zip(&nested) {
         assert_eq!(a.tokens, b.tokens, "nested-pool request {} diverged", a.id);
     }
+}
+
+// ---- survivable serving under injected faults (DESIGN.md §13) ---------
+
+#[test]
+fn retention_storms_recover_bit_identically_across_thread_counts() {
+    // Invariant 9 on a pinned schedule: storm_p = 1.0 fires a
+    // retention-clock skip every cooldown window, each one far past
+    // tREF, so every decoding sequence's on-die rows genuinely expire.
+    // The coordinator must observe each expiry as a typed KvError,
+    // recompute the sequence (invariant 4 makes the rebuilt KV
+    // bit-identical), and finish the trace with exactly the fault-free
+    // tokens — at every pool width, with identical fault counters.
+    let run = |threads: usize, fault_seed: u64| {
+        let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+        let serve = ServeConfig {
+            max_batches: 4,
+            threads,
+            fault_seed,
+            fault_storm_p: 1.0,
+            fault_transient_p: 0.0,
+            fault_clock_skip_s: 0.1,
+            retry_max: 10,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let (done, metrics) = server.run_trace(trace(6, 0.0, 17)).unwrap();
+        (by_id(done), metrics)
+    };
+    let (clean, clean_m) = run(1, 0);
+    assert_eq!(clean_m.faults, Default::default(), "seed 0 injects nothing");
+
+    let (serial, serial_m) = run(1, 0xD00F);
+    assert!(serial_m.faults.injected_skips > 0, "certain storms must fire");
+    assert!(serial_m.faults.retention_events > 0, "storms must surface real expiries");
+    assert!(serial_m.faults.recomputes > 0);
+    assert!(serial_m.faults.recomputed_tokens > 0);
+    assert!(serial_m.faults.shed.is_empty(), "the retry budget covers every storm");
+    // the store counted exactly the expiries the coordinator recovered
+    let kv = serial_m.kv.as_ref().unwrap();
+    assert_eq!(kv.retention_failures, serial_m.faults.retention_events);
+    // every request completed with its fault-free tokens
+    assert_eq!(serial.len(), clean.len());
+    for (a, b) in clean.iter().zip(&serial) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged under storms", a.id);
+    }
+    // faulted serving stays width-invariant: tokens AND fault counters
+    for threads in [2usize, 4] {
+        let (done, m) = run(threads, 0xD00F);
+        for (a, b) in serial.iter().zip(&done) {
+            assert_eq!(a.tokens, b.tokens, "request {} diverged at {threads} threads", a.id);
+        }
+        assert_eq!(m.faults, serial_m.faults, "fault counters diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn overloaded_queue_sheds_with_typed_reasons() {
+    // a shedding deadline tighter than any real round: every request
+    // still queued when a round begins is past deadline, so the server
+    // drains the overload with typed Overload sheds — no error, no
+    // hang, and completed + shed partition the trace
+    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+    let serve = ServeConfig {
+        max_batches: 2,
+        shed_after_s: 1e-12,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(backend, serve).unwrap();
+    let n = 5;
+    let (done, metrics) = server.run_trace(trace(n, 0.0, 23)).unwrap();
+    let shed = &metrics.faults.shed;
+    assert_eq!(done.len() + shed.len(), n);
+    // at most max_batches requests can have been admitted before the
+    // first deadline check saw a positive clock
+    assert!(shed.len() >= n - 2, "only {} of {n} shed", shed.len());
+    assert!(shed.iter().all(|s| s.reason == FailReason::Overload));
+    assert_eq!(metrics.faults.shed_count(FailReason::Overload), shed.len() as u64);
+    assert_eq!(metrics.requests_done as usize, done.len());
 }
 
 #[test]

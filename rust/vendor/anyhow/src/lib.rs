@@ -18,6 +18,9 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    // The original typed error, when this level was built from one —
+    // what makes `downcast_ref` work through context wrapping.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
@@ -26,7 +29,14 @@ impl Error {
         Error {
             msg: msg.to_string(),
             source: None,
+            payload: None,
         }
+    }
+
+    /// Create an error from a typed `std::error::Error`, keeping the
+    /// value for later [`Error::downcast_ref`] (mirrors `Error::new`).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Self {
+        Self::from(e)
     }
 
     /// Wrap this error with an outer context message.
@@ -34,7 +44,28 @@ impl Error {
         Error {
             msg: context.to_string(),
             source: Some(Box::new(self)),
+            payload: None,
         }
+    }
+
+    /// The typed error this chain was built from, if any level of it
+    /// was created via [`Error::new`] / the `From` conversion used by
+    /// `?` (mirrors `anyhow::Error::downcast_ref`, searching through
+    /// `context` wrapping outermost-first).
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(p) = e.payload.as_ref().and_then(|p| p.downcast_ref::<E>()) {
+                return Some(p);
+            }
+            cur = e.source.as_deref();
+        }
+        None
+    }
+
+    /// True when [`Error::downcast_ref`] for `E` would succeed.
+    pub fn is<E: 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 
     /// Iterate the cause chain, outermost first.
@@ -94,9 +125,12 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             Error {
                 msg: e.to_string(),
                 source: e.source().map(|s| Box::new(build(s))),
+                payload: None,
             }
         }
-        build(&e)
+        let mut err = build(&e);
+        err.payload = Some(Box::new(e));
+        err
     }
 }
 
@@ -235,5 +269,24 @@ mod tests {
         let v: Option<i32> = None;
         let e = v.context("missing value").unwrap_err();
         assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn downcast_ref_finds_typed_errors_through_context() {
+        let e = Error::new(io_err());
+        assert_eq!(
+            e.downcast_ref::<std::io::Error>().unwrap().kind(),
+            std::io::ErrorKind::NotFound
+        );
+        // `?` conversion and context wrapping both keep the payload
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err().context("outer");
+        assert!(e.is::<std::io::Error>());
+        assert!(!e.is::<std::fmt::Error>());
+        // message-only errors carry no payload
+        assert!(!anyhow!("plain {}", 1).is::<std::io::Error>());
     }
 }
