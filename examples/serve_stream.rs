@@ -1,0 +1,186 @@
+//! Streaming serving plane demo (DESIGN.md §14): starts the std-only
+//! HTTP front door on a loopback port, plays live client against it,
+//! and prints every token frame the moment it crosses the wire —
+//! then proves invariant 10 by comparing the streamed tokens against
+//! the offline `run_trace` twin of the same seeded request set:
+//!
+//!   cargo run --release --example serve_stream -- --requests 4 --top-k 3
+//!
+//! No PJRT, no artifacts, no async runtime: `std::net` sockets on the
+//! always-built HostBackend, tokens framed as NDJSON through the
+//! incremental-JSON codec (`net::jsonframe`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use bitrom::config::{ModelConfig, NetConfig, ServeConfig};
+use bitrom::coordinator::Server;
+use bitrom::net::jsonframe::{DecodeMode, FrameDecoder};
+use bitrom::net::NetServer;
+use bitrom::runtime::HostBackend;
+use bitrom::trace::{generate, Request, TraceConfig};
+use bitrom::util::args::ArgParser;
+use bitrom::util::json::Json;
+
+/// Strip complete `Transfer-Encoding: chunked` frames off the front of
+/// `buf`, returning (payload bytes, saw the terminal zero chunk).
+fn take_chunks(buf: &mut Vec<u8>) -> (Vec<u8>, bool) {
+    let mut out = Vec::new();
+    loop {
+        let Some(le) = buf.windows(2).position(|w| w == b"\r\n") else {
+            return (out, false);
+        };
+        let Ok(size) = usize::from_str_radix(&String::from_utf8_lossy(&buf[..le]), 16) else {
+            return (out, false);
+        };
+        if size == 0 {
+            buf.clear();
+            return (out, true);
+        }
+        let total = le + 2 + size + 2;
+        if buf.len() < total {
+            return (out, false);
+        }
+        out.extend_from_slice(&buf[le + 2..le + 2 + size]);
+        buf.drain(..total);
+    }
+}
+
+/// POST one request and print its frames as they arrive; returns the
+/// streamed token ids.
+fn stream_one(addr: std::net::SocketAddr, req: &Request, t0: Instant) -> anyhow::Result<Vec<i32>> {
+    let body = req.to_json().to_string_compact();
+    let mut s = TcpStream::connect(addr)?;
+    write!(
+        s,
+        "POST /v1/completions HTTP/1.1\r\nHost: demo\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+
+    // read past the response head, keeping any early body bytes
+    let mut buf = Vec::new();
+    let mut scratch = [0u8; 512];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = s.read(&mut scratch)?;
+        anyhow::ensure!(n > 0, "connection closed before response head");
+        buf.extend_from_slice(&scratch[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    anyhow::ensure!(head.starts_with("HTTP/1.1 200"), "unexpected response: {head}");
+    buf.drain(..head_end);
+
+    // the socket hands us arbitrary splits; the incremental decoder
+    // re-frames them into whole JSON values
+    let mut dec = FrameDecoder::new(DecodeMode::Strict);
+    let mut tokens = Vec::new();
+    loop {
+        let (payload, finished) = take_chunks(&mut buf);
+        for frame in dec.push(&payload)? {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            if let Some(tok) = frame.get("token").and_then(Json::as_f64) {
+                println!("  [{ms:8.2} ms] req {} token {}", req.id, tok as i32);
+                tokens.push(tok as i32);
+            } else if frame.get("done").and_then(Json::as_bool) == Some(true) {
+                println!(
+                    "  [{ms:8.2} ms] req {} done: {} tokens, ttft {:.1} ms",
+                    req.id,
+                    frame.get("n").and_then(Json::as_f64).unwrap_or(0.0),
+                    frame.get("ttft_s").and_then(Json::as_f64).unwrap_or(0.0) * 1e3,
+                );
+            } else {
+                println!("  [{ms:8.2} ms] req {} frame: {}", req.id, frame.to_string_compact());
+            }
+        }
+        if finished {
+            return Ok(tokens);
+        }
+        let n = s.read(&mut scratch)?;
+        anyhow::ensure!(n > 0, "stream ended without the terminal chunk");
+        buf.extend_from_slice(&scratch[..n]);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = ArgParser::new("serve_stream", "loopback streaming serving demo")
+        .opt("requests", "4", "requests to stream")
+        .opt("gen", "12", "max new tokens per request")
+        .opt("top-k", "3", "sampling pool (1 = greedy)")
+        .opt("seed", "1", "trace + weight seed")
+        .parse_env();
+
+    let model = ModelConfig::sim_tiny();
+    let seed = args.u64("seed");
+    let trace_cfg = TraceConfig {
+        n_requests: args.usize("requests"),
+        gen_len_min: 4.min(args.usize("gen")),
+        gen_len_max: args.usize("gen"),
+        vocab_size: model.vocab_size,
+        seed,
+        ..TraceConfig::default()
+    };
+    let serve = ServeConfig {
+        top_k: args.usize("top-k"),
+        ..ServeConfig::default()
+    };
+    let reqs = generate(&trace_cfg);
+
+    println!("== BitROM streaming serving demo (NetServer over loopback) ==");
+
+    // the offline twin first: the ground truth invariant 10 is
+    // checked against
+    let mut twin = Server::new(HostBackend::new(model.clone(), seed)?, serve.clone())?;
+    let (twin_done, _) = twin.run_trace(reqs.clone())?;
+    let twin_tokens: std::collections::BTreeMap<u64, Vec<i32>> =
+        twin_done.into_iter().map(|r| (r.id, r.tokens)).collect();
+
+    let net = NetConfig {
+        listen: "127.0.0.1:0".into(),
+        ..NetConfig::default()
+    };
+    let handle = NetServer::start(HostBackend::new(model, seed)?, serve, net)?;
+    let addr = handle.addr();
+    println!("listening on http://{addr} — streaming {} requests:", reqs.len());
+
+    let t0 = Instant::now();
+    let mut all_match = true;
+    for req in &reqs {
+        let tokens = stream_one(addr, req, t0)?;
+        let matches = twin_tokens.get(&req.id) == Some(&tokens);
+        all_match &= matches;
+        println!(
+            "  req {}: {} tokens streamed — offline twin {}",
+            req.id,
+            tokens.len(),
+            if matches { "MATCHES (invariant 10)" } else { "DIVERGED" },
+        );
+    }
+    anyhow::ensure!(all_match, "streamed tokens diverged from the offline twin");
+
+    // a taste of the live exposition endpoint
+    let mut s = TcpStream::connect(addr)?;
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: demo\r\n\r\n")?;
+    let mut metrics_text = String::new();
+    s.read_to_string(&mut metrics_text)?;
+    println!("\n/metrics excerpt:");
+    for line in metrics_text.lines().filter(|l| {
+        l.starts_with("bitrom_requests_done_total")
+            || l.starts_with("bitrom_tokens_total")
+            || l.starts_with("bitrom_ttft_rounds{quantile=\"0.5\"}")
+    }) {
+        println!("  {line}");
+    }
+
+    let (done, metrics) = handle.shutdown()?;
+    println!(
+        "\ngraceful shutdown: {} completed, {} shed — all streams matched the offline twin",
+        done.len(),
+        metrics.faults.shed.len(),
+    );
+    println!("serve_stream OK");
+    Ok(())
+}

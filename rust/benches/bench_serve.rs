@@ -11,7 +11,13 @@
 //! * **faults** — the same trace under certain periodic retention
 //!   storms (DESIGN.md §13): tokens asserted bit-identical to the
 //!   fault-free run, and the recovery throughput ratio recorded as the
-//!   `fault_recovery_throughput_ratio` gate.
+//!   `fault_recovery_throughput_ratio` gate;
+//! * **streaming** — the same trace through the live ingress plane
+//!   (DESIGN.md §14) with every token framed through the real NDJSON
+//!   event encoder into a black box (the bytes a loopback client would
+//!   receive, minus socket noise): tokens asserted bit-identical to
+//!   the offline run (invariant 10), and the throughput ratio recorded
+//!   as the `streaming_overhead_ratio` gate.
 //!
 //! Emits `BENCH_serve.json` at the repository root; its `gates` object
 //! (scale-free speedups) feeds the CI perf-regression gate
@@ -22,8 +28,12 @@
 //!
 //! Override the output path with BITROM_BENCH_OUT.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use bitrom::config::{ModelConfig, ServeConfig};
-use bitrom::coordinator::{FaultMetrics, Server};
+use bitrom::coordinator::{CompletedRequest, FailReason, FaultMetrics, Ingress, Server, TokenSink};
+use bitrom::net::jsonframe::{EventEncoder, StreamFormat};
 use bitrom::runtime::HostBackend;
 use bitrom::trace::{generate, TraceConfig};
 use bitrom::util::bench::bench_out_path;
@@ -107,6 +117,99 @@ fn run_fault_point(
         },
         tokens,
         metrics.faults.clone(),
+    ))
+}
+
+/// Socket-free streaming sink: every token is framed through the real
+/// NDJSON event encoder — the exact bytes a loopback client would
+/// receive — and black-boxed, so the measured cost is live admission +
+/// per-token encoding without network noise.
+struct EncodeSink {
+    enc: EventEncoder,
+    bytes: Arc<AtomicU64>,
+    finished: Arc<AtomicUsize>,
+}
+
+impl TokenSink for EncodeSink {
+    fn on_token(&mut self, id: u64, tok: i32) -> bool {
+        let frame = self.enc.frame(&Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("token", Json::num(tok as f64)),
+        ]));
+        self.bytes
+            .fetch_add(std::hint::black_box(frame.len()) as u64, Ordering::Relaxed);
+        true
+    }
+
+    fn on_complete(&mut self, done: &CompletedRequest) {
+        let frame = self.enc.frame(&Json::obj(vec![
+            ("id", Json::num(done.id as f64)),
+            ("done", Json::Bool(true)),
+        ]));
+        self.bytes
+            .fetch_add(std::hint::black_box(frame.len()) as u64, Ordering::Relaxed);
+        self.finished.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_shed(&mut self, _id: u64, _reason: FailReason) {
+        self.finished.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// The same trace through the live admission plane (`run_ingress`)
+/// with encoding sinks: the streaming twin of the serial 6-batch run.
+fn run_stream_point(
+    model: &ModelConfig,
+    trace_cfg: &TraceConfig,
+) -> anyhow::Result<(Point, Vec<(u64, Vec<i32>)>, u64)> {
+    let backend = HostBackend::new(model.clone(), 0xB17)?;
+    let serve = ServeConfig {
+        max_batches: 6,
+        threads: 1,
+        ..ServeConfig::default()
+    };
+    let max_prompt = serve.prefill_len;
+    let mut server = Server::new(backend, serve)?;
+    let n = trace_cfg.n_requests;
+    let ingress = Arc::new(Ingress::new(n.max(1), 0.0, max_prompt));
+    let bytes = Arc::new(AtomicU64::new(0));
+    let finished = Arc::new(AtomicUsize::new(0));
+    ingress.pause();
+    for req in generate(trace_cfg) {
+        let sink = EncodeSink {
+            enc: EventEncoder::new(StreamFormat::Ndjson),
+            bytes: bytes.clone(),
+            finished: finished.clone(),
+        };
+        ingress
+            .submit_at(req, Box::new(sink), 0.0)
+            .map_err(|r| anyhow::anyhow!("stream submit: {r}"))?;
+    }
+    ingress.resume();
+    let watcher_ingress = ingress.clone();
+    let watcher_finished = finished.clone();
+    let watcher = std::thread::spawn(move || {
+        while watcher_finished.load(Ordering::SeqCst) < n {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        watcher_ingress.shutdown();
+    });
+    let (done, mut metrics) = server.run_ingress(ingress, None)?;
+    watcher.join().expect("watcher thread");
+    assert_eq!(done.len(), n, "every streamed request must complete");
+    let mut tokens: Vec<(u64, Vec<i32>)> = done.into_iter().map(|r| (r.id, r.tokens)).collect();
+    tokens.sort_by_key(|(id, _)| *id);
+    Ok((
+        Point {
+            batches: 6,
+            threads: 1,
+            tokens_per_s: metrics.tokens_per_s(),
+            tbt_p50_ms: metrics.tbt.pct(50.0) * 1e3,
+            tbt_p95_ms: metrics.tbt.pct(95.0) * 1e3,
+            tokens: metrics.tokens_out,
+        },
+        tokens,
+        bytes.load(Ordering::Relaxed),
     ))
 }
 
@@ -208,6 +311,21 @@ fn main() -> anyhow::Result<()> {
         faults.shed.len(),
     );
 
+    // axis 4: streaming overhead — the live admission plane with
+    // NDJSON-encoding sinks must reproduce the offline tokens
+    // (invariant 10) and keep most of the offline throughput
+    println!("-- streaming overhead (live ingress + NDJSON encode, batches = 6, threads = 1) --");
+    let (stream_p, stream_tokens, stream_bytes) = run_stream_point(&model, &trace_cfg)?;
+    assert_eq!(
+        stream_tokens, serial_tokens,
+        "streamed tokens must match the offline twin (invariant 10)"
+    );
+    let stream_ratio = stream_p.tokens_per_s / serial_6.max(1e-9);
+    println!(
+        "  streamed: {:>8.1} tok/s  (x{:.2} vs offline)  {} wire bytes framed",
+        stream_p.tokens_per_s, stream_ratio, stream_bytes,
+    );
+
     let speedup_6v1 = batch_points
         .iter()
         .find(|p| p.batches == 6)
@@ -258,11 +376,22 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         (
+            "stream_point",
+            Json::obj(vec![
+                ("tokens_per_s", Json::num(stream_p.tokens_per_s)),
+                ("throughput_ratio", Json::num(stream_ratio)),
+                ("wire_bytes", Json::num(stream_bytes as f64)),
+                ("tbt_p50_ms", Json::num(stream_p.tbt_p50_ms)),
+                ("tbt_p95_ms", Json::num(stream_p.tbt_p95_ms)),
+            ]),
+        ),
+        (
             "gates",
             Json::obj(vec![
                 ("batching_speedup_6v1", Json::num(speedup_6v1)),
                 ("threads_speedup_4v1", Json::num(threads_4v1)),
                 ("fault_recovery_throughput_ratio", Json::num(fault_ratio)),
+                ("streaming_overhead_ratio", Json::num(stream_ratio)),
             ]),
         ),
     ]);

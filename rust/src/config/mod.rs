@@ -4,10 +4,12 @@
 
 mod hardware;
 mod model;
+mod net;
 mod serve;
 
 pub use hardware::{
     EdramParams, EnergyParams, HardwareConfig, MacroGeometry, TechNode, BITS_PER_CELL,
 };
 pub use model::ModelConfig;
+pub use net::NetConfig;
 pub use serve::ServeConfig;

@@ -1,0 +1,139 @@
+//! Network front-door configuration for the streaming serving plane
+//! (DESIGN.md §14): listen address, admission-edge limits, and
+//! connection hygiene knobs for `bitrom serve --listen`.
+
+use crate::util::json::Json;
+
+/// Knobs of the HTTP/1.1 front door ([`crate::net::NetServer`]). All
+/// admission *policy* (per-tenant FIFO, rate buckets, queue depth)
+/// lives in [`crate::coordinator::Ingress`]; this config only carries
+/// the numbers it is built with plus transport limits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Listen address, e.g. `127.0.0.1:8080`; port `0` binds an
+    /// ephemeral port (tests read it back from the handle).
+    pub listen: String,
+    /// Most requests queued at the admission edge before submissions
+    /// are rejected with HTTP 429 (`FailReason::Overload` sheds).
+    pub max_queue: usize,
+    /// Per-tenant request rate (req/s, token bucket); `0.0` = no
+    /// rate limiting.
+    pub rate_limit: f64,
+    /// Largest accepted request body in bytes (HTTP 413 beyond it).
+    pub max_body_bytes: usize,
+    /// Per-connection socket read timeout (s) so a stalled client
+    /// cannot pin a connection thread forever.
+    pub read_timeout_s: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:8080".into(),
+            max_queue: 64,
+            rate_limit: 0.0,
+            max_body_bytes: 1 << 20,
+            read_timeout_s: 30.0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Check internal consistency; the net server constructor calls
+    /// this.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.listen.is_empty(), "listen address must be non-empty");
+        anyhow::ensure!(self.max_queue >= 1, "max_queue must be >= 1");
+        anyhow::ensure!(self.rate_limit >= 0.0, "rate_limit must be >= 0");
+        anyhow::ensure!(self.max_body_bytes >= 1, "max_body_bytes must be >= 1");
+        anyhow::ensure!(self.read_timeout_s > 0.0, "read_timeout_s must be positive");
+        Ok(())
+    }
+
+    /// Serialize to JSON (all fields).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("listen", Json::str(self.listen.clone())),
+            ("max_queue", Json::num(self.max_queue as f64)),
+            ("rate_limit", Json::num(self.rate_limit)),
+            ("max_body_bytes", Json::num(self.max_body_bytes as f64)),
+            ("read_timeout_s", Json::num(self.read_timeout_s)),
+        ])
+    }
+
+    /// Parse from JSON; missing fields fall back to the defaults.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = NetConfig::default();
+        let cfg = NetConfig {
+            listen: j
+                .get("listen")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.listen)
+                .to_string(),
+            max_queue: j
+                .get("max_queue")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.max_queue),
+            rate_limit: j
+                .get("rate_limit")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.rate_limit),
+            max_body_bytes: j
+                .get("max_body_bytes")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.max_body_bytes),
+            read_timeout_s: j
+                .get("read_timeout_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.read_timeout_s),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        let c = NetConfig::default();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.rate_limit, 0.0, "rate limiting off by default");
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = NetConfig::default();
+        c.listen.clear();
+        assert!(c.validate().is_err());
+        let mut c = NetConfig::default();
+        c.max_queue = 0;
+        assert!(c.validate().is_err());
+        let mut c = NetConfig::default();
+        c.rate_limit = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = NetConfig::default();
+        c.read_timeout_s = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = NetConfig {
+            listen: "0.0.0.0:9090".into(),
+            max_queue: 7,
+            rate_limit: 2.5,
+            max_body_bytes: 4096,
+            read_timeout_s: 5.0,
+        };
+        let c2 = NetConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        // old configs without the fields parse to the defaults
+        let j = Json::parse(r#"{"listen": ":8081"}"#).unwrap();
+        let c = NetConfig::from_json(&j).unwrap();
+        assert_eq!(c.listen, ":8081");
+        assert_eq!(c.max_queue, 64);
+    }
+}

@@ -1,0 +1,493 @@
+//! Live admission for the streaming serving plane (DESIGN.md §14).
+//!
+//! Offline serving hands [`Server::run_trace`] a closed batch up
+//! front. The online plane instead feeds requests into the continuous
+//! batcher *mid-flight*: connection threads [`submit`] into an
+//! [`Ingress`], and the coordinator loop [`pull`]s admitted requests
+//! between decode rounds. Admission control happens here, at the edge,
+//! before a request ever reaches the batcher:
+//!
+//! * **per-tenant FIFO** — one queue per `adapter_id`, drained
+//!   round-robin so a single chatty tenant cannot starve the rest;
+//! * **token-bucket rate limit** — per-tenant, refilled on the
+//!   submitting clock; over-rate requests are rejected with a
+//!   `Retry-After` hint ([`Reject::RateLimit`]);
+//! * **queue-depth backpressure** — a global cap on queued requests;
+//!   beyond it submissions are rejected ([`Reject::QueueFull`], HTTP
+//!   429) and recorded as typed [`FailReason::Overload`] sheds so
+//!   `ServeMetrics::faults` counts them exactly like coordinator-side
+//!   overload sheds.
+//!
+//! Each request carries a [`TokenSink`]: the decode loop pushes tokens
+//! through it the round they are produced, without knowing whether the
+//! other end is a socket, a bench accumulator, or a test vector.
+//!
+//! [`submit`]: Ingress::submit_at
+//! [`pull`]: Ingress::pull
+//! [`Server::run_trace`]: super::Server::run_trace
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::metrics::{FailReason, ShedRequest};
+use super::server::CompletedRequest;
+use crate::trace::Request;
+
+/// Where one request's decoded tokens go, the round they are produced.
+/// Implementations must be cheap and non-blocking — the coordinator
+/// calls them between decode rounds.
+pub trait TokenSink: Send {
+    /// One decoded token. Return `false` if the consumer is gone (the
+    /// coordinator then sheds the sequence as [`FailReason::Disconnect`]
+    /// and frees its slot).
+    fn on_token(&mut self, id: u64, tok: i32) -> bool;
+    /// The sequence finished; `done` carries the full token list and
+    /// latency accounting.
+    fn on_complete(&mut self, done: &CompletedRequest);
+    /// The sequence was shed before completing, with its typed reason.
+    fn on_shed(&mut self, id: u64, reason: FailReason);
+}
+
+/// [`TokenSink`] that buffers everything in memory (tests, benches,
+/// and the offline twin of a streamed run).
+#[derive(Debug, Default)]
+pub struct VecSink {
+    /// Tokens received, in emission order.
+    pub tokens: Vec<i32>,
+    /// The completion record, once the sequence finishes.
+    pub done: Option<CompletedRequest>,
+    /// The shed reason, if the sequence was shed instead.
+    pub shed: Option<FailReason>,
+}
+
+impl TokenSink for VecSink {
+    fn on_token(&mut self, _id: u64, tok: i32) -> bool {
+        self.tokens.push(tok);
+        true
+    }
+
+    fn on_complete(&mut self, done: &CompletedRequest) {
+        self.done = Some(done.clone());
+    }
+
+    fn on_shed(&mut self, _id: u64, reason: FailReason) {
+        self.shed = Some(reason);
+    }
+}
+
+/// Why a submission was rejected at the admission edge.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reject {
+    /// The tenant's token bucket is empty; retry after the hint.
+    RateLimit {
+        /// Seconds until the bucket refills enough for one request.
+        retry_after_s: f64,
+    },
+    /// The global admission queue is at `max_queue`.
+    QueueFull,
+    /// The server is draining for shutdown.
+    ShuttingDown,
+    /// A live request already carries this id.
+    DuplicateId,
+    /// The request itself is unusable (empty prompt, zero budget, ...).
+    Invalid(String),
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::RateLimit { retry_after_s } => {
+                write!(f, "rate limited (retry after {retry_after_s:.2}s)")
+            }
+            Reject::QueueFull => write!(f, "admission queue full"),
+            Reject::ShuttingDown => write!(f, "shutting down"),
+            Reject::DuplicateId => write!(f, "duplicate request id"),
+            Reject::Invalid(why) => write!(f, "invalid request: {why}"),
+        }
+    }
+}
+
+/// Classic token bucket: `tokens` refills at `rate`/s up to `cap`.
+struct Bucket {
+    tokens: f64,
+    last_s: f64,
+}
+
+/// One tenant's admission state.
+struct TenantQueue {
+    fifo: VecDeque<(Request, Box<dyn TokenSink>)>,
+    bucket: Bucket,
+}
+
+struct Inner {
+    tenants: BTreeMap<Option<u32>, TenantQueue>,
+    /// Round-robin cursor over tenant keys (index into the sorted key
+    /// set at pull time).
+    rr: usize,
+    /// Edge rejections that are typed sheds (rate-limit, queue-full);
+    /// the coordinator drains these into `ServeMetrics::faults` so the
+    /// accounting matches coordinator-side sheds exactly.
+    rejected: Vec<ShedRequest>,
+    /// Ids admitted or pulled and not yet retired — the duplicate
+    /// guard.
+    live: BTreeSet<u64>,
+    queued: usize,
+}
+
+/// Thread-safe admission funnel between connection threads and the
+/// coordinator loop. Shared as `Arc<Ingress>`.
+pub struct Ingress {
+    inner: Mutex<Inner>,
+    shutdown: AtomicBool,
+    paused: AtomicBool,
+    max_queue: usize,
+    /// Requests/s per tenant; `0` disables rate limiting.
+    rate_limit: f64,
+    /// Longest admissible prompt; `0` disables the check.
+    max_prompt: usize,
+}
+
+impl Ingress {
+    /// Admission funnel holding at most `max_queue` queued requests in
+    /// total, each tenant limited to `rate_limit` submissions/s
+    /// (`0.0` = unlimited), rejecting prompts longer than `max_prompt`
+    /// tokens (`0` = unchecked). Online serving must set `max_prompt`
+    /// to `ServeConfig::prefill_len`: an oversized prompt that reaches
+    /// the backend fails the whole serving loop.
+    pub fn new(max_queue: usize, rate_limit: f64, max_prompt: usize) -> Self {
+        Ingress {
+            inner: Mutex::new(Inner {
+                tenants: BTreeMap::new(),
+                rr: 0,
+                rejected: Vec::new(),
+                live: BTreeSet::new(),
+                queued: 0,
+            }),
+            shutdown: AtomicBool::new(false),
+            paused: AtomicBool::new(false),
+            max_queue,
+            rate_limit,
+            max_prompt,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // a poisoned ingress mutex means a panicking submitter; the
+        // queues themselves are still structurally sound
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Submit one request for admission at time `now_s` (any monotonic
+    /// clock — the wall for sockets, the virtual serving clock in
+    /// tests). On rejection the sink is dropped: the submitter owns the
+    /// transport and reports the rejection itself.
+    pub fn submit_at(
+        &self,
+        req: Request,
+        sink: Box<dyn TokenSink>,
+        now_s: f64,
+    ) -> Result<(), Reject> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(Reject::ShuttingDown);
+        }
+        if req.prompt.is_empty() {
+            return Err(Reject::Invalid("empty prompt".into()));
+        }
+        if req.max_new_tokens == 0 {
+            return Err(Reject::Invalid("max_new_tokens must be positive".into()));
+        }
+        if self.max_prompt > 0 && req.prompt.len() > self.max_prompt {
+            return Err(Reject::Invalid(format!(
+                "prompt {} exceeds prefill bucket {}",
+                req.prompt.len(),
+                self.max_prompt
+            )));
+        }
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        if inner.live.contains(&req.id) {
+            return Err(Reject::DuplicateId);
+        }
+        if inner.queued >= self.max_queue {
+            inner.rejected.push(ShedRequest {
+                id: req.id,
+                reason: FailReason::Overload,
+            });
+            return Err(Reject::QueueFull);
+        }
+        let rate = self.rate_limit;
+        let tq = inner.tenants.entry(req.adapter_id).or_insert_with(|| TenantQueue {
+            fifo: VecDeque::new(),
+            bucket: Bucket {
+                // a fresh bucket starts full: short bursts up to the
+                // per-second rate are fine, sustained overrate is not
+                tokens: if rate > 0.0 { rate.ceil().max(1.0) } else { 0.0 },
+                last_s: now_s,
+            },
+        });
+        if rate > 0.0 {
+            let b = &mut tq.bucket;
+            let cap = rate.ceil().max(1.0);
+            b.tokens = (b.tokens + (now_s - b.last_s).max(0.0) * rate).min(cap);
+            b.last_s = now_s;
+            if b.tokens < 1.0 {
+                let retry_after_s = (1.0 - b.tokens) / rate;
+                inner.rejected.push(ShedRequest {
+                    id: req.id,
+                    reason: FailReason::RateLimit,
+                });
+                return Err(Reject::RateLimit { retry_after_s });
+            }
+            b.tokens -= 1.0;
+        }
+        let id = req.id;
+        tq.fifo.push_back((req, sink));
+        inner.live.insert(id);
+        inner.queued += 1;
+        Ok(())
+    }
+
+    /// Pull up to `max` admitted requests, round-robin across tenants.
+    /// Returns nothing while admission is paused.
+    pub fn pull(&self, max: usize) -> Vec<(Request, Box<dyn TokenSink>)> {
+        if self.paused.load(Ordering::SeqCst) {
+            return Vec::new();
+        }
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let mut out = Vec::new();
+        while out.len() < max && inner.queued > 0 {
+            let keys: Vec<Option<u32>> = inner.tenants.keys().copied().collect();
+            let k = keys[inner.rr % keys.len()];
+            inner.rr = (inner.rr + 1) % keys.len();
+            if let Some(tq) = inner.tenants.get_mut(&k) {
+                if let Some(item) = tq.fifo.pop_front() {
+                    inner.queued -= 1;
+                    out.push(item);
+                }
+                // empty tenant queues stay registered: their rate
+                // buckets keep their level across idle gaps
+            }
+        }
+        out
+    }
+
+    /// Drain every queued request (graceful shutdown: the coordinator
+    /// sheds them as [`FailReason::Shutdown`] with their sinks
+    /// notified).
+    pub fn drain_all(&self) -> Vec<(Request, Box<dyn TokenSink>)> {
+        let mut inner = self.lock();
+        let mut out = Vec::new();
+        for tq in inner.tenants.values_mut() {
+            out.extend(tq.fifo.drain(..));
+        }
+        inner.queued = 0;
+        out
+    }
+
+    /// Take the typed sheds recorded for edge rejections since the
+    /// last call.
+    pub fn drain_rejected(&self) -> Vec<ShedRequest> {
+        std::mem::take(&mut self.lock().rejected)
+    }
+
+    /// A pulled request finished (completed or shed): free its id.
+    pub fn retire(&self, id: u64) {
+        self.lock().live.remove(&id);
+    }
+
+    /// Requests currently queued (admitted, not yet pulled).
+    pub fn queued_len(&self) -> usize {
+        self.lock().queued
+    }
+
+    /// Hold queued requests back from [`Ingress::pull`] (submissions
+    /// still admit). Lets a test or replay enqueue a complete request
+    /// set before the coordinator starts, reproducing closed-batch
+    /// admission order exactly.
+    pub fn pause(&self) {
+        self.paused.store(true, Ordering::SeqCst);
+    }
+
+    /// Release a [`Ingress::pause`].
+    pub fn resume(&self) {
+        self.paused.store(false, Ordering::SeqCst);
+    }
+
+    /// Begin draining: all further submissions are rejected with
+    /// [`Reject::ShuttingDown`]; in-flight sequences run to completion.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// True once [`Ingress::shutdown`] was called.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, adapter_id: Option<u32>) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            adapter_id,
+        }
+    }
+
+    fn sink() -> Box<dyn TokenSink> {
+        Box::new(VecSink::default())
+    }
+
+    #[test]
+    fn admits_and_pulls_fifo_within_a_tenant() {
+        let ing = Ingress::new(8, 0.0, 0);
+        for id in 0..3 {
+            ing.submit_at(req(id, None), sink(), 0.0).unwrap();
+        }
+        assert_eq!(ing.queued_len(), 3);
+        let got = ing.pull(8);
+        let ids: Vec<u64> = got.iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(ing.queued_len(), 0);
+    }
+
+    #[test]
+    fn round_robins_across_tenants() {
+        let ing = Ingress::new(16, 0.0, 0);
+        // tenant 0 floods first, tenant 1 arrives later: round-robin
+        // still alternates instead of draining tenant 0 first
+        for id in 0..4 {
+            ing.submit_at(req(id, Some(0)), sink(), 0.0).unwrap();
+        }
+        for id in 10..12 {
+            ing.submit_at(req(id, Some(1)), sink(), 0.0).unwrap();
+        }
+        let ids: Vec<u64> = ing.pull(16).iter().map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![0, 10, 1, 11, 2, 3]);
+    }
+
+    #[test]
+    fn queue_depth_backpressure_records_typed_overload_sheds() {
+        let ing = Ingress::new(2, 0.0, 0);
+        ing.submit_at(req(0, None), sink(), 0.0).unwrap();
+        ing.submit_at(req(1, None), sink(), 0.0).unwrap();
+        assert_eq!(ing.submit_at(req(2, None), sink(), 0.0), Err(Reject::QueueFull));
+        assert_eq!(ing.submit_at(req(3, None), sink(), 0.0), Err(Reject::QueueFull));
+        let shed = ing.drain_rejected();
+        assert_eq!(shed.len(), 2);
+        assert!(shed.iter().all(|s| s.reason == FailReason::Overload));
+        assert_eq!(shed[0].id, 2);
+        // draining is destructive
+        assert!(ing.drain_rejected().is_empty());
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_per_tenant() {
+        let ing = Ingress::new(64, 2.0, 0); // 2 req/s, burst of 2
+        ing.submit_at(req(0, Some(0)), sink(), 0.0).unwrap();
+        ing.submit_at(req(1, Some(0)), sink(), 0.0).unwrap();
+        let r = ing.submit_at(req(2, Some(0)), sink(), 0.0);
+        match r {
+            Err(Reject::RateLimit { retry_after_s }) => {
+                assert!(retry_after_s > 0.0 && retry_after_s <= 0.5, "{retry_after_s}");
+            }
+            other => panic!("expected rate limit, got {other:?}"),
+        }
+        // an unrelated tenant has its own bucket
+        ing.submit_at(req(3, Some(1)), sink(), 0.0).unwrap();
+        // half a second refills one token at 2/s
+        ing.submit_at(req(2, Some(0)), sink(), 0.5).unwrap();
+        assert_eq!(ing.drain_rejected().len(), 1);
+        assert_eq!(
+            ing.drain_rejected().len(),
+            0,
+            "the eventually-admitted retry left no stale shed"
+        );
+    }
+
+    #[test]
+    fn duplicate_ids_are_rejected_until_retired() {
+        let ing = Ingress::new(8, 0.0, 0);
+        ing.submit_at(req(7, None), sink(), 0.0).unwrap();
+        assert_eq!(ing.submit_at(req(7, None), sink(), 0.0), Err(Reject::DuplicateId));
+        let _ = ing.pull(8);
+        // still live while decoding
+        assert_eq!(ing.submit_at(req(7, None), sink(), 0.0), Err(Reject::DuplicateId));
+        ing.retire(7);
+        ing.submit_at(req(7, None), sink(), 0.0).unwrap();
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected_up_front() {
+        let ing = Ingress::new(8, 0.0, 0);
+        let mut empty = req(0, None);
+        empty.prompt.clear();
+        assert!(matches!(
+            ing.submit_at(empty, sink(), 0.0),
+            Err(Reject::Invalid(_))
+        ));
+        let mut zero = req(1, None);
+        zero.max_new_tokens = 0;
+        assert!(matches!(ing.submit_at(zero, sink(), 0.0), Err(Reject::Invalid(_))));
+    }
+
+    #[test]
+    fn oversized_prompts_are_rejected_at_the_edge() {
+        let ing = Ingress::new(8, 0.0, 4);
+        ing.submit_at(req(0, None), sink(), 0.0).unwrap();
+        let mut long = req(1, None);
+        long.prompt = vec![1; 5];
+        match ing.submit_at(long, sink(), 0.0) {
+            Err(Reject::Invalid(why)) => assert!(why.contains("prefill bucket"), "{why}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        // the cap is exact
+        let mut fits = req(2, None);
+        fits.prompt = vec![1; 4];
+        ing.submit_at(fits, sink(), 0.0).unwrap();
+    }
+
+    #[test]
+    fn pause_holds_pull_but_not_submission() {
+        let ing = Ingress::new(8, 0.0, 0);
+        ing.pause();
+        ing.submit_at(req(0, None), sink(), 0.0).unwrap();
+        assert!(ing.pull(8).is_empty(), "paused ingress releases nothing");
+        assert_eq!(ing.queued_len(), 1);
+        ing.resume();
+        assert_eq!(ing.pull(8).len(), 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_and_drains_the_queue() {
+        let ing = Ingress::new(8, 0.0, 0);
+        ing.submit_at(req(0, None), sink(), 0.0).unwrap();
+        ing.shutdown();
+        assert!(ing.is_shutdown());
+        assert_eq!(ing.submit_at(req(1, None), sink(), 0.0), Err(Reject::ShuttingDown));
+        let drained = ing.drain_all();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(ing.queued_len(), 0);
+    }
+
+    #[test]
+    fn vec_sink_records_the_stream() {
+        let mut s = VecSink::default();
+        assert!(s.on_token(1, 10));
+        assert!(s.on_token(1, 11));
+        s.on_shed(1, FailReason::Shutdown);
+        assert_eq!(s.tokens, vec![10, 11]);
+        assert_eq!(s.shed, Some(FailReason::Shutdown));
+        assert!(s.done.is_none());
+    }
+}

@@ -25,8 +25,30 @@ pub enum FailReason {
     /// KV capacity faults exhausted the retry budget.
     KvCapacity,
     /// Shed from the admission queue after waiting past the overload
-    /// deadline.
+    /// deadline, or rejected because the ingress queue was full.
     Overload,
+    /// Rejected by the per-tenant token-bucket rate limit (HTTP 429).
+    RateLimit,
+    /// The client went away mid-stream; decoding stopped.
+    Disconnect,
+    /// In the queue when a graceful shutdown drained the server.
+    Shutdown,
+}
+
+impl FailReason {
+    /// Every reason, for exhaustive per-reason accounting (metrics
+    /// exposition prints one series per reason so scrape shape is
+    /// stable).
+    pub const ALL: [FailReason; 8] = [
+        FailReason::Retention,
+        FailReason::Backend,
+        FailReason::AdapterLoad,
+        FailReason::KvCapacity,
+        FailReason::Overload,
+        FailReason::RateLimit,
+        FailReason::Disconnect,
+        FailReason::Shutdown,
+    ];
 }
 
 impl std::fmt::Display for FailReason {
@@ -37,6 +59,9 @@ impl std::fmt::Display for FailReason {
             FailReason::AdapterLoad => write!(f, "adapter-load"),
             FailReason::KvCapacity => write!(f, "kv-capacity"),
             FailReason::Overload => write!(f, "overload"),
+            FailReason::RateLimit => write!(f, "rate-limit"),
+            FailReason::Disconnect => write!(f, "disconnect"),
+            FailReason::Shutdown => write!(f, "shutdown"),
         }
     }
 }
@@ -89,13 +114,22 @@ impl FaultMetrics {
     }
 }
 
-/// Aggregate metrics of one served trace.
-#[derive(Debug, Default)]
+/// Aggregate metrics of one served trace. `Clone` so the live serving
+/// plane can publish consistent snapshots to `/metrics` scrapers while
+/// the coordinator keeps mutating its working copy.
+#[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
     /// Time-to-first-token distribution (admission to first token).
     pub ttft: Percentiles,
     /// Token-between-token gap distribution.
     pub tbt: Percentiles,
+    /// TTFT measured in *decode rounds* (round-indexed virtual time):
+    /// rounds from admission to the first emitted token. Wall-clock
+    /// free, so trace mode reports identical values on every machine.
+    pub ttft_rounds: Percentiles,
+    /// Per-token gap measured in decode rounds (1.0 = the sequence
+    /// produced a token every round; higher = backoff/recovery stalls).
+    pub tbt_rounds: Percentiles,
     /// Total tokens emitted.
     pub tokens_out: u64,
     /// Requests run to completion.
@@ -142,6 +176,16 @@ impl ServeMetrics {
         self.tbt.add(s);
     }
 
+    /// Rounds from admission to first token (round-indexed TTFT).
+    pub fn record_ttft_rounds(&mut self, rounds: u64) {
+        self.ttft_rounds.add(rounds as f64);
+    }
+
+    /// Rounds between consecutive tokens of one sequence.
+    pub fn record_tbt_rounds(&mut self, rounds: u64) {
+        self.tbt_rounds.add(rounds as f64);
+    }
+
     /// Backend execution time of one prefill (compute only).
     pub fn record_prefill(&mut self, s: f64) {
         self.prefill_time.add(s);
@@ -173,18 +217,32 @@ impl ServeMetrics {
         let max_tbt = self.max_tbt();
         let mut out = format!(
             "requests={} tokens={} wall={:.2}s throughput={:.1} tok/s\n\
-             TTFT  p50={:.1}ms p95={:.1}ms\n\
-             TBT   p50={:.2}ms p95={:.2}ms max={:.2}ms",
+             TTFT  p50={:.1}ms p95={:.1}ms p99={:.1}ms\n\
+             TBT   p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
             self.requests_done,
             self.tokens_out,
             self.wall_s,
             self.tokens_per_s(),
             self.ttft.pct(50.0) * 1e3,
             self.ttft.pct(95.0) * 1e3,
+            self.ttft.pct(99.0) * 1e3,
             self.tbt.pct(50.0) * 1e3,
             self.tbt.pct(95.0) * 1e3,
+            self.tbt.pct(99.0) * 1e3,
             max_tbt * 1e3,
         );
+        if !self.ttft_rounds.is_empty() {
+            out.push_str(&format!(
+                "\nRound TTFT p50={:.0} p95={:.0} p99={:.0}; \
+                 TBT p50={:.1} p95={:.1} p99={:.1} (decode rounds)",
+                self.ttft_rounds.pct(50.0),
+                self.ttft_rounds.pct(95.0),
+                self.ttft_rounds.pct(99.0),
+                self.tbt_rounds.pct(50.0),
+                self.tbt_rounds.pct(95.0),
+                self.tbt_rounds.pct(99.0),
+            ));
+        }
         if let Some(kv) = &self.kv {
             out.push_str(&format!(
                 "\nKV    on-die {} / external {} accesses ({} external reduction, \
@@ -236,6 +294,64 @@ impl ServeMetrics {
                     fmt_pct(lora.measured_op_overhead()),
                 ));
             }
+        }
+        out
+    }
+
+    /// Prometheus text exposition (served at `GET /metrics`). Counters
+    /// carry the `_total` suffix; latency distributions are rendered as
+    /// quantile-labelled gauges (full summaries would need streaming
+    /// quantile sketches — out of scope for a reference server). One
+    /// `bitrom_faults_shed_total` series per [`FailReason`] is always
+    /// present so scrape shape is stable across fault-free and faulted
+    /// runs.
+    pub fn prometheus(&mut self) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE bitrom_requests_done_total counter\n");
+        out.push_str(&format!("bitrom_requests_done_total {}\n", self.requests_done));
+        out.push_str("# TYPE bitrom_tokens_total counter\n");
+        out.push_str(&format!("bitrom_tokens_total {}\n", self.tokens_out));
+        out.push_str("# TYPE bitrom_throughput_tokens_per_second gauge\n");
+        out.push_str(&format!(
+            "bitrom_throughput_tokens_per_second {}\n",
+            self.tokens_per_s()
+        ));
+        fn quantiles(out: &mut String, name: &str, p: &mut Percentiles) {
+            if p.is_empty() {
+                return;
+            }
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for q in [50.0, 95.0, 99.0] {
+                out.push_str(&format!(
+                    "{name}{{quantile=\"{}\"}} {}\n",
+                    q / 100.0,
+                    p.pct(q)
+                ));
+            }
+        }
+        quantiles(&mut out, "bitrom_ttft_seconds", &mut self.ttft);
+        quantiles(&mut out, "bitrom_tbt_seconds", &mut self.tbt);
+        quantiles(&mut out, "bitrom_ttft_rounds", &mut self.ttft_rounds);
+        quantiles(&mut out, "bitrom_tbt_rounds", &mut self.tbt_rounds);
+        let f = &self.faults;
+        for (name, v) in [
+            ("bitrom_faults_injected_skips_total", f.injected_skips),
+            ("bitrom_faults_injected_transients_total", f.injected_transients),
+            ("bitrom_faults_retention_events_total", f.retention_events),
+            ("bitrom_faults_recomputes_total", f.recomputes),
+            ("bitrom_faults_recomputed_tokens_total", f.recomputed_tokens),
+            ("bitrom_faults_retries_total", f.retries),
+            ("bitrom_faults_preemptions_total", f.preemptions),
+            ("bitrom_faults_admission_deferrals_total", f.admission_deferrals),
+        ] {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        out.push_str("# TYPE bitrom_faults_shed_total counter\n");
+        for reason in FailReason::ALL {
+            out.push_str(&format!(
+                "bitrom_faults_shed_total{{reason=\"{reason}\"}} {}\n",
+                self.faults.shed_count(reason)
+            ));
         }
         out
     }
@@ -314,16 +430,53 @@ mod tests {
 
     #[test]
     fn fail_reasons_render_distinctly() {
-        let all = [
-            FailReason::Retention,
-            FailReason::Backend,
-            FailReason::AdapterLoad,
-            FailReason::KvCapacity,
-            FailReason::Overload,
-        ];
         let shown: std::collections::BTreeSet<String> =
-            all.iter().map(|r| r.to_string()).collect();
-        assert_eq!(shown.len(), all.len());
+            FailReason::ALL.iter().map(|r| r.to_string()).collect();
+        assert_eq!(shown.len(), FailReason::ALL.len());
+    }
+
+    #[test]
+    fn round_latency_percentiles_are_wall_clock_free() {
+        let mut m = ServeMetrics::new();
+        assert!(!m.report().contains("Round TTFT"), "no samples, no section");
+        m.record_ttft_rounds(1);
+        m.record_ttft_rounds(3);
+        m.record_tbt_rounds(1);
+        m.record_tbt_rounds(1);
+        m.record_tbt_rounds(7); // a recovery stall
+        assert_eq!(m.tbt_rounds.pct(50.0), 1.0);
+        assert_eq!(m.tbt_rounds.pct(100.0), 7.0);
+        assert!(m.report().contains("Round TTFT"), "{}", m.report());
+    }
+
+    #[test]
+    fn prometheus_exposition_is_scrape_stable() {
+        let mut m = ServeMetrics::new();
+        m.tokens_out = 5;
+        m.requests_done = 2;
+        m.wall_s = 1.0;
+        let quiet = m.prometheus();
+        assert!(quiet.contains("bitrom_tokens_total 5\n"), "{quiet}");
+        assert!(quiet.contains("bitrom_requests_done_total 2\n"));
+        // empty latency series are omitted (no NaN quantiles)...
+        assert!(!quiet.contains("bitrom_ttft_seconds"));
+        // ...but every shed-reason series is present even at zero
+        for reason in FailReason::ALL {
+            assert!(
+                quiet.contains(&format!("bitrom_faults_shed_total{{reason=\"{reason}\"}} 0\n")),
+                "{quiet}"
+            );
+        }
+        m.record_ttft(0.25);
+        m.record_ttft_rounds(2);
+        m.faults.shed.push(ShedRequest {
+            id: 9,
+            reason: FailReason::RateLimit,
+        });
+        let hot = m.prometheus();
+        assert!(hot.contains("bitrom_ttft_seconds{quantile=\"0.5\"} 0.25\n"), "{hot}");
+        assert!(hot.contains("bitrom_ttft_rounds{quantile=\"0.99\"} 2\n"), "{hot}");
+        assert!(hot.contains("bitrom_faults_shed_total{reason=\"rate-limit\"} 1\n"), "{hot}");
     }
 
     #[test]

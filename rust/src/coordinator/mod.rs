@@ -16,14 +16,23 @@
 //! the bitplane kernel engine; `Server<ModelExecutor>` (`pjrt`
 //! feature) executes the compiled artifacts.
 //!
+//! Two admission planes share the same round loop (DESIGN.md §14):
+//! [`Server::run_trace`] consumes a closed batch offline, and
+//! [`Server::run_ingress`] serves live submissions funneled through an
+//! [`Ingress`] (per-tenant FIFO, token-bucket rate limits, queue-depth
+//! backpressure), streaming every token through its request's
+//! [`TokenSink`] the round it is produced.
+//!
 //! [`runtime::InferenceBackend`]: crate::runtime::InferenceBackend
 
 mod batcher;
+mod ingress;
 mod metrics;
 mod pipeline;
 mod server;
 
 pub use batcher::{Batcher, SlotState};
+pub use ingress::{Ingress, Reject, TokenSink, VecSink};
 pub use metrics::{FailReason, FaultMetrics, ServeMetrics, ShedRequest};
 pub use pipeline::{PipelineSchedule, StageOp};
 pub use server::{CompletedRequest, Server};

@@ -12,9 +12,19 @@
 //! stays on the coordinator thread: admission, state creation and
 //! adapter binding, KV page *allocation* (via
 //! [`InferenceBackend::reserve_kv`], in slot order, so shared-tier
-//! placement is deterministic), the retention clock, sampling (one Rng,
-//! slot order), and metrics. Served tokens and all merged counters are
+//! placement is deterministic), the retention clock, sampling (a
+//! per-request Rng derived from the serve seed and the request id, so
+//! one request's token stream is independent of batching and arrival
+//! order), and metrics. Served tokens and all merged counters are
 //! therefore bit-identical at any `ServeConfig::threads` width.
+//!
+//! The same round loop serves two admission planes (DESIGN.md §14):
+//! [`Server::run_trace`] consumes a closed batch of requests up front
+//! (the deterministic offline twin), and [`Server::run_ingress`] pulls
+//! live submissions from a shared [`Ingress`] between rounds, pushing
+//! each decoded token through the request's [`TokenSink`] the moment
+//! its round completes. Per-request sampling streams make the two
+//! planes bit-identical on the same request set (invariant 10).
 //!
 //! Survivability (DESIGN.md §13, invariant 9): with a seeded
 //! [`FaultPlan`] and/or the degradation knobs active, the loop gates
@@ -28,6 +38,8 @@
 //! fault-free ones. With every knob at its default the loop is
 //! byte-identical to a build without the fault module.
 
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -42,6 +54,7 @@ use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 use super::batcher::{Batcher, SlotState};
+use super::ingress::{Ingress, TokenSink};
 use super::metrics::{FailReason, ServeMetrics, ShedRequest};
 use super::pipeline::PipelineSchedule;
 
@@ -81,7 +94,33 @@ pub struct CompletedRequest {
 pub struct Server<B: InferenceBackend> {
     backend: B,
     serve: ServeConfig,
-    rng: Rng,
+}
+
+/// Live-admission context threaded through the serving loop by
+/// [`Server::run_ingress`]: the shared ingress, the per-request token
+/// sinks, and an optional published metrics snapshot for scrapers.
+struct LiveCtx {
+    ingress: Arc<Ingress>,
+    publish: Option<Arc<Mutex<ServeMetrics>>>,
+    sinks: BTreeMap<u64, Box<dyn TokenSink>>,
+}
+
+impl LiveCtx {
+    /// Notify a request's sink of its typed shed and free its id.
+    fn shed(&mut self, id: u64, reason: FailReason) {
+        if let Some(mut sink) = self.sinks.remove(&id) {
+            sink.on_shed(id, reason);
+        }
+        self.ingress.retire(id);
+    }
+}
+
+/// The per-request sampling stream: keyed off the serve seed and the
+/// request id alone, so a request's sampled tokens are independent of
+/// batching, arrival order, and transport — the hinge of invariant 10
+/// (HTTP-streamed tokens ≡ the offline trace twin) under top-k.
+fn request_rng(seed: u64, id: u64) -> Rng {
+    Rng::new(seed ^ id.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
 impl<B: InferenceBackend> Server<B> {
@@ -104,11 +143,7 @@ impl<B: InferenceBackend> Server<B> {
         // one width for the whole engine: the server's per-slot rounds
         // and the backend's sharded kernels (1 = the serial path)
         backend.set_threads(serve.resolved_threads());
-        Ok(Server {
-            rng: Rng::new(serve.seed),
-            serve,
-            backend,
-        })
+        Ok(Server { serve, backend })
     }
 
     /// The worker-pool width this server executes rounds at.
@@ -133,12 +168,14 @@ impl<B: InferenceBackend> Server<B> {
         self.backend.lora_stats()
     }
 
-    fn sample(&mut self, logits: &Logits) -> i32 {
+    /// Sample the next token for one slot. Greedy (`top_k <= 1`) needs
+    /// no randomness; top-k draws from the slot's per-request stream.
+    fn sample(&self, rng: Option<&mut Rng>, logits: &Logits) -> i32 {
         if self.serve.top_k <= 1 {
             logits.argmax() as i32
         } else {
             let cands = logits.top_k(self.serve.top_k);
-            *self.rng.choice(&cands) as i32
+            *rng.expect("top-k sampling carries a per-request rng").choice(&cands) as i32
         }
     }
 
@@ -157,8 +194,6 @@ impl<B: InferenceBackend> Server<B> {
         B::State: Send,
         B::Hidden: Send,
     {
-        let n_parts = self.backend.n_partitions();
-        let pool = Pool::new(self.serve.resolved_threads());
         let mut batcher = Batcher::new(self.serve.max_batches);
         for r in requests {
             anyhow::ensure!(
@@ -170,6 +205,62 @@ impl<B: InferenceBackend> Server<B> {
             );
             batcher.submit(r);
         }
+        self.serve_loop(batcher, None)
+    }
+
+    /// Serve live submissions from `ingress` until it is shut down and
+    /// drained (the streaming plane's coordinator loop — DESIGN.md
+    /// §14). Requests pulled between decode rounds join the same
+    /// continuous batcher as trace requests; every decoded token is
+    /// pushed through the request's [`TokenSink`] the round it is
+    /// produced. When `publish` is given, a metrics snapshot is
+    /// refreshed there every round for `/metrics` scrapers.
+    ///
+    /// Submissions exceeding the batcher's prompt bucket must be
+    /// rejected at the edge (configure the [`Ingress`] prompt cap to
+    /// `ServeConfig::prefill_len`); an oversized request that reaches
+    /// the backend fails the whole loop, exactly like a malformed
+    /// offline trace.
+    pub fn run_ingress(
+        &mut self,
+        ingress: Arc<Ingress>,
+        publish: Option<Arc<Mutex<ServeMetrics>>>,
+    ) -> Result<(Vec<CompletedRequest>, ServeMetrics)>
+    where
+        B: Sync,
+        B::State: Send,
+        B::Hidden: Send,
+    {
+        let batcher = Batcher::new(self.serve.max_batches);
+        self.serve_loop(
+            batcher,
+            Some(LiveCtx {
+                ingress,
+                publish,
+                sinks: BTreeMap::new(),
+            }),
+        )
+    }
+
+    /// The round loop shared by both admission planes: `live` is `None`
+    /// for a closed-batch trace and carries the ingress + sinks for
+    /// online serving.
+    fn serve_loop(
+        &mut self,
+        mut batcher: Batcher,
+        mut live: Option<LiveCtx>,
+    ) -> Result<(Vec<CompletedRequest>, ServeMetrics)>
+    where
+        B: Sync,
+        B::State: Send,
+        B::Hidden: Send,
+    {
+        let n_parts = self.backend.n_partitions();
+        let pool = Pool::new(self.serve.resolved_threads());
+        // live serving runs on the wall clock even for offline
+        // backends: submitters time-stamp against it, so the loop must
+        // never skip ahead of them
+        let realtime = self.backend.realtime() || live.is_some();
 
         let mut states: Vec<Option<B::State>> = Vec::new();
         let mut last_tok: Vec<i32> = Vec::new();
@@ -195,6 +286,13 @@ impl<B: InferenceBackend> Server<B> {
         let mut recomputes_used: Vec<usize> = vec![0; self.serve.max_batches];
         let mut backoff_until: Vec<u64> = vec![0; self.serve.max_batches];
         let mut admit_seq: Vec<u64> = vec![0; self.serve.max_batches];
+        // round-indexed virtual time per slot: the round the request was
+        // admitted and the round of its latest token, for the
+        // wall-clock-free TTFT/TBT percentiles
+        let mut admit_round: Vec<u64> = vec![0; self.serve.max_batches];
+        let mut last_tok_round: Vec<u64> = vec![0; self.serve.max_batches];
+        // per-request top-k sampling streams (None under greedy)
+        let mut slot_rng: Vec<Option<Rng>> = (0..self.serve.max_batches).map(|_| None).collect();
         let mut admit_counter: u64 = 0;
         let mut round_no: u64 = 0;
         let mut plan = FaultPlan::from_serve(&self.serve);
@@ -220,8 +318,49 @@ impl<B: InferenceBackend> Server<B> {
         // serving clock is still used for all latency metrics.
         let mut hw_time = 0.0f64;
 
-        while !batcher.all_idle() {
+        loop {
             let t_now = now(skipped_s);
+            // live admission edge: account edge rejections, drain the
+            // ingress on shutdown, otherwise pull enough submissions to
+            // keep the batcher's own queue within one slot-set (the
+            // real backlog — and the 429 backpressure — lives in the
+            // ingress, bounded by its max_queue)
+            if let Some(ctx) = live.as_mut() {
+                for s in ctx.ingress.drain_rejected() {
+                    metrics.faults.shed.push(s);
+                }
+                if ctx.ingress.is_shutdown() {
+                    for (req, mut sink) in ctx.ingress.drain_all() {
+                        sink.on_shed(req.id, FailReason::Shutdown);
+                        metrics.faults.shed.push(ShedRequest {
+                            id: req.id,
+                            reason: FailReason::Shutdown,
+                        });
+                        ctx.ingress.retire(req.id);
+                    }
+                } else {
+                    let room = self.serve.max_batches.saturating_sub(batcher.queued());
+                    for (mut req, sink) in ctx.ingress.pull(room) {
+                        req.arrival_s = t_now;
+                        ctx.sinks.insert(req.id, sink);
+                        batcher.submit(req);
+                    }
+                }
+            }
+            if batcher.all_idle() {
+                match &live {
+                    // a trace runs to completion of its closed batch
+                    None => break,
+                    Some(ctx) => {
+                        if ctx.ingress.is_shutdown() && ctx.ingress.queued_len() == 0 {
+                            break;
+                        }
+                        // live and idle: wait for the next submission
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                        continue;
+                    }
+                }
+            }
             // overload shedding: queued requests past their deadline
             // leave with a typed reason instead of waiting forever
             // (off at the default shed_after_s == 0)
@@ -231,10 +370,16 @@ impl<B: InferenceBackend> Server<B> {
                         id: r.id,
                         reason: FailReason::Overload,
                     });
+                    if let Some(ctx) = live.as_mut() {
+                        ctx.shed(r.id, FailReason::Overload);
+                    }
                 }
                 // shedding may have drained the system entirely
-                if batcher.all_idle() {
+                if batcher.all_idle() && live.is_none() {
                     break;
+                }
+                if batcher.all_idle() {
+                    continue;
                 }
             }
             // admission, gated on measured KV pressure when the knob is
@@ -256,6 +401,14 @@ impl<B: InferenceBackend> Server<B> {
                     backoff_until[slot] = 0;
                     admit_counter += 1;
                     admit_seq[slot] = admit_counter;
+                    admit_round[slot] = round_no;
+                    last_tok_round[slot] = round_no;
+                    let id = batcher.slot(slot).request.as_ref().unwrap().id;
+                    slot_rng[slot] = if self.serve.top_k > 1 {
+                        Some(request_rng(self.serve.seed, id))
+                    } else {
+                        None
+                    };
                 }
             }
             let active = batcher.active_slots();
@@ -267,7 +420,7 @@ impl<B: InferenceBackend> Server<B> {
                     .context("no active slots and nothing queued")?;
                 let t_now = now(skipped_s);
                 if next > t_now {
-                    if self.backend.realtime() {
+                    if realtime {
                         let nap = (next - t_now).min(0.01);
                         std::thread::sleep(std::time::Duration::from_secs_f64(nap));
                     } else {
@@ -333,6 +486,9 @@ impl<B: InferenceBackend> Server<B> {
                         let (req, _, _) = batcher.release(slot);
                         states[slot] = None;
                         metrics.faults.shed.push(ShedRequest { id: req.id, reason });
+                        if let Some(ctx) = live.as_mut() {
+                            ctx.shed(req.id, reason);
+                        }
                     }
                 }
             }
@@ -446,6 +602,9 @@ impl<B: InferenceBackend> Server<B> {
                         id: req.id,
                         reason: FailReason::Retention,
                     });
+                    if let Some(ctx) = live.as_mut() {
+                        ctx.shed(req.id, FailReason::Retention);
+                    }
                     continue;
                 }
                 recomputes_used[slot] += 1;
@@ -504,18 +663,20 @@ impl<B: InferenceBackend> Server<B> {
                     slot_compute[slot] += t_head.elapsed().as_secs_f64();
                     l
                 };
-                let tok = self.sample(&logits);
+                let tok = self.sample(slot_rng[slot].as_mut(), &logits);
                 let t_now = now(skipped_s);
 
                 let admitted_at = batcher.slot(slot).admitted_at;
                 if is_prefill {
                     slot_ttft[slot] = t_now - admitted_at;
                     metrics.record_ttft(t_now - admitted_at);
+                    metrics.record_ttft_rounds(round_no - admit_round[slot]);
                     // actual prefill execution time, not the queue wait
                     metrics.record_prefill(slot_compute[slot]);
                     batcher.slot_mut(slot).state = SlotState::Decoding { generated: 1 };
                 } else {
                     metrics.record_tbt(t_now - last_tok_at[slot]);
+                    metrics.record_tbt_rounds(round_no - last_tok_round[slot]);
                     metrics.record_decode(slot_compute[slot]);
                     if let SlotState::Decoding { generated } = &mut batcher.slot_mut(slot).state {
                         *generated += 1;
@@ -524,8 +685,30 @@ impl<B: InferenceBackend> Server<B> {
                 slot_compute[slot] = 0.0;
                 last_tok[slot] = tok;
                 last_tok_at[slot] = t_now;
+                last_tok_round[slot] = round_no;
                 batcher.slot_mut(slot).output.push(tok);
                 metrics.tokens_out += 1;
+
+                // stream the token out the round it was produced; a
+                // dead sink means the client went away — free the slot
+                // and account the typed disconnect
+                if let Some(ctx) = live.as_mut() {
+                    let id = batcher.slot(slot).request.as_ref().unwrap().id;
+                    let alive = match ctx.sinks.get_mut(&id) {
+                        Some(sink) => sink.on_token(id, tok),
+                        None => true,
+                    };
+                    if !alive {
+                        let (req, _, _) = batcher.release(slot);
+                        states[slot] = None;
+                        metrics.faults.shed.push(ShedRequest {
+                            id: req.id,
+                            reason: FailReason::Disconnect,
+                        });
+                        ctx.shed(req.id, FailReason::Disconnect);
+                        continue;
+                    }
+                }
 
                 // completion check
                 let slot_ref = batcher.slot(slot);
@@ -545,7 +728,22 @@ impl<B: InferenceBackend> Server<B> {
                         ttft_s: slot_ttft[slot],
                         latency_s: t_now - admitted_at,
                     });
+                    if let Some(ctx) = live.as_mut() {
+                        let finished = done.last().expect("just pushed");
+                        if let Some(mut sink) = ctx.sinks.remove(&finished.id) {
+                            sink.on_complete(finished);
+                        }
+                        ctx.ingress.retire(finished.id);
+                    }
                 }
+            }
+
+            // refresh the published snapshot for /metrics scrapers once
+            // per round; the hot loop itself never shares `metrics`
+            if let Some(publish) = live.as_ref().and_then(|c| c.publish.as_ref()) {
+                let mut snap = metrics.clone();
+                snap.wall_s = now(skipped_s);
+                *publish.lock().unwrap_or_else(|p| p.into_inner()) = snap;
             }
         }
 
@@ -574,6 +772,11 @@ impl<B: InferenceBackend> Server<B> {
                     metrics.faults.retention_events
                 );
             }
+        }
+        // final snapshot: scrapers racing shutdown still see the
+        // complete counters (kv/lora deltas included)
+        if let Some(publish) = live.as_ref().and_then(|c| c.publish.as_ref()) {
+            *publish.lock().unwrap_or_else(|p| p.into_inner()) = metrics.clone();
         }
         Ok((done, metrics))
     }
@@ -621,6 +824,7 @@ fn run_slot_round<B: InferenceBackend>(
 
 #[cfg(test)]
 mod tests {
+    use super::super::ingress::VecSink;
     use super::*;
     use crate::config::ModelConfig;
     use crate::runtime::HostBackend;
@@ -784,5 +988,134 @@ mod tests {
         assert_eq!(l2.cold_loads, 0, "second trace binds resident tenants for free");
         assert_eq!(l1.adapter_macs, l2.adapter_macs, "identical work per trace");
         assert!(l1.measured_op_overhead() > 0.0);
+    }
+
+    /// A [`VecSink`] behind a shared handle: the coordinator owns the
+    /// boxed sink while the test watches the stream from outside.
+    #[derive(Clone, Default)]
+    struct SharedSink(Arc<Mutex<VecSink>>);
+
+    impl SharedSink {
+        fn lock(&self) -> std::sync::MutexGuard<'_, VecSink> {
+            self.0.lock().unwrap()
+        }
+    }
+
+    impl TokenSink for SharedSink {
+        fn on_token(&mut self, id: u64, tok: i32) -> bool {
+            self.lock().on_token(id, tok)
+        }
+        fn on_complete(&mut self, done: &CompletedRequest) {
+            self.lock().on_complete(done);
+        }
+        fn on_shed(&mut self, id: u64, reason: FailReason) {
+            self.lock().on_shed(id, reason);
+        }
+    }
+
+    #[test]
+    fn live_ingress_matches_the_offline_twin_and_notifies_sinks() {
+        // invariant 10 at the unit level, under top-k so the
+        // per-request sampling streams are load-bearing: the same
+        // request set served live through the ingress emits exactly the
+        // tokens of the closed-batch trace twin
+        let serve = || ServeConfig {
+            max_batches: 2,
+            prefill_len: 8,
+            max_seq: 32,
+            ondie_tokens: 8,
+            top_k: 3,
+            ..ServeConfig::default()
+        };
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                arrival_s: 0.0,
+                prompt: vec![1 + i as i32, 2, 3],
+                max_new_tokens: 4,
+                adapter_id: None,
+            })
+            .collect();
+
+        let mut twin_server =
+            Server::new(HostBackend::new(micro(), 2).unwrap(), serve()).unwrap();
+        let (twin, _) = twin_server.run_trace(reqs.clone()).unwrap();
+
+        let ingress = Arc::new(Ingress::new(8, 0.0, 8));
+        let sinks: Vec<SharedSink> = (0..reqs.len()).map(|_| SharedSink::default()).collect();
+        ingress.pause();
+        for (r, s) in reqs.iter().zip(&sinks) {
+            ingress.submit_at(r.clone(), Box::new(s.clone()), 0.0).unwrap();
+        }
+        ingress.resume();
+        let watch = sinks.clone();
+        let ing = ingress.clone();
+        let watcher = std::thread::spawn(move || loop {
+            if watch.iter().all(|s| s.lock().done.is_some()) {
+                ing.shutdown();
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let published = Arc::new(Mutex::new(ServeMetrics::new()));
+        let mut server = Server::new(HostBackend::new(micro(), 2).unwrap(), serve()).unwrap();
+        let (done, metrics) = server.run_ingress(ingress, Some(published.clone())).unwrap();
+        watcher.join().unwrap();
+
+        assert_eq!(done.len(), 3);
+        assert_eq!(metrics.requests_done, 3);
+        assert!(metrics.faults.shed.is_empty());
+        // round-indexed latency percentiles recorded without any wall
+        // clock involvement
+        assert_eq!(metrics.ttft_rounds.len(), 3);
+        assert!(metrics.tbt_rounds.len() > 0);
+        for t in &twin {
+            let live = done.iter().find(|d| d.id == t.id).unwrap();
+            assert_eq!(live.tokens, t.tokens, "request {} diverged from its twin", t.id);
+        }
+        for (r, s) in reqs.iter().zip(&sinks) {
+            let g = s.lock();
+            let d = g.done.as_ref().expect("sink saw completion");
+            assert_eq!(d.id, r.id);
+            assert_eq!(g.tokens, d.tokens, "streamed ≠ completion record");
+            assert_eq!(g.tokens.len(), r.max_new_tokens);
+        }
+        // the final published snapshot carries the run's full counters
+        assert_eq!(published.lock().unwrap().requests_done, 3);
+    }
+
+    #[test]
+    fn shutdown_sheds_queued_live_requests_with_typed_reason() {
+        let serve = ServeConfig {
+            max_batches: 1,
+            prefill_len: 8,
+            max_seq: 32,
+            ondie_tokens: 8,
+            ..ServeConfig::default()
+        };
+        let ingress = Arc::new(Ingress::new(8, 0.0, 8));
+        let sink = SharedSink::default();
+        ingress.pause();
+        ingress
+            .submit_at(
+                Request {
+                    id: 9,
+                    arrival_s: 0.0,
+                    prompt: vec![1, 2],
+                    max_new_tokens: 4,
+                    adapter_id: None,
+                },
+                Box::new(sink.clone()),
+                0.0,
+            )
+            .unwrap();
+        ingress.shutdown();
+        let mut server = Server::new(HostBackend::new(micro(), 1).unwrap(), serve).unwrap();
+        let (done, metrics) = server.run_ingress(ingress.clone(), None).unwrap();
+        assert!(done.is_empty());
+        assert_eq!(metrics.faults.shed_count(FailReason::Shutdown), 1);
+        assert_eq!(sink.lock().shed, Some(FailReason::Shutdown));
+        assert!(sink.lock().tokens.is_empty());
+        assert_eq!(ingress.queued_len(), 0, "drained queue holds nothing");
     }
 }

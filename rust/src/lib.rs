@@ -37,6 +37,11 @@
 //! * [`energy`] — analytical energy/area model (Table III, Fig 1a)
 //!   plus the measured KV memory energy ([`energy::KvEnergy`]) and
 //!   adapter task-switch energy ([`energy::AdapterEnergy`]).
+//! * [`net`] — the streaming serving plane's network layer (DESIGN.md
+//!   §14): std-only HTTP/1.1 front door ([`net::NetServer`]) streaming
+//!   tokens as NDJSON/SSE the round they decode, the incremental-JSON
+//!   [`net::jsonframe`] codec, and graceful SIGINT draining — loopback
+//!   bit-identical to the offline trace twin (invariant 10).
 //! * [`fault`] — the robustness layer's cause generator (DESIGN.md
 //!   §13): the seeded deterministic [`fault::FaultPlan`] injecting
 //!   retention-clock storms and transient backend/adapter/KV failures,
@@ -57,6 +62,7 @@ pub mod energy;
 pub mod fault;
 pub mod kvcache;
 pub mod lora;
+pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod trace;

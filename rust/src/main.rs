@@ -8,10 +8,14 @@
 //!   info       print artifact/config summary
 
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
 
-use bitrom::config::{HardwareConfig, ModelConfig, ServeConfig};
+use anyhow::Context;
+use bitrom::config::{HardwareConfig, ModelConfig, NetConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
 use bitrom::lora::AdapterRegistry;
+use bitrom::net::{install_sigint_latch, NetServer};
 use bitrom::report::{
     fig1a_report, fig5a_report, fig5b_report, fig5b_serving_report, gemv_perf_report,
     lora_serving_report, table3_report,
@@ -62,7 +66,10 @@ fn print_help() {
          COMMANDS:\n\
          \x20 serve     run a synthetic request trace through the 6-stage pipeline\n\
          \x20           (--host serves offline on the fabricated HostBackend;\n\
-         \x20           --adapters N serves N tenant LoRA adapters reload-free)\n\
+         \x20           --adapters N serves N tenant LoRA adapters reload-free;\n\
+         \x20           --listen ADDR opens the streaming HTTP front door —\n\
+         \x20           POST /v1/completions streams tokens as NDJSON/SSE,\n\
+         \x20           Ctrl-C drains in-flight sequences gracefully)\n\
          \x20 generate  greedy-generate from a prompt (token ids; --host = offline;\n\
          \x20           --adapter K binds tenant K's adapter)\n\
          \x20 report    print paper tables/figures (--table3 --fig1a --fig5a --fig5b\n\
@@ -196,6 +203,11 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("admit-pressure", "0", "defer admission above this on-die KV occupancy (0 = off)")
         .opt("shed-after", "0", "shed queued requests waiting longer than this (s; 0 = never)")
         .opt("burst-p", "0", "trace burst probability (arrival ties; stresses admission)")
+        .opt("listen", "", "serve live over HTTP on this address (needs --host; e.g. 127.0.0.1:8080)")
+        .opt("max-queue", "64", "admission queue depth before HTTP 429 (with --listen)")
+        .opt("rate-limit", "0", "per-tenant request rate limit, req/s (with --listen; 0 = off)")
+        .opt("trace-out", "", "export the request trace as NDJSON wire format to this file")
+        .opt("trace-in", "", "replay requests from an NDJSON wire-format file instead of generating")
         .flag("preempt", "demote the youngest slot's KV under pressure (with --admit-pressure)")
         .flag("host", "serve on the offline HostBackend (no artifacts/PJRT needed)")
         .flag("verbose", "per-request output");
@@ -237,13 +249,61 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
                 serve.retry_max,
             );
         }
+        if !args.str("listen").is_empty() {
+            return serve_http(&args, backend, serve);
+        }
         let trace = serve_trace_cfg(&args, backend.model().vocab_size, serve.n_adapters);
+        let reqs = match args.str("trace-in") {
+            "" => generate(&trace),
+            path => {
+                let text =
+                    std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+                bitrom::trace::import_ndjson(&text)?
+            }
+        };
+        let out = args.str("trace-out");
+        if !out.is_empty() {
+            std::fs::write(out, bitrom::trace::export_ndjson(&reqs))
+                .with_context(|| format!("writing {out}"))?;
+            println!("wrote {} requests to {out} (NDJSON wire format)", reqs.len());
+        }
         let mut server = Server::new(backend, serve)?;
-        let (done, mut metrics) = server.run_trace(generate(&trace))?;
+        let (done, mut metrics) = server.run_trace(reqs)?;
         print_serve_outcome(&done, &mut metrics, args.flag("verbose"));
         return Ok(());
     }
+    anyhow::ensure!(
+        args.str("listen").is_empty(),
+        "--listen needs --host: the streaming front door serves the offline backend"
+    );
     serve_pjrt(&args)
+}
+
+/// `bitrom serve --host --listen ADDR`: open the streaming HTTP front
+/// door and serve until SIGINT, then drain gracefully and print the
+/// final serving report (DESIGN.md §14).
+fn serve_http(args: &Args, backend: HostBackend, serve: ServeConfig) -> anyhow::Result<()> {
+    let net = NetConfig {
+        listen: args.str("listen").to_string(),
+        max_queue: args.usize("max-queue"),
+        rate_limit: args.f64("rate-limit"),
+        ..NetConfig::default()
+    };
+    let sigint = install_sigint_latch();
+    let handle = NetServer::start(backend, serve, net)?;
+    println!(
+        "listening on http://{} — POST /v1/completions (NDJSON; ?format=sse), \
+         GET /healthz, GET /metrics",
+        handle.addr()
+    );
+    println!("Ctrl-C drains in-flight sequences and prints the final serving report");
+    while !sigint.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    println!("SIGINT — draining in-flight sequences (queued requests shed as \"shutdown\")");
+    let (done, mut metrics) = handle.shutdown()?;
+    print_serve_outcome(&done, &mut metrics, args.flag("verbose"));
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,335 @@
+//! Minimal HTTP/1.1 framing over generic `Read`/`Write` (DESIGN.md §14).
+//!
+//! Just enough of the protocol for the serving plane: one request per
+//! connection (`Connection: close`), `Content-Length` bodies on the way
+//! in, fixed or chunked (`Transfer-Encoding: chunked`) bodies on the
+//! way out. Being generic over the transport keeps every parsing and
+//! framing path unit-testable without sockets; `net::server` plugs in
+//! `TcpStream`, the tests plug in cursors and vectors.
+//!
+//! Streaming responses flush after every chunk: a token frame must hit
+//! the wire the moment the decode round produces it, not when a buffer
+//! happens to fill.
+
+use std::io::{Read, Write};
+
+use anyhow::{Context, Result};
+
+/// Cap on the request head (request line + headers) in bytes.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpRequest {
+    /// Request method (`GET`, `POST`, ...), as sent.
+    pub method: String,
+    /// Request target (path plus any query string), as sent.
+    pub path: String,
+    /// Header `(name, value)` pairs in wire order, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// Request body (`Content-Length` bytes; empty when absent).
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header value matching `name`, case-insensitively.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Offset of the byte *after* the `\r\n\r\n` head terminator, if any.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Read one request from `r`. Returns `Ok(None)` on a clean EOF before
+/// any bytes arrive (peer closed an idle connection); errors on a
+/// truncated or malformed request, or a body larger than
+/// `max_body_bytes`.
+pub fn read_request<R: Read>(r: &mut R, max_body_bytes: usize) -> Result<Option<HttpRequest>> {
+    let mut buf = Vec::new();
+    let mut scratch = [0u8; 4096];
+    let split = loop {
+        if let Some(end) = head_end(&buf) {
+            break end;
+        }
+        anyhow::ensure!(buf.len() <= MAX_HEAD_BYTES, "http: request head exceeds cap");
+        let n = r.read(&mut scratch).context("http: read")?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            anyhow::bail!("http: connection closed mid-request-head");
+        }
+        buf.extend_from_slice(&scratch[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..split - 4]).context("http: non-UTF-8 request head")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if !m.is_empty() && !p.is_empty() => {
+            (m.to_string(), p.to_string(), v)
+        }
+        _ => anyhow::bail!("http: malformed request line {request_line:?}"),
+    };
+    anyhow::ensure!(
+        version.starts_with("HTTP/1."),
+        "http: unsupported protocol version {version:?}"
+    );
+    let mut headers = Vec::new();
+    for line in lines {
+        let (name, value) = line
+            .split_once(':')
+            .with_context(|| format!("http: malformed header line {line:?}"))?;
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    let req = HttpRequest {
+        method,
+        path,
+        headers,
+        body: Vec::new(),
+    };
+    let body_len = match req.header("content-length") {
+        Some(v) => v
+            .parse::<usize>()
+            .with_context(|| format!("http: bad Content-Length {v:?}"))?,
+        None => 0,
+    };
+    anyhow::ensure!(
+        body_len <= max_body_bytes,
+        "http: body of {body_len} bytes exceeds the {max_body_bytes}-byte cap"
+    );
+    let mut body = buf.split_off(split);
+    anyhow::ensure!(body.len() <= body_len, "http: more body bytes than Content-Length");
+    while body.len() < body_len {
+        let n = r.read(&mut scratch).context("http: read body")?;
+        anyhow::ensure!(n > 0, "http: connection closed mid-body");
+        body.extend_from_slice(&scratch[..n]);
+        anyhow::ensure!(body.len() <= body_len, "http: more body bytes than Content-Length");
+    }
+    Ok(Some(HttpRequest { body, ..req }))
+}
+
+/// Reason phrase for the status codes the serving plane emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (always `Connection: close`).
+/// `extra_headers` lets callers attach e.g. `Retry-After` on a 429.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
+    write!(w, "HTTP/1.1 {status} {}\r\n", reason(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"Connection: close\r\n\r\n")?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Chunked-transfer streaming response writer. Each [`chunk`] is one
+/// `Transfer-Encoding: chunked` frame, flushed immediately so tokens
+/// reach the client as they decode; [`finish`] writes the terminal
+/// zero-length chunk.
+///
+/// [`chunk`]: ChunkedWriter::chunk
+/// [`finish`]: ChunkedWriter::finish
+#[derive(Debug)]
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the response head and return the chunk writer.
+    pub fn start(mut w: W, status: u16, content_type: &str) -> Result<Self> {
+        write!(w, "HTTP/1.1 {status} {}\r\n", reason(status))?;
+        write!(w, "Content-Type: {content_type}\r\n")?;
+        w.write_all(b"Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n")?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Emit one chunk and flush it to the transport.
+    pub fn chunk(&mut self, data: &[u8]) -> Result<()> {
+        if data.is_empty() {
+            return Ok(()); // a zero-length chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// Terminate the stream with the zero-length chunk.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Decode a complete chunked-transfer body back into its byte stream
+/// (test/client helper — the inverse of [`ChunkedWriter`]).
+pub fn decode_chunked(mut body: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let line_end = body
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .context("http: chunk stream truncated before a size line")?;
+        let size_line =
+            std::str::from_utf8(&body[..line_end]).context("http: non-UTF-8 chunk size")?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .with_context(|| format!("http: bad chunk size {size_line:?}"))?;
+        body = &body[line_end + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        anyhow::ensure!(body.len() >= size + 2, "http: chunk stream truncated mid-chunk");
+        out.extend_from_slice(&body[..size]);
+        anyhow::ensure!(&body[size..size + 2] == b"\r\n", "http: chunk missing terminator");
+        body = &body[size + 2..];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reader that yields its input a few bytes at a time, exercising
+    /// the split-across-reads paths the way a real socket would.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        at: usize,
+        step: usize,
+    }
+
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.step.min(self.data.len() - self.at).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.at..self.at + n]);
+            self.at += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn parses_a_post_with_body_split_across_reads() {
+        let wire =
+            b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world";
+        for step in [1, 3, 7, wire.len()] {
+            let mut r = Trickle { data: wire, at: 0, step };
+            let req = read_request(&mut r, 1024).unwrap().unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/v1/completions");
+            assert_eq!(req.body, b"hello world");
+        }
+    }
+
+    #[test]
+    fn header_lookup_is_case_insensitive() {
+        let wire = b"GET /healthz HTTP/1.1\r\nX-Tenant-Id: 3\r\n\r\n";
+        let mut r = Trickle { data: wire, at: 0, step: 64 };
+        let req = read_request(&mut r, 0).unwrap().unwrap();
+        assert_eq!(req.header("x-tenant-id"), Some("3"));
+        assert_eq!(req.header("X-TENANT-ID"), Some("3"));
+        assert_eq!(req.header("absent"), None);
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn clean_eof_before_any_bytes_is_none() {
+        let mut r = Trickle { data: b"", at: 0, step: 64 };
+        assert!(read_request(&mut r, 0).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_head_and_body_are_errors() {
+        let mut r = Trickle { data: b"GET / HTTP", at: 0, step: 64 };
+        assert!(read_request(&mut r, 0).is_err());
+        let wire = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort";
+        let mut r = Trickle { data: wire, at: 0, step: 64 };
+        assert!(read_request(&mut r, 1024).is_err());
+    }
+
+    #[test]
+    fn oversized_bodies_are_rejected_up_front() {
+        let wire = b"POST / HTTP/1.1\r\nContent-Length: 1000000\r\n\r\n";
+        let mut r = Trickle { data: wire, at: 0, step: 64 };
+        let e = read_request(&mut r, 1024).unwrap_err().to_string();
+        assert!(e.contains("cap"), "{e}");
+    }
+
+    #[test]
+    fn malformed_request_lines_are_errors() {
+        for wire in [&b"GARBAGE\r\n\r\n"[..], b"GET /\r\n\r\n", b"GET / SPDY/3\r\n\r\n"] {
+            let mut r = Trickle { data: wire, at: 0, step: 64 };
+            assert!(read_request(&mut r, 0).is_err(), "{wire:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_responses_carry_length_and_extra_headers() {
+        let mut out = Vec::new();
+        write_response(
+            &mut out,
+            429,
+            "application/json",
+            &[("Retry-After", "2".to_string())],
+            b"{\"error\":\"rate-limit\"}",
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 22\r\n"));
+        assert!(text.contains("Retry-After: 2\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"error\":\"rate-limit\"}"));
+    }
+
+    #[test]
+    fn chunked_stream_round_trips() {
+        let mut out = Vec::new();
+        let mut w = ChunkedWriter::start(&mut out, 200, "application/x-ndjson").unwrap();
+        w.chunk(b"{\"token\":1}\n").unwrap();
+        w.chunk(b"").unwrap(); // ignored, must not terminate
+        w.chunk(b"{\"token\":2}\n").unwrap();
+        w.finish().unwrap();
+        let text = String::from_utf8(out.clone()).unwrap();
+        let head_end = text.find("\r\n\r\n").unwrap() + 4;
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+        let body = decode_chunked(&out[head_end..]).unwrap();
+        assert_eq!(body, b"{\"token\":1}\n{\"token\":2}\n");
+    }
+
+    #[test]
+    fn chunk_decoder_rejects_truncation() {
+        assert!(decode_chunked(b"c\r\n{\"token\":1}\n").is_err());
+        assert!(decode_chunked(b"zz\r\n").is_err());
+    }
+}

@@ -1,0 +1,598 @@
+//! Incremental JSON framing for the streaming wire (DESIGN.md §14).
+//!
+//! The serving plane speaks newline-delimited JSON (NDJSON) and SSE.
+//! Bytes arrive from sockets in arbitrary fragments — a value may be
+//! split mid-string, mid-number, or mid-UTF-8-sequence across reads —
+//! so decoding is a push parser: [`FrameDecoder::push`] consumes a
+//! fragment and returns every *complete* top-level value it finished,
+//! buffering the rest. Framing is structural (string/escape state plus
+//! container depth), not line-based, so pretty-printed client bodies
+//! split across lines still decode.
+//!
+//! Two modes (`jsonmodem`-style discipline):
+//! * [`DecodeMode::Strict`] — any garbage between values, invalid
+//!   UTF-8, or malformed value is a hard error (and poisons the
+//!   decoder; the caller should drop the connection).
+//! * [`DecodeMode::Lenient`] — garbage bytes are skipped until the
+//!   next plausible value start, invalid UTF-8 is replaced, and
+//!   malformed values are dropped; both are counted so callers can
+//!   still observe the damage.
+//!
+//! Encoding is the exact inverse: [`EventEncoder`] renders one frame
+//! per event through the crate JSON writer (escaping-correct by
+//! construction), as NDJSON lines or `data:` SSE frames.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// How [`FrameDecoder`] treats malformed input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Reject garbage, invalid UTF-8 and malformed values (poisons the
+    /// decoder — wire corruption is terminal for a connection).
+    Strict,
+    /// Skip garbage / replace invalid UTF-8 / drop malformed values,
+    /// counting what was lost.
+    Lenient,
+}
+
+/// Incremental push-parser over a byte stream of concatenated JSON
+/// values (NDJSON or any whitespace-separated top-level sequence).
+#[derive(Debug)]
+pub struct FrameDecoder {
+    mode: DecodeMode,
+    buf: Vec<u8>,
+    /// Scan cursor into `buf` (everything before it is classified).
+    pos: usize,
+    /// Start offset of the value currently being scanned.
+    start: usize,
+    in_value: bool,
+    in_string: bool,
+    escape: bool,
+    depth: usize,
+    /// Bytes consumed before the current `buf` (for error offsets).
+    consumed: u64,
+    poisoned: bool,
+    max_value_bytes: usize,
+    values_decoded: u64,
+    bytes_skipped: u64,
+    values_dropped: u64,
+}
+
+/// Default cap on one buffered value (a streaming peer should never
+/// need megabyte frames; the cap bounds memory per connection).
+pub const MAX_VALUE_BYTES: usize = 1 << 20;
+
+impl FrameDecoder {
+    /// Decoder in the given mode with the default value-size cap.
+    pub fn new(mode: DecodeMode) -> Self {
+        Self::with_limit(mode, MAX_VALUE_BYTES)
+    }
+
+    /// Decoder with an explicit per-value size cap in bytes.
+    pub fn with_limit(mode: DecodeMode, max_value_bytes: usize) -> Self {
+        FrameDecoder {
+            mode,
+            buf: Vec::new(),
+            pos: 0,
+            start: 0,
+            in_value: false,
+            in_string: false,
+            escape: false,
+            depth: 0,
+            consumed: 0,
+            poisoned: false,
+            max_value_bytes,
+            values_decoded: 0,
+            bytes_skipped: 0,
+            values_dropped: 0,
+        }
+    }
+
+    /// Complete values decoded so far.
+    pub fn values_decoded(&self) -> u64 {
+        self.values_decoded
+    }
+
+    /// Garbage bytes skipped (lenient mode only; strict never skips).
+    pub fn bytes_skipped(&self) -> u64 {
+        self.bytes_skipped
+    }
+
+    /// Malformed values dropped (lenient mode only).
+    pub fn values_dropped(&self) -> u64 {
+        self.values_dropped
+    }
+
+    /// Bytes buffered awaiting the rest of a split value.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - if self.in_value { self.start } else { self.pos }
+    }
+
+    fn err(&mut self, msg: &str) -> anyhow::Error {
+        self.poisoned = true;
+        let off = self.consumed + self.pos as u64;
+        anyhow::anyhow!("jsonframe: {msg} at stream offset {off}")
+    }
+
+    /// Would byte `b` start a JSON value?
+    fn is_value_start(b: u8) -> bool {
+        matches!(b, b'{' | b'[' | b'"' | b'-' | b'0'..=b'9' | b't' | b'f' | b'n')
+    }
+
+    fn is_ws(b: u8) -> bool {
+        matches!(b, b' ' | b'\t' | b'\n' | b'\r')
+    }
+
+    /// Parse one completed slice according to the mode. `Ok(None)` =
+    /// lenient drop.
+    fn finish_value(&mut self, end: usize) -> Result<Option<Json>> {
+        let slice = &self.buf[self.start..end];
+        let text: std::borrow::Cow<'_, str> = match std::str::from_utf8(slice) {
+            Ok(s) => s.into(),
+            Err(_) => match self.mode {
+                DecodeMode::Strict => return Err(self.err("invalid UTF-8 in value")),
+                DecodeMode::Lenient => String::from_utf8_lossy(slice),
+            },
+        };
+        match Json::parse(&text) {
+            Ok(v) => {
+                self.values_decoded += 1;
+                Ok(Some(v))
+            }
+            Err(e) => match self.mode {
+                DecodeMode::Strict => Err(self.err(&format!("malformed value ({e})"))),
+                DecodeMode::Lenient => {
+                    self.values_dropped += 1;
+                    Ok(None)
+                }
+            },
+        }
+    }
+
+    /// Feed one fragment; returns every value completed by it. Values
+    /// split across fragments are buffered until their closing byte
+    /// arrives (including multi-byte UTF-8 sequences split mid-char).
+    pub fn push(&mut self, bytes: &[u8]) -> Result<Vec<Json>> {
+        anyhow::ensure!(!self.poisoned, "jsonframe: decoder poisoned by an earlier error");
+        self.buf.extend_from_slice(bytes);
+        let mut out = Vec::new();
+        while self.pos < self.buf.len() {
+            let b = self.buf[self.pos];
+            if !self.in_value {
+                if Self::is_ws(b) {
+                    self.pos += 1;
+                    continue;
+                }
+                if Self::is_value_start(b) {
+                    self.in_value = true;
+                    self.in_string = false;
+                    self.escape = false;
+                    self.depth = 0;
+                    self.start = self.pos;
+                    continue;
+                }
+                match self.mode {
+                    DecodeMode::Strict => {
+                        return Err(self.err(&format!("unexpected byte {b:#04x} between values")))
+                    }
+                    DecodeMode::Lenient => {
+                        self.bytes_skipped += 1;
+                        self.pos += 1;
+                        continue;
+                    }
+                }
+            }
+            // inside a value
+            if self.pos - self.start > self.max_value_bytes {
+                return Err(self.err("value exceeds the frame size cap"));
+            }
+            if self.in_string {
+                if self.escape {
+                    self.escape = false;
+                } else if b == b'\\' {
+                    self.escape = true;
+                } else if b == b'"' {
+                    self.in_string = false;
+                    if self.depth == 0 {
+                        // a bare top-level string just closed
+                        self.pos += 1;
+                        let v = self.finish_value(self.pos)?;
+                        self.in_value = false;
+                        out.extend(v);
+                        continue;
+                    }
+                }
+                self.pos += 1;
+                continue;
+            }
+            match b {
+                b'"' => {
+                    self.in_string = true;
+                    self.pos += 1;
+                }
+                b'{' | b'[' => {
+                    self.depth += 1;
+                    self.pos += 1;
+                }
+                b'}' | b']' => {
+                    if self.depth == 0 {
+                        // a closer with nothing open: the scalar before
+                        // it (if any) ends here, the byte itself is
+                        // garbage
+                        match self.mode {
+                            DecodeMode::Strict => {
+                                return Err(self.err("unmatched closing bracket"))
+                            }
+                            DecodeMode::Lenient => {
+                                let v = self.finish_value(self.pos)?;
+                                self.in_value = false;
+                                out.extend(v);
+                                continue;
+                            }
+                        }
+                    }
+                    self.depth -= 1;
+                    self.pos += 1;
+                    if self.depth == 0 {
+                        let v = self.finish_value(self.pos)?;
+                        self.in_value = false;
+                        out.extend(v);
+                    }
+                }
+                b if self.depth == 0 && Self::is_ws(b) => {
+                    // whitespace terminates a top-level scalar
+                    let v = self.finish_value(self.pos)?;
+                    self.in_value = false;
+                    out.extend(v);
+                }
+                _ => {
+                    self.pos += 1;
+                }
+            }
+        }
+        // drop the classified prefix so long streams stay O(value)
+        let keep_from = if self.in_value { self.start } else { self.pos };
+        if keep_from > 0 {
+            self.buf.drain(..keep_from);
+            self.consumed += keep_from as u64;
+            self.pos -= keep_from;
+            self.start = self.start.saturating_sub(keep_from);
+        }
+        Ok(out)
+    }
+
+    /// Signal end-of-stream. A pending top-level scalar (a number with
+    /// no trailing newline) completes here; a pending container or
+    /// string is truncation — an error in strict mode, a counted drop
+    /// in lenient mode.
+    pub fn finish(&mut self) -> Result<Option<Json>> {
+        anyhow::ensure!(!self.poisoned, "jsonframe: decoder poisoned by an earlier error");
+        if !self.in_value {
+            return Ok(None);
+        }
+        self.in_value = false;
+        if self.in_string || self.depth > 0 {
+            self.in_string = false;
+            self.depth = 0;
+            return match self.mode {
+                DecodeMode::Strict => Err(self.err("stream truncated inside a value")),
+                DecodeMode::Lenient => {
+                    self.values_dropped += 1;
+                    self.buf.clear();
+                    self.pos = 0;
+                    self.start = 0;
+                    Ok(None)
+                }
+            };
+        }
+        let end = self.buf.len();
+        let v = self.finish_value(end)?;
+        self.buf.clear();
+        self.pos = 0;
+        self.start = 0;
+        Ok(v)
+    }
+}
+
+/// Output framing for streamed events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamFormat {
+    /// One compact JSON value per `\n`-terminated line.
+    Ndjson,
+    /// Server-sent events: `data: <compact json>\n\n` per event.
+    Sse,
+}
+
+/// Stateful frame encoder: one event in, one wire frame out. Escaping
+/// runs through the crate JSON writer, so any token payload — control
+/// characters, quotes, non-ASCII — round-trips through
+/// [`FrameDecoder`].
+#[derive(Debug)]
+pub struct EventEncoder {
+    format: StreamFormat,
+    events: u64,
+}
+
+impl EventEncoder {
+    /// Encoder for the given wire format.
+    pub fn new(format: StreamFormat) -> Self {
+        EventEncoder { format, events: 0 }
+    }
+
+    /// The `Content-Type` this encoder's frames should be served under.
+    pub fn content_type(&self) -> &'static str {
+        match self.format {
+            StreamFormat::Ndjson => "application/x-ndjson",
+            StreamFormat::Sse => "text/event-stream",
+        }
+    }
+
+    /// Render one event as a complete wire frame.
+    pub fn frame(&mut self, event: &Json) -> String {
+        self.events += 1;
+        match self.format {
+            StreamFormat::Ndjson => format!("{}\n", event.to_string_compact()),
+            StreamFormat::Sse => format!("data: {}\n\n", event.to_string_compact()),
+        }
+    }
+
+    /// Frames emitted so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn decode_all(mode: DecodeMode, chunks: &[&[u8]]) -> Result<Vec<Json>> {
+        let mut d = FrameDecoder::new(mode);
+        let mut out = Vec::new();
+        for c in chunks {
+            out.extend(d.push(c)?);
+        }
+        out.extend(d.finish()?);
+        Ok(out)
+    }
+
+    /// Golden catalog: (name, input chunks, expected decoded values as
+    /// canonical compact JSON). Every case runs in BOTH modes — strict
+    /// and lenient must agree on well-formed input.
+    const GOLDEN_OK: &[(&str, &[&[u8]], &[&str])] = &[
+        ("single object", &[b"{\"a\":1}\n"], &["{\"a\":1}"]),
+        ("two per chunk", &[b"{\"a\":1}\n{\"b\":2}\n"], &["{\"a\":1}", "{\"b\":2}"]),
+        (
+            "value split across reads",
+            &[b"{\"tok", b"en\":4", b"2}\n"],
+            &["{\"token\":42}"],
+        ),
+        (
+            "split inside escape",
+            &[b"{\"s\":\"a\\", b"\"b\"}\n"],
+            &["{\"s\":\"a\\\"b\"}"],
+        ),
+        (
+            "split inside multi-byte utf8",
+            &[b"{\"s\":\"h\xc3", b"\xa9llo\"}\n"],
+            &["{\"s\":\"h\u{e9}llo\"}"],
+        ),
+        ("nested containers", &[b"[{\"a\":[1,[2]]}]"], &["[{\"a\":[1,[2]]}]"]),
+        (
+            "brace inside string is not structure",
+            &[b"{\"s\":\"}{\"}\n"],
+            &["{\"s\":\"}{\"}"],
+        ),
+        ("bare string value", &[b"\"hi\"\n"], &["\"hi\""]),
+        ("bare number needs a delimiter", &[b"42\n7\n"], &["42", "7"]),
+        ("trailing number completes at finish", &[b"42\n", b"1.5"], &["42", "1.5"]),
+        ("literals", &[b"true\nfalse\nnull\n"], &["true", "false", "null"]),
+        ("crlf framing", &[b"{\"a\":1}\r\n{\"b\":2}\r\n"], &["{\"a\":1}", "{\"b\":2}"]),
+        ("pretty-printed across lines", &[b"{\n  \"a\": 1\n}\n"], &["{\"a\":1}"]),
+        ("empty chunks are harmless", &[b"", b"{\"a\":1}", b"", b"\n"], &["{\"a\":1}"]),
+        (
+            "byte-at-a-time",
+            &[b"{", b"\"", b"a", b"\"", b":", b"1", b"}", b"\n"],
+            &["{\"a\":1}"],
+        ),
+    ];
+
+    #[test]
+    fn golden_catalog_decodes_in_both_modes() {
+        for &(name, chunks, want) in GOLDEN_OK {
+            for mode in [DecodeMode::Strict, DecodeMode::Lenient] {
+                let got = decode_all(mode, chunks)
+                    .unwrap_or_else(|e| panic!("{name} ({mode:?}): {e}"));
+                let got: Vec<String> = got.iter().map(|v| v.to_string_compact()).collect();
+                assert_eq!(got, want, "{name} ({mode:?})");
+            }
+        }
+    }
+
+    /// Golden error catalog: inputs strict must reject.
+    const GOLDEN_STRICT_ERR: &[(&str, &[&[u8]])] = &[
+        ("garbage between values", &[b"{\"a\":1}\nxyz#\n"]),
+        ("truncated object at eof", &[b"{\"a\":"]),
+        ("truncated string at eof", &[b"\"unterminated"]),
+        ("unmatched closer", &[b"]\n"]),
+        ("invalid utf8 in string", &[b"{\"s\":\"\xff\xfe\"}\n"]),
+        ("malformed value", &[b"{\"a\":}\n"]),
+        ("comma between top-level values", &[b"{\"a\":1},{\"b\":2}\n"]),
+    ];
+
+    #[test]
+    fn golden_catalog_strict_rejects_corruption() {
+        for &(name, chunks) in GOLDEN_STRICT_ERR {
+            let r = decode_all(DecodeMode::Strict, chunks);
+            assert!(r.is_err(), "{name}: strict must reject");
+        }
+    }
+
+    #[test]
+    fn lenient_skips_garbage_and_keeps_decoding() {
+        let mut d = FrameDecoder::new(DecodeMode::Lenient);
+        let got = d.push(b"#!wire noise\n{\"a\":1}\n???{\"b\":2}\n").unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].to_string_compact(), "{\"a\":1}");
+        assert_eq!(got[1].to_string_compact(), "{\"b\":2}");
+        assert!(d.bytes_skipped() > 0);
+        assert_eq!(d.values_decoded(), 2);
+    }
+
+    #[test]
+    fn lenient_drops_malformed_values_and_counts_them() {
+        let mut d = FrameDecoder::new(DecodeMode::Lenient);
+        let got = d.push(b"{\"a\":}\n{\"b\":2}\n").unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].to_string_compact(), "{\"b\":2}");
+        assert_eq!(d.values_dropped(), 1);
+    }
+
+    #[test]
+    fn lenient_replaces_invalid_utf8() {
+        let mut d = FrameDecoder::new(DecodeMode::Lenient);
+        let got = d.push(b"{\"s\":\"a\xffb\"}\n").unwrap();
+        assert_eq!(got.len(), 1);
+        let s = got[0].get("s").unwrap().as_str().unwrap().to_string();
+        assert!(s.starts_with('a') && s.ends_with('b'), "{s:?}");
+    }
+
+    #[test]
+    fn strict_decoder_is_poisoned_after_an_error() {
+        let mut d = FrameDecoder::new(DecodeMode::Strict);
+        assert!(d.push(b"garbage").is_err());
+        assert!(d.push(b"{\"a\":1}\n").is_err(), "poisoned decoders stay dead");
+    }
+
+    #[test]
+    fn value_size_cap_is_enforced() {
+        let mut d = FrameDecoder::with_limit(DecodeMode::Strict, 8);
+        assert!(d.push(b"{\"aaaaaaaaaaaaaaaa\":1}\n").is_err());
+    }
+
+    #[test]
+    fn pending_bytes_tracks_split_values() {
+        let mut d = FrameDecoder::new(DecodeMode::Strict);
+        assert_eq!(d.push(b"{\"a\"").unwrap().len(), 0);
+        assert_eq!(d.pending_bytes(), 4);
+        assert_eq!(d.push(b":1}\n").unwrap().len(), 1);
+        assert_eq!(d.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn encoder_frames_round_trip_through_the_decoder() {
+        let mut enc = EventEncoder::new(StreamFormat::Ndjson);
+        let nasty = Json::obj(vec![
+            ("text", Json::str("line\nbreak \"quoted\" \\ slash \t héllo ✓ \u{1}")),
+            ("token", Json::num(42.0)),
+        ]);
+        let wire = enc.frame(&nasty);
+        let mut d = FrameDecoder::new(DecodeMode::Strict);
+        let got = d.push(wire.as_bytes()).unwrap();
+        assert_eq!(got, vec![nasty]);
+        assert_eq!(enc.events(), 1);
+        assert_eq!(enc.content_type(), "application/x-ndjson");
+    }
+
+    #[test]
+    fn sse_frames_carry_the_data_prefix() {
+        let mut enc = EventEncoder::new(StreamFormat::Sse);
+        let f = enc.frame(&Json::obj(vec![("token", Json::num(7.0))]));
+        assert_eq!(f, "data: {\"token\":7}\n\n");
+        assert_eq!(enc.content_type(), "text/event-stream");
+    }
+
+    /// Random JSON value, depth-bounded (strings avoid the full char
+    /// space — escaping edge cases are pinned by the golden catalog and
+    /// the dedicated round-trip test above).
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        let pick = rng.usize(0, if depth == 0 { 3 } else { 5 });
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.i64(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => {
+                let len = rng.usize(0, 12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        const ALPH: &[char] =
+                            &['a', 'Z', '9', '"', '\\', '\n', '\t', ' ', 'é', '✓', '𝕊', '\u{7}'];
+                        ALPH[rng.usize(0, ALPH.len() - 1)]
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.usize(0, 4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn fuzz_random_values_split_at_random_boundaries_round_trip() {
+        // encode a random NDJSON stream, shatter it at random byte
+        // boundaries (splitting strings, escapes and UTF-8 sequences),
+        // and require byte-exact value recovery in both modes
+        check(0x77F3, 64, |g| {
+            let n_values = g.usize(1, 6);
+            let values: Vec<Json> = (0..n_values).map(|_| gen_json(&mut g.rng, 3)).collect();
+            let mut enc = EventEncoder::new(StreamFormat::Ndjson);
+            let wire: String = values.iter().map(|v| enc.frame(v)).collect();
+            let bytes = wire.as_bytes();
+            for mode in [DecodeMode::Strict, DecodeMode::Lenient] {
+                let mut d = FrameDecoder::new(mode);
+                let mut got = Vec::new();
+                let mut at = 0usize;
+                while at < bytes.len() {
+                    let step = g.rng.usize(1, 7).min(bytes.len() - at);
+                    got.extend(
+                        d.push(&bytes[at..at + step])
+                            .map_err(|e| format!("{mode:?}: {e}"))?,
+                    );
+                    at += step;
+                }
+                got.extend(d.finish().map_err(|e| format!("{mode:?} finish: {e}"))?);
+                prop_assert_eq!(got, values.clone());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fuzz_lenient_survives_injected_garbage() {
+        // valid values interleaved with garbage bytes: lenient must
+        // recover every value whose own bytes are intact
+        check(0x77F4, 48, |g| {
+            let n_values = g.usize(1, 5);
+            let values: Vec<Json> = (0..n_values).map(|_| gen_json(&mut g.rng, 2)).collect();
+            let mut wire = Vec::new();
+            for v in &values {
+                let junk_len = g.usize(0, 5);
+                for _ in 0..junk_len {
+                    // bytes that can't start a JSON value
+                    const JUNK: &[u8] = b"#@!?;|%^&*\xff";
+                    wire.push(JUNK[g.rng.usize(0, JUNK.len() - 1)]);
+                }
+                wire.extend_from_slice(format!("{}\n", v.to_string_compact()).as_bytes());
+            }
+            let mut d = FrameDecoder::new(DecodeMode::Lenient);
+            let mut got = d.push(&wire).map_err(|e| e.to_string())?;
+            got.extend(d.finish().map_err(|e| e.to_string())?);
+            prop_assert_eq!(got, values.clone());
+            prop_assert!(
+                d.values_decoded() == n_values as u64,
+                "decoded {} of {n_values}",
+                d.values_decoded()
+            );
+            Ok(())
+        });
+    }
+}

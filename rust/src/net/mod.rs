@@ -1,0 +1,54 @@
+//! The streaming serving plane's network layer (DESIGN.md §14).
+//!
+//! Std-only — `std::net` sockets and OS threads, no async runtime:
+//!
+//! * [`http`] — minimal HTTP/1.1 request reader and response/chunked
+//!   writers (exactly what the front door needs, nothing more).
+//! * [`jsonframe`] — incremental JSON: a push-parser that re-frames
+//!   values split across arbitrary read boundaries, and the
+//!   NDJSON/SSE event encoder.
+//! * [`NetServer`] — the front door itself: `POST /v1/completions`
+//!   streaming tokens the round they decode, `GET /healthz`,
+//!   `GET /metrics`, per-tenant backpressure via
+//!   [`crate::coordinator::Ingress`].
+//!
+//! Invariant 10 (DESIGN.md §14): tokens served over loopback HTTP are
+//! bit-identical to the offline [`crate::coordinator::Server::run_trace`]
+//! twin on the same seeded request set — the wire is an observation
+//! channel, never part of the math.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub mod http;
+pub mod jsonframe;
+mod server;
+
+pub use server::{NetHandle, NetServer};
+
+/// Process-wide SIGINT latch for `bitrom serve --listen`.
+static SIGINT: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+#[cfg(unix)]
+extern "C" fn sigint_latch(_: i32) {
+    SIGINT.store(true, Ordering::SeqCst);
+}
+
+/// Install a SIGINT handler that flips the returned latch instead of
+/// killing the process, so the CLI can drain in-flight sequences
+/// through [`NetHandle::shutdown`] (finish or typed-shed, never a
+/// mid-token truncation). Idempotent; on non-unix targets the latch is
+/// returned uninstalled and never flips.
+pub fn install_sigint_latch() -> &'static AtomicBool {
+    #[cfg(unix)]
+    // SAFETY: `signal(2)` with a signal-safe handler that only does an
+    // atomic store; std links libc on unix so the symbol resolves.
+    unsafe {
+        signal(2, sigint_latch as usize);
+    }
+    &SIGINT
+}

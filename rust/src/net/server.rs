@@ -1,0 +1,463 @@
+//! The HTTP/1.1 front door of the streaming serving plane (DESIGN.md
+//! §14): `std::net::TcpListener` + worker threads, no async runtime.
+//!
+//! Three endpoints:
+//! * `POST /v1/completions` — submit one request (the
+//!   [`crate::trace::Request`] wire object) and stream its tokens back
+//!   incrementally, NDJSON by default or SSE via `?format=sse` /
+//!   `Accept: text/event-stream`. Every frame is flushed the round the
+//!   coordinator decodes it.
+//! * `GET /healthz` — liveness (`200 ok`, `503 draining` once
+//!   shutdown begins).
+//! * `GET /metrics` — Prometheus text exposition of the live
+//!   [`ServeMetrics`] snapshot, fault/shed counters included.
+//!
+//! One OS thread per connection, one request per connection
+//! (`Connection: close`): serving-plane concurrency is bounded by the
+//! *coordinator's* slots and the ingress queue, not by connection
+//! count, so the plain threaded model is the simplest thing that is
+//! honest about where the real backpressure lives. Admission policy
+//! (per-tenant FIFO, token buckets, queue depth, prompt caps) is all
+//! [`Ingress`]; transport limits (body size, read timeout) come from
+//! [`NetConfig`].
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{NetConfig, ServeConfig};
+use crate::coordinator::{
+    CompletedRequest, FailReason, Ingress, Reject, ServeMetrics, Server, TokenSink,
+};
+use crate::runtime::InferenceBackend;
+use crate::trace::Request;
+use crate::util::json::Json;
+
+use super::http::{read_request, write_response, ChunkedWriter, HttpRequest};
+use super::jsonframe::{EventEncoder, StreamFormat};
+
+/// First id assigned to submissions that carry none — far above any
+/// trace id, so replayed traces (which carry their own ids for
+/// invariant-10 twin comparisons) never collide with anonymous ones.
+const ANON_ID_BASE: u64 = 1 << 32;
+
+/// What one decode event becomes on its way from the coordinator's
+/// [`TokenSink`] call to the connection thread that owns the socket.
+enum SinkEvent {
+    /// One streamed token.
+    Token {
+        /// Request id.
+        id: u64,
+        /// Token id.
+        tok: i32,
+    },
+    /// The sequence completed.
+    Done(CompletedRequest),
+    /// The sequence was shed with a typed reason.
+    Shed {
+        /// Request id.
+        id: u64,
+        /// Why it was shed.
+        reason: FailReason,
+    },
+}
+
+/// [`TokenSink`] bridging the coordinator to a connection thread over
+/// an mpsc channel. The *channel* is the liveness signal: when the
+/// connection thread hits a dead socket it drops its receiver, the
+/// next `on_token` send fails, and the coordinator sheds the sequence
+/// as [`FailReason::Disconnect`].
+struct HttpSink {
+    tx: mpsc::Sender<SinkEvent>,
+}
+
+impl TokenSink for HttpSink {
+    fn on_token(&mut self, id: u64, tok: i32) -> bool {
+        self.tx.send(SinkEvent::Token { id, tok }).is_ok()
+    }
+
+    fn on_complete(&mut self, done: &CompletedRequest) {
+        let _ = self.tx.send(SinkEvent::Done(done.clone()));
+    }
+
+    fn on_shed(&mut self, id: u64, reason: FailReason) {
+        let _ = self.tx.send(SinkEvent::Shed { id, reason });
+    }
+}
+
+/// State shared by every connection thread.
+struct Shared {
+    ingress: Arc<Ingress>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    /// The serving wall clock's epoch: submissions are stamped with
+    /// seconds since here (the same clock feeds the rate buckets).
+    epoch: Instant,
+    next_anon_id: AtomicU64,
+    net: NetConfig,
+}
+
+/// The online serving front door. [`NetServer::start`] spawns the
+/// coordinator and accept threads and returns a [`NetHandle`]; the
+/// server then runs until [`NetHandle::shutdown`].
+pub struct NetServer;
+
+impl NetServer {
+    /// Bind `net.listen`, start the coordinator loop on `backend`, and
+    /// begin accepting connections. Fails synchronously on a bad
+    /// config or an unbindable address; after that every failure is
+    /// per-connection.
+    pub fn start<B>(backend: B, serve: ServeConfig, net: NetConfig) -> Result<NetHandle>
+    where
+        B: InferenceBackend + Send + Sync + 'static,
+        B::State: Send,
+        B::Hidden: Send,
+    {
+        net.validate()?;
+        let mut server = Server::new(backend, serve.clone())?;
+        // oversized prompts are rejected at the edge: a prompt past the
+        // prefill bucket that reached the backend would fail the loop
+        let ingress = Arc::new(Ingress::new(net.max_queue, net.rate_limit, serve.prefill_len));
+        let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
+        let listener =
+            TcpListener::bind(&net.listen).with_context(|| format!("binding {}", net.listen))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let coord_ingress = ingress.clone();
+        let coord_metrics = metrics.clone();
+        let coord =
+            std::thread::spawn(move || server.run_ingress(coord_ingress, Some(coord_metrics)));
+
+        let shared = Arc::new(Shared {
+            ingress: ingress.clone(),
+            metrics: metrics.clone(),
+            epoch: Instant::now(),
+            next_anon_id: AtomicU64::new(ANON_ID_BASE),
+            net,
+        });
+        let accept_stop = stop.clone();
+        let accept_conns = conns.clone();
+        let accept = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let conn_shared = shared.clone();
+                let h = std::thread::spawn(move || handle_connection(stream, &conn_shared));
+                accept_conns.lock().unwrap_or_else(|p| p.into_inner()).push(h);
+            }
+        });
+
+        Ok(NetHandle {
+            addr,
+            ingress,
+            metrics,
+            stop,
+            accept,
+            conns,
+            coord,
+        })
+    }
+}
+
+/// Handle on a running [`NetServer`]: the bound address, the shared
+/// admission funnel, live metrics, and the graceful-shutdown path.
+pub struct NetHandle {
+    addr: SocketAddr,
+    ingress: Arc<Ingress>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+    accept: JoinHandle<()>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    coord: JoinHandle<Result<(Vec<CompletedRequest>, ServeMetrics)>>,
+}
+
+impl NetHandle {
+    /// The actually-bound listen address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared admission funnel (tests pause/resume it to replay
+    /// closed-batch admission order; the CLI reports its queue depth).
+    pub fn ingress(&self) -> &Arc<Ingress> {
+        &self.ingress
+    }
+
+    /// A snapshot of the live serving metrics (what `/metrics` serves).
+    pub fn metrics_snapshot(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Graceful shutdown: stop admitting, let every in-flight sequence
+    /// finish (queued ones are shed as [`FailReason::Shutdown`] — never
+    /// a mid-token truncation), close the listener, join every thread,
+    /// and return the completed requests + final metrics. Blocks until
+    /// the drain finishes (stalled client sockets hold their
+    /// connection threads up to the configured read timeout).
+    pub fn shutdown(self) -> Result<(Vec<CompletedRequest>, ServeMetrics)> {
+        self.ingress.shutdown();
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the blocking accept() so it observes the stop flag
+        let _ = TcpStream::connect(self.addr);
+        self.accept
+            .join()
+            .map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.lock().unwrap_or_else(|p| p.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
+        self.coord
+            .join()
+            .map_err(|_| anyhow::anyhow!("coordinator thread panicked"))?
+    }
+}
+
+/// Serve one connection: parse the request, route, respond, close.
+fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs_f64(shared.net.read_timeout_s)));
+    // token frames must hit the wire per round, not per segment
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream, shared.net.max_body_bytes) {
+        Ok(Some(r)) => r,
+        Ok(None) => return,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let status = if msg.contains("cap") { 413 } else { 400 };
+            respond_error(&mut stream, status, &msg, &[]);
+            return;
+        }
+    };
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            let (status, body) = if shared.ingress.is_shutdown() {
+                (503, "draining\n")
+            } else {
+                (200, "ok\n")
+            };
+            let _ = write_response(
+                &mut stream,
+                status,
+                "text/plain; charset=utf-8",
+                &[],
+                body.as_bytes(),
+            );
+        }
+        ("GET", "/metrics") => {
+            let mut snap = shared.metrics.lock().unwrap_or_else(|p| p.into_inner()).clone();
+            let text = snap.prometheus();
+            let _ = write_response(
+                &mut stream,
+                200,
+                "text/plain; version=0.0.4",
+                &[],
+                text.as_bytes(),
+            );
+        }
+        ("POST", "/v1/completions") => handle_completion(&mut stream, shared, &req),
+        (_, "/healthz" | "/metrics" | "/v1/completions") => {
+            respond_error(&mut stream, 405, "method not allowed", &[]);
+        }
+        _ => respond_error(&mut stream, 404, "no such endpoint", &[]),
+    }
+}
+
+/// Parse + admit one completion request and stream its tokens.
+fn handle_completion(stream: &mut TcpStream, shared: &Shared, http: &HttpRequest) {
+    let body = match std::str::from_utf8(&http.body) {
+        Ok(b) => b,
+        Err(_) => return respond_error(stream, 400, "request body must be UTF-8", &[]),
+    };
+    let parsed = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return respond_error(stream, 400, &format!("request body: {e}"), &[]),
+    };
+    let mut req = match Request::from_json(&parsed) {
+        Ok(r) => r,
+        Err(e) => return respond_error(stream, 400, &format!("{e:#}"), &[]),
+    };
+    if parsed.get("id").is_none() {
+        req.id = shared.next_anon_id.fetch_add(1, Ordering::SeqCst);
+    }
+    let now_s = shared.epoch.elapsed().as_secs_f64();
+    // the wire arrival_s (a trace replay artifact) is discarded: live
+    // requests arrive when they arrive
+    req.arrival_s = now_s;
+    let format = if wants_sse(http) {
+        StreamFormat::Sse
+    } else {
+        StreamFormat::Ndjson
+    };
+    let (tx, rx) = mpsc::channel();
+    if let Err(reject) = shared.ingress.submit_at(req, Box::new(HttpSink { tx }), now_s) {
+        return respond_reject(stream, &reject);
+    }
+    stream_events(stream, format, &rx);
+}
+
+/// `?format=sse` or an SSE `Accept` header selects SSE framing.
+fn wants_sse(http: &HttpRequest) -> bool {
+    let query = http.path.split_once('?').map(|(_, q)| q).unwrap_or("");
+    query.split('&').any(|kv| kv == "format=sse")
+        || http
+            .header("accept")
+            .is_some_and(|a| a.contains("text/event-stream"))
+}
+
+/// Stream sink events to the socket as chunked NDJSON/SSE frames until
+/// the sequence completes or is shed. A failed chunk write ends the
+/// loop and drops `rx` — the disconnect signal the coordinator sheds
+/// on.
+fn stream_events(stream: &mut TcpStream, format: StreamFormat, rx: &mpsc::Receiver<SinkEvent>) {
+    let mut enc = EventEncoder::new(format);
+    let mut cw = match ChunkedWriter::start(&mut *stream, 200, enc.content_type()) {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut index = 0u64;
+    loop {
+        let event = match rx.recv() {
+            Ok(e) => e,
+            // the coordinator dropped the sink without a final event
+            // (fatal serving error): terminate the stream cleanly
+            Err(_) => {
+                let _ = cw.finish();
+                return;
+            }
+        };
+        let frame = match event {
+            SinkEvent::Token { id, tok } => {
+                let f = enc.frame(&Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("token", Json::num(tok as f64)),
+                    ("index", Json::num(index as f64)),
+                ]));
+                index += 1;
+                if cw.chunk(f.as_bytes()).is_err() {
+                    return;
+                }
+                continue;
+            }
+            SinkEvent::Done(done) => enc.frame(&Json::obj(vec![
+                ("id", Json::num(done.id as f64)),
+                ("done", Json::Bool(true)),
+                ("n", Json::num(done.tokens.len() as f64)),
+                (
+                    "tokens",
+                    Json::Arr(done.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+                ),
+                ("ttft_s", Json::num(done.ttft_s)),
+                ("latency_s", Json::num(done.latency_s)),
+            ])),
+            SinkEvent::Shed { id, reason } => enc.frame(&Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("error", Json::str(reason.to_string())),
+            ])),
+        };
+        let _ = cw.chunk(frame.as_bytes());
+        let _ = cw.finish();
+        return;
+    }
+}
+
+/// Write a JSON error body with the given status.
+fn respond_error(w: &mut TcpStream, status: u16, msg: &str, extra: &[(&str, String)]) {
+    let body = Json::obj(vec![("error", Json::str(msg))]).to_string_compact();
+    let _ = write_response(w, status, "application/json", extra, body.as_bytes());
+}
+
+/// Map an admission rejection to its HTTP status (backpressure is
+/// `429` with a `Retry-After` hint; draining is `503`).
+fn respond_reject(stream: &mut TcpStream, reject: &Reject) {
+    let msg = reject.to_string();
+    match reject {
+        Reject::RateLimit { retry_after_s } => {
+            let secs = retry_after_s.ceil().max(1.0) as u64;
+            respond_error(stream, 429, &msg, &[("Retry-After", secs.to_string())]);
+        }
+        Reject::QueueFull => {
+            respond_error(stream, 429, &msg, &[("Retry-After", "1".to_string())]);
+        }
+        Reject::ShuttingDown => respond_error(stream, 503, &msg, &[]),
+        Reject::DuplicateId | Reject::Invalid(_) => respond_error(stream, 400, &msg, &[]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::runtime::HostBackend;
+    use std::io::{Read as _, Write as _};
+
+    fn micro() -> ModelConfig {
+        ModelConfig {
+            name: "host-micro".into(),
+            n_layers: 2,
+            d_model: 32,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 64,
+            vocab_size: 64,
+            max_seq: 32,
+            n_partitions: 2,
+            act_bits: 8,
+        }
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn health_metrics_routing_and_clean_shutdown_over_loopback() {
+        let backend = HostBackend::new(micro(), 1).unwrap();
+        let serve = ServeConfig {
+            max_batches: 1,
+            prefill_len: 8,
+            max_seq: 32,
+            ondie_tokens: 8,
+            ..ServeConfig::default()
+        };
+        let net = NetConfig {
+            listen: "127.0.0.1:0".into(),
+            ..NetConfig::default()
+        };
+        let handle = NetServer::start(backend, serve, net).unwrap();
+        let addr = handle.addr();
+
+        let health = get(addr, "/healthz");
+        assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+        assert!(health.ends_with("ok\n"), "{health}");
+
+        let m = get(addr, "/metrics");
+        assert!(m.contains("bitrom_requests_done_total 0"), "{m}");
+        assert!(m.contains("bitrom_faults_shed_total{reason=\"overload\"} 0"), "{m}");
+
+        assert!(get(addr, "/nope").starts_with("HTTP/1.1 404"));
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "DELETE /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+
+        let (done, metrics) = handle.shutdown().unwrap();
+        assert!(done.is_empty());
+        assert_eq!(metrics.requests_done, 0);
+    }
+}

@@ -1,7 +1,14 @@
 //! Workload generation: edge-style request traces (paper §IV: "edge
 //! applications and short-sequence tasks such as instruction execution
-//! and question answering").
+//! and question answering"), plus the NDJSON request wire format the
+//! HTTP front door accepts — a generated trace exports to the exact
+//! bytes a client would POST, and a captured wire log rebuilds into a
+//! trace the offline twin can replay (DESIGN.md §14).
 
+use anyhow::Context;
+
+use crate::net::jsonframe::{DecodeMode, FrameDecoder};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// One inference request.
@@ -19,6 +26,79 @@ pub struct Request {
     /// frozen base model). Bound per sequence before prefill via
     /// `runtime::InferenceBackend::bind_adapter`.
     pub adapter_id: Option<u32>,
+}
+
+impl Request {
+    /// Serialize to the request wire object — the same shape a client
+    /// POSTs to `/v1/completions`. `adapter_id` is omitted for
+    /// base-model requests so their wire bytes are identical to a
+    /// build without adapter support.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("arrival_s", Json::num(self.arrival_s)),
+            (
+                "prompt",
+                Json::Arr(self.prompt.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+        ];
+        if let Some(a) = self.adapter_id {
+            fields.push(("adapter_id", Json::num(a as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse from the wire object. `prompt` and `max_new_tokens` are
+    /// required; `id` and `arrival_s` default to 0 (the HTTP front
+    /// door assigns ids to anonymous submissions before admission).
+    pub fn from_json(j: &Json) -> anyhow::Result<Request> {
+        let prompt = j
+            .get("prompt")
+            .and_then(Json::as_arr)
+            .context("request needs a prompt token array")?
+            .iter()
+            .map(|t| {
+                t.as_i64()
+                    .map(|v| v as i32)
+                    .context("prompt tokens must be numbers")
+            })
+            .collect::<anyhow::Result<Vec<i32>>>()?;
+        Ok(Request {
+            id: j.get("id").and_then(Json::as_i64).unwrap_or(0) as u64,
+            arrival_s: j.get("arrival_s").and_then(Json::as_f64).unwrap_or(0.0),
+            prompt,
+            max_new_tokens: j
+                .get("max_new_tokens")
+                .and_then(Json::as_usize)
+                .context("request needs max_new_tokens")?,
+            adapter_id: j.get("adapter_id").and_then(Json::as_i64).map(|v| v as u32),
+        })
+    }
+}
+
+/// Serialize a trace as NDJSON: one request wire object per line, in
+/// trace order — byte-for-byte what a replay client streams at the
+/// HTTP front door.
+pub fn export_ndjson(reqs: &[Request]) -> String {
+    let mut out = String::new();
+    for r in reqs {
+        out.push_str(&r.to_json().to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Rebuild a trace from NDJSON text (the inverse of
+/// [`export_ndjson`]; also accepts CRLF framing and values split
+/// across lines, via the strict [`FrameDecoder`]).
+pub fn import_ndjson(text: &str) -> anyhow::Result<Vec<Request>> {
+    let mut dec = FrameDecoder::new(DecodeMode::Strict);
+    let mut vals = dec.push(text.as_bytes())?;
+    if let Some(last) = dec.finish()? {
+        vals.push(last);
+    }
+    vals.iter().map(Request::from_json).collect()
 }
 
 /// Trace generator parameters.
@@ -216,6 +296,56 @@ mod tests {
         for w in reqs.windows(2) {
             assert!(w[1].arrival_s >= w[0].arrival_s);
         }
+    }
+
+    #[test]
+    fn ndjson_round_trips_generated_traces() {
+        // mixed tenants + Poisson arrivals: every field survives the
+        // wire format, including the absent-vs-present adapter_id
+        let cfg = TraceConfig {
+            n_requests: 16,
+            arrival_rate: 5.0,
+            n_adapters: 2,
+            ..TraceConfig::default()
+        };
+        let reqs = generate(&cfg);
+        let wire = export_ndjson(&reqs);
+        assert_eq!(wire.lines().count(), 16);
+        assert!(!wire.contains('\u{0}'));
+        let back = import_ndjson(&wire).unwrap();
+        assert_eq!(back, reqs);
+
+        // base-model requests leave adapter_id off the wire entirely
+        let plain = generate(&TraceConfig::default());
+        assert!(!export_ndjson(&plain).contains("adapter_id"));
+        assert_eq!(import_ndjson(&export_ndjson(&plain)).unwrap(), plain);
+    }
+
+    #[test]
+    fn wire_parse_defaults_and_requirements() {
+        let j = Json::parse(r#"{"prompt":[1,2,3],"max_new_tokens":4}"#).unwrap();
+        let r = Request::from_json(&j).unwrap();
+        assert_eq!(r.id, 0);
+        assert_eq!(r.arrival_s, 0.0);
+        assert_eq!(r.adapter_id, None);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+
+        let no_prompt = Json::parse(r#"{"max_new_tokens":4}"#).unwrap();
+        assert!(Request::from_json(&no_prompt).is_err());
+        let no_budget = Json::parse(r#"{"prompt":[1]}"#).unwrap();
+        assert!(Request::from_json(&no_budget).is_err());
+        let bad_tok = Json::parse(r#"{"prompt":[1,"x"],"max_new_tokens":4}"#).unwrap();
+        assert!(Request::from_json(&bad_tok).is_err());
+    }
+
+    #[test]
+    fn import_rejects_malformed_wire_text() {
+        assert!(import_ndjson("{\"prompt\":[1],").is_err(), "truncated value");
+        assert!(import_ndjson("not json\n").is_err(), "garbage line");
+        // CRLF framing is accepted
+        let reqs = import_ndjson("{\"prompt\":[7],\"max_new_tokens\":2}\r\n").unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].prompt, vec![7]);
     }
 
     #[test]

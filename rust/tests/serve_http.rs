@@ -1,0 +1,362 @@
+//! Loopback end-to-end tests of the streaming serving plane (DESIGN.md
+//! §14): real sockets, real threads, the full HTTP front door.
+//!
+//! THE acceptance point is invariant 10: the same seeded request set
+//! served over loopback HTTP streaming is bit-identical to the offline
+//! [`Server::run_trace`] twin — including mixed-tenant adapter traffic
+//! and top-k sampling — and overload past `max_queue` yields typed 429
+//! rejections counted in `ServeMetrics::faults` exactly like offline
+//! sheds.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use bitrom::config::{ModelConfig, NetConfig, ServeConfig};
+use bitrom::coordinator::{CompletedRequest, FailReason, Ingress, Server};
+use bitrom::lora::{AdapterRegistry, LoraConfig};
+use bitrom::net::http::decode_chunked;
+use bitrom::net::jsonframe::{DecodeMode, FrameDecoder};
+use bitrom::net::NetServer;
+use bitrom::runtime::HostBackend;
+use bitrom::trace::{generate, Request, TraceConfig};
+use bitrom::util::json::Json;
+
+const WEIGHT_SEED: u64 = 0xB17;
+
+fn base_backend() -> HostBackend {
+    HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap()
+}
+
+fn adapter_backend(n_adapters: usize) -> HostBackend {
+    let model = ModelConfig::sim_tiny();
+    let reg = AdapterRegistry::fabricate(&model, &LoraConfig::paper(), n_adapters, 0xADA).unwrap();
+    HostBackend::with_adapters(model, WEIGHT_SEED, reg).unwrap()
+}
+
+fn trace(n: usize, n_adapters: usize, seed: u64) -> Vec<Request> {
+    generate(&TraceConfig {
+        n_requests: n,
+        gen_len_min: 8,
+        gen_len_max: 16,
+        vocab_size: ModelConfig::sim_tiny().vocab_size,
+        n_adapters,
+        seed,
+        ..TraceConfig::default()
+    })
+}
+
+fn twin_tokens(
+    backend: HostBackend,
+    serve: &ServeConfig,
+    reqs: Vec<Request>,
+) -> BTreeMap<u64, Vec<i32>> {
+    let mut server = Server::new(backend, serve.clone()).unwrap();
+    let (done, _) = server.run_trace(reqs).unwrap();
+    done.into_iter().map(|r| (r.id, r.tokens)).collect()
+}
+
+/// One parsed HTTP response off the wire.
+struct Resp {
+    status: u16,
+    head: String,
+    body: String,
+    frames: Vec<Json>,
+}
+
+fn parse_response(raw: &[u8], sse: bool) -> Resp {
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response head terminator")
+        + 4;
+    let head = String::from_utf8_lossy(&raw[..head_end]).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let payload = if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        decode_chunked(&raw[head_end..]).unwrap()
+    } else {
+        raw[head_end..].to_vec()
+    };
+    let body = String::from_utf8_lossy(&payload).to_string();
+    // SSE framing is stripped by hand so the test also checks the
+    // exact `data: ...\n\n` line shape; NDJSON feeds the strict
+    // decoder as-is
+    let json_text: String = if sse {
+        body.lines()
+            .filter(|l| !l.is_empty())
+            .map(|l| {
+                let v = l.strip_prefix("data: ").expect("SSE line starts with data: ");
+                format!("{v}\n")
+            })
+            .collect()
+    } else {
+        body.clone()
+    };
+    let mut dec = FrameDecoder::new(DecodeMode::Strict);
+    let mut frames = dec.push(json_text.as_bytes()).expect("wire frames decode");
+    if let Some(last) = dec.finish().expect("no dangling frame bytes") {
+        frames.push(last);
+    }
+    Resp { status, head, body, frames }
+}
+
+fn post(addr: SocketAddr, body: &str, sse: bool) -> Resp {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let accept = if sse { "Accept: text/event-stream\r\n" } else { "" };
+    write!(
+        s,
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         {accept}Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    parse_response(&raw, sse)
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status = raw.split_whitespace().nth(1).unwrap().parse().unwrap();
+    (status, raw)
+}
+
+fn wait_queued(ingress: &Ingress, n: usize) {
+    let t0 = Instant::now();
+    while ingress.queued_len() < n {
+        assert!(t0.elapsed() < Duration::from_secs(10), "queue never reached {n}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Streamed token ids of a 200 response, cross-checked against its
+/// final `done` frame.
+fn streamed_tokens(resp: &Resp) -> Vec<i32> {
+    assert_eq!(resp.status, 200, "{}", resp.head);
+    let streamed: Vec<i32> = resp
+        .frames
+        .iter()
+        .filter_map(|f| f.get("token").and_then(Json::as_f64))
+        .map(|t| t as i32)
+        .collect();
+    let last = resp.frames.last().expect("at least the done frame");
+    assert_eq!(last.get("done").and_then(Json::as_bool), Some(true), "{}", resp.body);
+    let final_tokens: Vec<i32> = last
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .expect("done frame carries the full token list")
+        .iter()
+        .filter_map(Json::as_f64)
+        .map(|t| t as i32)
+        .collect();
+    assert_eq!(streamed, final_tokens, "incremental frames == final list");
+    // token frames carry their stream index in order
+    let idx: Vec<f64> = resp
+        .frames
+        .iter()
+        .filter_map(|f| f.get("index").and_then(Json::as_f64))
+        .collect();
+    assert_eq!(idx, (0..streamed.len()).map(|i| i as f64).collect::<Vec<_>>());
+    streamed
+}
+
+/// Serve `reqs` over loopback (paused admission until all are queued,
+/// reproducing the twin's closed batch) and return per-id tokens plus
+/// the drained handle's final state.
+fn serve_over_http(
+    backend: HostBackend,
+    serve: &ServeConfig,
+    net: NetConfig,
+    reqs: &[Request],
+    sse: bool,
+) -> (BTreeMap<u64, Vec<i32>>, Vec<CompletedRequest>, bitrom::coordinator::ServeMetrics) {
+    let handle = NetServer::start(backend, serve.clone(), net).unwrap();
+    let addr = handle.addr();
+    handle.ingress().pause();
+    let clients: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let body = r.to_json().to_string_compact();
+            let id = r.id;
+            (id, std::thread::spawn(move || post(addr, &body, sse)))
+        })
+        .collect();
+    wait_queued(handle.ingress(), reqs.len());
+    handle.ingress().resume();
+    let mut tokens = BTreeMap::new();
+    for (id, c) in clients {
+        let resp = c.join().unwrap();
+        if sse {
+            assert!(resp.head.contains("text/event-stream"), "{}", resp.head);
+            assert!(resp.body.contains("data: "), "{}", resp.body);
+        } else {
+            assert!(resp.head.contains("application/x-ndjson"), "{}", resp.head);
+        }
+        tokens.insert(id, streamed_tokens(&resp));
+    }
+    let (done, metrics) = handle.shutdown().unwrap();
+    (tokens, done, metrics)
+}
+
+#[test]
+fn greedy_streaming_over_loopback_matches_the_offline_twin() {
+    // DESIGN.md invariant 10, base model, greedy decode
+    let reqs = trace(5, 0, 11);
+    let serve = ServeConfig { max_batches: 3, ..ServeConfig::default() };
+    let twin = twin_tokens(base_backend(), &serve, reqs.clone());
+
+    let net = NetConfig { listen: "127.0.0.1:0".into(), max_queue: 16, ..NetConfig::default() };
+    let (tokens, done, metrics) = serve_over_http(base_backend(), &serve, net, &reqs, false);
+
+    assert_eq!(tokens, twin, "loopback-served tokens == offline twin");
+    assert_eq!(done.len(), reqs.len());
+    assert_eq!(metrics.requests_done as usize, reqs.len());
+    assert!(metrics.faults.shed.is_empty(), "{:?}", metrics.faults.shed);
+    // live serving measured its latency percentiles in rounds
+    assert_eq!(metrics.ttft_rounds.len(), reqs.len());
+    assert!(metrics.tbt_rounds.len() > 0);
+}
+
+#[test]
+fn mixed_tenant_topk_sse_streams_match_the_offline_twin() {
+    // the hard half of invariant 10: per-request top-k sampling and
+    // per-sequence adapter binding survive the trip through live
+    // admission + SSE framing
+    let reqs = trace(6, 2, 23);
+    assert!(reqs.iter().any(|r| r.adapter_id.is_some()), "trace mixes tenants");
+    let serve = ServeConfig { max_batches: 3, top_k: 3, ..ServeConfig::default() };
+    let twin = twin_tokens(adapter_backend(2), &serve, reqs.clone());
+
+    let net = NetConfig { listen: "127.0.0.1:0".into(), max_queue: 16, ..NetConfig::default() };
+    let (tokens, _, metrics) = serve_over_http(adapter_backend(2), &serve, net, &reqs, true);
+
+    assert_eq!(tokens, twin, "sampled multi-tenant streams == offline twin");
+    assert_eq!(metrics.requests_done as usize, reqs.len());
+    assert!(metrics.faults.shed.is_empty());
+}
+
+fn tiny_req(id: u64) -> Request {
+    Request {
+        id,
+        arrival_s: 0.0,
+        prompt: vec![1, 2, 3],
+        max_new_tokens: 4,
+        adapter_id: None,
+    }
+}
+
+#[test]
+fn overload_past_max_queue_sheds_typed_429_counted_in_metrics() {
+    let serve = ServeConfig { max_batches: 1, ..ServeConfig::default() };
+    let net = NetConfig { listen: "127.0.0.1:0".into(), max_queue: 2, ..NetConfig::default() };
+    let handle = NetServer::start(base_backend(), serve, net).unwrap();
+    let addr = handle.addr();
+    handle.ingress().pause();
+
+    let clients: Vec<_> = [100u64, 101]
+        .iter()
+        .map(|&id| {
+            let body = tiny_req(id).to_json().to_string_compact();
+            std::thread::spawn(move || post(addr, &body, false))
+        })
+        .collect();
+    wait_queued(handle.ingress(), 2);
+
+    // the queue is full: the next three submissions are typed 429s
+    for id in [102u64, 103, 104] {
+        let resp = post(addr, &tiny_req(id).to_json().to_string_compact(), false);
+        assert_eq!(resp.status, 429, "{}", resp.head);
+        assert!(resp.head.contains("Retry-After: 1\r\n"), "{}", resp.head);
+        assert!(resp.body.contains("admission queue full"), "{}", resp.body);
+    }
+
+    handle.ingress().resume();
+    for c in clients {
+        let resp = c.join().unwrap();
+        let toks = streamed_tokens(&resp);
+        assert_eq!(toks.len(), 4);
+    }
+    let (done, metrics) = handle.shutdown().unwrap();
+    assert_eq!(done.len(), 2);
+    assert_eq!(metrics.requests_done, 2);
+    // the HTTP-rejected submissions are the same typed sheds the
+    // offline plane counts
+    assert_eq!(metrics.faults.shed_count(FailReason::Overload), 3);
+}
+
+#[test]
+fn shutdown_drains_queued_requests_as_typed_wire_errors() {
+    let serve = ServeConfig { max_batches: 1, ..ServeConfig::default() };
+    let net = NetConfig { listen: "127.0.0.1:0".into(), max_queue: 4, ..NetConfig::default() };
+    let handle = NetServer::start(base_backend(), serve, net).unwrap();
+    let addr = handle.addr();
+    handle.ingress().pause();
+
+    let body = tiny_req(50).to_json().to_string_compact();
+    let client = std::thread::spawn(move || post(addr, &body, false));
+    wait_queued(handle.ingress(), 1);
+
+    // begin draining while the request is still queued (and admission
+    // paused): it must come back as a typed error frame, not a hang or
+    // a mid-token truncation
+    handle.ingress().shutdown();
+    let resp = client.join().unwrap();
+    assert_eq!(resp.status, 200, "stream already started: {}", resp.head);
+    assert_eq!(resp.frames.len(), 1, "{}", resp.body);
+    assert_eq!(resp.frames[0].get("error").and_then(Json::as_str), Some("shutdown"));
+    assert_eq!(resp.frames[0].get("id").and_then(Json::as_f64), Some(50.0));
+
+    // a draining server reports it on /healthz
+    let (status, raw) = get(addr, "/healthz");
+    assert_eq!(status, 503, "{raw}");
+    assert!(raw.ends_with("draining\n"), "{raw}");
+
+    // a post-shutdown submission is rejected up front with 503
+    let late = post(addr, &tiny_req(51).to_json().to_string_compact(), false);
+    assert_eq!(late.status, 503, "{}", late.head);
+    assert!(late.body.contains("shutting down"), "{}", late.body);
+
+    let (done, metrics) = handle.shutdown().unwrap();
+    assert!(done.is_empty());
+    assert_eq!(metrics.faults.shed_count(FailReason::Shutdown), 1);
+    assert_eq!(metrics.requests_done, 0);
+}
+
+#[test]
+fn malformed_submissions_get_400_not_a_stream() {
+    let serve = ServeConfig { max_batches: 1, ..ServeConfig::default() };
+    let net = NetConfig { listen: "127.0.0.1:0".into(), ..NetConfig::default() };
+    let handle = NetServer::start(base_backend(), serve, net).unwrap();
+    let addr = handle.addr();
+
+    let resp = post(addr, "{not json", false);
+    assert_eq!(resp.status, 400, "{}", resp.head);
+    assert!(resp.frames[0].get("error").is_some());
+
+    let resp = post(addr, r#"{"max_new_tokens": 4}"#, false);
+    assert_eq!(resp.status, 400, "missing prompt: {}", resp.body);
+
+    let resp = post(addr, r#"{"prompt": [], "max_new_tokens": 4}"#, false);
+    assert_eq!(resp.status, 400, "empty prompt: {}", resp.body);
+
+    // a prompt past the prefill bucket is rejected at the edge, not
+    // deep in the serving loop
+    let long: Vec<String> = (0..200).map(|i| (i % 7).to_string()).collect();
+    let body = format!(r#"{{"prompt": [{}], "max_new_tokens": 4}}"#, long.join(","));
+    let resp = post(addr, &body, false);
+    assert_eq!(resp.status, 400, "{}", resp.head);
+    assert!(resp.body.contains("prefill bucket"), "{}", resp.body);
+
+    let (done, metrics) = handle.shutdown().unwrap();
+    assert!(done.is_empty());
+    assert_eq!(metrics.requests_done, 0);
+}

@@ -288,8 +288,11 @@ fn serving_is_bit_identical_across_thread_counts() {
 
 #[test]
 fn sampled_serving_is_bit_identical_across_thread_counts() {
-    // top-k sampling draws from the coordinator's single Rng in slot
-    // order, so even non-greedy traces are width-invariant
+    // top-k sampling draws from a per-request Rng (seeded from the
+    // serve seed and the request id), so even non-greedy traces are
+    // width-invariant — and independent of batching/arrival order,
+    // which is what lets the live streaming plane match this offline
+    // twin bit-for-bit (invariant 10)
     let run = |threads: usize| {
         let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
         let serve = ServeConfig {
