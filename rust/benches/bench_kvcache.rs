@@ -64,6 +64,32 @@ fn main() {
     });
     println!("{}", r.report());
 
+    // shared-prefix accounting: a donor decodes the full sequence, a
+    // binder binds one full block of its prompt (DESIGN.md §15) and
+    // writes only the tail — the bound reads route to the donor's rows
+    let r = b.run("kv_manager bound-prefix 128-token pair", || {
+        let mut kv = KvCacheManager::new(&model, &serve, EdramParams::default());
+        let mut now = 0.0;
+        kv.start_seq(0);
+        kv.prefill(0, 9, now);
+        for _ in 0..119usize {
+            now += 0.005;
+            kv.write_token(0, now);
+            kv.read_context(0, now).unwrap();
+        }
+        kv.start_seq(1);
+        kv.bind_prefix(1, 0, 8);
+        now += 0.005;
+        kv.prefill(1, 1, now);
+        for _ in 0..119usize {
+            now += 0.005;
+            kv.write_token(1, now);
+            kv.read_context(1, now).unwrap();
+        }
+        kv.stats.external_reduction()
+    });
+    println!("{}", r.report());
+
     // single decode-step accounting at max context
     let mut kv = KvCacheManager::new(&model, &serve, EdramParams::default());
     kv.start_seq(0);

@@ -17,7 +17,12 @@
 //!   event encoder into a black box (the bytes a loopback client would
 //!   receive, minus socket noise): tokens asserted bit-identical to
 //!   the offline run (invariant 10), and the throughput ratio recorded
-//!   as the `streaming_overhead_ratio` gate.
+//!   as the `streaming_overhead_ratio` gate;
+//! * **prefix** — the shared-prefix serving ledger (DESIGN.md §15) at
+//!   its fixed operating point: tokens asserted bit-identical to the
+//!   private-KV twin (invariant 11), and the measured external-DRAM
+//!   reduction recorded as the `prefix_hit_dram_reduction` gate, which
+//!   must stay above the Fig 5(b) measured baseline.
 //!
 //! Emits `BENCH_serve.json` at the repository root; its `gates` object
 //! (scale-free speedups) feeds the CI perf-regression gate
@@ -34,6 +39,7 @@ use std::sync::Arc;
 use bitrom::config::{ModelConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, FailReason, FaultMetrics, Ingress, Server, TokenSink};
 use bitrom::net::jsonframe::{EventEncoder, StreamFormat};
+use bitrom::report::{prefix_serving_study, FIG5B_MEASURED_BASELINE};
 use bitrom::runtime::HostBackend;
 use bitrom::trace::{generate, TraceConfig};
 use bitrom::util::bench::bench_out_path;
@@ -326,6 +332,32 @@ fn main() -> anyhow::Result<()> {
         stream_p.tokens_per_s, stream_ratio, stream_bytes,
     );
 
+    // axis 5: shared-prefix capacity gain — the DESIGN.md §15 ledger
+    // at its fixed operating point (1 donor + 2 binders, tight
+    // DR-eDRAM); tokens must match the private twin (invariant 11)
+    // before the reduction is recorded as a gate
+    println!("-- shared-prefix reduction (3 requests, common prompt, tight eDRAM) --");
+    let prefix = prefix_serving_study(0x9F1C)?;
+    assert!(
+        prefix.tokens_match,
+        "shared-prefix serving must stay bit-identical to its private twin (invariant 11)"
+    );
+    assert!(
+        prefix.measured_shared > FIG5B_MEASURED_BASELINE,
+        "shared reduction {:.4} fell to the Fig 5(b) measured baseline {:.4}",
+        prefix.measured_shared,
+        FIG5B_MEASURED_BASELINE,
+    );
+    println!(
+        "  shared: {:.1}% reduction vs private twin {:.1}% (analytic {:.1}%)  \
+         {} hits, {} tokens bound",
+        prefix.measured_shared * 100.0,
+        prefix.measured_private * 100.0,
+        prefix.analytic_shared * 100.0,
+        prefix.prefix_hits,
+        prefix.kv_shared.prefix_bound_tokens,
+    );
+
     let speedup_6v1 = batch_points
         .iter()
         .find(|p| p.batches == 6)
@@ -386,12 +418,26 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         (
+            "prefix_point",
+            Json::obj(vec![
+                ("measured_shared", Json::num(prefix.measured_shared)),
+                ("measured_private", Json::num(prefix.measured_private)),
+                ("analytic_shared", Json::num(prefix.analytic_shared)),
+                ("prefix_hits", Json::num(prefix.prefix_hits as f64)),
+                (
+                    "bound_tokens",
+                    Json::num(prefix.kv_shared.prefix_bound_tokens as f64),
+                ),
+            ]),
+        ),
+        (
             "gates",
             Json::obj(vec![
                 ("batching_speedup_6v1", Json::num(speedup_6v1)),
                 ("threads_speedup_4v1", Json::num(threads_4v1)),
                 ("fault_recovery_throughput_ratio", Json::num(fault_ratio)),
                 ("streaming_overhead_ratio", Json::num(stream_ratio)),
+                ("prefix_hit_dram_reduction", Json::num(prefix.measured_shared)),
             ]),
         ),
     ]);

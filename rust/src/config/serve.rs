@@ -84,6 +84,18 @@ pub struct ServeConfig {
     /// Overload deadline (s): queued requests waiting longer are shed
     /// with `FailReason::Overload`. `0.0` (the default) never sheds.
     pub shed_after_s: f64,
+    /// Shared-prefix KV caching (DESIGN.md §15): content-hash full
+    /// prompt blocks, bind cache hits by reference, recompute only the
+    /// unshared tail. Changes placement and traffic, never tokens
+    /// (invariant 11). Off by default — the serving loop is then
+    /// byte-identical to a build without prefix support.
+    pub prefix_cache: bool,
+    /// What preemption does to the victim's KV: `"reload"` (the
+    /// default) swaps it to the external tier and reads it back on
+    /// resume; `"recompute"` drops it and replays the sequence so far
+    /// through prefill when a slot frees. Recompute requires greedy
+    /// decoding — the replay must re-derive the same tokens.
+    pub preempt_policy: String,
 }
 
 impl Default for ServeConfig {
@@ -111,6 +123,8 @@ impl Default for ServeConfig {
             admit_pressure: 0.0,
             preempt_under_pressure: false,
             shed_after_s: 0.0,
+            prefix_cache: false,
+            preempt_policy: "reload".into(),
         }
     }
 }
@@ -186,6 +200,19 @@ impl ServeConfig {
                 "preempt_under_pressure needs admit_pressure > 0 (the trigger threshold)"
             );
         }
+        anyhow::ensure!(
+            self.preempt_policy == "reload" || self.preempt_policy == "recompute",
+            "preempt_policy must be \"reload\" or \"recompute\", got {:?}",
+            self.preempt_policy
+        );
+        if self.preempt_policy == "recompute" {
+            // the replayed prefix must re-derive the exact tokens the
+            // victim already emitted (invariant 11)
+            anyhow::ensure!(
+                self.top_k == 1,
+                "preempt_policy \"recompute\" requires greedy decoding (top_k = 1)"
+            );
+        }
         Ok(())
     }
 
@@ -242,6 +269,8 @@ impl ServeConfig {
             ("admit_pressure", Json::num(self.admit_pressure)),
             ("preempt_under_pressure", Json::Bool(self.preempt_under_pressure)),
             ("shed_after_s", Json::num(self.shed_after_s)),
+            ("prefix_cache", Json::Bool(self.prefix_cache)),
+            ("preempt_policy", Json::str(self.preempt_policy.clone())),
         ])
     }
 
@@ -297,6 +326,15 @@ impl ServeConfig {
                 .get("shed_after_s")
                 .and_then(Json::as_f64)
                 .unwrap_or(d.shed_after_s),
+            prefix_cache: j
+                .get("prefix_cache")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.prefix_cache),
+            preempt_policy: j
+                .get("preempt_policy")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.preempt_policy)
+                .to_string(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -385,7 +423,9 @@ mod tests {
             n_adapters: 3,
             adapter_rank: 8,
             adapter_placement: "QKGU".into(),
-            top_k: 4,
+            // greedy: both fault injection and recompute preemption
+            // demand top_k == 1 at validation
+            top_k: 1,
             threads: 3,
             seed: 99,
             hw_tbt_s: 0.002,
@@ -397,6 +437,8 @@ mod tests {
             admit_pressure: 0.75,
             preempt_under_pressure: true,
             shed_after_s: 1.5,
+            prefix_cache: true,
+            preempt_policy: "recompute".into(),
         };
         let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
@@ -432,6 +474,29 @@ mod tests {
         assert_eq!(c.fault_seed, 0);
         assert_eq!(c.admit_pressure, 0.0);
         assert!(!c.preempt_under_pressure);
+    }
+
+    #[test]
+    fn prefix_and_preempt_policy_knobs_validate() {
+        // old configs without the fields parse to the legacy behavior
+        let j = Json::parse(r#"{"max_batches": 2}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert!(!c.prefix_cache);
+        assert_eq!(c.preempt_policy, "reload");
+        // only the two named policies exist
+        let mut c = ServeConfig::default();
+        c.preempt_policy = "drop".into();
+        assert!(c.validate().is_err());
+        // recompute replays the victim's tokens, so it demands greedy
+        let mut c = ServeConfig::default();
+        c.preempt_policy = "recompute".into();
+        assert!(c.validate().is_ok());
+        c.top_k = 4;
+        assert!(c.validate().is_err());
+        // reload has no sampling constraint
+        let mut c = ServeConfig::default();
+        c.top_k = 4;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -166,6 +166,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new_tokens: 4,
             adapter_id: None,
+            priority: 0,
         }
     }
 

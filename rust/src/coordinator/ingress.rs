@@ -118,10 +118,35 @@ struct Bucket {
 struct TenantQueue {
     fifo: VecDeque<(Request, Box<dyn TokenSink>)>,
     bucket: Bucket,
+    /// Deficit round-robin credit: banked each turn (one request costs
+    /// one credit), reset while the tenant's queue is idle.
+    deficit: f64,
+}
+
+/// Pop the next request honoring priority classes: the *first* queued
+/// request of the highest class leaves first, so classes are strict
+/// and order within a class stays FIFO. All-default (class 0) traffic
+/// reduces to a plain `pop_front`.
+fn pop_next(
+    fifo: &mut VecDeque<(Request, Box<dyn TokenSink>)>,
+) -> Option<(Request, Box<dyn TokenSink>)> {
+    if fifo.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for i in 1..fifo.len() {
+        if fifo[i].0.priority > fifo[best].0.priority {
+            best = i;
+        }
+    }
+    fifo.remove(best)
 }
 
 struct Inner {
     tenants: BTreeMap<Option<u32>, TenantQueue>,
+    /// Cross-tenant fairness weights (default 1.0), settable ahead of
+    /// a tenant's first submission.
+    weights: BTreeMap<Option<u32>, f64>,
     /// Round-robin cursor over tenant keys (index into the sorted key
     /// set at pull time).
     rr: usize,
@@ -159,6 +184,7 @@ impl Ingress {
         Ingress {
             inner: Mutex::new(Inner {
                 tenants: BTreeMap::new(),
+                weights: BTreeMap::new(),
                 rr: 0,
                 rejected: Vec::new(),
                 live: BTreeSet::new(),
@@ -222,6 +248,7 @@ impl Ingress {
         let rate = self.rate_limit;
         let tq = inner.tenants.entry(req.adapter_id).or_insert_with(|| TenantQueue {
             fifo: VecDeque::new(),
+            deficit: 0.0,
             bucket: Bucket {
                 // a fresh bucket starts full: short bursts up to the
                 // per-second rate are fine, sustained overrate is not
@@ -251,8 +278,24 @@ impl Ingress {
         Ok(())
     }
 
-    /// Pull up to `max` admitted requests, round-robin across tenants.
-    /// Returns nothing while admission is paused.
+    /// Set a tenant's cross-tenant fairness weight (default 1.0). Over
+    /// many pulls tenants are served in proportion to their weights;
+    /// every positive weight guarantees eventual service (no
+    /// starvation). Clamped below at 0.01 so a zero weight cannot
+    /// stall the deficit loop. Takes effect on the next pull and may
+    /// be set before the tenant's first submission.
+    pub fn set_tenant_weight(&self, tenant: Option<u32>, weight: f64) {
+        self.lock().weights.insert(tenant, weight.max(0.01));
+    }
+
+    /// Pull up to `max` admitted requests: weighted deficit round-robin
+    /// across tenants — each turn banks the tenant's weight, one
+    /// request costs one credit, and an idle tenant banks nothing — so
+    /// service converges to the weight proportions without starving
+    /// anyone. Within a tenant the highest priority class leaves
+    /// first, FIFO within a class. With every weight at the default
+    /// 1.0 and every request at class 0 this is exactly one-per-turn
+    /// FIFO round-robin. Returns nothing while admission is paused.
     pub fn pull(&self, max: usize) -> Vec<(Request, Box<dyn TokenSink>)> {
         if self.paused.load(Ordering::SeqCst) {
             return Vec::new();
@@ -264,10 +307,26 @@ impl Ingress {
             let keys: Vec<Option<u32>> = inner.tenants.keys().copied().collect();
             let k = keys[inner.rr % keys.len()];
             inner.rr = (inner.rr + 1) % keys.len();
+            let weight = inner.weights.get(&k).copied().unwrap_or(1.0);
             if let Some(tq) = inner.tenants.get_mut(&k) {
-                if let Some(item) = tq.fifo.pop_front() {
-                    inner.queued -= 1;
-                    out.push(item);
+                if tq.fifo.is_empty() {
+                    // an idle tenant banks no credit (classic DRR)
+                    tq.deficit = 0.0;
+                    continue;
+                }
+                tq.deficit += weight;
+                while tq.deficit >= 1.0 && out.len() < max {
+                    match pop_next(&mut tq.fifo) {
+                        Some(item) => {
+                            tq.deficit -= 1.0;
+                            inner.queued -= 1;
+                            out.push(item);
+                        }
+                        None => break,
+                    }
+                }
+                if tq.fifo.is_empty() {
+                    tq.deficit = 0.0;
                 }
                 // empty tenant queues stay registered: their rate
                 // buckets keep their level across idle gaps
@@ -341,6 +400,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new_tokens: 4,
             adapter_id,
+            priority: 0,
         }
     }
 
@@ -374,6 +434,61 @@ mod tests {
         }
         let ids: Vec<u64> = ing.pull(16).iter().map(|(r, _)| r.id).collect();
         assert_eq!(ids, vec![0, 10, 1, 11, 2, 3]);
+    }
+
+    #[test]
+    fn weighted_drr_serves_tenants_in_proportion() {
+        let ing = Ingress::new(32, 0.0, 0);
+        ing.set_tenant_weight(Some(0), 3.0);
+        // weights may be set before a tenant's first submission
+        ing.set_tenant_weight(Some(1), 1.0);
+        for id in 0..8 {
+            ing.submit_at(req(id, Some(0)), sink(), 0.0).unwrap();
+        }
+        for id in 10..14 {
+            ing.submit_at(req(id, Some(1)), sink(), 0.0).unwrap();
+        }
+        let ids: Vec<u64> = ing.pull(8).iter().map(|(r, _)| r.id).collect();
+        // each pass: tenant 0 banks 3 credits (3 requests), tenant 1
+        // banks 1 — a 3:1 service ratio, never zero for tenant 1
+        assert_eq!(ids, vec![0, 1, 2, 10, 3, 4, 5, 11]);
+        let rest: Vec<u64> = ing.pull(32).iter().map(|(r, _)| r.id).collect();
+        assert_eq!(rest, vec![6, 7, 12, 13], "drained tenants reset, nobody starves");
+    }
+
+    #[test]
+    fn fractional_weights_bank_credit_without_starving() {
+        let ing = Ingress::new(32, 0.0, 0);
+        ing.set_tenant_weight(Some(1), 0.5);
+        for id in 0..6 {
+            ing.submit_at(req(id, Some(0)), sink(), 0.0).unwrap();
+        }
+        for id in 10..13 {
+            ing.submit_at(req(id, Some(1)), sink(), 0.0).unwrap();
+        }
+        let ids: Vec<u64> = ing.pull(9).iter().map(|(r, _)| r.id).collect();
+        // tenant 1 pops every second turn (0.5 + 0.5 = 1 credit): a
+        // fractional weight delays service but never denies it
+        assert_eq!(ids, vec![0, 1, 10, 2, 3, 11, 4, 5, 12]);
+    }
+
+    #[test]
+    fn priority_classes_preempt_fifo_within_a_tenant() {
+        let ing = Ingress::new(8, 0.0, 0);
+        let mut lo = req(0, None);
+        lo.priority = 0;
+        let mut hi1 = req(1, None);
+        hi1.priority = 2;
+        let mut mid = req(2, None);
+        mid.priority = 1;
+        let mut hi2 = req(3, None);
+        hi2.priority = 2;
+        for r in [lo, hi1, mid, hi2] {
+            ing.submit_at(r, sink(), 0.0).unwrap();
+        }
+        let ids: Vec<u64> = ing.pull(8).iter().map(|(r, _)| r.id).collect();
+        // strict classes, FIFO inside a class
+        assert_eq!(ids, vec![1, 3, 2, 0]);
     }
 
     #[test]

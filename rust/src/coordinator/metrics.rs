@@ -258,6 +258,14 @@ impl ServeMetrics {
                 kv.explicit_refreshes,
                 kv.kv_energy_j(),
             ));
+            // only when sharing actually happened: prefix-free runs
+            // keep their report byte-identical (invariant 7)
+            if kv.prefix_hits > 0 {
+                out.push_str(&format!(
+                    "\nPrefix hits={} bound tokens={} cow forks={}",
+                    kv.prefix_hits, kv.prefix_bound_tokens, kv.cow_forks,
+                ));
+            }
         }
         if self.faults != FaultMetrics::default() {
             let f = &self.faults;
@@ -408,6 +416,13 @@ mod tests {
         let r = m.report();
         assert!(r.contains("external reduction"), "{r}");
         assert!(r.contains("evictions=0"), "{r}");
+        // the prefix line appears only once sharing actually happened
+        assert!(!r.contains("Prefix"), "{r}");
+        m.kv.as_mut().unwrap().prefix_hits = 2;
+        m.kv.as_mut().unwrap().prefix_bound_tokens = 16;
+        m.kv.as_mut().unwrap().cow_forks = 1;
+        let r = m.report();
+        assert!(r.contains("Prefix hits=2 bound tokens=16 cow forks=1"), "{r}");
     }
 
     #[test]

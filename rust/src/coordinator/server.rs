@@ -286,6 +286,12 @@ impl<B: InferenceBackend> Server<B> {
         let mut recomputes_used: Vec<usize> = vec![0; self.serve.max_batches];
         let mut backoff_until: Vec<u64> = vec![0; self.serve.max_batches];
         let mut admit_seq: Vec<u64> = vec![0; self.serve.max_batches];
+        // preempted under the recompute policy: KV dropped, rebuild
+        // from prompt + emitted tokens before the slot next runs
+        let mut needs_replay: Vec<bool> = vec![false; self.serve.max_batches];
+        // prompt tokens satisfied by a shared-prefix bind (0 = none):
+        // the worker prefills only the unshared tail
+        let mut bound_prefix: Vec<usize> = vec![0; self.serve.max_batches];
         // round-indexed virtual time per slot: the round the request was
         // admitted and the round of its latest token, for the
         // wall-clock-free TTFT/TBT percentiles
@@ -399,6 +405,8 @@ impl<B: InferenceBackend> Server<B> {
                     retries[slot] = 0;
                     recomputes_used[slot] = 0;
                     backoff_until[slot] = 0;
+                    needs_replay[slot] = false;
+                    bound_prefix[slot] = 0;
                     admit_counter += 1;
                     admit_seq[slot] = admit_counter;
                     admit_round[slot] = round_no;
@@ -430,20 +438,45 @@ impl<B: InferenceBackend> Server<B> {
                 continue;
             }
 
-            // preemption under pressure: demote the youngest slot's KV
-            // to the external DRAM tier (invariant 6: tier placement
-            // never changes numerics, so the sequence keeps decoding
-            // from external rows — reload-free, no recompute)
+            // preemption under pressure: the victim is the lowest
+            // priority class among active slots, youngest admission
+            // breaking ties — with every request at the default class
+            // this is exactly the old youngest-slot choice, so the
+            // priority field is invisible until someone sets it. The
+            // policy knob picks what happens to the victim's KV:
+            // `reload` (default) demotes it to the external DRAM tier
+            // (invariant 6: tier placement never changes numerics, so
+            // the sequence keeps decoding from external rows —
+            // reload-free, no recompute); `recompute` drops the KV
+            // entirely — every page frees *now* — and rebuilds it from
+            // the prompt + emitted tokens before the slot next runs
+            // (bit-identical by invariant 4, trading compute for
+            // memory). Either way tokens never change — invariant 11.
             if self.serve.preempt_under_pressure
                 && batcher.queued() > 0
                 && self.kv_pressure() >= self.serve.admit_pressure
             {
-                let victim = active.iter().copied().max_by_key(|&s| admit_seq[s]);
-                if let Some(state) = victim.and_then(|v| states[v].as_mut()) {
-                    let demoted = self.backend.swap_out_kv(state)?;
-                    if demoted > 0 {
-                        metrics.faults.preemptions += 1;
-                        metrics.faults.demoted_blocks += demoted;
+                let victim = active.iter().copied().min_by_key(|&s| {
+                    let class = batcher.slot(s).request.as_ref().map_or(0, |r| r.priority);
+                    (class, std::cmp::Reverse(admit_seq[s]))
+                });
+                if let Some(v) = victim {
+                    if self.serve.preempt_policy == "recompute" {
+                        // only a decoding slot holds rebuildable KV; a
+                        // not-yet-prefilled one has nothing to drop
+                        if matches!(batcher.slot(v).state, SlotState::Decoding { .. })
+                            && states[v].is_some()
+                        {
+                            states[v] = None;
+                            needs_replay[v] = true;
+                            metrics.faults.preemptions += 1;
+                        }
+                    } else if let Some(state) = states[v].as_mut() {
+                        let demoted = self.backend.swap_out_kv(state)?;
+                        if demoted > 0 {
+                            metrics.faults.preemptions += 1;
+                            metrics.faults.demoted_blocks += demoted;
+                        }
                     }
                 }
             }
@@ -517,9 +550,11 @@ impl<B: InferenceBackend> Server<B> {
             self.backend.advance_kv_clock(hw_time);
 
             // coordinator-side, in slot order (deterministic at any
-            // pool width): create + bind fresh prefill states, then
-            // reserve the round's KV pages so tier placement never
-            // depends on worker interleaving
+            // pool width): create + bind fresh prefill states (shared
+            // prefixes bound here, before reservation, so the reserve
+            // covers only the unshared tail), rebuild recompute-
+            // preempted states, then reserve the round's KV pages so
+            // tier placement never depends on worker interleaving
             for &slot in &runnable {
                 let is_prefill = batcher.slot(slot).state == SlotState::NeedsPrefill;
                 if is_prefill && states[slot].is_none() {
@@ -529,10 +564,47 @@ impl<B: InferenceBackend> Server<B> {
                     // projection of the sequence, prefill included
                     let adapter = batcher.slot(slot).request.as_ref().unwrap().adapter_id;
                     self.backend.bind_adapter(&mut state, adapter)?;
+                    // bind the longest published shared prefix into
+                    // the fresh sequence — a recovery re-prefill never
+                    // binds (the shared block may be what expired; a
+                    // private rebuild is what breaks the loop)
+                    bound_prefix[slot] = 0;
+                    if self.serve.prefix_cache && recomputes_used[slot] == 0 {
+                        let prompt = &batcher.slot(slot).request.as_ref().unwrap().prompt;
+                        bound_prefix[slot] = self.backend.bind_prefix_kv(&mut state, prompt)?;
+                    }
                     states[slot] = Some(state);
                 }
+                if !is_prefill && states[slot].is_none() && needs_replay[slot] {
+                    // recompute-policy preemption dropped this KV: one
+                    // prefill-shaped pass over the prompt + all emitted
+                    // tokens but the last rebuilds it (invariant 4 ⇒
+                    // bit-identical rows; the preemption budget is
+                    // separate from the fault retry budget)
+                    let sref = batcher.slot(slot);
+                    let req = sref.request.as_ref().expect("active slot has a request");
+                    let out = &sref.output;
+                    let replay: Vec<i32> = req
+                        .prompt
+                        .iter()
+                        .chain(out[..out.len() - 1].iter())
+                        .copied()
+                        .collect();
+                    let plen = req.prompt.len();
+                    let adapter = req.adapter_id;
+                    let mut st = self.backend.new_state()?;
+                    self.backend.bind_adapter(&mut st, adapter)?;
+                    self.backend.reserve_kv(&mut st, replay.len())?;
+                    run_slot_round(&self.backend, n_parts, Some(&replay), 0, &mut st)?;
+                    st.set_pos(replay.len());
+                    st.set_prompt_len(plen);
+                    states[slot] = Some(st);
+                    needs_replay[slot] = false;
+                    metrics.faults.recomputes += 1;
+                    metrics.faults.recomputed_tokens += replay.len() as u64;
+                }
                 let n_tokens = if is_prefill {
-                    batcher.slot(slot).request.as_ref().unwrap().prompt.len()
+                    batcher.slot(slot).request.as_ref().unwrap().prompt.len() - bound_prefix[slot]
                 } else {
                     1
                 };
@@ -543,6 +615,7 @@ impl<B: InferenceBackend> Server<B> {
             // across the pool; each worker owns its slot's state
             let backend = &self.backend;
             let batcher_ref = &batcher;
+            let bound_ref = &bound_prefix;
             let items: Vec<(usize, &mut B::State)> = states
                 .iter_mut()
                 .enumerate()
@@ -553,7 +626,9 @@ impl<B: InferenceBackend> Server<B> {
                 let t_op = Instant::now();
                 let sref = batcher_ref.slot(slot);
                 let prompt = if sref.state == SlotState::NeedsPrefill {
-                    Some(sref.request.as_ref().unwrap().prompt.as_slice())
+                    // a bound shared prefix is already in the block
+                    // tables: prefill only the unshared tail
+                    Some(&sref.request.as_ref().unwrap().prompt[bound_ref[slot]..])
                 } else {
                     None
                 };
@@ -653,8 +728,20 @@ impl<B: InferenceBackend> Server<B> {
                     state.set_pos(plen);
                     state.set_prompt_len(plen);
                     let t_head = Instant::now();
-                    let l = self.backend.head_at(&h, plen - 1)?;
+                    // the prefill hidden rows cover only the unshared
+                    // tail; the sampled last prompt token is always in
+                    // it (a bind never swallows the whole prompt)
+                    let l = self.backend.head_at(&h, plen - 1 - bound_prefix[slot])?;
                     slot_compute[slot] += t_head.elapsed().as_secs_f64();
+                    // publish this sequence's full prompt-prefix
+                    // blocks for later admissions — here, in slot
+                    // order, after every bind of this round, so
+                    // same-round admissions never share with each
+                    // other and donors are width-invariant
+                    if self.serve.prefix_cache {
+                        let req = batcher.slot(slot).request.as_ref().unwrap();
+                        self.backend.register_prefix_kv(state, &req.prompt)?;
+                    }
                     l
                 } else {
                     state.set_pos(state.pos() + 1);
@@ -875,6 +962,7 @@ mod tests {
                 prompt: vec![1 + i as i32, 2, 3],
                 max_new_tokens: 4,
                 adapter_id: None,
+                priority: 0,
             })
             .collect();
         let (done, mut metrics) = server.run_trace(reqs).unwrap();
@@ -919,6 +1007,7 @@ mod tests {
                     prompt: vec![off + i as i32, 2, 3],
                     max_new_tokens: 4,
                     adapter_id: None,
+                    priority: 0,
                 })
                 .collect()
         };
@@ -949,6 +1038,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new_tokens: 4,
             adapter_id: Some(0),
+            priority: 0,
         }];
         assert!(server.run_trace(reqs).is_err());
     }
@@ -975,6 +1065,7 @@ mod tests {
                     prompt: vec![1 + i as i32, 2, 3],
                     max_new_tokens: 4,
                     adapter_id: Some(i as u32),
+                    priority: 0,
                 })
                 .collect()
         };
@@ -1034,6 +1125,7 @@ mod tests {
                 prompt: vec![1 + i as i32, 2, 3],
                 max_new_tokens: 4,
                 adapter_id: None,
+                priority: 0,
             })
             .collect();
 
@@ -1104,6 +1196,7 @@ mod tests {
                     prompt: vec![1, 2],
                     max_new_tokens: 4,
                     adapter_id: None,
+                    priority: 0,
                 },
                 Box::new(sink.clone()),
                 0.0,

@@ -53,6 +53,18 @@ impl KvEnergy {
             self.total_j() / tokens as f64
         }
     }
+
+    /// Fraction of the baseline's external-interface energy this run
+    /// avoided (the energy face of a traffic-reduction claim — used by
+    /// the shared-prefix serving ledger to compare against its
+    /// private-KV twin). 0 when the baseline spent nothing.
+    pub fn external_savings_vs(&self, baseline: &KvEnergy) -> f64 {
+        if baseline.external_j == 0.0 {
+            0.0
+        } else {
+            1.0 - self.external_j / baseline.external_j
+        }
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +123,9 @@ mod tests {
         assert!(buffered.external_fraction() < 1.0);
         // cheaper on-die bytes: total energy drops too
         assert!(buffered.total_j() < none.total_j());
+        // and the savings comparator agrees with the raw joules
+        let s = buffered.external_savings_vs(&none);
+        assert!(s > 0.38 && s < 1.0, "savings {s}");
+        assert_eq!(KvEnergy::default().external_savings_vs(&KvEnergy::default()), 0.0);
     }
 }

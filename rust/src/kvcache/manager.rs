@@ -44,6 +44,10 @@ impl KvStats {
 struct SeqState {
     /// Tokens whose KV has been written (absolute count).
     len: usize,
+    /// Shared-prefix binding: `(donor_slot, bound_tokens)`. Context
+    /// reads of tokens below the bound route to the donor's rows —
+    /// one physical copy, every reader refreshes it.
+    shared: Option<(usize, usize)>,
 }
 
 /// KV-cache manager for up to `max_batches` concurrent sequences.
@@ -101,7 +105,23 @@ impl KvCacheManager {
     /// Begin a sequence in `slot` (frees any previous occupant).
     pub fn start_seq(&mut self, slot: usize) {
         assert!(slot < self.seqs.len(), "slot {slot} out of range");
-        self.seqs[slot] = Some(SeqState { len: 0 });
+        self.seqs[slot] = Some(SeqState { len: 0, shared: None });
+    }
+
+    /// Bind the first `bound` tokens of `slot` to the donor's already
+    /// resident prefix — the analytic face of `KvStore::bind_prefix`
+    /// (DESIGN.md §15). Binding records no writes; the bound tokens'
+    /// context reads route to the donor's rows, so one physical copy
+    /// serves every reader and each read refreshes it. Must be called
+    /// on a freshly started, empty sequence.
+    pub fn bind_prefix(&mut self, slot: usize, donor: usize, bound: usize) {
+        assert!(slot != donor, "a sequence cannot donate to itself");
+        let donor_len = self.seqs[donor].as_ref().expect("donor not started").len;
+        assert!(bound <= donor_len, "donor holds only {donor_len} tokens");
+        let st = self.seqs[slot].as_mut().expect("slot not started");
+        assert!(st.len == 0, "bind_prefix before any writes");
+        st.len = bound;
+        st.shared = Some((donor, bound));
     }
 
     /// Finish the sequence in `slot`, freeing it.
@@ -150,11 +170,21 @@ impl KvCacheManager {
     /// from the datapath registers). Returns a retention error if any
     /// on-die row expired — i.e. if the DR argument was violated.
     pub fn read_context(&mut self, slot: usize, now: f64) -> Result<(), RetentionError> {
-        let len = self.seqs[slot].as_ref().expect("slot not started").len;
+        let (len, shared) = {
+            let st = self.seqs[slot].as_ref().expect("slot not started");
+            (st.len, st.shared)
+        };
         for layer in 0..self.n_layers {
             for token in 0..len.saturating_sub(1) {
                 if token < self.ondie_tokens {
-                    let base = self.row_base(slot, layer, token);
+                    // a bound token lives in the donor's rows: shared
+                    // physical copy, refreshed by whichever reader
+                    // touches it first each step
+                    let home = match shared {
+                        Some((donor, bound)) if token < bound => donor,
+                        _ => slot,
+                    };
+                    let base = self.row_base(home, layer, token);
                     for r in 0..self.rows_per_record {
                         self.edram
                             .read(base + r, self.kv_bytes / self.rows_per_record as u64, now)?;
@@ -281,6 +311,55 @@ mod tests {
         m.end_seq(0);
         run_seq(&mut m, 0, 4, 40, 0.005);
         assert_eq!(m.edram().retention_failures, 0);
+    }
+
+    #[test]
+    fn bound_prefix_skips_rewrites_and_reads_route_to_the_donor() {
+        // donor runs a 17-token prompt to 64; a binder shares the
+        // first 16 tokens (two full 8-token blocks): it writes only
+        // the 48-token tail but still reads the full context
+        let l = ModelConfig::sim_tiny().n_layers as u64;
+        let mut m = mk();
+        run_seq(&mut m, 0, 17, 64, 0.005);
+        let donor_writes = m.stats.ondie_writes + m.stats.external_writes;
+        assert_eq!(donor_writes, 64 * l);
+        m.start_seq(1);
+        m.bind_prefix(1, 0, 16);
+        m.prefill(1, 1, 0.24); // the unshared last prompt token
+        for step in 0..47 {
+            let now = 0.24 + (step + 1) as f64 * 0.005;
+            m.write_token(1, now);
+            m.read_context(1, now).expect("retention violated");
+        }
+        assert_eq!(m.seq_len(1), 64);
+        // the binder wrote exactly the unshared 48 tokens per layer
+        let total_writes = m.stats.ondie_writes + m.stats.external_writes;
+        assert_eq!(total_writes - donor_writes, 48 * l);
+        // the binder's shared reads keep refreshing the donor's rows
+        // after the donor went idle at t=0.235 — refresh-on-read works
+        // across sequences exactly because the copy is shared
+        assert_eq!(m.edram().retention_failures, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bind_prefix before any writes")]
+    fn bind_after_writes_panics() {
+        let mut m = mk();
+        m.start_seq(0);
+        m.prefill(0, 17, 0.0);
+        m.start_seq(1);
+        m.prefill(1, 1, 0.0);
+        m.bind_prefix(1, 0, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "donor holds only")]
+    fn bind_past_the_donor_length_panics() {
+        let mut m = mk();
+        m.start_seq(0);
+        m.prefill(0, 8, 0.0);
+        m.start_seq(1);
+        m.bind_prefix(1, 0, 16);
     }
 
     #[test]

@@ -42,6 +42,8 @@
 //! per block would require requantizing earlier rows as the block's
 //! absmax grows and would break that equivalence.
 
+use std::collections::BTreeMap;
+
 use crate::config::{EdramParams, ModelConfig, ServeConfig};
 use crate::dram::{DramParams, ExternalDram};
 use crate::edram::{DrEdram, RetentionError};
@@ -238,6 +240,15 @@ pub struct KvStoreStats {
     pub quant_bits: usize,
     /// Page size in tokens.
     pub block_tokens: usize,
+    /// Sequences that bound at least one shared full-prefix block
+    /// instead of re-materializing it ([`KvStore::bind_prefix`]).
+    pub prefix_hits: u64,
+    /// Prompt tokens satisfied by binding shared prefix blocks (per
+    /// sequence, not multiplied by layers).
+    pub prefix_bound_tokens: u64,
+    /// Copy-on-write forks: appends that landed on a block another
+    /// sequence still references and copied it first.
+    pub cow_forks: u64,
 }
 
 impl KvStoreStats {
@@ -275,6 +286,9 @@ impl KvStoreStats {
             ondie_block_capacity: self.ondie_block_capacity,
             quant_bits: self.quant_bits,
             block_tokens: self.block_tokens,
+            prefix_hits: self.prefix_hits - earlier.prefix_hits,
+            prefix_bound_tokens: self.prefix_bound_tokens - earlier.prefix_bound_tokens,
+            cow_forks: self.cow_forks - earlier.cow_forks,
         }
     }
 }
@@ -302,7 +316,41 @@ struct KvBlock {
     /// Token rows filled so far (append-only).
     len: usize,
     tier: Tier,
+    /// Sequences referencing this block (shared-prefix binds and
+    /// sequence forks raise it; the last release frees the block).
+    refs: u32,
     data: BlockData,
+}
+
+/// One registered shareable prefix: the exact tokens it covers (hash
+/// collisions are resolved by comparing these), the adapter they were
+/// computed under, and the per-layer slab ids of its full blocks.
+#[derive(Debug, Clone)]
+struct PrefixEntry {
+    adapter: Option<u32>,
+    tokens: Vec<i32>,
+    /// `blocks[layer]` = slab ids of the prefix's full blocks.
+    blocks: Vec<Vec<usize>>,
+}
+
+/// FNV-1a over the adapter id and token ids — the content hash keying
+/// the shared-prefix index. Collisions are harmless: entries store the
+/// exact tokens and a bind verifies them before sharing anything.
+fn prefix_hash(adapter: Option<u32>, tokens: &[i32]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn eat(h: &mut u64, bytes: [u8; 4]) {
+        for b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(PRIME);
+        }
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    eat(&mut h, adapter.map_or([0xff; 4], |a| a.to_le_bytes()));
+    eat(&mut h, [adapter.is_some() as u8; 4]);
+    for &t in tokens {
+        eat(&mut h, t.to_le_bytes());
+    }
+    h
 }
 
 /// One sequence's handle into the store: per-layer block tables plus
@@ -349,6 +397,13 @@ pub struct KvStore {
     stats: KvStats,
     evictions: u64,
     spilled_early_blocks: u64,
+    /// Content-hash index of registered shareable prefixes
+    /// (deterministically ordered; entries are purged when their last
+    /// referencing block is freed).
+    prefix_index: BTreeMap<u64, PrefixEntry>,
+    prefix_hits: u64,
+    prefix_bound_tokens: u64,
+    cow_forks: u64,
 }
 
 impl KvStore {
@@ -368,6 +423,10 @@ impl KvStore {
             stats: KvStats::default(),
             evictions: 0,
             spilled_early_blocks: 0,
+            prefix_index: BTreeMap::new(),
+            prefix_hits: 0,
+            prefix_bound_tokens: 0,
+            cow_forks: 0,
             cfg,
         }
     }
@@ -409,23 +468,104 @@ impl KvStore {
         }
     }
 
-    /// Return a sequence's pages to the store: on-die row ranges and
-    /// slab slots are recycled for future sequences.
+    /// Return a sequence's pages to the store. Each block loses one
+    /// reference; a block's *last* reference frees it (on-die rows and
+    /// slab slot recycled) and purges any shared-prefix index entries
+    /// that pointed at it — so refcounts return to zero and nothing
+    /// leaks no matter how blocks were shared.
     pub fn retire_seq(&mut self, seq: &mut KvSeq) {
-        for table in &mut seq.tables {
-            for &id in table.iter() {
-                if let Some(block) = self.blocks[id].take() {
-                    if let Tier::OnDie { row_base } = block.tier {
-                        self.ondie_free.push(row_base);
-                        self.ondie_in_use -= 1;
-                    }
-                    self.free_ids.push(id);
-                }
+        for li in 0..seq.tables.len() {
+            let ids = std::mem::take(&mut seq.tables[li]);
+            for id in ids {
+                self.release_block(id);
             }
-            table.clear();
         }
         for l in &mut seq.lens {
             *l = 0;
+        }
+    }
+
+    /// Publish a sequence's full prefix blocks for reuse: every
+    /// block-aligned prefix of `tokens` (full blocks only — a partial
+    /// tail is never shareable) is entered into the content-hash index
+    /// keyed over (adapter, token ids). First writer wins: an
+    /// already-registered prefix is left untouched, so a coordinator
+    /// registering in slot order is deterministic at any thread width.
+    /// Registration moves no data and counts nothing.
+    pub fn register_prefix(&mut self, seq: &KvSeq, adapter: Option<u32>, tokens: &[i32]) {
+        let bt = self.cfg.block_tokens;
+        for k in 1..=tokens.len() / bt {
+            let n = k * bt;
+            if seq.lens.iter().any(|&l| l < n) || seq.tables.iter().any(|t| t.len() < k) {
+                return; // the store never saw these tokens appended
+            }
+            let key = prefix_hash(adapter, &tokens[..n]);
+            self.prefix_index.entry(key).or_insert_with(|| PrefixEntry {
+                adapter,
+                tokens: tokens[..n].to_vec(),
+                blocks: seq.tables.iter().map(|t| t[..k].to_vec()).collect(),
+            });
+        }
+    }
+
+    /// Bind the longest registered shared prefix of `tokens` into an
+    /// empty sequence: the matching full blocks are reference-counted
+    /// into this sequence's block tables — no data moves and nothing
+    /// is counted, because sharing changes placement bookkeeping,
+    /// never values. Returns the number of tokens bound (0 on a miss).
+    /// At most `tokens.len() - 1` tokens ever bind, so the caller
+    /// always recomputes at least the last prompt token (the serving
+    /// loop samples from its hidden state).
+    pub fn bind_prefix(&mut self, seq: &mut KvSeq, adapter: Option<u32>, tokens: &[i32]) -> usize {
+        assert!(seq.is_empty(), "bind_prefix requires a fresh sequence");
+        let bt = self.cfg.block_tokens;
+        if tokens.is_empty() {
+            return 0;
+        }
+        for k in (1..=(tokens.len() - 1) / bt).rev() {
+            let n = k * bt;
+            let Some(entry) = self.prefix_index.get(&prefix_hash(adapter, &tokens[..n])) else {
+                continue;
+            };
+            if entry.adapter != adapter || entry.tokens != tokens[..n] {
+                continue; // hash collision: not actually this prefix
+            }
+            let blocks = entry.blocks.clone();
+            for ids in &blocks {
+                for &id in ids {
+                    self.blocks[id]
+                        .as_mut()
+                        .expect("prefix index entries are purged when a block frees")
+                        .refs += 1;
+                }
+            }
+            for (layer, ids) in blocks.into_iter().enumerate() {
+                seq.tables[layer] = ids;
+                seq.lens[layer] = n;
+            }
+            self.prefix_hits += 1;
+            self.prefix_bound_tokens += n as u64;
+            return n;
+        }
+        0
+    }
+
+    /// Fork a sequence: the new handle shares every existing block
+    /// (reference-counted, partial tail included) and diverges via
+    /// copy-on-write on its first append into a shared block — the
+    /// multi-turn primitive: turn N+1 continues from turn N's KV
+    /// without copying anything up front.
+    pub fn fork_seq(&mut self, seq: &KvSeq) -> KvSeq {
+        for table in &seq.tables {
+            for &id in table {
+                if let Some(b) = self.blocks[id].as_mut() {
+                    b.refs += 1;
+                }
+            }
+        }
+        KvSeq {
+            tables: seq.tables.clone(),
+            lens: seq.lens.clone(),
         }
     }
 
@@ -476,7 +616,13 @@ impl KvStore {
             let id = self.alloc_block(bi * bt)?;
             seq.tables[layer].push(id);
         }
-        let id = seq.tables[layer][bi];
+        let mut id = seq.tables[layer][bi];
+        // copy-on-write: never mutate a block another sequence still
+        // references — fork a private copy first
+        if self.blocks[id].as_ref().ok_or(KvError::FreeBlock { id })?.refs > 1 {
+            id = self.fork_block(id)?;
+            seq.tables[layer][bi] = id;
+        }
         let block = self.blocks[id].as_mut().ok_or(KvError::FreeBlock { id })?;
         let slot = token - block.first_token;
         match &mut block.data {
@@ -588,7 +734,33 @@ impl KvStore {
             ondie_block_capacity: self.ondie_block_capacity(),
             quant_bits: self.cfg.quant.bits(),
             block_tokens: self.cfg.block_tokens,
+            prefix_hits: self.prefix_hits,
+            prefix_bound_tokens: self.prefix_bound_tokens,
+            cow_forks: self.cow_forks,
         }
+    }
+
+    /// Live (allocated) blocks in the slab — returns to zero once
+    /// every sequence is retired, however blocks were shared.
+    pub fn live_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Registered shared-prefix index entries (purged together with
+    /// their last referencing block).
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix_index.len()
+    }
+
+    /// Reference counts of a sequence's blocks, layer-major — the COW
+    /// property harness inspects sharing through this.
+    pub fn block_ref_counts(&self, seq: &KvSeq) -> Vec<u32> {
+        seq.tables
+            .iter()
+            .flat_map(|t| {
+                t.iter().map(|&id| self.blocks[id].as_ref().map_or(0, |b| b.refs))
+            })
+            .collect()
     }
 
     /// The on-die tier (for retention/energy inspection).
@@ -647,9 +819,15 @@ impl KvStore {
             first_token,
             len: 0,
             tier,
+            refs: 1,
             data,
         };
-        Ok(match self.free_ids.pop() {
+        Ok(self.insert_block(block))
+    }
+
+    /// Put a block into the slab, recycling a free slot if one exists.
+    fn insert_block(&mut self, block: KvBlock) -> usize {
+        match self.free_ids.pop() {
             Some(id) => {
                 self.blocks[id] = Some(block);
                 id
@@ -658,7 +836,61 @@ impl KvStore {
                 self.blocks.push(Some(block));
                 self.blocks.len() - 1
             }
-        })
+        }
+    }
+
+    /// Drop one reference to a slab block; the last reference frees it
+    /// (on-die rows and slab slot recycled) and purges shared-prefix
+    /// index entries that pointed at it.
+    fn release_block(&mut self, id: usize) {
+        let Some(block) = self.blocks[id].as_mut() else {
+            return;
+        };
+        if block.refs > 1 {
+            block.refs -= 1;
+            return;
+        }
+        let block = self.blocks[id].take().expect("checked live above");
+        if let Tier::OnDie { row_base } = block.tier {
+            self.ondie_free.push(row_base);
+            self.ondie_in_use -= 1;
+        }
+        self.free_ids.push(id);
+        self.prefix_index
+            .retain(|_, e| e.blocks.iter().all(|layer| !layer.contains(&id)));
+    }
+
+    /// Copy-on-write fork: clone a shared block into a private one
+    /// before a write lands. The copy traffic hits the destination
+    /// tier's byte/energy counters (its rows are written once), but
+    /// not the token-granular access stats — those count only
+    /// model-level appends and gathers, so sharing never perturbs the
+    /// Fig 5(b) accounting base.
+    fn fork_block(&mut self, id: usize) -> Result<usize, KvError> {
+        let (first_token, len, data) = {
+            let b = self.blocks[id].as_ref().ok_or(KvError::FreeBlock { id })?;
+            (b.first_token, b.len, b.data.clone())
+        };
+        let tier = self.place(first_token)?;
+        let bytes = self.cfg.bytes_per_token();
+        match tier {
+            Tier::OnDie { row_base } => {
+                for slot in 0..len {
+                    self.write_token_rows(row_base, slot, bytes);
+                }
+            }
+            Tier::External => self.dram.write(len as u64 * bytes),
+        }
+        let new_id = self.insert_block(KvBlock {
+            first_token,
+            len,
+            tier,
+            refs: 1,
+            data,
+        });
+        self.blocks[id].as_mut().ok_or(KvError::FreeBlock { id })?.refs -= 1;
+        self.cow_forks += 1;
+        Ok(new_id)
     }
 
     /// Early-token-on-die placement with eviction on overflow.
@@ -1138,6 +1370,111 @@ mod tests {
             Err(KvError::Retention(r)) => assert!(r.expired_for_s > 0.0),
             other => panic!("expected a typed retention error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn bind_prefix_shares_full_blocks_without_traffic() {
+        let mut store = KvStore::new(cfg()); // 4-token blocks, 2 layers
+        let mut donor = store.new_seq();
+        let prompt: Vec<i32> = (0..10).map(|t| (t * 3 + 1) as i32).collect();
+        fill(&mut store, &mut donor, 10, 23); // 2 full blocks + a partial tail
+        store.register_prefix(&donor, None, &prompt);
+        let before = store.stats();
+        let mut binder = store.new_seq();
+        let bound = store.bind_prefix(&mut binder, None, &prompt);
+        assert_eq!(bound, 8, "both full blocks bind; the tail recomputes");
+        assert_eq!(binder.len(0), 8);
+        let after = store.stats();
+        assert_eq!(after.accesses.ondie_writes, before.accesses.ondie_writes);
+        assert_eq!(after.accesses.external_writes, before.accesses.external_writes);
+        assert_eq!(after.prefix_hits, 1);
+        assert_eq!(after.prefix_bound_tokens, 8);
+        // the binder reads exactly the donor's rows
+        let (mut kd, mut vd) = (Vec::new(), Vec::new());
+        store.gather(&donor, 0, 8, false, &mut kd, &mut vd).unwrap();
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        store.gather(&binder, 0, 8, false, &mut kb, &mut vb).unwrap();
+        assert_eq!(kd, kb);
+        assert_eq!(vd, vb);
+        // the binder's tail appends land in a fresh private block
+        fill(&mut store, &mut binder, 2, 91);
+        assert_eq!(store.stats().cow_forks, 0, "block-aligned binds never fork");
+        // retiring in either order frees everything and purges the index
+        store.retire_seq(&mut donor);
+        assert!(store.prefix_entries() > 0, "binder keeps shared blocks alive");
+        store.retire_seq(&mut binder);
+        assert_eq!(store.live_blocks(), 0);
+        assert_eq!(store.prefix_entries(), 0);
+        assert_eq!(store.ondie_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn bind_prefix_always_leaves_the_last_prompt_token() {
+        // a prompt that is exactly 2 full blocks binds only 1: the
+        // caller must recompute at least the token it samples from
+        let mut store = KvStore::new(cfg());
+        let mut donor = store.new_seq();
+        let prompt: Vec<i32> = (0..8).map(|t| t as i32).collect();
+        fill(&mut store, &mut donor, 8, 5);
+        store.register_prefix(&donor, None, &prompt);
+        let mut binder = store.new_seq();
+        assert_eq!(store.bind_prefix(&mut binder, None, &prompt), 4);
+        // an adapter mismatch never shares
+        let mut other = store.new_seq();
+        assert_eq!(store.bind_prefix(&mut other, Some(1), &prompt), 0);
+        store.retire_seq(&mut donor);
+        store.retire_seq(&mut binder);
+        store.retire_seq(&mut other);
+        assert_eq!(store.live_blocks(), 0);
+    }
+
+    #[test]
+    fn forked_append_never_mutates_a_shared_block() {
+        let mut store = KvStore::new(cfg());
+        let mut a = store.new_seq();
+        fill(&mut store, &mut a, 6, 31); // block 0 full, block 1 half-filled
+        let mut b = store.fork_seq(&a);
+        assert!(store.block_ref_counts(&a).iter().all(|&r| r == 2));
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        store.gather(&a, 0, 6, false, &mut k1, &mut v1).unwrap();
+        fill(&mut store, &mut b, 2, 77); // token 6 lands in shared block 1
+        assert_eq!(
+            store.stats().cow_forks,
+            store.config().n_layers as u64,
+            "one fork per layer, then the private copy absorbs the rest"
+        );
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        store.gather(&a, 0, 6, false, &mut k2, &mut v2).unwrap();
+        assert_eq!(k1, k2, "a forked write must not touch the original");
+        assert_eq!(v1, v2);
+        store.retire_seq(&mut a);
+        store.retire_seq(&mut b);
+        assert_eq!(store.live_blocks(), 0);
+        assert_eq!(store.ondie_blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn eviction_of_a_shared_block_respects_refcounts() {
+        let mut store = KvStore::new(cfg());
+        let mut donor = store.new_seq();
+        let prompt: Vec<i32> = (0..5).map(|t| t as i32).collect();
+        fill(&mut store, &mut donor, 5, 41);
+        store.register_prefix(&donor, None, &prompt);
+        let mut binder = store.new_seq();
+        assert_eq!(store.bind_prefix(&mut binder, None, &prompt), 4);
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        store.gather(&binder, 0, 4, false, &mut k1, &mut v1).unwrap();
+        // demoting the donor demotes the shared block (tier move only):
+        // the binder still reads identical values through it
+        store.demote_seq(&donor).unwrap();
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        store.gather(&binder, 0, 4, false, &mut k2, &mut v2).unwrap();
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        assert!(store.block_ref_counts(&binder).iter().all(|&r| r == 2));
+        store.retire_seq(&mut donor);
+        store.retire_seq(&mut binder);
+        assert_eq!(store.live_blocks(), 0);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use bitrom::lora::AdapterRegistry;
 use bitrom::net::{install_sigint_latch, NetServer};
 use bitrom::report::{
     fig1a_report, fig5a_report, fig5b_report, fig5b_serving_report, gemv_perf_report,
-    lora_serving_report, table3_report,
+    lora_serving_report, prefix_serving_report, table3_report,
 };
 use bitrom::runtime::{HostBackend, InferenceBackend, Manifest};
 #[cfg(feature = "pjrt")]
@@ -67,6 +67,9 @@ fn print_help() {
          \x20 serve     run a synthetic request trace through the 6-stage pipeline\n\
          \x20           (--host serves offline on the fabricated HostBackend;\n\
          \x20           --adapters N serves N tenant LoRA adapters reload-free;\n\
+         \x20           --prefix-cache shares prompt-prefix KV blocks by content\n\
+         \x20           hash; --priority N + --preempt-policy reload|recompute\n\
+         \x20           schedule by class under memory pressure;\n\
          \x20           --listen ADDR opens the streaming HTTP front door —\n\
          \x20           POST /v1/completions streams tokens as NDJSON/SSE,\n\
          \x20           Ctrl-C drains in-flight sequences gracefully)\n\
@@ -74,7 +77,8 @@ fn print_help() {
          \x20           --adapter K binds tenant K's adapter)\n\
          \x20 report    print paper tables/figures (--table3 --fig1a --fig5a --fig5b\n\
          \x20           --fig5b-serving = Fig 5(b) measured on a real served trace;\n\
-         \x20           --lora-serving = adapter overhead + reload-vs-switch)\n\
+         \x20           --lora-serving = adapter overhead + reload-vs-switch;\n\
+         \x20           --prefix-serving = shared-prefix reduction vs private twin)\n\
          \x20 verify    replay the python golden trace and compare\n\
          \x20 info      artifact + config summary\n\n\
          Artifacts default to ./artifacts (override with BITROM_ARTIFACTS\n\
@@ -97,6 +101,9 @@ fn serve_trace_cfg(args: &Args, vocab: usize, n_adapters: usize) -> TraceConfig 
         gen_len_max: args.usize("gen"),
         arrival_rate: args.f64("rate"),
         burst_p: args.f64("burst-p"),
+        shared_prefix_len: args.usize("shared-prefix"),
+        turn_p: args.f64("turn-p"),
+        priority_classes: args.usize("priority"),
         seed: args.u64("seed"),
         vocab_size: vocab,
         n_adapters,
@@ -117,6 +124,8 @@ fn serve_cfg(args: &Args) -> ServeConfig {
         admit_pressure: args.f64("admit-pressure"),
         preempt_under_pressure: args.flag("preempt"),
         shed_after_s: args.f64("shed-after"),
+        prefix_cache: args.flag("prefix-cache"),
+        preempt_policy: args.str("preempt-policy").to_string(),
         ..ServeConfig::default()
     }
 }
@@ -203,12 +212,17 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("admit-pressure", "0", "defer admission above this on-die KV occupancy (0 = off)")
         .opt("shed-after", "0", "shed queued requests waiting longer than this (s; 0 = never)")
         .opt("burst-p", "0", "trace burst probability (arrival ties; stresses admission)")
+        .opt("shared-prefix", "0", "shared system-prompt tokens in the trace (0 = off)")
+        .opt("turn-p", "0", "multi-turn follow-up probability in the trace (0 = off)")
+        .opt("priority", "0", "trace priority classes (0 = off; higher class admits first)")
+        .opt("preempt-policy", "reload", "preemption KV policy: reload (swap out) or recompute")
         .opt("listen", "", "serve live over HTTP on this address (needs --host; e.g. 127.0.0.1:8080)")
         .opt("max-queue", "64", "admission queue depth before HTTP 429 (with --listen)")
         .opt("rate-limit", "0", "per-tenant request rate limit, req/s (with --listen; 0 = off)")
         .opt("trace-out", "", "export the request trace as NDJSON wire format to this file")
         .opt("trace-in", "", "replay requests from an NDJSON wire-format file instead of generating")
-        .flag("preempt", "demote the youngest slot's KV under pressure (with --admit-pressure)")
+        .flag("preempt", "preempt the lowest-priority slot under pressure (with --admit-pressure)")
+        .flag("prefix-cache", "share full prompt-prefix KV blocks by content hash (DESIGN.md §15)")
         .flag("host", "serve on the offline HostBackend (no artifacts/PJRT needed)")
         .flag("verbose", "per-request output");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
@@ -405,6 +419,7 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
         .flag("fig5b", "Fig 5(b) DRAM reduction grid (analytic)")
         .flag("fig5b-serving", "Fig 5(b) measured end-to-end on a served trace")
         .flag("lora-serving", "multi-tenant adapter overhead + reload-vs-switch, measured")
+        .flag("prefix-serving", "shared-prefix KV reduction vs private twin, measured")
         .flag("gemv", "host bitplane-vs-reference GEMV perf (timed, not in --all)")
         .flag("all", "everything except --gemv");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
@@ -415,6 +430,7 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
             || args.flag("fig5b")
             || args.flag("fig5b-serving")
             || args.flag("lora-serving")
+            || args.flag("prefix-serving")
             || args.flag("gemv"));
 
     // prefer the measured ROM sparsity if artifacts exist
@@ -439,6 +455,9 @@ fn cmd_report(argv: Vec<String>) -> anyhow::Result<()> {
     }
     if all || args.flag("lora-serving") {
         println!("{}", lora_serving_report());
+    }
+    if all || args.flag("prefix-serving") {
+        println!("{}", prefix_serving_report());
     }
     if args.flag("gemv") {
         // timed study — explicit opt-in only (quick mode)

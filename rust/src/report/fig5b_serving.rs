@@ -84,6 +84,7 @@ pub fn fig5b_serving_study(
                 .collect(),
             max_new_tokens: seq_len - prompt_len,
             adapter_id: None,
+            priority: 0,
         })
         .collect();
     let (done, metrics) = server.run_trace(reqs)?;

@@ -10,6 +10,7 @@ mod fig5b;
 mod fig5b_serving;
 mod gemv_perf;
 mod lora_serving;
+mod prefix_serving;
 mod table3;
 
 pub use fig1a::fig1a_report;
@@ -20,4 +21,7 @@ pub use gemv_perf::{
     gemv_perf_table, threads_speedup, GemmThreadsPoint, GemvPerfPoint, THREADS_SWEEP,
 };
 pub use lora_serving::{lora_serving_report, lora_serving_study, LoraServing};
+pub use prefix_serving::{
+    prefix_serving_report, prefix_serving_study, PrefixServing, FIG5B_MEASURED_BASELINE,
+};
 pub use table3::{table3_report, Table3Row};

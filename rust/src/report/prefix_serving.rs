@@ -1,0 +1,272 @@
+//! Shared-prefix serving ledger (DESIGN.md §15): the external-DRAM
+//! access reduction measured when identical prompts share their full
+//! prefix blocks by reference, next to the private-KV twin of the same
+//! trace and the analytic `KvCacheManager::bind_prefix` model.
+//!
+//! The gain channel is *capacity*, not skipped writes: binding a
+//! prefix frees on-die blocks, so a fleet whose private working set
+//! overspills the DR-eDRAM fits when it shares — early-token reads
+//! stay on-die instead of chasing spilled blocks across the external
+//! interface. Invariant 11 rides along: the shared run's tokens are
+//! asserted bit-identical to the private twin's.
+
+use crate::config::{EdramParams, ModelConfig, ServeConfig};
+use crate::coordinator::Server;
+use crate::energy::KvEnergy;
+use crate::kvcache::{KvCacheManager, KvStoreStats};
+use crate::runtime::HostBackend;
+use crate::trace::Request;
+use crate::util::table::{fmt_pct, Table};
+
+/// Fig 5(b) measured baseline (PR 3): the reduction a *private*
+/// full-length serve achieves at the paper's operating point. The
+/// shared-prefix ledger must land strictly above it.
+pub const FIG5B_MEASURED_BASELINE: f64 = 0.437;
+
+/// Outcome of the shared-prefix serving study: one donor plus two
+/// cache-hit binders, served twice (prefix cache on / off) through a
+/// deliberately tight DR-eDRAM.
+#[derive(Debug, Clone)]
+pub struct PrefixServing {
+    /// Requests served (1 donor + the binders).
+    pub requests: usize,
+    /// Common prompt length of every request.
+    pub prompt_len: usize,
+    /// Tokens bound per cache hit (full blocks only).
+    pub bound_tokens: usize,
+    /// Prefix-cache hits observed by the store.
+    pub prefix_hits: u64,
+    /// Measured reduction with the prefix cache on.
+    pub measured_shared: f64,
+    /// Measured reduction of the private-KV twin (same trace, cache
+    /// off) — the capacity-starved baseline.
+    pub measured_private: f64,
+    /// The analytic manager's value for the shared run.
+    pub analytic_shared: f64,
+    /// Whether the shared run's tokens were bit-identical to the
+    /// private twin's (invariant 11).
+    pub tokens_match: bool,
+    /// Store statistics of the shared run.
+    pub kv_shared: KvStoreStats,
+    /// Store statistics of the private twin.
+    pub kv_private: KvStoreStats,
+}
+
+/// The study's fixed operating point: `sim-tiny`, sequences of 64 with
+/// 24 early tokens buffered, a 17-token common prompt (16 tokens — two
+/// full blocks — bindable), and a DR-eDRAM sized to exactly 40 blocks:
+/// three private working sets (54 early blocks) overspill it, the
+/// shared fleet (30) fits.
+const SEQ_LEN: usize = 64;
+const ONDIE_TOKENS: usize = 24;
+const PROMPT_LEN: usize = 17;
+const N_REQUESTS: usize = 3;
+const EDRAM_BYTES: u64 = 43_520;
+
+fn serve_config(prefix_cache: bool, seed: u64) -> ServeConfig {
+    ServeConfig {
+        max_batches: N_REQUESTS,
+        prefill_len: PROMPT_LEN,
+        max_seq: SEQ_LEN,
+        ondie_tokens: ONDIE_TOKENS,
+        kv_edram_bytes: EDRAM_BYTES,
+        prefix_cache,
+        seed,
+        ..ServeConfig::default()
+    }
+}
+
+fn trace() -> Vec<Request> {
+    // identical prompts; the donor arrives first, the binders a round
+    // later (same-round admissions never share — DESIGN.md §15)
+    let prompt: Vec<i32> = (0..PROMPT_LEN).map(|t| ((t * 7 + 13) % 256) as i32).collect();
+    (0..N_REQUESTS)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_s: if i == 0 { 0.0 } else { 0.005 + i as f64 * 0.001 },
+            prompt: prompt.clone(),
+            max_new_tokens: SEQ_LEN - PROMPT_LEN,
+            adapter_id: None,
+            priority: 0,
+        })
+        .collect()
+}
+
+/// The analytic face of the same fleet: drive the
+/// [`KvCacheManager`] twin (donor writes everything; binders bind two
+/// blocks and write only the 48-token tail) and read the reduction off
+/// its access counters.
+fn analytic_shared() -> f64 {
+    let model = ModelConfig::sim_tiny();
+    let serve = serve_config(true, 0);
+    let mut twin = KvCacheManager::new(&model, &serve, EdramParams::default());
+    let bound = (PROMPT_LEN - 1) / serve.kv_block_tokens * serve.kv_block_tokens;
+    let tbt = serve.hw_tbt_s;
+    let mut now = 0.0;
+    twin.start_seq(0);
+    twin.prefill(0, PROMPT_LEN, now);
+    for _ in 0..SEQ_LEN - PROMPT_LEN {
+        now += tbt;
+        twin.write_token(0, now);
+        twin.read_context(0, now).expect("analytic twin retention");
+    }
+    for slot in 1..N_REQUESTS {
+        twin.start_seq(slot);
+        twin.bind_prefix(slot, 0, bound);
+        now += tbt;
+        twin.prefill(slot, PROMPT_LEN - bound, now);
+        for _ in 0..SEQ_LEN - PROMPT_LEN {
+            now += tbt;
+            twin.write_token(slot, now);
+            twin.read_context(slot, now).expect("analytic twin retention");
+        }
+    }
+    twin.stats.external_reduction()
+}
+
+/// Serve the fleet twice — prefix cache on, then the private twin —
+/// and measure both reductions plus the analytic value. Deterministic
+/// per seed.
+pub fn prefix_serving_study(seed: u64) -> anyhow::Result<PrefixServing> {
+    let model = ModelConfig::sim_tiny();
+    let run = |prefix_cache: bool| -> anyhow::Result<(Vec<(u64, Vec<i32>)>, KvStoreStats)> {
+        let backend = HostBackend::new(model.clone(), seed)?;
+        let mut server = Server::new(backend, serve_config(prefix_cache, seed))?;
+        let (done, metrics) = server.run_trace(trace())?;
+        anyhow::ensure!(done.len() == N_REQUESTS, "trace did not complete");
+        let kv = metrics.kv.clone().expect("host backend measures KV stats");
+        let mut tokens: Vec<(u64, Vec<i32>)> =
+            done.into_iter().map(|d| (d.id, d.tokens)).collect();
+        tokens.sort();
+        Ok((tokens, kv))
+    };
+    let (shared_tokens, kv_shared) = run(true)?;
+    let (private_tokens, kv_private) = run(false)?;
+    let bound = (PROMPT_LEN - 1) / 8 * 8;
+    Ok(PrefixServing {
+        requests: N_REQUESTS,
+        prompt_len: PROMPT_LEN,
+        bound_tokens: bound,
+        prefix_hits: kv_shared.prefix_hits,
+        measured_shared: kv_shared.external_reduction(),
+        measured_private: kv_private.external_reduction(),
+        analytic_shared: analytic_shared(),
+        tokens_match: shared_tokens == private_tokens,
+        kv_shared,
+        kv_private,
+    })
+}
+
+/// Render the shared-prefix serving ledger: measured shared vs the
+/// private twin vs the analytic model, on top of the Fig 5(b)
+/// measured baseline.
+pub fn prefix_serving_report() -> String {
+    let r = match prefix_serving_study(0x9F1C) {
+        Ok(r) => r,
+        Err(e) => return format!("prefix_serving failed: {e:#}\n"),
+    };
+    let e_shared = KvEnergy::from_stats(&r.kv_shared);
+    let e_private = KvEnergy::from_stats(&r.kv_private);
+    let mut t = Table::new(&format!(
+        "Shared-prefix serving — external DRAM reduction, {} requests sharing a \
+         {}-token prompt ({} tokens bound per hit), seq {}, {} B DR-eDRAM",
+        r.requests, r.prompt_len, r.bound_tokens, SEQ_LEN, EDRAM_BYTES
+    ))
+    .header(&["quantity", "prefix cache on", "private twin", "analytic"]);
+    t.row(&[
+        "external reduction".into(),
+        fmt_pct(r.measured_shared),
+        fmt_pct(r.measured_private),
+        fmt_pct(r.analytic_shared),
+    ]);
+    t.row(&[
+        "on-die / external accesses".into(),
+        format!(
+            "{} / {}",
+            r.kv_shared.accesses.ondie_reads + r.kv_shared.accesses.ondie_writes,
+            r.kv_shared.accesses.external_accesses()
+        ),
+        format!(
+            "{} / {}",
+            r.kv_private.accesses.ondie_reads + r.kv_private.accesses.ondie_writes,
+            r.kv_private.accesses.external_accesses()
+        ),
+        "—".into(),
+    ]);
+    t.row(&[
+        "KV energy (external)".into(),
+        format!("{:.3e} J", e_shared.external_j),
+        format!("{:.3e} J", e_private.external_j),
+        "—".into(),
+    ]);
+    let mut out = t.render();
+    out.push_str(&format!(
+        "prefix hits {} ({} tokens bound); early-block spills {} (shared) vs {} (private); \
+         external energy saved vs twin {}; tokens bit-identical to the private twin: {}; \
+         Fig 5(b) measured baseline {} — shared serving clears it by {:.1} pp\n",
+        r.prefix_hits,
+        r.kv_shared.prefix_bound_tokens,
+        r.kv_shared.spilled_early_blocks + r.kv_shared.evictions,
+        r.kv_private.spilled_early_blocks + r.kv_private.evictions,
+        fmt_pct(e_shared.external_savings_vs(&e_private)),
+        r.tokens_match,
+        fmt_pct(FIG5B_MEASURED_BASELINE),
+        (r.measured_shared - FIG5B_MEASURED_BASELINE) * 100.0,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_prefix_reduction_beats_the_fig5b_baseline() {
+        let r = prefix_serving_study(0x9F1C).unwrap();
+        // invariant 11: sharing changed placement, never tokens
+        assert!(r.tokens_match, "shared run diverged from its private twin");
+        // both binders hit the donor's registration
+        assert_eq!(r.prefix_hits, 2, "stats: {:?}", r.kv_shared);
+        assert_eq!(r.kv_shared.prefix_bound_tokens, 32);
+        // the acceptance gate: measured shared reduction clears the
+        // PR 3 Fig 5(b) measured baseline (43.7%) AND the
+        // capacity-starved private twin of the very same trace
+        assert!(
+            r.measured_shared > FIG5B_MEASURED_BASELINE,
+            "shared {} <= baseline",
+            r.measured_shared
+        );
+        assert!(
+            r.measured_shared > r.measured_private,
+            "shared {} <= private {}",
+            r.measured_shared,
+            r.measured_private
+        );
+        // the private fleet overspilled the tight eDRAM; the shared
+        // fleet fit (that is the entire gain channel)
+        assert!(r.kv_private.spilled_early_blocks + r.kv_private.evictions > 0);
+        assert_eq!(r.kv_shared.spilled_early_blocks, 0);
+        assert_eq!(r.kv_shared.evictions, 0);
+    }
+
+    #[test]
+    fn measured_shared_tracks_the_analytic_twin() {
+        // satellite: the manager's shared-prefix accounting lands
+        // within a percentage point of the store-measured run
+        let r = prefix_serving_study(0x9F1C).unwrap();
+        assert!(
+            (r.measured_shared - r.analytic_shared).abs() < 0.01,
+            "measured {} vs analytic {}",
+            r.measured_shared,
+            r.analytic_shared
+        );
+    }
+
+    #[test]
+    fn report_renders_all_three_columns() {
+        let s = prefix_serving_report();
+        assert!(s.contains("prefix cache on"), "{s}");
+        assert!(s.contains("private twin"), "{s}");
+        assert!(s.contains("tokens bit-identical to the private twin: true"), "{s}");
+    }
+}

@@ -184,6 +184,29 @@ pub trait InferenceBackend {
         Ok(0)
     }
 
+    /// Bind the longest shared KV prefix of `prompt` already published
+    /// in this backend's store into a *fresh* sequence (content-hash
+    /// full-block match, reference-counted — DESIGN.md §15). Returns
+    /// how many prompt tokens were bound; the caller prefills only the
+    /// unshared tail `prompt[bound..]`. Binding must never change
+    /// values — only which pages a sequence's tables point at — and at
+    /// most `prompt.len() - 1` tokens bind, so the sampled last prompt
+    /// token is always recomputed. Backends without a host-side store
+    /// keep the miss default.
+    fn bind_prefix_kv(&self, _state: &mut Self::State, _prompt: &[i32]) -> Result<usize> {
+        Ok(0)
+    }
+
+    /// Publish this sequence's full prompt-prefix blocks for reuse by
+    /// later sequences with the same (adapter, prompt-prefix) content.
+    /// Called by the coordinator in slot order after a prefill
+    /// completes; first writer wins, so registration order — and hence
+    /// sharing — is deterministic at any thread width. Backends
+    /// without a host-side store keep the no-op default.
+    fn register_prefix_kv(&self, _state: &mut Self::State, _prompt: &[i32]) -> Result<()> {
+        Ok(())
+    }
+
     /// Bind a tenant's LoRA adapter (or `None` for the frozen base
     /// model) to a fresh sequence, *before* its prefill runs — the
     /// adapter shapes every projection the sequence executes, so a

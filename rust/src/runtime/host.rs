@@ -655,6 +655,25 @@ impl InferenceBackend for HostBackend {
         Ok(store.demote_seq(&state.kv)?)
     }
 
+    /// Bind the longest registered shared prefix of `prompt` under the
+    /// sequence's bound adapter ([`KvStore::bind_prefix`]). Values
+    /// cannot change: the model has no positional encoding term and KV
+    /// rows are write-once (invariant 4), so a donor's stored rows for
+    /// the same (adapter, prompt-prefix) are bit-identical to what
+    /// this sequence's own prefill would have written.
+    fn bind_prefix_kv(&self, state: &mut HostState, prompt: &[i32]) -> Result<usize> {
+        let mut store = state.store.lock().expect("KV store lock poisoned");
+        Ok(store.bind_prefix(&mut state.kv, state.adapter, prompt))
+    }
+
+    /// Publish this sequence's full prompt-prefix blocks
+    /// ([`KvStore::register_prefix`]); keyed under its bound adapter.
+    fn register_prefix_kv(&self, state: &mut HostState, prompt: &[i32]) -> Result<()> {
+        let mut store = state.store.lock().expect("KV store lock poisoned");
+        store.register_prefix(&state.kv, state.adapter, prompt);
+        Ok(())
+    }
+
     /// Point the sequence at a tenant adapter (validated against the
     /// registry, which also accounts the task switch: a cold load
     /// streams the adapter's quantized bytes once, a resident bind
@@ -715,9 +734,14 @@ impl InferenceBackend for HostBackend {
         anyhow::ensure!(part < self.n_partitions(), "partition {part} out of range");
         anyhow::ensure!(!h.is_empty(), "empty prefill hidden");
         let lpp = self.model.layers_per_partition();
-        let mut rows = self.layer_rows(part * lpp, h, state, 0, true)?;
-        for li in part * lpp + 1..(part + 1) * lpp {
-            rows = self.layer_rows(li, &rows, state, 0, true)?;
+        let first = part * lpp;
+        // A fresh sequence starts at 0; a sequence that bound a shared
+        // prefix already holds that many rows in *every* layer, so its
+        // prefill appends (and attends) after them — tail-only prefill.
+        let base = state.kv.len(first);
+        let mut rows = self.layer_rows(first, h, state, base, true)?;
+        for li in first + 1..(part + 1) * lpp {
+            rows = self.layer_rows(li, &rows, state, base, true)?;
         }
         Ok(rows)
     }
@@ -977,6 +1001,37 @@ mod tests {
         let (a, b) = (plain.kv_stats().unwrap(), reserved.kv_stats().unwrap());
         assert_eq!(a.accesses.ondie_writes, b.accesses.ondie_writes);
         assert_eq!(a.accesses.external_writes, b.accesses.external_writes);
+    }
+
+    #[test]
+    fn bound_prefix_prefill_matches_plain_prefill() {
+        // a binder that reuses a donor's full-block prefix KV and
+        // prefills only the unshared tail must land on the same logits
+        let b = HostBackend::new(micro(), 23).unwrap();
+        let prompt = [9, 4, 2, 30, 7, 11, 3, 8, 1]; // 8-token block + 1 tail token
+        let mut donor = b.new_state().unwrap();
+        let mut h = b.embed_prompt(&prompt).unwrap();
+        for part in 0..b.n_partitions() {
+            h = b.run_partition_prefill(part, &h, &mut donor).unwrap();
+        }
+        let l_donor = b.head_at(&h, prompt.len() - 1).unwrap();
+        b.register_prefix_kv(&mut donor, &prompt).unwrap();
+
+        let mut binder = b.new_state().unwrap();
+        let bound = b.bind_prefix_kv(&mut binder, &prompt).unwrap();
+        assert_eq!(bound, 8, "the full block binds; the tail recomputes");
+        let before = b.kv_stats().unwrap();
+        let mut h = b.embed_prompt(&prompt[bound..]).unwrap();
+        for part in 0..b.n_partitions() {
+            h = b.run_partition_prefill(part, &h, &mut binder).unwrap();
+        }
+        let l_bind = b.head_at(&h, prompt.len() - 1 - bound).unwrap();
+        assert_eq!(l_donor, l_bind, "binding a shared prefix changed logits");
+        let after = b.kv_stats().unwrap();
+        let wrote = (after.accesses.ondie_writes + after.accesses.external_writes)
+            - (before.accesses.ondie_writes + before.accesses.external_writes);
+        assert_eq!(wrote, 2, "only the tail token wrote KV (one row per layer)");
+        assert_eq!(after.prefix_hits, 1);
     }
 
     fn micro_registry(n_adapters: usize, seed: u64) -> AdapterRegistry {

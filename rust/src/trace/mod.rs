@@ -26,6 +26,11 @@ pub struct Request {
     /// frozen base model). Bound per sequence before prefill via
     /// `runtime::InferenceBackend::bind_adapter`.
     pub adapter_id: Option<u32>,
+    /// Priority class (higher = more urgent; 0 = the default class).
+    /// Orders admission within a tenant queue and shields the request
+    /// from preemption — scheduling only, never tokens (DESIGN.md
+    /// invariant 11).
+    pub priority: u8,
 }
 
 impl Request {
@@ -45,6 +50,9 @@ impl Request {
         ];
         if let Some(a) = self.adapter_id {
             fields.push(("adapter_id", Json::num(a as f64)));
+        }
+        if self.priority > 0 {
+            fields.push(("priority", Json::num(self.priority as f64)));
         }
         Json::obj(fields)
     }
@@ -73,6 +81,11 @@ impl Request {
                 .and_then(Json::as_usize)
                 .context("request needs max_new_tokens")?,
             adapter_id: j.get("adapter_id").and_then(Json::as_i64).map(|v| v as u32),
+            priority: j
+                .get("priority")
+                .and_then(Json::as_i64)
+                .unwrap_or(0)
+                .clamp(0, 255) as u8,
         })
     }
 }
@@ -130,6 +143,30 @@ pub struct TraceConfig {
     /// keeps the trace byte-identical to one from a build without
     /// burst support.
     pub burst_p: f64,
+    /// Shared system-prompt length: when > 0, every request's first
+    /// `shared_prefix_len` prompt tokens are overwritten with one of
+    /// [`TraceConfig::shared_prefixes`] fixed system prompts (chat
+    /// workloads where many conversations open with the same
+    /// instructions — the prefix-cache hit population). Must stay
+    /// below `prompt_len_min` so every request keeps a private tail.
+    /// 0 disables the knob and the trace is byte-identical to one from
+    /// a build without prefix support (DESIGN.md invariant 7).
+    pub shared_prefix_len: usize,
+    /// Number of distinct shared system prompts to rotate across
+    /// (only read when `shared_prefix_len > 0`; values below 1 are
+    /// treated as 1).
+    pub shared_prefixes: usize,
+    /// Multi-turn probability: with probability `turn_p` a request is
+    /// a follow-up turn — its prompt is the previous request's full
+    /// prompt (truncated to fit `prompt_len_max`) with this request's
+    /// drawn tokens appended as the new turn. 0 disables the knob with
+    /// zero extra draws.
+    pub turn_p: f64,
+    /// Priority classes: when > 1, each request draws a uniform
+    /// priority in `0..priority_classes` (higher = more urgent).
+    /// 0 or 1 disables the knob with zero extra draws and every
+    /// request stays in the default class 0.
+    pub priority_classes: usize,
     /// Generator seed.
     pub seed: u64,
 }
@@ -146,6 +183,10 @@ impl Default for TraceConfig {
             arrival_rate: 0.0,
             n_adapters: 0,
             burst_p: 0.0,
+            shared_prefix_len: 0,
+            shared_prefixes: 1,
+            turn_p: 0.0,
+            priority_classes: 0,
             seed: 1,
         }
     }
@@ -155,9 +196,28 @@ impl Default for TraceConfig {
 pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
     assert!(cfg.prompt_len_min >= 1 && cfg.prompt_len_min <= cfg.prompt_len_max);
     assert!(cfg.gen_len_min >= 1 && cfg.gen_len_min <= cfg.gen_len_max);
+    assert!(
+        cfg.shared_prefix_len < cfg.prompt_len_min.max(1),
+        "shared_prefix_len must leave every request a private tail"
+    );
+    // shared system prompts come from a derived stream so enabling the
+    // knob never perturbs the per-request draws below (invariant 7)
+    let prefixes: Vec<Vec<i32>> = if cfg.shared_prefix_len > 0 {
+        let mut prng = Rng::new(cfg.seed ^ 0x5e1f_9afe);
+        (0..cfg.shared_prefixes.max(1))
+            .map(|_| {
+                (0..cfg.shared_prefix_len)
+                    .map(|_| prng.usize(0, cfg.vocab_size - 1) as i32)
+                    .collect()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
     let mut rng = Rng::new(cfg.seed);
     let mut t = 0.0f64;
     let mut prev_arrival = 0.0f64;
+    let mut prev_prompt: Vec<i32> = Vec::new();
     (0..cfg.n_requests)
         .map(|i| {
             if cfg.arrival_rate > 0.0 {
@@ -180,13 +240,33 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
                 } else {
                     None
                 },
+                priority: 0,
             };
             // the burst draw comes after everything else, same pattern:
             // burst_p == 0 consumes exactly the pre-burst stream
             if cfg.burst_p > 0.0 && rng.bool(cfg.burst_p) && i > 0 {
                 req.arrival_s = prev_arrival;
             }
+            // prefix / turn / priority draws follow the same
+            // conditional-last discipline: a disabled knob consumes
+            // zero draws, so the pre-knob stream is untouched
+            if cfg.shared_prefix_len > 0 {
+                let p = &prefixes[rng.usize(0, prefixes.len() - 1)];
+                req.prompt[..p.len()].copy_from_slice(p);
+            }
+            if cfg.turn_p > 0.0 && rng.bool(cfg.turn_p) && !prev_prompt.is_empty() {
+                let keep = prev_prompt
+                    .len()
+                    .min(cfg.prompt_len_max - req.prompt.len());
+                let mut turn = prev_prompt[..keep].to_vec();
+                turn.extend_from_slice(&req.prompt);
+                req.prompt = turn;
+            }
+            if cfg.priority_classes > 1 {
+                req.priority = rng.usize(0, cfg.priority_classes - 1) as u8;
+            }
             prev_arrival = req.arrival_s;
+            prev_prompt.clone_from(&req.prompt);
             req
         })
         .collect()
@@ -299,6 +379,96 @@ mod tests {
     }
 
     #[test]
+    fn prefix_turn_priority_knobs_do_not_perturb_prior_draws() {
+        // each new knob draws conditionally-last, so request i's
+        // arrival / prompt shape / budget match the knob-free trace;
+        // the shared prefix only overwrites the prompt head in place
+        let base = generate(&TraceConfig::default());
+        let with = generate(&TraceConfig {
+            shared_prefix_len: 6,
+            shared_prefixes: 2,
+            turn_p: 0.0,
+            priority_classes: 3,
+            ..TraceConfig::default()
+        });
+        for (b, w) in base.iter().zip(&with) {
+            assert_eq!(b.prompt.len(), w.prompt.len());
+            assert_eq!(b.prompt[6..], w.prompt[6..], "tail stays private");
+            assert_eq!(b.max_new_tokens, w.max_new_tokens);
+            assert_eq!(b.arrival_s, w.arrival_s);
+        }
+    }
+
+    #[test]
+    fn shared_prefixes_stamp_a_common_prompt_head() {
+        let cfg = TraceConfig {
+            n_requests: 32,
+            shared_prefix_len: 6,
+            shared_prefixes: 2,
+            ..TraceConfig::default()
+        };
+        let reqs = generate(&cfg);
+        let mut heads: Vec<Vec<i32>> = Vec::new();
+        for r in &reqs {
+            let h = r.prompt[..6].to_vec();
+            if !heads.contains(&h) {
+                heads.push(h);
+            }
+        }
+        assert_eq!(heads.len(), 2, "32 draws over 2 system prompts hit both");
+        // determinism: the prefix pool is seed-derived
+        assert_eq!(reqs, generate(&cfg));
+    }
+
+    #[test]
+    fn multi_turn_prompts_extend_the_previous_conversation() {
+        let cfg = TraceConfig {
+            n_requests: 32,
+            prompt_len_min: 4,
+            prompt_len_max: 64,
+            turn_p: 0.7,
+            ..TraceConfig::default()
+        };
+        let base = generate(&TraceConfig { turn_p: 0.0, ..cfg.clone() });
+        let with = generate(&cfg);
+        let mut follow_ups = 0;
+        for i in 0..with.len() {
+            // the drawn tokens always survive as the newest turn
+            assert!(with[i].prompt.ends_with(&base[i].prompt));
+            assert!(with[i].prompt.len() <= cfg.prompt_len_max);
+            if with[i].prompt.len() > base[i].prompt.len() {
+                let keep = with[i].prompt.len() - base[i].prompt.len();
+                assert_eq!(
+                    with[i].prompt[..keep],
+                    with[i - 1].prompt[..keep],
+                    "a follow-up turn opens with its conversation so far"
+                );
+                follow_ups += 1;
+            }
+        }
+        assert!(follow_ups > 0, "p=0.7 over 32 requests must produce turns");
+    }
+
+    #[test]
+    fn priority_classes_cover_the_range() {
+        let cfg = TraceConfig {
+            n_requests: 64,
+            priority_classes: 3,
+            ..TraceConfig::default()
+        };
+        let reqs = generate(&cfg);
+        let mut seen = [false; 3];
+        for r in &reqs {
+            assert!((r.priority as usize) < 3);
+            seen[r.priority as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 draws must hit all 3 classes");
+        // priority survives the wire round trip, omitted when 0
+        let back = import_ndjson(&export_ndjson(&reqs)).unwrap();
+        assert_eq!(back, reqs);
+    }
+
+    #[test]
     fn ndjson_round_trips_generated_traces() {
         // mixed tenants + Poisson arrivals: every field survives the
         // wire format, including the absent-vs-present adapter_id
@@ -315,9 +485,11 @@ mod tests {
         let back = import_ndjson(&wire).unwrap();
         assert_eq!(back, reqs);
 
-        // base-model requests leave adapter_id off the wire entirely
+        // base-model, default-class requests leave adapter_id and
+        // priority off the wire entirely
         let plain = generate(&TraceConfig::default());
         assert!(!export_ndjson(&plain).contains("adapter_id"));
+        assert!(!export_ndjson(&plain).contains("priority"));
         assert_eq!(import_ndjson(&export_ndjson(&plain)).unwrap(), plain);
     }
 
@@ -328,6 +500,7 @@ mod tests {
         assert_eq!(r.id, 0);
         assert_eq!(r.arrival_s, 0.0);
         assert_eq!(r.adapter_id, None);
+        assert_eq!(r.priority, 0);
         assert_eq!(r.prompt, vec![1, 2, 3]);
 
         let no_prompt = Json::parse(r#"{"max_new_tokens":4}"#).unwrap();

@@ -11,6 +11,12 @@
 //! the harness prints the failing case seed for deterministic replay
 //! (`util::check`). `BITROM_FUZZ_CASES` bounds the case count (CI
 //! quick mode keeps it small).
+//!
+//! The grammar also spans the shared-prefix cache and the
+//! fairness/preemption scheduler (DESIGN.md §15): prompts may share
+//! pool prefixes, the prefix cache and either preemption policy may be
+//! on, and priority classes may be drawn — none of which may change a
+//! completed request's tokens (invariant 11), even mid-storm.
 
 use bitrom::config::{ModelConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, FaultMetrics, ServeMetrics, Server};
@@ -44,21 +50,29 @@ fn any_fault_schedule_recovers_or_sheds_typed() {
     check(0xFA01, fuzz_cases(), |g| {
         // random workload — closed batch (every arrival at t = 0), so
         // admission order is structural and the faulted run is exactly
-        // reproducible at any pool width
+        // reproducible at any pool width. Prompts may share a pool
+        // prefix of at least one block, and priority classes may be in
+        // play (scheduling only — invariant 11).
+        let spl = if g.f64() < 0.5 { 0 } else { 4 + g.usize(0, 6) };
         let trace_cfg = TraceConfig {
             n_requests: g.size(6),
-            prompt_len_min: 2,
-            prompt_len_max: 2 + g.size(10),
+            prompt_len_min: spl + 2,
+            prompt_len_max: spl + 2 + g.size(10),
             gen_len_min: 2,
             gen_len_max: 2 + g.size(8),
             vocab_size: ModelConfig::sim_tiny().vocab_size,
             arrival_rate: 0.0,
+            shared_prefix_len: spl,
+            shared_prefixes: 1 + g.usize(0, 1),
+            priority_classes: g.usize(0, 3),
             seed: g.rng.next_u64(),
             ..TraceConfig::default()
         };
         // random fault schedule + degradation policy: storms that may
         // or may not cross tREF, transient faults, a sometimes-starved
         // on-die tier, sometimes pressure-gated admission / preemption
+        // (either KV policy), sometimes a live prefix cache over a
+        // smaller page size so shared blocks sit in the blast radius
         let pressure_on = g.f64() < 0.5;
         let faulted = ServeConfig {
             max_batches: g.usize(1, 4),
@@ -69,13 +83,19 @@ fn any_fault_schedule_recovers_or_sheds_typed() {
             retry_max: g.usize(2, 6),
             admit_pressure: if pressure_on { 0.5 + 0.5 * g.f64() } else { 0.0 },
             preempt_under_pressure: pressure_on && g.f64() < 0.5,
+            preempt_policy: if g.f64() < 0.5 { "reload" } else { "recompute" }.to_string(),
+            prefix_cache: g.f64() < 0.5,
+            kv_block_tokens: [4usize, 8][g.usize(0, 1)],
             kv_edram_bytes: if g.f64() < 0.3 { 1 << 16 } else { 13_500_000 },
             ..ServeConfig::default()
         };
+        // the twin shares the workload and geometry but runs fault-free
+        // with private KV and no scheduling pressure
         let clean = ServeConfig {
             fault_seed: 0,
             admit_pressure: 0.0,
             preempt_under_pressure: false,
+            prefix_cache: false,
             ..faulted.clone()
         };
         let reqs = generate(&trace_cfg);
@@ -147,6 +167,64 @@ fn any_fault_schedule_recovers_or_sheds_typed() {
             );
             prop_assert_eq!(m.requests_done, m_t.requests_done);
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn retention_storms_expire_shared_blocks_and_every_reader_recovers() {
+    // certain per-round clock skips past tREF expire on-die rows that
+    // multiple sequences read through shared prefix blocks: every
+    // reader must recompute privately (a recovery re-prefill never
+    // binds) and land bit-identical to the cache-off, storm-free twin
+    check(0xFA03, fuzz_cases().min(4), |g| {
+        let spl = 8; // one full default block shared by every prompt
+        let max_batches = g.usize(2, 3);
+        let trace_cfg = TraceConfig {
+            n_requests: max_batches + 2,
+            prompt_len_min: spl + 1,
+            prompt_len_max: spl + 2 + g.size(4),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(4),
+            vocab_size: ModelConfig::sim_tiny().vocab_size,
+            arrival_rate: 0.0,
+            shared_prefix_len: spl,
+            shared_prefixes: 1,
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        let stormy = ServeConfig {
+            max_batches,
+            prefix_cache: true,
+            fault_seed: g.rng.next_u64() | 1,
+            fault_storm_p: 1.0,
+            fault_transient_p: 0.0,
+            fault_clock_skip_s: 0.1,
+            retry_max: 16,
+            ..ServeConfig::default()
+        };
+        let clean = ServeConfig {
+            fault_seed: 0,
+            prefix_cache: false,
+            ..stormy.clone()
+        };
+        let reqs = generate(&trace_cfg);
+        let (base, _) = run(reqs.clone(), clean).map_err(|e| format!("clean twin: {e:#}"))?;
+        prop_assert_eq!(base.len(), reqs.len());
+        let (done, m) = run(reqs, stormy).map_err(|e| format!("stormy run: {e:#}"))?;
+        prop_assert_eq!(done.len(), base.len());
+        for (a, b) in base.iter().zip(&done) {
+            prop_assert!(
+                a.id == b.id && a.tokens == b.tokens,
+                "request {} diverged after a shared-block expiry",
+                a.id
+            );
+        }
+        prop_assert!(m.faults.retention_events > 0, "certain storms never expired a row");
+        prop_assert!(m.faults.recomputes > 0, "expiries must recover by recompute");
+        let kv = m.kv.clone().ok_or("host backend must measure KV stats")?;
+        // sharing really happened before the storms tore it down
+        prop_assert!(kv.prefix_hits >= 1, "queued admissions never bound the pool prefix");
         Ok(())
     });
 }

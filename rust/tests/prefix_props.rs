@@ -1,0 +1,419 @@
+//! Property harness for shared-prefix KV caching (DESIGN.md §15,
+//! invariant 11): under seeded random geometries (block size × eDRAM
+//! capacity × eviction pressure × quantization) and random traces,
+//!
+//! * a shared-prefix serve is byte-identical to its private-KV twin at
+//!   1/2/4 worker threads;
+//! * reference counts return to zero after `retire_seq` in any order
+//!   (no leaked blocks, no stale prefix-index entries);
+//! * a copy-on-write fork never mutates a block another sequence
+//!   still reads;
+//! * eviction/demotion of a shared block is a tier move only — every
+//!   reader keeps seeing the same bytes;
+//! * the fairness/preemption scheduler (priorities, admission
+//!   pressure, either preempt policy) changes placement and timing,
+//!   never tokens.
+//!
+//! Failures print the case seed for deterministic replay
+//! (`util::check`); `BITROM_FUZZ_CASES` bounds the case count.
+
+use bitrom::config::{EdramParams, ModelConfig, ServeConfig};
+use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
+use bitrom::dram::DramParams;
+use bitrom::kvcache::{KvQuant, KvSeq, KvStore, KvStoreConfig};
+use bitrom::runtime::HostBackend;
+use bitrom::trace::{generate, Request, TraceConfig};
+use bitrom::util::check::check;
+use bitrom::{prop_assert, prop_assert_eq};
+
+const WEIGHT_SEED: u64 = 0x9A9A;
+
+fn fuzz_cases() -> u64 {
+    std::env::var("BITROM_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6)
+}
+
+fn run(
+    reqs: Vec<Request>,
+    serve: ServeConfig,
+) -> anyhow::Result<(Vec<CompletedRequest>, ServeMetrics)> {
+    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED)?;
+    let mut server = Server::new(backend, serve)?;
+    let (mut done, metrics) = server.run_trace(reqs)?;
+    done.sort_by_key(|r| r.id);
+    Ok((done, metrics))
+}
+
+/// Gather one layer's full dequantized view (no read counting — the
+/// comparisons below are about values, not traffic).
+fn view(store: &mut KvStore, seq: &KvSeq, layer: usize, n: usize) -> Result<Vec<f32>, String> {
+    let (mut k, mut v) = (Vec::new(), Vec::new());
+    store
+        .gather(seq, layer, n, false, &mut k, &mut v)
+        .map_err(|e| format!("gather layer {layer}: {e}"))?;
+    k.extend_from_slice(&v);
+    Ok(k)
+}
+
+#[test]
+fn cow_refcount_and_eviction_properties() {
+    check(0x9A01, fuzz_cases(), |g| {
+        // random geometry: block size, quantization, on-die budget and
+        // a deliberately small eDRAM so appends fight over the tier
+        let kv_dim = 8usize;
+        let n_layers = g.usize(1, 2);
+        let bt = [2usize, 4, 8][g.usize(0, 2)];
+        let quant = if g.f64() < 0.5 { KvQuant::Q8 } else { KvQuant::F32 };
+        let base = KvStoreConfig {
+            kv_dim,
+            n_layers,
+            block_tokens: bt,
+            ondie_tokens: bt * g.usize(0, 4),
+            quant,
+            edram: EdramParams::default(),
+            dram: DramParams::default(),
+        };
+        let cap_blocks = g.usize(1, 4) as u64;
+        let cfg = KvStoreConfig {
+            edram: EdramParams {
+                capacity_bytes: cap_blocks * base.rows_per_block() as u64 * base.edram.row_bytes,
+                ..base.edram.clone()
+            },
+            ..base
+        };
+        let mut store = KvStore::new(cfg);
+
+        // donor: at least one full block plus a tail token
+        let n = bt + 1 + g.size(2 * bt);
+        let prompt: Vec<i32> = (0..n).map(|_| g.usize(0, 255) as i32).collect();
+        let adapter = if g.f64() < 0.5 { None } else { Some(g.usize(0, 3) as u32) };
+        let mut donor = store.new_seq();
+        for _ in 0..n {
+            let (k, v) = (g.vec_f32(kv_dim), g.vec_f32(kv_dim));
+            for layer in 0..n_layers {
+                store
+                    .append(&mut donor, layer, &k, &v)
+                    .map_err(|e| format!("donor append: {e}"))?;
+            }
+        }
+        store.register_prefix(&donor, adapter, &prompt);
+        let mut snapshot = Vec::new();
+        for layer in 0..n_layers {
+            snapshot.push(view(&mut store, &donor, layer, n)?);
+        }
+
+        // the longest full-block proper prefix binds; a mismatched
+        // adapter never shares
+        let bound = (n - 1) / bt * bt;
+        let mut binder = store.new_seq();
+        prop_assert_eq!(store.bind_prefix(&mut binder, adapter, &prompt), bound);
+        let mut probe = store.new_seq();
+        prop_assert_eq!(store.bind_prefix(&mut probe, Some(9), &prompt), 0);
+        prop_assert!(
+            store.block_ref_counts(&binder).iter().all(|&r| r == 2),
+            "bound blocks must be shared exactly donor+binder: {:?}",
+            store.block_ref_counts(&binder)
+        );
+
+        // binder writes its own tail — the donor's bytes must not move
+        for _ in 0..(n - bound) + g.size(bt) {
+            let (k, v) = (g.vec_f32(kv_dim), g.vec_f32(kv_dim));
+            for layer in 0..n_layers {
+                store
+                    .append(&mut binder, layer, &k, &v)
+                    .map_err(|e| format!("binder append: {e}"))?;
+            }
+        }
+        for (layer, snap) in snapshot.iter().enumerate() {
+            prop_assert!(
+                view(&mut store, &donor, layer, n)? == *snap,
+                "binder tail writes mutated the donor (layer {layer})"
+            );
+        }
+
+        // a fork shares even the partial tail block; its first append
+        // into that block must copy-on-write, never mutate in place
+        let forks_before = store.stats().cow_forks;
+        let mut forked = store.fork_seq(&donor);
+        for _ in 0..1 + g.size(bt) {
+            let (k, v) = (g.vec_f32(kv_dim), g.vec_f32(kv_dim));
+            for layer in 0..n_layers {
+                store
+                    .append(&mut forked, layer, &k, &v)
+                    .map_err(|e| format!("forked append: {e}"))?;
+            }
+        }
+        if n % bt != 0 {
+            prop_assert!(
+                store.stats().cow_forks >= forks_before + n_layers as u64,
+                "a write into a shared partial block must fork it"
+            );
+        }
+        for (layer, snap) in snapshot.iter().enumerate() {
+            prop_assert!(
+                view(&mut store, &donor, layer, n)? == *snap,
+                "a forked write mutated the donor (layer {layer})"
+            );
+        }
+
+        // demotion of the (shared) donor is a tier move only: the
+        // binder keeps reading identical bytes through shared blocks
+        if g.f64() < 0.5 {
+            store.demote_seq(&donor).map_err(|e| format!("demote: {e}"))?;
+        }
+        let d = kv_dim;
+        for (layer, snap) in snapshot.iter().enumerate() {
+            let b = view(&mut store, &binder, layer, bound)?;
+            prop_assert!(
+                b[..bound * d] == snap[..bound * d] && b[bound * d..] == snap[n * d..(n + bound) * d],
+                "shared prefix bytes diverged after pressure (layer {layer})"
+            );
+        }
+
+        // retirement in any order returns every refcount to zero:
+        // no live blocks, no on-die rows, no stale prefix entries
+        let mut seqs = vec![donor, binder, forked, probe];
+        while !seqs.is_empty() {
+            let i = g.usize(0, seqs.len() - 1);
+            let mut s = seqs.swap_remove(i);
+            store.retire_seq(&mut s);
+        }
+        prop_assert_eq!(store.live_blocks(), 0);
+        prop_assert_eq!(store.prefix_entries(), 0);
+        prop_assert_eq!(store.ondie_blocks_in_use(), 0);
+        Ok(())
+    });
+}
+
+#[test]
+fn shared_prefix_serving_is_bit_identical_to_its_private_twin() {
+    // trace grammar × capacity grammar: every prompt shares one pool
+    // prefix of at least one full block, queued admissions bind it —
+    // tokens must match the cache-off twin exactly, at every width
+    check(0x9A02, fuzz_cases().min(4), |g| {
+        let spl = 8 + g.usize(0, 8);
+        let max_batches = g.usize(1, 3);
+        let trace_cfg = TraceConfig {
+            n_requests: max_batches + 1 + g.size(3),
+            prompt_len_min: spl + 1,
+            prompt_len_max: spl + 2 + g.size(6),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(6),
+            vocab_size: ModelConfig::sim_tiny().vocab_size,
+            arrival_rate: 0.0,
+            shared_prefix_len: spl,
+            shared_prefixes: 1,
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        let shared = ServeConfig {
+            max_batches,
+            prefix_cache: true,
+            kv_edram_bytes: if g.f64() < 0.4 { 1 << 15 } else { 13_500_000 },
+            ..ServeConfig::default()
+        };
+        let private = ServeConfig {
+            prefix_cache: false,
+            ..shared.clone()
+        };
+        let reqs = generate(&trace_cfg);
+        let (base, _) = run(reqs.clone(), private).map_err(|e| format!("private twin: {e:#}"))?;
+        prop_assert_eq!(base.len(), reqs.len());
+        let mut counters = None;
+        for threads in [1usize, 2, 4] {
+            let cfg = ServeConfig {
+                threads,
+                ..shared.clone()
+            };
+            let (done, m) =
+                run(reqs.clone(), cfg).map_err(|e| format!("shared (threads={threads}): {e:#}"))?;
+            prop_assert_eq!(done.len(), base.len());
+            for (a, b) in base.iter().zip(&done) {
+                prop_assert!(
+                    a.id == b.id && a.tokens == b.tokens,
+                    "request {} diverged from the private twin at {threads} threads",
+                    a.id
+                );
+            }
+            let kv = m.kv.clone().ok_or("host backend must measure KV stats")?;
+            prop_assert_eq!(kv.retention_failures, 0);
+            // queued admissions arrive strictly after a first-wave
+            // registration, so sharing must actually happen
+            prop_assert!(kv.prefix_hits >= 1, "no prefix hits despite a common pool prompt");
+            let c = (kv.prefix_hits, kv.prefix_bound_tokens, kv.cow_forks);
+            match counters {
+                None => counters = Some(c),
+                Some(c0) => prop_assert!(
+                    c0 == c,
+                    "prefix counters diverged at {threads} threads: {c0:?} vs {c:?}"
+                ),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduling_knobs_change_placement_never_tokens() {
+    // invariant 11, scheduler face: priorities, pressure-gated
+    // admission, preemption under either KV policy — served tokens
+    // stay identical to the relaxed run, and every fault counter is
+    // width-invariant
+    check(0x9A03, fuzz_cases().min(4), |g| {
+        let trace_cfg = TraceConfig {
+            n_requests: 2 + g.size(4),
+            prompt_len_min: 2,
+            prompt_len_max: 2 + g.size(8),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(8),
+            vocab_size: ModelConfig::sim_tiny().vocab_size,
+            arrival_rate: 0.0,
+            priority_classes: 2 + g.usize(0, 2),
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        let relaxed = ServeConfig {
+            max_batches: g.usize(1, 3),
+            ..ServeConfig::default()
+        };
+        let pressure = 0.2 + 0.6 * g.f64();
+        let edram = if g.f64() < 0.5 { 1 << 15 } else { 1 << 16 };
+        let reqs = generate(&trace_cfg);
+        let (base, _) = run(reqs.clone(), relaxed.clone()).map_err(|e| format!("relaxed: {e:#}"))?;
+        prop_assert_eq!(base.len(), reqs.len());
+        for policy in ["reload", "recompute"] {
+            let mut faults = None;
+            for threads in [1usize, 2, 4] {
+                let cfg = ServeConfig {
+                    threads,
+                    admit_pressure: pressure,
+                    preempt_under_pressure: true,
+                    preempt_policy: policy.to_string(),
+                    kv_edram_bytes: edram,
+                    ..relaxed.clone()
+                };
+                let (done, m) = run(reqs.clone(), cfg)
+                    .map_err(|e| format!("{policy} (threads={threads}): {e:#}"))?;
+                prop_assert_eq!(done.len(), base.len());
+                for (a, b) in base.iter().zip(&done) {
+                    prop_assert!(
+                        a.id == b.id && a.tokens == b.tokens,
+                        "request {} changed under {policy} preemption at {threads} threads",
+                        a.id
+                    );
+                }
+                match &faults {
+                    None => faults = Some(m.faults.clone()),
+                    Some(f0) => prop_assert!(
+                        *f0 == m.faults,
+                        "{policy} fault counters diverged at {threads} threads"
+                    ),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- deterministic scheduler scenarios --------------------------------
+
+fn req(id: u64, base_tok: i32, gen: usize, priority: u8) -> Request {
+    Request {
+        id,
+        arrival_s: 0.0,
+        prompt: (base_tok..base_tok + 8).collect(),
+        max_new_tokens: gen,
+        adapter_id: None,
+        priority,
+    }
+}
+
+fn tokens_of(done: &[CompletedRequest]) -> Vec<(u64, Vec<i32>)> {
+    done.iter().map(|r| (r.id, r.tokens.clone())).collect()
+}
+
+#[test]
+fn preemption_victims_follow_priority_classes() {
+    // two active slots under pressure with a queued third: the victim
+    // must be the LOWEST class. Marking the long request high-priority
+    // has to redirect the demotion onto the short one — observable as
+    // strictly fewer external context reads (the long sequence keeps
+    // its early blocks on-die), with tokens identical throughout.
+    let serve = ServeConfig {
+        max_batches: 2,
+        kv_edram_bytes: 1 << 15,
+        admit_pressure: 0.5,
+        preempt_under_pressure: true,
+        ..ServeConfig::default()
+    };
+    let trace = |prio_long: u8, prio_short: u8| {
+        vec![
+            req(0, 0, 40, prio_long),
+            req(1, 100, 6, prio_short),
+            req(2, 200, 6, 0),
+        ]
+    };
+    let relaxed = ServeConfig {
+        max_batches: 2,
+        ..ServeConfig::default()
+    };
+    let (base, _) = run(trace(0, 0), relaxed).unwrap();
+    assert_eq!(base.len(), 3);
+
+    // A: the long request is the low class -> it is the victim
+    let (done_a, m_a) = run(trace(0, 7), serve.clone()).unwrap();
+    // B: priorities swapped -> the short request is the victim
+    let (done_b, m_b) = run(trace(7, 0), serve).unwrap();
+    assert_eq!(tokens_of(&done_a), tokens_of(&base), "priorities changed tokens (A)");
+    assert_eq!(tokens_of(&done_b), tokens_of(&base), "priorities changed tokens (B)");
+    assert!(m_a.faults.preemptions >= 1, "pressure never preempted (A)");
+    assert!(m_b.faults.preemptions >= 1, "pressure never preempted (B)");
+    let ext = |m: &ServeMetrics| m.kv.as_ref().unwrap().accesses.external_reads;
+    assert!(
+        ext(&m_a) > ext(&m_b),
+        "demoting the long low-priority sequence must cost more external reads \
+         ({} vs {}) — the victim choice ignored priority",
+        ext(&m_a),
+        ext(&m_b),
+    );
+}
+
+#[test]
+fn admission_gate_defers_until_pressure_clears() {
+    // a starved tier keeps measured pressure above the threshold while
+    // slots are busy: the queued request is deferred (counted), admits
+    // once slots drain, and every token matches the ungated twin — at
+    // every pool width
+    let reqs: Vec<Request> = (0..3).map(|i| req(i, i as i32 * 80, 20, 0)).collect();
+    let relaxed = ServeConfig {
+        max_batches: 2,
+        kv_edram_bytes: 1 << 14,
+        ..ServeConfig::default()
+    };
+    let (base, base_m) = run(reqs.clone(), relaxed.clone()).unwrap();
+    assert_eq!(base.len(), 3);
+    assert_eq!(base_m.faults.admission_deferrals, 0);
+    let mut counters = None;
+    for threads in [1usize, 2, 4] {
+        let gated = ServeConfig {
+            threads,
+            admit_pressure: 0.6,
+            ..relaxed.clone()
+        };
+        let (done, m) = run(reqs.clone(), gated).unwrap();
+        assert_eq!(tokens_of(&done), tokens_of(&base), "gating changed tokens");
+        assert!(
+            m.faults.admission_deferrals >= 1,
+            "sustained pressure must defer the queued request"
+        );
+        match &counters {
+            None => counters = Some(m.faults.clone()),
+            Some(f0) => assert_eq!(
+                *f0, m.faults,
+                "admission counters diverged at {threads} threads"
+            ),
+        }
+    }
+}

@@ -251,6 +251,7 @@ fn tiny_req(id: u64) -> Request {
         prompt: vec![1, 2, 3],
         max_new_tokens: 4,
         adapter_id: None,
+        priority: 0,
     }
 }
 

@@ -111,6 +111,7 @@ fn served_kv_reduction_matches_analytic_fig5b_point() {
             prompt: (0..8).map(|t| ((i * 31 + t * 7 + 1) % 256) as i32).collect(),
             max_new_tokens: 120,
             adapter_id: None,
+            priority: 0,
         })
         .collect();
     let (done, metrics) = server.run_trace(reqs).unwrap();
@@ -225,6 +226,7 @@ fn sparse_trace_skips_ahead_instead_of_busy_waiting() {
             prompt: vec![1 + i as i32, 7, 19],
             max_new_tokens: 6,
             adapter_id: None,
+            priority: 0,
         })
         .collect();
     let t0 = Instant::now();
@@ -548,6 +550,7 @@ fn mixed_adapter_batch_matches_solo_bound_generation() {
             prompt: p.to_vec(),
             max_new_tokens: 6,
             adapter_id: a,
+            priority: 0,
         })
         .collect();
     let (done, metrics) = server.run_trace(reqs).unwrap();
