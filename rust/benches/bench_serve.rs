@@ -22,7 +22,12 @@
 //!   its fixed operating point: tokens asserted bit-identical to the
 //!   private-KV twin (invariant 11), and the measured external-DRAM
 //!   reduction recorded as the `prefix_hit_dram_reduction` gate, which
-//!   must stay above the Fig 5(b) measured baseline.
+//!   must stay above the Fig 5(b) measured baseline;
+//! * **shards** — the same trace split across 1/2/4 model shards
+//!   (DESIGN.md §16): tokens asserted bit-identical at every shard
+//!   count (invariant 12), tokens/s and per-shard KV-tier statistics
+//!   recorded, and the 4-shard / 1-shard throughput ratio recorded as
+//!   the `shard_scaling_ratio` gate.
 //!
 //! Emits `BENCH_serve.json` at the repository root; its `gates` object
 //! (scale-free speedups) feeds the CI perf-regression gate
@@ -38,9 +43,10 @@ use std::sync::Arc;
 
 use bitrom::config::{ModelConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, FailReason, FaultMetrics, Ingress, Server, TokenSink};
+use bitrom::kvcache::KvStoreStats;
 use bitrom::net::jsonframe::{EventEncoder, StreamFormat};
 use bitrom::report::{prefix_serving_study, FIG5B_MEASURED_BASELINE};
-use bitrom::runtime::HostBackend;
+use bitrom::runtime::{HostBackend, ShardedBackend};
 use bitrom::trace::{generate, TraceConfig};
 use bitrom::util::bench::bench_out_path;
 use bitrom::util::json::Json;
@@ -83,6 +89,43 @@ fn run_point(
             tokens: metrics.tokens_out,
         },
         tokens,
+    ))
+}
+
+/// The same trace split across `shards` model shards (DESIGN.md §16),
+/// always through the [`ShardedBackend`] wrapper — the 1-shard point
+/// pays the same wrapper overhead, so the `shard_scaling_ratio` gate
+/// isolates the cost of partition routing + per-shard stores rather
+/// than the wrapper itself.
+fn run_shard_point(
+    model: &ModelConfig,
+    trace_cfg: &TraceConfig,
+    shards: usize,
+) -> anyhow::Result<(Point, Vec<(u64, Vec<i32>)>, Vec<KvStoreStats>)> {
+    let backend = ShardedBackend::new(model.clone(), 0xB17, shards)?;
+    let serve = ServeConfig {
+        max_batches: 6,
+        threads: 1,
+        shards,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::new(backend, serve)?;
+    let (done, mut metrics) = server.run_trace(generate(trace_cfg))?;
+    assert_eq!(done.len(), trace_cfg.n_requests, "every request must complete");
+    let per_shard = server.backend().shard_kv_stats();
+    let mut tokens: Vec<(u64, Vec<i32>)> = done.into_iter().map(|r| (r.id, r.tokens)).collect();
+    tokens.sort_by_key(|(id, _)| *id);
+    Ok((
+        Point {
+            batches: 6,
+            threads: 1,
+            tokens_per_s: metrics.tokens_per_s(),
+            tbt_p50_ms: metrics.tbt.pct(50.0) * 1e3,
+            tbt_p95_ms: metrics.tbt.pct(95.0) * 1e3,
+            tokens: metrics.tokens_out,
+        },
+        tokens,
+        per_shard,
     ))
 }
 
@@ -231,6 +274,27 @@ fn point_json(p: &Point, vs: f64) -> Json {
     ])
 }
 
+fn shard_kv_json(s: &KvStoreStats) -> Json {
+    Json::obj(vec![
+        ("ondie_reads", Json::num(s.accesses.ondie_reads as f64)),
+        ("ondie_writes", Json::num(s.accesses.ondie_writes as f64)),
+        ("external_reads", Json::num(s.accesses.external_reads as f64)),
+        ("external_writes", Json::num(s.accesses.external_writes as f64)),
+        ("edram_energy_j", Json::num(s.edram_energy_j)),
+        ("dram_energy_j", Json::num(s.dram_energy_j)),
+    ])
+}
+
+fn shard_point_json(shards: usize, p: &Point, per_shard: &[KvStoreStats], shard_1: f64) -> Json {
+    Json::obj(vec![
+        ("shards", Json::num(shards as f64)),
+        ("tokens_per_s", Json::num(p.tokens_per_s)),
+        ("speedup_vs_1shard", Json::num(p.tokens_per_s / shard_1.max(1e-9))),
+        ("tokens", Json::num(p.tokens as f64)),
+        ("per_shard_kv", Json::Arr(per_shard.iter().map(shard_kv_json).collect())),
+    ])
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BITROM_BENCH_QUICK").is_ok();
     let (n_requests, gen_len) = if quick { (8, 12) } else { (24, 32) };
@@ -358,6 +422,42 @@ fn main() -> anyhow::Result<()> {
         prefix.kv_shared.prefix_bound_tokens,
     );
 
+    // axis 6: shards sweep — the same trace split across 1/2/4 model
+    // shards (DESIGN.md §16). Tokens must be bit-identical at every
+    // shard count (invariant 12) before any number is recorded. In
+    // this single-process simulation the shards share one core, so the
+    // ratio tracks the bookkeeping cost of partition routing +
+    // per-shard stores, not a real scale-out curve — the win the sweep
+    // demonstrates is tokens-invariance with per-shard placement.
+    println!("-- shards sweep (batches = 6, threads = 1) --");
+    let mut shard_points = Vec::new();
+    let mut shard_1 = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let (p, tokens, per_shard) = run_shard_point(&model, &trace_cfg, shards)?;
+        assert_eq!(
+            tokens, serial_tokens,
+            "served tokens diverged at {shards} shards (invariant 12)"
+        );
+        if shards == 1 {
+            shard_1 = p.tokens_per_s;
+        }
+        let per_shard_accesses: Vec<u64> =
+            per_shard.iter().map(|s| s.accesses.total_accesses()).collect();
+        println!(
+            "  {shards} shards: {:>8.1} tok/s  (x{:.2} vs 1 shard)  \
+             per-shard KV accesses {per_shard_accesses:?}",
+            p.tokens_per_s,
+            p.tokens_per_s / shard_1.max(1e-9),
+        );
+        shard_points.push((shards, p, per_shard));
+    }
+    let shard_ratio = shard_points
+        .iter()
+        .find(|(s, ..)| *s == 4)
+        .map(|(_, p, _)| p.tokens_per_s / shard_1.max(1e-9))
+        .unwrap_or(0.0);
+    println!("shard scaling ratio: {shard_ratio:.2}x (4 shards vs 1 shard)");
+
     let speedup_6v1 = batch_points
         .iter()
         .find(|p| p.batches == 6)
@@ -431,6 +531,15 @@ fn main() -> anyhow::Result<()> {
             ]),
         ),
         (
+            "shard_points",
+            Json::Arr(
+                shard_points
+                    .iter()
+                    .map(|(s, p, ps)| shard_point_json(*s, p, ps, shard_1))
+                    .collect(),
+            ),
+        ),
+        (
             "gates",
             Json::obj(vec![
                 ("batching_speedup_6v1", Json::num(speedup_6v1)),
@@ -438,6 +547,7 @@ fn main() -> anyhow::Result<()> {
                 ("fault_recovery_throughput_ratio", Json::num(fault_ratio)),
                 ("streaming_overhead_ratio", Json::num(stream_ratio)),
                 ("prefix_hit_dram_reduction", Json::num(prefix.measured_shared)),
+                ("shard_scaling_ratio", Json::num(shard_ratio)),
             ]),
         ),
     ]);

@@ -90,6 +90,14 @@ pub struct ServeConfig {
     /// (invariant 11). Off by default — the serving loop is then
     /// byte-identical to a build without prefix support.
     pub prefix_cache: bool,
+    /// Model shards behind the backend (DESIGN.md §16): the seeded
+    /// model is split across this many backend instances —
+    /// pipeline-parallel partition ownership with per-shard KV
+    /// stores/retention clocks plus a tensor-parallel exact-i64 LM
+    /// head. Shard count changes throughput and placement, never
+    /// tokens (invariant 12). `1` (the default) is the single-instance
+    /// topology.
+    pub shards: usize,
     /// What preemption does to the victim's KV: `"reload"` (the
     /// default) swaps it to the external tier and reads it back on
     /// resume; `"recompute"` drops it and replays the sequence so far
@@ -124,6 +132,7 @@ impl Default for ServeConfig {
             preempt_under_pressure: false,
             shed_after_s: 0.0,
             prefix_cache: false,
+            shards: 1,
             preempt_policy: "reload".into(),
         }
     }
@@ -200,6 +209,7 @@ impl ServeConfig {
                 "preempt_under_pressure needs admit_pressure > 0 (the trigger threshold)"
             );
         }
+        anyhow::ensure!(self.shards >= 1, "shards must be >= 1");
         anyhow::ensure!(
             self.preempt_policy == "reload" || self.preempt_policy == "recompute",
             "preempt_policy must be \"reload\" or \"recompute\", got {:?}",
@@ -270,6 +280,7 @@ impl ServeConfig {
             ("preempt_under_pressure", Json::Bool(self.preempt_under_pressure)),
             ("shed_after_s", Json::num(self.shed_after_s)),
             ("prefix_cache", Json::Bool(self.prefix_cache)),
+            ("shards", Json::num(self.shards as f64)),
             ("preempt_policy", Json::str(self.preempt_policy.clone())),
         ])
     }
@@ -330,6 +341,7 @@ impl ServeConfig {
                 .get("prefix_cache")
                 .and_then(Json::as_bool)
                 .unwrap_or(d.prefix_cache),
+            shards: get("shards", d.shards),
             preempt_policy: j
                 .get("preempt_policy")
                 .and_then(Json::as_str)
@@ -438,6 +450,7 @@ mod tests {
             preempt_under_pressure: true,
             shed_after_s: 1.5,
             prefix_cache: true,
+            shards: 2,
             preempt_policy: "recompute".into(),
         };
         let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
@@ -482,7 +495,12 @@ mod tests {
         let j = Json::parse(r#"{"max_batches": 2}"#).unwrap();
         let c = ServeConfig::from_json(&j).unwrap();
         assert!(!c.prefix_cache);
+        assert_eq!(c.shards, 1, "pre-sharding configs parse single-instance");
         assert_eq!(c.preempt_policy, "reload");
+        // zero shards is meaningless
+        let mut c = ServeConfig::default();
+        c.shards = 0;
+        assert!(c.validate().is_err());
         // only the two named policies exist
         let mut c = ServeConfig::default();
         c.preempt_policy = "drop".into();

@@ -2,9 +2,11 @@
 //! tier-1-tested offline.
 //!
 //! Requests are admitted by the dynamic batcher into one of
-//! `max_batches` slots; the 6-stage pipeline walks every in-flight
-//! sequence through the macro partitions (one partition per pipeline
-//! stage, all partitions busy on different batches in the same cycle —
+//! `max_batches` slots; each token round, [`PipelineSchedule::for_round`]
+//! builds a skewed schedule over the *backend's* partition count (the
+//! paper's deployment has 6 macro partitions, but the stage count is
+//! `backend.n_partitions()`, not a constant — one partition per stage,
+//! all partitions busy on different batches in the same cycle,
 //! "allowing all partitions to operate in parallel and maintain full
 //! macro utilization"); every KV access runs through the backend's
 //! tiered [`crate::kvcache::KvStore`] (DR eDRAM or external DRAM) as
@@ -16,6 +18,18 @@
 //! the bitplane kernel engine; `Server<ModelExecutor>` (`pjrt`
 //! feature) executes the compiled artifacts.
 //!
+//! Shard routing (DESIGN.md §16): the coordinator never routes to
+//! shards itself — `Server<ShardedBackend>` issues the same
+//! per-partition stage calls and the backend maps each partition to
+//! its owning shard (contiguous near-even `ShardPlan`), merging
+//! tensor-parallel LM-head partials in exact i64. The only
+//! shard-aware coordinator paths are the per-shard retention clocks
+//! (a shard-targeted storm skews one shard's DR-eDRAM clock via
+//! [`advance_kv_clock_shard`]) and the
+//! summed per-shard KV/event/adapter accounting in [`ServeMetrics`].
+//! Shard count changes throughput and placement, never tokens
+//! (invariant 12).
+//!
 //! Two admission planes share the same round loop (DESIGN.md §14):
 //! [`Server::run_trace`] consumes a closed batch offline, and
 //! [`Server::run_ingress`] serves live submissions funneled through an
@@ -24,6 +38,7 @@
 //! [`TokenSink`] the round it is produced.
 //!
 //! [`runtime::InferenceBackend`]: crate::runtime::InferenceBackend
+//! [`advance_kv_clock_shard`]: crate::runtime::InferenceBackend::advance_kv_clock_shard
 
 mod batcher;
 mod ingress;

@@ -323,6 +323,12 @@ impl<B: InferenceBackend> Server<B> {
         // the accelerator's cadence, not the CPU emulating it. The
         // serving clock is still used for all latency metrics.
         let mut hw_time = 0.0f64;
+        // Shard-local storm skew (DESIGN.md §16): a storm targeting one
+        // shard advances only that shard's retention clock, so each
+        // shard's clock is the global hw_time plus its accumulated
+        // local skips. Single-shard deployments never touch this and
+        // keep the exact legacy clock path.
+        let mut shard_extra_s = vec![0.0f64; self.backend.n_shards()];
 
         loop {
             let t_now = now(skipped_s);
@@ -543,11 +549,24 @@ impl<B: InferenceBackend> Server<B> {
             hw_time += self.serve.hw_tbt_s;
             if let Some(f) = &round_faults {
                 if f.clock_skip_s > 0.0 {
-                    hw_time += f.clock_skip_s;
+                    match f.storm_shard {
+                        // shard-local storm: skew only the target
+                        // shard's clock (sharded deployments only)
+                        Some(s) if s < shard_extra_s.len() && shard_extra_s.len() > 1 => {
+                            shard_extra_s[s] += f.clock_skip_s
+                        }
+                        _ => hw_time += f.clock_skip_s,
+                    }
                     metrics.faults.injected_skips += 1;
                 }
             }
-            self.backend.advance_kv_clock(hw_time);
+            if shard_extra_s.len() <= 1 {
+                self.backend.advance_kv_clock(hw_time);
+            } else {
+                for (s, extra) in shard_extra_s.iter().enumerate() {
+                    self.backend.advance_kv_clock_shard(s, hw_time + extra);
+                }
+            }
 
             // coordinator-side, in slot order (deterministic at any
             // pool width): create + bind fresh prefill states (shared

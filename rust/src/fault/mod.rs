@@ -4,11 +4,20 @@
 //! retention-clock skips ("storms"), transient backend / adapter-load /
 //! KV-capacity failures — consumed by `coordinator::Server::run_trace`
 //! one [`RoundFaults`] per token round. The plan draws a **fixed**
-//! number of random values per round (one storm draw plus one draw per
-//! batch slot, active or not), so the injected schedule depends only on
-//! the seed and the round index: it is byte-identical across `--threads`
-//! widths and across reruns, which is what lets invariant 9 assert that
-//! a faulted run's surviving tokens match the fault-free twin exactly.
+//! number of random values per round (one storm draw, one storm-target
+//! draw when the deployment is sharded, plus one draw per batch slot,
+//! active or not), so the injected schedule depends only on the seed,
+//! the round index and the topology: it is byte-identical across
+//! `--threads` widths and across reruns, which is what lets invariant 9
+//! assert that a faulted run's surviving tokens match the fault-free
+//! twin exactly. Single-shard plans draw no storm target, so every
+//! pre-sharding schedule replays byte-identically.
+//!
+//! Sharded deployments (DESIGN.md §16, [`FaultPlan::with_shards`]):
+//! each storm picks one target shard uniformly, modeling a retention
+//! event on one CiROM chip — the coordinator then skips only that
+//! shard's DR-eDRAM clock, and recovery must hold invariants 9 ∧ 12
+//! jointly (fuzzed in `tests/fault_fuzz.rs`).
 //!
 //! The plan injects *causes*; the server owns the *policy* (recompute
 //! recovery, bounded retry with backoff, shedding) and the accounting
@@ -53,6 +62,11 @@ pub struct RoundFaults {
     /// (0.0 = no storm). A skip larger than the retention window minus
     /// the round time expires every resident on-die row at once.
     pub clock_skip_s: f64,
+    /// Shard whose retention clock the storm hits (`None` = the storm
+    /// is global / the deployment is single-shard). Only ever `Some`
+    /// when `clock_skip_s > 0` and the plan was built
+    /// [`FaultPlan::with_shards`] > 1.
+    pub storm_shard: Option<usize>,
     /// Per-slot transient failure, indexed by batch slot id.
     pub transient: Vec<Option<FaultKind>>,
 }
@@ -73,6 +87,9 @@ pub struct FaultPlan {
     transient_p: f64,
     clock_skip_s: f64,
     rounds_since_storm: u64,
+    /// Shards storms can target (1 = global storms, the pre-sharding
+    /// stream — no target draw is consumed).
+    n_shards: usize,
 }
 
 impl FaultPlan {
@@ -92,7 +109,16 @@ impl FaultPlan {
             transient_p: transient_p.clamp(0.0, 1.0),
             clock_skip_s: clock_skip_s.max(0.0),
             rounds_since_storm: STORM_COOLDOWN_ROUNDS,
+            n_shards: 1,
         }
+    }
+
+    /// Make storms shard-local: each storm targets one of `n_shards`
+    /// shards uniformly (clamped to at least 1; 1 keeps global storms
+    /// and the exact pre-sharding random stream).
+    pub fn with_shards(mut self, n_shards: usize) -> Self {
+        self.n_shards = n_shards.max(1);
+        self
     }
 
     /// Plan configured by a [`ServeConfig`], or `None` when
@@ -101,17 +127,21 @@ impl FaultPlan {
         if cfg.fault_seed == 0 {
             return None;
         }
-        Some(FaultPlan::new(
-            cfg.fault_seed,
-            cfg.max_batches,
-            cfg.fault_storm_p,
-            cfg.fault_transient_p,
-            cfg.fault_clock_skip_s,
-        ))
+        Some(
+            FaultPlan::new(
+                cfg.fault_seed,
+                cfg.max_batches,
+                cfg.fault_storm_p,
+                cfg.fault_transient_p,
+                cfg.fault_clock_skip_s,
+            )
+            .with_shards(cfg.shards),
+        )
     }
 
     /// Draw the next round's faults. Always consumes exactly
-    /// `1 + n_slots` generator values regardless of what fires.
+    /// `1 + n_slots` generator values (plus one storm-target draw when
+    /// the plan is sharded) regardless of what fires.
     pub fn next_round(&mut self) -> RoundFaults {
         let storm_draw = self.rng.f64();
         let storm = storm_draw < self.storm_p && self.rounds_since_storm >= STORM_COOLDOWN_ROUNDS;
@@ -120,6 +150,14 @@ impl FaultPlan {
         } else {
             self.rounds_since_storm += 1;
         }
+        // the target draw is consumed every round (fixed stream length)
+        // but only surfaces when a storm actually fires
+        let storm_shard = if self.n_shards > 1 {
+            let target = (self.rng.next_u64() % self.n_shards as u64) as usize;
+            (storm && self.clock_skip_s > 0.0).then_some(target)
+        } else {
+            None
+        };
         let transient: Vec<Option<FaultKind>> = (0..self.n_slots)
             .map(|_| {
                 // one u64 per slot: top 53 bits decide, low bits pick the kind
@@ -138,6 +176,7 @@ impl FaultPlan {
             .collect();
         RoundFaults {
             clock_skip_s: if storm { self.clock_skip_s } else { 0.0 },
+            storm_shard,
             transient,
         }
     }
@@ -206,6 +245,37 @@ mod tests {
             }
         }
         assert_eq!(seen, [true; 3]);
+    }
+
+    #[test]
+    fn sharded_storms_pick_deterministic_targets() {
+        // deterministic per seed, every target shard eventually hit,
+        // and targets only surface on rounds that actually storm
+        let mk = || plan(19, 0.6, 0.0).with_shards(3);
+        let (mut a, mut b) = (mk(), mk());
+        let mut seen = [false; 3];
+        for _ in 0..300 {
+            let ra = a.next_round();
+            assert_eq!(ra, b.next_round());
+            match ra.storm_shard {
+                Some(s) => {
+                    assert!(ra.clock_skip_s > 0.0, "target without a storm");
+                    seen[s] = true;
+                }
+                None => assert_eq!(ra.clock_skip_s, 0.0),
+            }
+        }
+        assert_eq!(seen, [true; 3], "some shard never targeted");
+        // a single-shard plan never surfaces a target and replays the
+        // exact pre-sharding stream (the target draw is gated, not
+        // merely hidden)
+        let mut legacy = plan(19, 0.6, 0.3);
+        let mut single = plan(19, 0.6, 0.3).with_shards(1);
+        for _ in 0..300 {
+            let r = legacy.next_round();
+            assert_eq!(r.storm_shard, None);
+            assert_eq!(r, single.next_round());
+        }
     }
 
     #[test]

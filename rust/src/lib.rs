@@ -12,13 +12,20 @@
 //!   [`runtime::HostBackend`] (BitNet-style partitioned transformer on
 //!   the bitplane kernels) and the PJRT `ModelExecutor` (`pjrt`
 //!   feature; AOT HLO artifacts with weights baked as constants = the
-//!   ROM mask set). Manifest handling is always available.
-//! * [`coordinator`] — the serving layer: dynamic batcher, the 6-stage
+//!   ROM mask set). Manifest handling is always available. The
+//!   [`runtime::ShardedBackend`] (DESIGN.md §16) splits one seeded
+//!   model across N same-seed host shards — pipeline-parallel
+//!   partition ownership with per-shard KV stores plus a
+//!   tensor-parallel exact-i64 LM head — behind the same contract;
+//!   shard count changes throughput and placement, never tokens
+//!   (invariant 12).
+//! * [`coordinator`] — the serving layer: dynamic batcher, the
 //!   macro-partition pipeline (paper §V-B), metrics, and the
 //!   [`coordinator::Server`], generic over the backend — all of it
-//!   tier-1-tested offline via `Server<HostBackend>`. Token rounds run
-//!   per-slot-parallel on the worker pool, bit-identically at any
-//!   width (DESIGN.md §12).
+//!   tier-1-tested offline via `Server<HostBackend>`, with shard
+//!   routing left entirely to `Server<ShardedBackend>`'s backend.
+//!   Token rounds run per-slot-parallel on the worker pool,
+//!   bit-identically at any width (DESIGN.md §12).
 //! * [`bitnet`] — ternary substrate: packed storage, quantizers, the
 //!   golden `ref_gemv`, and the word-parallel [`bitnet::BitplaneMatrix`]
 //!   kernel engine that every host-side functional compute path runs on.

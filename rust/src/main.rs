@@ -20,7 +20,7 @@ use bitrom::report::{
     fig1a_report, fig5a_report, fig5b_report, fig5b_serving_report, gemv_perf_report,
     lora_serving_report, prefix_serving_report, table3_report,
 };
-use bitrom::runtime::{HostBackend, InferenceBackend, Manifest};
+use bitrom::runtime::{HostBackend, InferenceBackend, Manifest, ShardedBackend};
 #[cfg(feature = "pjrt")]
 use bitrom::runtime::ModelExecutor;
 use bitrom::trace::{generate, TraceConfig};
@@ -64,7 +64,7 @@ fn print_help() {
         "bitrom — weight reload-free CiROM serving for 1.58-bit LLMs\n\n\
          USAGE: bitrom <command> [options]\n\n\
          COMMANDS:\n\
-         \x20 serve     run a synthetic request trace through the 6-stage pipeline\n\
+         \x20 serve     run a synthetic request trace through the partition pipeline\n\
          \x20           (--host serves offline on the fabricated HostBackend;\n\
          \x20           --adapters N serves N tenant LoRA adapters reload-free;\n\
          \x20           --prefix-cache shares prompt-prefix KV blocks by content\n\
@@ -125,6 +125,7 @@ fn serve_cfg(args: &Args) -> ServeConfig {
         preempt_under_pressure: args.flag("preempt"),
         shed_after_s: args.f64("shed-after"),
         prefix_cache: args.flag("prefix-cache"),
+        shards: args.usize("shards"),
         preempt_policy: args.str("preempt-policy").to_string(),
         ..ServeConfig::default()
     }
@@ -204,6 +205,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("adapter-rank", "16", "adapter rank (with --adapters)")
         .opt("placements", "VOD", "adapter placement sites (letters from QKVOGUD)")
         .opt("threads", "0", "worker threads (0 = BITROM_THREADS or serial; width-invariant tokens)")
+        .opt("shards", "1", "model shards (--host; per-shard KV tiers, tokens invariant; §16)")
         .opt("fault-plan", "0", "deterministic fault-injection seed (0 = off; DESIGN.md §13)")
         .opt("storm-p", "0.25", "per-round retention-storm probability (with --fault-plan)")
         .opt("transient-p", "0.05", "per-slot transient-fault probability (with --fault-plan)")
@@ -264,6 +266,10 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             );
         }
         if !args.str("listen").is_empty() {
+            anyhow::ensure!(
+                serve.shards <= 1,
+                "--listen serves a single-shard deployment; drop --shards for the HTTP front door"
+            );
             return serve_http(&args, backend, serve);
         }
         let trace = serve_trace_cfg(&args, backend.model().vocab_size, serve.n_adapters);
@@ -280,6 +286,27 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             std::fs::write(out, bitrom::trace::export_ndjson(&reqs))
                 .with_context(|| format!("writing {out}"))?;
             println!("wrote {} requests to {out} (NDJSON wire format)", reqs.len());
+        }
+        if serve.shards > 1 {
+            // grow the already-fabricated backend into a same-seed
+            // fleet: each shard owns a contiguous partition range and
+            // its own KV store; tokens are invariant to the shard
+            // count (DESIGN.md §16, invariant 12)
+            let mut fleet = vec![backend];
+            for _ in 1..serve.shards {
+                fleet.push(host_backend(&args, serve.max_seq, &serve)?);
+            }
+            let sharded = ShardedBackend::from_shards(fleet)?;
+            println!(
+                "sharded across {} backend instances (partition plan {:?}; \
+                 tokens invariant to shard count)",
+                sharded.n_shards(),
+                sharded.partition_plan().ranges(),
+            );
+            let mut server = Server::new(sharded, serve)?;
+            let (done, mut metrics) = server.run_trace(reqs)?;
+            print_serve_outcome(&done, &mut metrics, args.flag("verbose"));
+            return Ok(());
         }
         let mut server = Server::new(backend, serve)?;
         let (done, mut metrics) = server.run_trace(reqs)?;

@@ -145,6 +145,24 @@ pub trait InferenceBackend {
     /// failures on the next KV read. No-op without a store.
     fn advance_kv_clock(&self, _now_s: f64) {}
 
+    /// Number of model shards behind this backend (DESIGN.md §16).
+    /// Single-instance backends report 1; the multi-shard
+    /// [`ShardedBackend`](crate::runtime::ShardedBackend) reports its
+    /// fleet size so the coordinator can drive per-shard retention
+    /// clocks and shard-local fault injection. Shard count must never
+    /// change tokens — invariant 12.
+    fn n_shards(&self) -> usize {
+        1
+    }
+
+    /// Advance one shard's DR-eDRAM retention clock independently
+    /// (shard-local retention storms, DESIGN.md §13 under §16). The
+    /// serving loop only calls this when [`Self::n_shards`] > 1;
+    /// single-shard backends default to the global clock.
+    fn advance_kv_clock_shard(&self, _shard: usize, now_s: f64) {
+        self.advance_kv_clock(now_s);
+    }
+
     /// Shard this backend's kernels across `threads` workers (0 keeps
     /// the current width). The server calls this once at construction
     /// with the deployment's resolved `ServeConfig::threads`; backends

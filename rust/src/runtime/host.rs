@@ -188,7 +188,7 @@ pub struct HostBackend {
     seed: u64,
 }
 
-fn rmsnorm(x: &[f32]) -> Vec<f32> {
+pub(crate) fn rmsnorm(x: &[f32]) -> Vec<f32> {
     let ms = x.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / x.len().max(1) as f64;
     let inv = (1.0 / (ms + 1e-6).sqrt()) as f32;
     x.iter().map(|&v| v * inv).collect()
@@ -318,6 +318,35 @@ impl HostBackend {
     /// the kernels themselves — state no recovery policy could trust.
     pub fn kv_store(&self) -> Arc<Mutex<KvStore>> {
         self.store.read().expect("KV store handle poisoned").clone()
+    }
+
+    /// The fabricated LM-head ternary weights (`d_model × vocab_size`)
+    /// — what [`ShardedBackend`](crate::runtime::ShardedBackend)
+    /// column-splits for its tensor-parallel head.
+    pub(crate) fn head_weights(&self) -> &TernaryMatrix {
+        &self.head.w
+    }
+
+    /// [`InferenceBackend::reserve_kv`] restricted to layers
+    /// `[l0, l1)`: a shard of a sharded deployment reserves pages only
+    /// for the layers it owns, so per-shard on-die capacity is spent
+    /// only on that shard's KV. Same placement-determinism contract as
+    /// the full-range reserve.
+    pub(crate) fn reserve_kv_range(
+        &self,
+        state: &mut HostState,
+        n_tokens: usize,
+        l0: usize,
+        l1: usize,
+    ) -> Result<()> {
+        if n_tokens == 0 {
+            return Ok(());
+        }
+        let mut store = state.store.lock().expect("KV store lock poisoned");
+        for li in l0..l1 {
+            store.reserve(&mut state.kv, li, n_tokens)?;
+        }
+        Ok(())
     }
 
     /// Mean zero-weight fraction across every fabricated projection

@@ -13,6 +13,11 @@
 //!   multi-tenant `lora::AdapterRegistry` (per-sequence adapters bound
 //!   via [`InferenceBackend::bind_adapter`]). The whole serving stack
 //!   runs offline on it under tier-1.
+//! * [`ShardedBackend`] (always built) — N same-seed [`HostBackend`]
+//!   shards behind the same contract (DESIGN.md §16):
+//!   pipeline-parallel partition ownership over per-shard KV stores
+//!   plus a tensor-parallel exact-i64 LM head, tokens bit-identical to
+//!   `--shards 1` at any shard count (invariant 12).
 //! * `ModelExecutor` (`pjrt` feature) — loads the AOT HLO artifacts
 //!   (the "mask set") once at startup and executes them via the PJRT C
 //!   API; weights live inside the compiled executables as constants,
@@ -24,6 +29,7 @@
 mod backend;
 mod host;
 mod manifest;
+mod sharding;
 #[cfg(feature = "pjrt")]
 mod model_exec;
 #[cfg(feature = "pjrt")]
@@ -32,6 +38,7 @@ mod tensor;
 pub use backend::{argmax_f32, top_k_f32, InferenceBackend, Logits, SequenceState};
 pub use host::{HostBackend, HostState};
 pub use manifest::{ArtifactInfo, Manifest};
+pub use sharding::{sharded_gemm, sharded_gemv, ShardPlan, ShardedBackend, ShardedState};
 #[cfg(feature = "pjrt")]
 pub use model_exec::{DecodeState, ModelExecutor};
 #[cfg(feature = "pjrt")]

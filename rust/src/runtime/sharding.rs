@@ -1,0 +1,716 @@
+//! Multi-shard tensor/pipeline-parallel serving (DESIGN.md §16): one
+//! seeded model split across N [`HostBackend`] instances behind the
+//! single-backend [`InferenceBackend`] contract, so the coordinator's
+//! serving loop runs unchanged.
+//!
+//! Two axes of parallelism, both merged losslessly:
+//!
+//! * **Pipeline-parallel partition ownership** — the model's macro
+//!   partitions are assigned to shards in contiguous near-even ranges
+//!   ([`ShardPlan`]); a shard executes every layer of its partitions
+//!   and holds those layers' KV in its *own* tiered
+//!   [`KvStore`](crate::kvcache::KvStore) (per-shard DR-eDRAM /
+//!   external-DRAM tiers and retention clock), the software analogue
+//!   of one CiROM chip per partition group.
+//! * **Tensor-parallel LM head** — the head's ternary projection is
+//!   column-split across shards ([`TernaryMatrix::submatrix`]); each
+//!   shard computes its partial GEMV in exact i64 and the merge is
+//!   plain concatenation, so any shard count reproduces the unsharded
+//!   logits *bit-exactly* (the same argument the standalone
+//!   [`sharded_gemv`] / [`sharded_gemm`] kernels make against the
+//!   golden [`ref_gemv`](crate::bitnet::ref_gemv)).
+//!
+//! The governing rule is **invariant 12**, the pool invariant
+//! (DESIGN.md §12) extended one level up: shard count changes
+//! throughput and placement — per-shard KV tiers, per-shard event /
+//! energy / adapter accounting — but never tokens. Every weight matrix
+//! is fabricated identically on every shard from the shared seed
+//! (weights are ROM; replicating a mask set costs no reloads), KV rows
+//! live on exactly one shard, and all cross-shard reductions are exact
+//! integer sums or order-fixed concatenations.
+//!
+//! What deliberately does not shard: the content-hash prefix cache
+//! (DESIGN.md §15) binds whole-prompt blocks into *every* layer's
+//! table, which is incompatible with shard-local layer ownership —
+//! [`ShardedBackend`] reports every prefix bind as a miss, trading the
+//! traffic win for unchanged tokens (invariants 11 ∧ 12). Event mode
+//! routes the LM head through shard 0 whole, so merged
+//! [`EventCounters`] still sum to the unsharded totals.
+//!
+//! Property coverage lives in `tests/shard_props.rs`: partial-merge ≡
+//! unsharded ≡ `ref_gemv` over uneven splits, served traces
+//! bit-identical across `--shards 1/2/3/5` × thread widths, and
+//! per-shard counters summing to the unsharded run's totals.
+
+use anyhow::{anyhow, Result};
+
+use crate::bitnet::{absmax_quantize, TernaryMatrix};
+use crate::cirom::EventCounters;
+use crate::config::{ModelConfig, ServeConfig};
+use crate::kvcache::KvStoreStats;
+use crate::lora::LoraServeStats;
+use crate::util::pool::Pool;
+
+use super::backend::{InferenceBackend, Logits, SequenceState};
+use super::host::{rmsnorm, HostBackend, HostState};
+
+/// Contiguous near-even assignment of `n_items` items to shards: the
+/// first `n_items % n_shards` shards own one extra item, so any item
+/// count splits over any shard count (ranges may be empty when there
+/// are more shards than items). Used for both partition ownership and
+/// tensor-parallel column splits; the fixed first-heavy order is what
+/// makes concatenation-order merges deterministic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Split `n_items` items into `n_shards` contiguous near-even
+    /// ranges (`n_shards` is clamped to at least 1).
+    pub fn near_even(n_items: usize, n_shards: usize) -> Self {
+        let k = n_shards.max(1);
+        let base = n_items / k;
+        let rem = n_items % k;
+        let mut ranges = Vec::with_capacity(k);
+        let mut lo = 0usize;
+        for s in 0..k {
+            let len = base + usize::from(s < rem);
+            ranges.push((lo, lo + len));
+            lo += len;
+        }
+        ShardPlan { ranges }
+    }
+
+    /// Number of shards in the plan.
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Half-open item range `[lo, hi)` owned by shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        self.ranges[s]
+    }
+
+    /// All ranges in shard order.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// The shard owning `item`.
+    ///
+    /// # Panics
+    /// If `item` is outside every range of the plan.
+    pub fn owner(&self, item: usize) -> usize {
+        self.ranges
+            .iter()
+            .position(|&(lo, hi)| (lo..hi).contains(&item))
+            .unwrap_or_else(|| panic!("item {item} outside the shard plan"))
+    }
+}
+
+/// Tensor-parallel GEMV: column-shard `w` over `n_shards` near-even
+/// contiguous ranges, compute each shard's partial on its submatrix in
+/// exact i64, merge by concatenation. Bit-identical to the unsharded
+/// [`TernaryMatrix::gemv`] (and hence to the golden
+/// [`ref_gemv`](crate::bitnet::ref_gemv)) at *any* shard count —
+/// integer partials over disjoint output columns have nothing to
+/// round. Shards assigned zero columns contribute nothing.
+pub fn sharded_gemv(x: &[i32], w: &TernaryMatrix, n_shards: usize, pool: &Pool) -> Vec<i64> {
+    let plan = ShardPlan::near_even(w.cols, n_shards);
+    let mut y = Vec::with_capacity(w.cols);
+    for s in 0..plan.n_shards() {
+        let (c0, c1) = plan.range(s);
+        if c0 == c1 {
+            continue;
+        }
+        let sub = w.submatrix(0, w.rows, c0, c1);
+        y.extend(sub.gemv_with(x, pool));
+    }
+    y
+}
+
+/// Batched twin of [`sharded_gemv`]: every activation row through the
+/// same column split, partials concatenated per row. Bit-identical to
+/// [`TernaryMatrix::gemm`] at any shard count.
+pub fn sharded_gemm(
+    xs: &[Vec<i32>],
+    w: &TernaryMatrix,
+    n_shards: usize,
+    pool: &Pool,
+) -> Vec<Vec<i64>> {
+    let plan = ShardPlan::near_even(w.cols, n_shards);
+    let mut out: Vec<Vec<i64>> = xs.iter().map(|_| Vec::with_capacity(w.cols)).collect();
+    for s in 0..plan.n_shards() {
+        let (c0, c1) = plan.range(s);
+        if c0 == c1 {
+            continue;
+        }
+        let sub = w.submatrix(0, w.rows, c0, c1);
+        for (row, part) in out.iter_mut().zip(sub.gemm_with(xs, pool)) {
+            row.extend(part);
+        }
+    }
+    out
+}
+
+/// Per-sequence state of a [`ShardedBackend`]: one [`HostState`] per
+/// shard (each holding only its shard's layers' KV in that shard's
+/// store) plus the coordinator-visible decode progress. The inner
+/// states' own `pos`/`prompt_len` are never used — partition stages
+/// take explicit positions, and the wrapper is the single source of
+/// truth the serving loop reads.
+pub struct ShardedState {
+    states: Vec<HostState>,
+    pos: usize,
+    prompt_len: usize,
+}
+
+impl SequenceState for ShardedState {
+    fn pos(&self) -> usize {
+        self.pos
+    }
+    fn set_pos(&mut self, pos: usize) {
+        self.pos = pos;
+    }
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+    fn set_prompt_len(&mut self, len: usize) {
+        self.prompt_len = len;
+    }
+}
+
+/// N same-seed [`HostBackend`] shards behind one [`InferenceBackend`]
+/// (module docs): pipeline-parallel partition ownership over per-shard
+/// KV stores, a tensor-parallel exact-i64 LM head, and per-shard
+/// event / energy / adapter accounting whose merged view sums to the
+/// unsharded totals. Invariant 12: shard count never changes tokens.
+pub struct ShardedBackend {
+    shards: Vec<HostBackend>,
+    /// Partition → shard ownership (contiguous near-even).
+    parts: ShardPlan,
+    /// Tensor-parallel head column splits (`None` for shards assigned
+    /// zero vocabulary columns). `submatrix` preserves the matrix
+    /// scale, so the merged rescale is bit-identical to unsharded.
+    head_cols: Vec<Option<TernaryMatrix>>,
+    /// True when the shards run the event-counted cirom path: the head
+    /// then executes whole on shard 0 (its event tally must land in
+    /// exactly one shard for the merged counters to sum correctly).
+    event_mode: bool,
+}
+
+impl ShardedBackend {
+    /// Wrap pre-built shards (all fabricated from the same model +
+    /// seed — validated; weight equality follows from deterministic
+    /// fabrication). Shard count must not exceed the model's partition
+    /// count, so every shard owns at least one pipeline stage. Shards
+    /// must agree on event mode and on whether they carry an adapter
+    /// registry (binds fan out to every shard).
+    pub fn from_shards(shards: Vec<HostBackend>) -> Result<Self> {
+        anyhow::ensure!(!shards.is_empty(), "a sharded backend needs at least one shard");
+        let model = shards[0].model().clone();
+        anyhow::ensure!(
+            shards.len() <= model.n_partitions,
+            "{} shards exceed the model's {} partitions",
+            shards.len(),
+            model.n_partitions
+        );
+        let event_mode = shards[0].events().is_some();
+        for (i, s) in shards.iter().enumerate().skip(1) {
+            anyhow::ensure!(s.model() == &model, "shard {i} runs a different model than shard 0");
+            anyhow::ensure!(
+                s.seed() == shards[0].seed(),
+                "shard {i} was fabricated from a different weight seed than shard 0"
+            );
+            anyhow::ensure!(
+                s.events().is_some() == event_mode,
+                "shard {i} disagrees with shard 0 on event mode"
+            );
+            anyhow::ensure!(
+                s.adapters().is_some() == shards[0].adapters().is_some(),
+                "shard {i} disagrees with shard 0 on adapter serving"
+            );
+        }
+        let parts = ShardPlan::near_even(model.n_partitions, shards.len());
+        let head_plan = ShardPlan::near_even(model.vocab_size, shards.len());
+        let head_w = shards[0].head_weights();
+        let head_cols = (0..shards.len())
+            .map(|s| {
+                let (c0, c1) = head_plan.range(s);
+                (c1 > c0).then(|| head_w.submatrix(0, head_w.rows, c0, c1))
+            })
+            .collect();
+        Ok(ShardedBackend {
+            shards,
+            parts,
+            head_cols,
+            event_mode,
+        })
+    }
+
+    /// Fabricate `n_shards` same-seed shards on the bitplane fast path
+    /// (`n_shards` is clamped to `1..=model.n_partitions`; `--shards 1`
+    /// is the unsharded topology behind the same type).
+    pub fn new(model: ModelConfig, seed: u64, n_shards: usize) -> Result<Self> {
+        let n = n_shards.clamp(1, model.n_partitions.max(1));
+        let shards = (0..n)
+            .map(|_| HostBackend::new(model.clone(), seed))
+            .collect::<Result<Vec<_>>>()?;
+        Self::from_shards(shards)
+    }
+
+    /// The partition → shard ownership plan.
+    pub fn partition_plan(&self) -> &ShardPlan {
+        &self.parts
+    }
+
+    /// Per-shard measured KV-tier statistics, shard order. The merged
+    /// [`InferenceBackend::kv_stats`] view is the field-wise sum.
+    pub fn shard_kv_stats(&self) -> Vec<KvStoreStats> {
+        self.shards
+            .iter()
+            .map(|s| s.kv_stats().expect("host shards measure KV stats"))
+            .collect()
+    }
+
+    /// Per-shard adapter-serving statistics, shard order (`None`
+    /// without a registry).
+    pub fn shard_lora_stats(&self) -> Option<Vec<LoraServeStats>> {
+        self.shards.iter().map(|s| s.lora_stats()).collect()
+    }
+
+    /// Merged circuit-event counters across every shard (event mode
+    /// only): layer projections tally in their owning shard, the head
+    /// in shard 0, so the integer sum equals the unsharded totals.
+    pub fn events(&self) -> Option<EventCounters> {
+        let mut total = self.shards[0].events()?;
+        for s in &self.shards[1..] {
+            total.merge(&s.events()?);
+        }
+        Some(total)
+    }
+
+    /// Layer range `[l0, l1)` owned by shard `s` (its partitions ×
+    /// layers-per-partition).
+    fn layer_range(&self, s: usize) -> (usize, usize) {
+        let lpp = self.shards[0].model().layers_per_partition();
+        let (p0, p1) = self.parts.range(s);
+        (p0 * lpp, p1 * lpp)
+    }
+
+    /// Tensor-parallel LM head (fast path): quantize the normed row
+    /// once, run each shard's column submatrix GEMV in exact i64,
+    /// concatenate, rescale — bit-identical to the unsharded
+    /// projection because the partials are disjoint integer columns
+    /// under the same scale.
+    fn tp_head(&self, row: &[f32]) -> Logits {
+        let xn = rmsnorm(row);
+        let q = absmax_quantize(&xn, self.shards[0].model().act_bits);
+        let pool = Pool::new(self.shards[0].threads());
+        let mut data = Vec::with_capacity(self.shards[0].model().vocab_size);
+        for w in self.head_cols.iter().flatten() {
+            let s = q.scale * w.scale;
+            data.extend(w.gemv_with(&q.values, &pool).into_iter().map(|v| v as f32 * s));
+        }
+        Logits::new(data)
+    }
+}
+
+impl InferenceBackend for ShardedBackend {
+    type State = ShardedState;
+    /// Hidden activations flow between partition stages exactly as on
+    /// a single [`HostBackend`] — the pipeline is sharded, not the
+    /// per-token dataflow.
+    type Hidden = Vec<Vec<f32>>;
+
+    fn model(&self) -> &ModelConfig {
+        self.shards[0].model()
+    }
+
+    fn prefill_len(&self) -> usize {
+        self.model().max_seq
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Size every shard's store for the deployment: each shard gets
+    /// the full configured on-die capacity for its own layers (one
+    /// modeled chip per shard, the scale-out premise).
+    fn configure_kv(&self, serve: &ServeConfig) -> Result<()> {
+        for s in &self.shards {
+            s.configure_kv(serve)?;
+        }
+        Ok(())
+    }
+
+    fn advance_kv_clock(&self, now_s: f64) {
+        for s in &self.shards {
+            s.advance_kv_clock(now_s);
+        }
+    }
+
+    /// Advance one shard's retention clock independently — what lets a
+    /// shard-local retention storm (DESIGN.md §13 under §16) expire
+    /// rows on exactly one modeled chip.
+    fn advance_kv_clock_shard(&self, shard: usize, now_s: f64) {
+        self.shards[shard].advance_kv_clock(now_s);
+    }
+
+    /// Field-wise sum of the per-shard stats: access counts, failures,
+    /// energies and occupancy gauges add; the config gauges
+    /// (`quant_bits`, `block_tokens`) are shard 0's (identical
+    /// everywhere). Placement-invariant combined counters sum exactly
+    /// to the unsharded run's totals; the tier *split* may differ —
+    /// per-shard stores have more on-die headroom per layer.
+    fn kv_stats(&self) -> Option<KvStoreStats> {
+        let mut total = self.shards[0].kv_stats()?;
+        for s in &self.shards[1..] {
+            let st = s.kv_stats()?;
+            total.accesses.ondie_reads += st.accesses.ondie_reads;
+            total.accesses.ondie_writes += st.accesses.ondie_writes;
+            total.accesses.external_reads += st.accesses.external_reads;
+            total.accesses.external_writes += st.accesses.external_writes;
+            total.evictions += st.evictions;
+            total.spilled_early_blocks += st.spilled_early_blocks;
+            total.retention_failures += st.retention_failures;
+            total.explicit_refreshes += st.explicit_refreshes;
+            total.edram_energy_j += st.edram_energy_j;
+            total.dram_energy_j += st.dram_energy_j;
+            total.ondie_blocks_in_use += st.ondie_blocks_in_use;
+            total.ondie_block_capacity += st.ondie_block_capacity;
+            total.prefix_hits += st.prefix_hits;
+            total.prefix_bound_tokens += st.prefix_bound_tokens;
+            total.cow_forks += st.cow_forks;
+        }
+        Some(total)
+    }
+
+    fn set_threads(&self, threads: usize) {
+        for s in &self.shards {
+            s.set_threads(threads);
+        }
+    }
+
+    /// Reserve the round's pages on each shard for *its own* layer
+    /// range only — placement stays a coordinator-side mutation
+    /// (DESIGN.md §12) and no shard ever holds another's KV.
+    fn reserve_kv(&self, state: &mut ShardedState, n_tokens: usize) -> Result<()> {
+        for (s, backend) in self.shards.iter().enumerate() {
+            let (l0, l1) = self.layer_range(s);
+            backend.reserve_kv_range(&mut state.states[s], n_tokens, l0, l1)?;
+        }
+        Ok(())
+    }
+
+    /// Preemption swap-out across every shard's store; returns the
+    /// total blocks demoted.
+    fn swap_out_kv(&self, state: &mut ShardedState) -> Result<u64> {
+        let mut demoted = 0u64;
+        for (backend, st) in self.shards.iter().zip(state.states.iter_mut()) {
+            demoted += backend.swap_out_kv(st)?;
+        }
+        Ok(demoted)
+    }
+
+    /// Prefix sharing is disabled under sharding (module docs): a bind
+    /// would have to install blocks into every layer's table, but each
+    /// shard owns only its own layers. Always a miss — the sequence
+    /// prefills its whole prompt, so tokens are unchanged
+    /// (invariants 11 ∧ 12) and only the traffic win is forgone.
+    fn bind_prefix_kv(&self, _state: &mut ShardedState, _prompt: &[i32]) -> Result<usize> {
+        Ok(0)
+    }
+
+    /// No-op twin of [`Self::bind_prefix_kv`]: nothing registers, so
+    /// nothing can ever bind.
+    fn register_prefix_kv(&self, _state: &mut ShardedState, _prompt: &[i32]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Bind the tenant's adapter on every shard (each shard executes
+    /// its own layers' adapter sites, so each needs the binding; every
+    /// registry accounts the bind identically).
+    fn bind_adapter(&self, state: &mut ShardedState, adapter: Option<u32>) -> Result<()> {
+        for (backend, st) in self.shards.iter().zip(state.states.iter_mut()) {
+            backend.bind_adapter(st, adapter)?;
+        }
+        Ok(())
+    }
+
+    /// Merged adapter accounting: residency counters (binds, cold
+    /// loads, streamed bytes/energy) come from shard 0 — every shard
+    /// binds identically, so shard 0's counts equal the unsharded
+    /// run's; execution counters (MACs, rows) sum across shards —
+    /// each shard executed only its own layers' sites. The merged view
+    /// is therefore bit-identical to unsharded serving.
+    fn lora_stats(&self) -> Option<LoraServeStats> {
+        let mut total = self.shards[0].lora_stats()?;
+        for s in &self.shards[1..] {
+            let st = s.lora_stats()?;
+            total.adapter_macs += st.adapter_macs;
+            total.base_macs += st.base_macs;
+            total.adapter_rows += st.adapter_rows;
+        }
+        Some(total)
+    }
+
+    fn new_state(&self) -> Result<ShardedState> {
+        let states = self
+            .shards
+            .iter()
+            .map(|s| s.new_state())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedState {
+            states,
+            pos: 0,
+            prompt_len: 0,
+        })
+    }
+
+    /// Embedding is a table lookup replicated on every shard; shard 0
+    /// performs it (no events, no KV — owner is arbitrary).
+    fn embed_prompt(&self, prompt: &[i32]) -> Result<Vec<Vec<f32>>> {
+        self.shards[0].embed_prompt(prompt)
+    }
+
+    fn embed_token(&self, token: i32) -> Result<Vec<Vec<f32>>> {
+        self.shards[0].embed_token(token)
+    }
+
+    /// Route the stage to the shard owning `part`; it appends the
+    /// partition's KV rows into its own store via its own slice of the
+    /// sequence state.
+    fn run_partition_prefill(
+        &self,
+        part: usize,
+        h: &Vec<Vec<f32>>,
+        state: &mut ShardedState,
+    ) -> Result<Vec<Vec<f32>>> {
+        let s = self.parts.owner(part);
+        self.shards[s].run_partition_prefill(part, h, &mut state.states[s])
+    }
+
+    fn run_partition_decode(
+        &self,
+        part: usize,
+        h: &Vec<Vec<f32>>,
+        pos: usize,
+        state: &mut ShardedState,
+    ) -> Result<Vec<Vec<f32>>> {
+        let s = self.parts.owner(part);
+        self.shards[s].run_partition_decode(part, h, pos, &mut state.states[s])
+    }
+
+    /// Tensor-parallel head on the fast path; event mode delegates the
+    /// whole projection to shard 0 so its event tally lands in exactly
+    /// one shard (the merged counters then sum to unsharded).
+    fn head_at(&self, h: &Vec<Vec<f32>>, idx: usize) -> Result<Logits> {
+        if self.event_mode {
+            return self.shards[0].head_at(h, idx);
+        }
+        let row = h
+            .get(idx)
+            .ok_or_else(|| anyhow!("head index {idx} past {} hidden rows", h.len()))?;
+        Ok(self.tp_head(row))
+    }
+
+    fn head_decode_logits(&self, h: &Vec<Vec<f32>>) -> Result<Logits> {
+        if self.event_mode {
+            return self.shards[0].head_decode_logits(h);
+        }
+        let row = h.last().ok_or_else(|| anyhow!("empty decode hidden"))?;
+        Ok(self.tp_head(row))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitnet::{ref_gemm, ref_gemv};
+    use crate::util::rng::Rng;
+
+    fn micro() -> ModelConfig {
+        ModelConfig {
+            name: "shard-micro".into(),
+            n_layers: 2,
+            d_model: 32,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 64,
+            vocab_size: 64,
+            max_seq: 32,
+            n_partitions: 2,
+            act_bits: 8,
+        }
+    }
+
+    #[test]
+    fn near_even_plans_cover_contiguously_first_heavy() {
+        for (n, k) in [(10, 3), (6, 6), (7, 2), (5, 8), (0, 3), (1, 1), (23, 5)] {
+            let plan = ShardPlan::near_even(n, k);
+            assert_eq!(plan.n_shards(), k.max(1));
+            let mut expect = 0usize;
+            for s in 0..plan.n_shards() {
+                let (lo, hi) = plan.range(s);
+                assert_eq!(lo, expect, "gap before shard {s} at ({n}, {k})");
+                assert!(hi >= lo);
+                expect = hi;
+            }
+            assert_eq!(expect, n, "plan does not cover ({n}, {k})");
+            // first-heavy near-even: sizes differ by at most one and
+            // never increase along the shard order
+            let sizes: Vec<usize> = plan.ranges().iter().map(|&(lo, hi)| hi - lo).collect();
+            let (min, max) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+            assert!(sizes.windows(2).all(|w| w[0] >= w[1]));
+            // every covered item has exactly one owner
+            for item in 0..n {
+                let s = plan.owner(item);
+                let (lo, hi) = plan.range(s);
+                assert!((lo..hi).contains(&item));
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_gemv_and_gemm_match_the_golden_reference() {
+        let mut rng = Rng::new(0x51A2);
+        let w = TernaryMatrix::random(37, 23, 0.3, &mut rng);
+        let xs: Vec<Vec<i32>> = (0..3)
+            .map(|_| (0..37).map(|_| (rng.next_u64() % 17) as i32 - 8).collect())
+            .collect();
+        let pool = Pool::new(1);
+        let want_v = ref_gemv(&xs[0], &w);
+        let want_m = ref_gemm(&xs, &w);
+        // uneven splits, 1-column shards, and more shards than columns
+        for n_shards in [1usize, 2, 3, 5, 23, 40] {
+            assert_eq!(
+                sharded_gemv(&xs[0], &w, n_shards, &pool),
+                want_v,
+                "gemv partial merge diverged at {n_shards} shards"
+            );
+            assert_eq!(
+                sharded_gemm(&xs, &w, n_shards, &pool),
+                want_m,
+                "gemm partial merge diverged at {n_shards} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_generation_matches_unsharded_bit_exactly() {
+        // invariant 12 at the backend level: the provided greedy driver
+        // through partition routing + the tensor-parallel head must
+        // reproduce the single-backend tokens exactly
+        let prompt = [7, 3, 11, 40];
+        let want = HostBackend::new(micro(), 77).unwrap().generate_greedy(&prompt, 8).unwrap();
+        for n_shards in [1usize, 2] {
+            let b = ShardedBackend::new(micro(), 77, n_shards).unwrap();
+            assert_eq!(b.n_shards(), n_shards);
+            assert_eq!(
+                b.generate_greedy(&prompt, 8).unwrap(),
+                want,
+                "tokens diverged at {n_shards} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_kv_stats_sum_to_the_unsharded_totals() {
+        let prompt = [4, 8, 15, 16];
+        let solo = HostBackend::new(micro(), 21).unwrap();
+        solo.generate_greedy(&prompt, 6).unwrap();
+        let want = solo.kv_stats().unwrap();
+        let b = ShardedBackend::new(micro(), 21, 2).unwrap();
+        b.generate_greedy(&prompt, 6).unwrap();
+        let per_shard = b.shard_kv_stats();
+        assert_eq!(per_shard.len(), 2);
+        assert!(per_shard.iter().all(|s| s.accesses.total_accesses() > 0));
+        let merged = b.kv_stats().unwrap();
+        // combined (placement-invariant) counters sum exactly
+        assert_eq!(
+            merged.accesses.ondie_writes + merged.accesses.external_writes,
+            want.accesses.ondie_writes + want.accesses.external_writes
+        );
+        assert_eq!(
+            merged.accesses.ondie_reads + merged.accesses.external_reads,
+            want.accesses.ondie_reads + want.accesses.external_reads
+        );
+        assert_eq!(merged.retention_failures, 0);
+        assert_eq!(merged.quant_bits, want.quant_bits);
+        // the merged view is the field-wise sum of the per-shard view
+        let sum: u64 = per_shard.iter().map(|s| s.accesses.total_accesses()).sum();
+        assert_eq!(merged.accesses.total_accesses(), sum);
+    }
+
+    #[test]
+    fn from_shards_validates_the_fleet() {
+        assert!(ShardedBackend::from_shards(vec![]).is_err(), "empty fleet");
+        // mismatched weight seeds would silently diverge mid-pipeline
+        let a = HostBackend::new(micro(), 1).unwrap();
+        let b = HostBackend::new(micro(), 2).unwrap();
+        assert!(ShardedBackend::from_shards(vec![a, b]).is_err());
+        // more shards than partitions leaves stage-less shards
+        let fleet: Vec<HostBackend> =
+            (0..3).map(|_| HostBackend::new(micro(), 1).unwrap()).collect();
+        assert!(ShardedBackend::from_shards(fleet).is_err());
+        // the convenience constructor clamps instead
+        let c = ShardedBackend::new(micro(), 1, 9).unwrap();
+        assert_eq!(c.n_shards(), micro().n_partitions);
+        let plan = c.partition_plan();
+        assert_eq!(plan.n_shards(), 2);
+        assert_eq!((plan.range(0), plan.range(1)), ((0, 1), (1, 2)));
+    }
+
+    #[test]
+    fn sharded_adapter_serving_matches_unsharded() {
+        use crate::lora::{AdapterRegistry, LoraConfig};
+        let reg =
+            |seed| AdapterRegistry::fabricate(&micro(), &LoraConfig::paper(), 2, seed).unwrap();
+        let solo = HostBackend::with_adapters(micro(), 11, reg(99)).unwrap();
+        let prompt = [3, 14, 15, 9];
+        let want = solo.generate_greedy_bound(&prompt, 8, Some(1)).unwrap();
+        let fleet: Vec<HostBackend> = (0..2)
+            .map(|_| HostBackend::with_adapters(micro(), 11, reg(99)).unwrap())
+            .collect::<Vec<_>>();
+        let b = ShardedBackend::from_shards(fleet).unwrap();
+        assert_eq!(b.generate_greedy_bound(&prompt, 8, Some(1)).unwrap(), want);
+        // residency from shard 0, execution summed: equal to unsharded
+        let (s_solo, s_shard) = (solo.lora_stats().unwrap(), b.lora_stats().unwrap());
+        assert_eq!(s_shard.binds, s_solo.binds);
+        assert_eq!(s_shard.cold_loads, s_solo.cold_loads);
+        assert_eq!(s_shard.bytes_streamed, s_solo.bytes_streamed);
+        assert_eq!(s_shard.adapter_macs, s_solo.adapter_macs);
+        assert_eq!(s_shard.base_macs, s_solo.base_macs);
+        assert_eq!(s_shard.adapter_rows, s_solo.adapter_rows);
+        let per = b.shard_lora_stats().unwrap();
+        assert_eq!(per.iter().map(|s| s.adapter_macs).sum::<u64>(), s_solo.adapter_macs);
+    }
+
+    #[test]
+    fn prefix_binds_always_miss_under_sharding() {
+        let b = ShardedBackend::new(micro(), 23, 2).unwrap();
+        let prompt = [9, 4, 2, 30, 7, 11, 3, 8, 1];
+        let mut donor = b.new_state().unwrap();
+        let mut h = b.embed_prompt(&prompt).unwrap();
+        for part in 0..b.n_partitions() {
+            h = b.run_partition_prefill(part, &h, &mut donor).unwrap();
+        }
+        b.register_prefix_kv(&mut donor, &prompt).unwrap();
+        let mut binder = b.new_state().unwrap();
+        assert_eq!(b.bind_prefix_kv(&mut binder, &prompt).unwrap(), 0);
+        assert_eq!(b.kv_stats().unwrap().prefix_hits, 0);
+    }
+
+    #[test]
+    fn backend_is_sync_and_states_are_send() {
+        // the serving loop's parallel rounds need exactly these bounds
+        fn takes_sync<T: Sync + Send>() {}
+        fn takes_send<T: Send>() {}
+        takes_sync::<ShardedBackend>();
+        takes_send::<ShardedState>();
+    }
+}

@@ -17,10 +17,18 @@
 //! pool prefixes, the prefix cache and either preemption policy may be
 //! on, and priority classes may be drawn — none of which may change a
 //! completed request's tokens (invariant 11), even mid-storm.
+//!
+//! And a shard axis (DESIGN.md §16): the faulted deployment may be
+//! split across 1–3 model shards, whose storms become shard-local
+//! retention events on one shard's DR-eDRAM clock, while the fault-free
+//! twin always runs single-shard — so invariants 9 and 12 are fuzzed
+//! *jointly*: recovery under shard-local expiry and preemption must
+//! still land every completed request bit-identical to the unsharded
+//! fault-free twin.
 
 use bitrom::config::{ModelConfig, ServeConfig};
 use bitrom::coordinator::{CompletedRequest, FaultMetrics, ServeMetrics, Server};
-use bitrom::runtime::HostBackend;
+use bitrom::runtime::{HostBackend, ShardedBackend};
 use bitrom::trace::{generate, Request, TraceConfig};
 use bitrom::util::check::check;
 use bitrom::{prop_assert, prop_assert_eq};
@@ -38,7 +46,18 @@ fn run(
     reqs: Vec<Request>,
     serve: ServeConfig,
 ) -> anyhow::Result<(Vec<CompletedRequest>, ServeMetrics)> {
-    let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED)?;
+    let model = ModelConfig::sim_tiny();
+    if serve.shards > 1 {
+        // same-seed fleet: partition ownership + per-shard KV stores
+        let fleet = (0..serve.shards)
+            .map(|_| HostBackend::new(model.clone(), WEIGHT_SEED))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut server = Server::new(ShardedBackend::from_shards(fleet)?, serve)?;
+        let (mut done, metrics) = server.run_trace(reqs)?;
+        done.sort_by_key(|r| r.id);
+        return Ok((done, metrics));
+    }
+    let backend = HostBackend::new(model, WEIGHT_SEED)?;
     let mut server = Server::new(backend, serve)?;
     let (mut done, metrics) = server.run_trace(reqs)?;
     done.sort_by_key(|r| r.id);
@@ -72,10 +91,13 @@ fn any_fault_schedule_recovers_or_sheds_typed() {
         // or may not cross tREF, transient faults, a sometimes-starved
         // on-die tier, sometimes pressure-gated admission / preemption
         // (either KV policy), sometimes a live prefix cache over a
-        // smaller page size so shared blocks sit in the blast radius
+        // smaller page size so shared blocks sit in the blast radius —
+        // and sometimes a sharded deployment (1–3 shards of sim_tiny's
+        // 6 partitions), whose storms hit one shard's retention clock
         let pressure_on = g.f64() < 0.5;
         let faulted = ServeConfig {
             max_batches: g.usize(1, 4),
+            shards: 1 + g.usize(0, 2),
             fault_seed: g.rng.next_u64() | 1,
             fault_storm_p: g.f64(),
             fault_transient_p: g.f64() * 0.3,
@@ -90,12 +112,15 @@ fn any_fault_schedule_recovers_or_sheds_typed() {
             ..ServeConfig::default()
         };
         // the twin shares the workload and geometry but runs fault-free
-        // with private KV and no scheduling pressure
+        // with private KV, no scheduling pressure, and a single shard —
+        // so 9b below also asserts invariant 12 (sharded faulted tokens
+        // ≡ unsharded fault-free tokens)
         let clean = ServeConfig {
             fault_seed: 0,
             admit_pressure: 0.0,
             preempt_under_pressure: false,
             prefix_cache: false,
+            shards: 1,
             ..faulted.clone()
         };
         let reqs = generate(&trace_cfg);

@@ -1,0 +1,348 @@
+//! Property harness for invariant 12 (DESIGN.md §16): shard count
+//! changes throughput and placement, never tokens.
+//!
+//! Three layers of evidence, bottom-up:
+//!
+//! 1. **Kernel merge** — `sharded_gemv` / `sharded_gemm` column-split
+//!    partials concatenate to the golden `ref_gemv` / `ref_gemm`
+//!    integers exactly, over random geometries including uneven
+//!    splits, 1-column shards, and more shards than columns.
+//! 2. **Served traces** — full coordinator runs on `sim_tiny` are
+//!    bit-identical across `--shards 1/2/3/5` × `--threads 1/4`,
+//!    including mixed-tenant LoRA traffic and seeded top-k sampling,
+//!    with merged adapter accounting equal to the unsharded run's.
+//! 3. **Accounting** — per-shard KV-tier / energy counters sum to the
+//!    merged view, the merged view matches the unsharded totals, and
+//!    merged circuit-event counters on the event-counted cirom path
+//!    equal the unsharded tally exactly.
+//!
+//! Cases come from `util::check`: the failing case seed is printed for
+//! deterministic replay, and `BITROM_FUZZ_CASES` bounds the case count
+//! (CI quick mode keeps it small).
+
+use bitrom::bitnet::{ref_gemm, ref_gemv, TernaryMatrix};
+use bitrom::config::{MacroGeometry, ModelConfig, ServeConfig};
+use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
+use bitrom::kvcache::KvStoreStats;
+use bitrom::lora::AdapterRegistry;
+use bitrom::runtime::{
+    sharded_gemm, sharded_gemv, HostBackend, InferenceBackend, ShardedBackend,
+};
+use bitrom::trace::{generate, Request, TraceConfig};
+use bitrom::util::check::check;
+use bitrom::util::pool::Pool;
+use bitrom::{prop_assert, prop_assert_eq};
+
+const WEIGHT_SEED: u64 = 0x512D;
+const ADAPTER_SEED: u64 = 0xADA7;
+
+fn fuzz_cases() -> u64 {
+    std::env::var("BITROM_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6)
+}
+
+/// One shard's worth of backend: the same model + weight seed every
+/// time, with an adapter registry fabricated from the serve knobs when
+/// tenant serving is on — every shard (and the unsharded twin) gets an
+/// identical registry, mirroring how `main.rs` builds a fleet.
+fn backend(model: &ModelConfig, serve: &ServeConfig) -> anyhow::Result<HostBackend> {
+    match serve.lora_config()? {
+        Some(lora) => {
+            let reg = AdapterRegistry::fabricate(model, &lora, serve.n_adapters, ADAPTER_SEED)?;
+            HostBackend::with_adapters(model.clone(), WEIGHT_SEED, reg)
+        }
+        None => HostBackend::new(model.clone(), WEIGHT_SEED),
+    }
+}
+
+/// Run one trace on `sim_tiny` at the configured shard count,
+/// returning completions (sorted by id), metrics, and the per-shard
+/// KV statistics in shard order (a single vector when unsharded).
+fn run(
+    reqs: Vec<Request>,
+    serve: ServeConfig,
+) -> anyhow::Result<(Vec<CompletedRequest>, ServeMetrics, Vec<KvStoreStats>)> {
+    let model = ModelConfig::sim_tiny();
+    if serve.shards > 1 {
+        let fleet = (0..serve.shards)
+            .map(|_| backend(&model, &serve))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut server = Server::new(ShardedBackend::from_shards(fleet)?, serve)?;
+        let (mut done, metrics) = server.run_trace(reqs)?;
+        done.sort_by_key(|r| r.id);
+        let per_shard = server.backend().shard_kv_stats();
+        return Ok((done, metrics, per_shard));
+    }
+    let mut server = Server::new(backend(&model, &serve)?, serve)?;
+    let (mut done, metrics) = server.run_trace(reqs)?;
+    done.sort_by_key(|r| r.id);
+    let per_shard = vec![server
+        .backend()
+        .kv_stats()
+        .expect("host backends measure KV stats")];
+    Ok((done, metrics, per_shard))
+}
+
+#[test]
+fn sharded_kernels_merge_exactly_over_any_split() {
+    // the tensor-parallel partial merge is exact i64 over disjoint
+    // output columns: any shard count — uneven splits, 1-column
+    // shards, more shards than columns — reproduces the golden
+    // reference bit-for-bit at any pool width
+    check(0x5A01, fuzz_cases(), |g| {
+        let rows = 1 + g.usize(0, 39);
+        let cols = 1 + g.usize(0, 39);
+        let p_zero = 0.1 + 0.7 * g.f64();
+        let w = TernaryMatrix::random(rows, cols, p_zero, &mut g.rng);
+        let xs: Vec<Vec<i32>> = (0..1 + g.usize(0, 2))
+            .map(|_| (0..rows).map(|_| g.rng.i64(-8, 8) as i32).collect())
+            .collect();
+        let pool = Pool::new(1 + g.usize(0, 3));
+        let want_v = ref_gemv(&xs[0], &w);
+        let want_m = ref_gemm(&xs, &w);
+        for n_shards in [1, 2, 3, 5, cols, cols + 3] {
+            prop_assert!(
+                sharded_gemv(&xs[0], &w, n_shards, &pool) == want_v,
+                "gemv partial merge diverged: {rows}x{cols} at {n_shards} shards"
+            );
+            prop_assert!(
+                sharded_gemm(&xs, &w, n_shards, &pool) == want_m,
+                "gemm partial merge diverged: {rows}x{cols} at {n_shards} shards"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn served_traces_are_bit_identical_across_shard_counts() {
+    // invariant 12 end-to-end, asserted in CI at two thread widths:
+    // the full serving loop — admission, pipeline rounds, mixed-tenant
+    // adapter binds, seeded top-k sampling — produces the same tokens
+    // for every request at --shards 1/2/3/5 × --threads 1/4, and the
+    // merged adapter accounting is placement-invariant too
+    check(0x5A02, fuzz_cases().min(4), |g| {
+        let model = ModelConfig::sim_tiny();
+        let trace_cfg = TraceConfig {
+            n_requests: 2 + g.size(5),
+            prompt_len_min: 2,
+            prompt_len_max: 2 + g.size(10),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(8),
+            vocab_size: model.vocab_size,
+            arrival_rate: 0.0,
+            // mixed tenants: every request draws one of two adapters
+            n_adapters: 2,
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        let serve = ServeConfig {
+            max_batches: g.usize(1, 4),
+            n_adapters: 2,
+            // sampled decoding must also be shard-invariant — the
+            // logits are bit-identical, so the seeded draw is too
+            top_k: 1 + g.usize(0, 2),
+            seed: g.rng.next_u64(),
+            ..ServeConfig::default()
+        };
+        let reqs = generate(&trace_cfg);
+        let mut base: Option<(usize, usize, Vec<CompletedRequest>, ServeMetrics)> = None;
+        for shards in [1usize, 2, 3, 5] {
+            for threads in [1usize, 4] {
+                let cfg = ServeConfig {
+                    shards,
+                    threads,
+                    ..serve.clone()
+                };
+                let (done, m, _) = run(reqs.clone(), cfg)
+                    .map_err(|e| format!("shards={shards} threads={threads}: {e:#}"))?;
+                prop_assert_eq!(done.len(), reqs.len());
+                let Some((bs, bt, base_done, base_m)) = &base else {
+                    base = Some((shards, threads, done, m));
+                    continue;
+                };
+                for (a, b) in base_done.iter().zip(&done) {
+                    prop_assert!(
+                        a.id == b.id && a.tokens == b.tokens && a.adapter_id == b.adapter_id,
+                        "request {} diverged between shards={bs} threads={bt} \
+                         and shards={shards} threads={threads}",
+                        a.id
+                    );
+                }
+                prop_assert_eq!(base_m.tokens_out, m.tokens_out);
+                prop_assert!(
+                    base_m.lora == m.lora,
+                    "merged adapter accounting diverged at shards={shards} \
+                     threads={threads}: {:?} vs {:?}",
+                    base_m.lora,
+                    m.lora
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_shard_kv_accounting_sums_to_the_unsharded_totals() {
+    // the accounting half of invariant 12: under the roomy default
+    // deployment (no capacity pressure, so placement is identical),
+    // every per-tier access counter of the sharded run equals the
+    // unsharded run's, the memory energies agree to float tolerance,
+    // and the merged backend view is exactly the shard-ordered sum of
+    // the per-shard views
+    check(0x5A03, fuzz_cases().min(4), |g| {
+        let model = ModelConfig::sim_tiny();
+        let trace_cfg = TraceConfig {
+            n_requests: 2 + g.size(4),
+            prompt_len_min: 2,
+            prompt_len_max: 2 + g.size(8),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(6),
+            vocab_size: model.vocab_size,
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        let serve = ServeConfig {
+            threads: 1,
+            ..ServeConfig::default()
+        };
+        let n_shards = g.usize(2, 5);
+        let reqs = generate(&trace_cfg);
+        let (done1, m1, _) = run(
+            reqs.clone(),
+            ServeConfig {
+                shards: 1,
+                ..serve.clone()
+            },
+        )
+        .map_err(|e| format!("unsharded run: {e:#}"))?;
+        let (done_n, mn, per_shard) = run(
+            reqs,
+            ServeConfig {
+                shards: n_shards,
+                ..serve
+            },
+        )
+        .map_err(|e| format!("{n_shards}-shard run: {e:#}"))?;
+
+        // tokens first (invariant 12) — the counters below are only
+        // comparable because the runs did identical work
+        prop_assert_eq!(done1.len(), done_n.len());
+        for (a, b) in done1.iter().zip(&done_n) {
+            prop_assert!(
+                a.id == b.id && a.tokens == b.tokens,
+                "request {} diverged at {n_shards} shards",
+                a.id
+            );
+        }
+
+        let kv1 = m1.kv.ok_or("unsharded run must measure KV stats")?;
+        let kvn = mn.kv.ok_or("sharded run must measure KV stats")?;
+        // per-tier counters match exactly: placement is per-layer and
+        // the roomy default capacity never forces a shard-dependent
+        // spill or eviction
+        prop_assert_eq!(kvn.accesses.ondie_reads, kv1.accesses.ondie_reads);
+        prop_assert_eq!(kvn.accesses.ondie_writes, kv1.accesses.ondie_writes);
+        prop_assert_eq!(kvn.accesses.external_reads, kv1.accesses.external_reads);
+        prop_assert_eq!(kvn.accesses.external_writes, kv1.accesses.external_writes);
+        prop_assert_eq!(kvn.evictions, kv1.evictions);
+        prop_assert_eq!(kvn.retention_failures, 0u64);
+        prop_assert_eq!(kv1.retention_failures, 0u64);
+        // same accesses at the same tiers ⇒ same energy, up to the
+        // f64 accumulation-order difference between one store and N
+        for (name, a, b) in [
+            ("edram", kvn.edram_energy_j, kv1.edram_energy_j),
+            ("dram", kvn.dram_energy_j, kv1.dram_energy_j),
+        ] {
+            prop_assert!(
+                (a - b).abs() <= 1e-9 * b.abs().max(1e-30),
+                "{name} energy diverged at {n_shards} shards: {a} vs {b}"
+            );
+        }
+
+        // the merged view is the shard-ordered field-wise sum of the
+        // per-shard views — integer counters and energies both (the
+        // fold below replays the merge's accumulation order, so even
+        // the f64 sums are bit-identical)
+        prop_assert_eq!(per_shard.len(), n_shards);
+        let mut sum = per_shard[0].clone();
+        for st in &per_shard[1..] {
+            sum.accesses.ondie_reads += st.accesses.ondie_reads;
+            sum.accesses.ondie_writes += st.accesses.ondie_writes;
+            sum.accesses.external_reads += st.accesses.external_reads;
+            sum.accesses.external_writes += st.accesses.external_writes;
+            sum.evictions += st.evictions;
+            sum.retention_failures += st.retention_failures;
+            sum.edram_energy_j += st.edram_energy_j;
+            sum.dram_energy_j += st.dram_energy_j;
+        }
+        prop_assert_eq!(sum.accesses.ondie_reads, kvn.accesses.ondie_reads);
+        prop_assert_eq!(sum.accesses.ondie_writes, kvn.accesses.ondie_writes);
+        prop_assert_eq!(sum.accesses.external_reads, kvn.accesses.external_reads);
+        prop_assert_eq!(sum.accesses.external_writes, kvn.accesses.external_writes);
+        prop_assert_eq!(sum.evictions, kvn.evictions);
+        prop_assert!(
+            sum.edram_energy_j == kvn.edram_energy_j && sum.dram_energy_j == kvn.dram_energy_j,
+            "merged energies are not the shard-ordered sum"
+        );
+        // every shard actually did work — the plan never starves one
+        prop_assert!(
+            per_shard.iter().all(|s| s.accesses.total_accesses() > 0),
+            "a shard served no KV traffic"
+        );
+        Ok(())
+    });
+}
+
+/// Local 2-partition model small enough for the event-counted cirom
+/// path (orders of magnitude slower than the bitplane kernels).
+fn event_micro() -> ModelConfig {
+    ModelConfig {
+        name: "shard-props-micro".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        n_kv_heads: 2,
+        d_ff: 64,
+        vocab_size: 64,
+        max_seq: 32,
+        n_partitions: 2,
+        act_bits: 8,
+    }
+}
+
+#[test]
+fn event_counters_sum_to_the_unsharded_totals() {
+    // circuit-event accounting under sharding: layer projections tally
+    // in their owning shard, the head in shard 0, and the merged
+    // integer counters equal the unsharded run's exactly — while the
+    // tokens stay bit-identical (event mode routes the head through
+    // shard 0 precisely so this sum holds)
+    let geom = MacroGeometry {
+        rows: 32,
+        cols: 16,
+        cols_per_trimla: 8,
+        ..Default::default()
+    };
+    let prompt = [1, 2, 3];
+    let solo = HostBackend::with_cirom_events(event_micro(), 5, geom.clone()).unwrap();
+    let want_tokens = solo.generate_greedy(&prompt, 4).unwrap();
+    let want = solo.events().expect("event mode counts events");
+    let fleet: Vec<HostBackend> = (0..2)
+        .map(|_| HostBackend::with_cirom_events(event_micro(), 5, geom.clone()).unwrap())
+        .collect();
+    let b = ShardedBackend::from_shards(fleet).unwrap();
+    assert_eq!(
+        b.generate_greedy(&prompt, 4).unwrap(),
+        want_tokens,
+        "event-mode tokens diverged under sharding"
+    );
+    assert_eq!(
+        b.events().expect("merged event counters"),
+        want,
+        "merged event counters do not sum to the unsharded totals"
+    );
+}
