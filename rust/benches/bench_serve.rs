@@ -8,6 +8,10 @@
 //!   1/2/4 worker threads (the parallel execution engine, DESIGN.md
 //!   §12). Tokens are asserted bit-identical across widths before any
 //!   number is recorded;
+//! * **fused decode** — the same trace at 8 slots, per-slot decode
+//!   GEMVs vs one batched partition walk per round (DESIGN.md §17):
+//!   tokens asserted bit-identical before the throughput ratio is
+//!   recorded as the `fused_decode_speedup` gate;
 //! * **faults** — the same trace under certain periodic retention
 //!   storms (DESIGN.md §13): tokens asserted bit-identical to the
 //!   fault-free run, and the recovery throughput ratio recorded as the
@@ -65,11 +69,13 @@ fn run_point(
     trace_cfg: &TraceConfig,
     batches: usize,
     threads: usize,
+    fused: bool,
 ) -> anyhow::Result<(Point, Vec<(u64, Vec<i32>)>)> {
     let backend = HostBackend::new(model.clone(), 0xB17)?;
     let serve = ServeConfig {
         max_batches: batches,
         threads,
+        fused_decode: fused,
         ..ServeConfig::default()
     };
     let mut server = Server::new(backend, serve)?;
@@ -107,6 +113,9 @@ fn run_shard_point(
         max_batches: 6,
         threads: 1,
         shards,
+        // the historical per-slot engine, so shard_scaling_ratio keeps
+        // measuring partition routing rather than decode fusion
+        fused_decode: false,
         ..ServeConfig::default()
     };
     let mut server = Server::new(backend, serve)?;
@@ -146,6 +155,7 @@ fn run_fault_point(
         fault_transient_p: 0.0,
         fault_clock_skip_s: 0.1,
         retry_max: 16,
+        fused_decode: false,
         ..ServeConfig::default()
     };
     let mut server = Server::new(backend, serve)?;
@@ -215,6 +225,7 @@ fn run_stream_point(
     let serve = ServeConfig {
         max_batches: 6,
         threads: 1,
+        fused_decode: false,
         ..ServeConfig::default()
     };
     let max_prompt = serve.prefill_len;
@@ -316,7 +327,7 @@ fn main() -> anyhow::Result<()> {
     let mut batch_points = Vec::new();
     let mut single = 0.0f64;
     for batches in [1usize, 2, 4, 6] {
-        let (p, _) = run_point(&model, &trace_cfg, batches, 1)?;
+        let (p, _) = run_point(&model, &trace_cfg, batches, 1, false)?;
         if batches == 1 {
             single = p.tokens_per_s;
         }
@@ -341,7 +352,7 @@ fn main() -> anyhow::Result<()> {
     let mut serial_6 = 0.0f64;
     let mut serial_tokens: Vec<(u64, Vec<i32>)> = Vec::new();
     for threads in [1usize, 2, 4] {
-        let (p, tokens) = run_point(&model, &trace_cfg, 6, threads)?;
+        let (p, tokens) = run_point(&model, &trace_cfg, 6, threads, false)?;
         if threads == 1 {
             serial_6 = p.tokens_per_s;
             serial_tokens = tokens;
@@ -358,6 +369,23 @@ fn main() -> anyhow::Result<()> {
         );
         thread_points.push(p);
     }
+
+    // fused-decode axis (DESIGN.md §17): the same trace at 8 in-flight
+    // slots, per-slot decode GEMVs vs one batched partition walk per
+    // round. Tokens are asserted bit-identical BEFORE any throughput
+    // is recorded — a speedup for different tokens is worthless.
+    println!("-- fused decode (batches = 8, threads = 1) --");
+    let (unfused_p, unfused_tokens) = run_point(&model, &trace_cfg, 8, 1, false)?;
+    let (fused_p, fused_tokens) = run_point(&model, &trace_cfg, 8, 1, true)?;
+    assert_eq!(
+        fused_tokens, unfused_tokens,
+        "fused decode changed served tokens (DESIGN.md §17)"
+    );
+    let fused_speedup = fused_p.tokens_per_s / unfused_p.tokens_per_s.max(1e-9);
+    println!(
+        "  per-slot: {:>8.1} tok/s | fused: {:>8.1} tok/s  (x{fused_speedup:.2})",
+        unfused_p.tokens_per_s, fused_p.tokens_per_s,
+    );
 
     // axis 3: survivability — the same trace under certain periodic
     // retention storms; tokens must still be bit-identical to the
@@ -495,6 +523,17 @@ fn main() -> anyhow::Result<()> {
             ),
         ),
         (
+            "fused_point",
+            Json::obj(vec![
+                ("batches", Json::num(8.0)),
+                ("unfused_tokens_per_s", Json::num(unfused_p.tokens_per_s)),
+                ("fused_tokens_per_s", Json::num(fused_p.tokens_per_s)),
+                ("speedup", Json::num(fused_speedup)),
+                ("tbt_p50_ms", Json::num(fused_p.tbt_p50_ms)),
+                ("tbt_p95_ms", Json::num(fused_p.tbt_p95_ms)),
+            ]),
+        ),
+        (
             "fault_point",
             Json::obj(vec![
                 ("tokens_per_s", Json::num(fault_p.tokens_per_s)),
@@ -544,6 +583,7 @@ fn main() -> anyhow::Result<()> {
             Json::obj(vec![
                 ("batching_speedup_6v1", Json::num(speedup_6v1)),
                 ("threads_speedup_4v1", Json::num(threads_4v1)),
+                ("fused_decode_speedup", Json::num(fused_speedup)),
                 ("fault_recovery_throughput_ratio", Json::num(fault_ratio)),
                 ("streaming_overhead_ratio", Json::num(stream_ratio)),
                 ("prefix_hit_dram_reduction", Json::num(prefix.measured_shared)),

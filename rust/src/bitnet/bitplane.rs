@@ -1,4 +1,5 @@
-//! Word-parallel ternary kernel engine — the host compute path.
+//! Ternary bitplane storage — the compute view the kernel engine
+//! ([`KernelCtx`](super::KernelCtx), DESIGN.md §17) runs on.
 //!
 //! A ternary matrix decomposes into two bitplanes (the same sign/zero
 //! decomposition the TriMLA comparators produce in silicon, paper Fig 4):
@@ -8,33 +9,22 @@
 //!
 //! Storage is per-column: column `c` (one output channel / one BiROMA
 //! wordline row) owns `words_per_col` contiguous u64 words per plane,
-//! rows blocked 64 to a word. A GEMV walks each column's words once:
-//! sparse words iterate set bits (`trailing_zeros`), dense words run a
-//! straight sign-select pass over all 64 lanes — either way there is no
-//! per-trit base-3 decode, no division, no modulo on the hot path.
+//! rows blocked 64 to a word. The accumulation loops themselves live
+//! in [`kernel`](super::kernel); this type only owns the planes plus
+//! the fabrication/extraction primitives (`get`, `col_trits_into`,
+//! `submatrix`). The `gemv`/`gemm` methods here are conveniences that
+//! run a process-default [`KernelCtx`](super::KernelCtx) — callers
+//! that pick a pool, path, or tile go through the context directly.
 //!
 //! Accumulation is exact i64, so results are bit-identical to
 //! [`ref_gemv`](super::ref_gemv) (property-tested across shapes,
-//! sparsities, and negative/zero activations). `PackedTrits` remains
-//! the minimal-footprint storage format; a `BitplaneMatrix` is the
-//! compute view constructed from it once and reused.
+//! sparsities, paths, and negative/zero activations). `PackedTrits`
+//! remains the minimal-footprint storage format; a `BitplaneMatrix` is
+//! the compute view constructed from it once and reused.
 
+use super::kernel::KernelCtx;
 use super::pack::PackedTrits;
 use super::Trit;
-use crate::util::pool::{chunk_bounds, Pool};
-
-/// Above this many populated lanes in a 64-row word, a straight
-/// whole-word sign-select pass beats per-set-bit iteration (the
-/// bit-iteration loop costs ~2 dependent ops per set bit; the dense
-/// pass streams all lanes branch-free).
-const DENSE_WORD_CUTOVER: u32 = 32;
-
-/// Below this many weights a kernel stays serial no matter what width
-/// the caller's pool requests: a `thread::scope` fork costs tens of
-/// microseconds, which dwarfs a small GEMV. The cutoff only affects
-/// speed — sharding is bit-identical at any width (each output column
-/// is always accumulated whole, in row order, by exactly one worker).
-const PAR_MIN_WEIGHTS: usize = 64 * 1024;
 
 /// A ternary weight matrix decomposed into per-column sign bitplanes.
 #[derive(Debug, Clone, PartialEq)]
@@ -134,6 +124,17 @@ impl BitplaneMatrix {
         (self.plus.len() + self.minus.len()) * 8
     }
 
+    /// The plus/minus plane words of column `c` — the kernel engine's
+    /// readout primitive.
+    #[inline]
+    pub(crate) fn col_words(&self, c: usize) -> (&[u64], &[u64]) {
+        let base = c * self.words_per_col;
+        (
+            &self.plus[base..base + self.words_per_col],
+            &self.minus[base..base + self.words_per_col],
+        )
+    }
+
     /// Single weight readout from the planes.
     #[inline]
     pub fn get(&self, row: usize, col: usize) -> Trit {
@@ -143,15 +144,16 @@ impl BitplaneMatrix {
         ((self.plus[w] >> bit) & 1) as i8 - ((self.minus[w] >> bit) & 1) as i8
     }
 
-    /// Materialize one column (an output channel's fan-in weights) —
-    /// the fabrication path the `cirom` layer uses instead of per-trit
-    /// base-3 decode.
-    pub fn col_trits(&self, col: usize) -> Vec<Trit> {
+    /// Materialize one column (an output channel's fan-in weights) into
+    /// a caller buffer of length `rows` — the fabrication path the
+    /// `cirom` layer uses instead of per-trit base-3 decode, without a
+    /// per-call allocation on repeat extraction.
+    pub fn col_trits_into(&self, col: usize, out: &mut [Trit]) {
         assert!(col < self.cols, "column {col} out of bounds {}", self.cols);
-        let base = col * self.words_per_col;
-        let mut out = vec![0i8; self.rows];
-        for wi in 0..self.words_per_col {
-            let (p, m) = (self.plus[base + wi], self.minus[base + wi]);
+        assert_eq!(out.len(), self.rows, "col_trits_into buffer length");
+        out.fill(0);
+        let (pcol, mcol) = self.col_words(col);
+        for (wi, (&p, &m)) in pcol.iter().zip(mcol).enumerate() {
             let mut bits = p | m;
             while bits != 0 {
                 let i = bits.trailing_zeros() as usize;
@@ -160,201 +162,32 @@ impl BitplaneMatrix {
                 bits &= bits - 1;
             }
         }
+    }
+
+    /// Allocating twin of [`Self::col_trits_into`] (one-shot callers).
+    pub fn col_trits(&self, col: usize) -> Vec<Trit> {
+        let mut out = vec![0i8; self.rows];
+        self.col_trits_into(col, &mut out);
         out
     }
 
     /// Integer GEMV, bit-identical to `ref_gemv`: `y[c] = Σ_r x[r]·w[r][c]`
-    /// with exact i64 accumulation. Shards output columns across the
-    /// process-default pool ([`Pool::from_env`], serial unless
-    /// `BITROM_THREADS` is set).
+    /// with exact i64 accumulation, on a process-default
+    /// [`KernelCtx`](super::KernelCtx) (serial unless `BITROM_THREADS`
+    /// is set, auto path). Callers that pick a pool/path/tile build
+    /// their own context.
     pub fn gemv(&self, x: &[i32]) -> Vec<i64> {
-        self.gemv_with(x, &Pool::from_env())
-    }
-
-    /// [`Self::gemv`] on an explicit pool. Each worker owns a
-    /// contiguous column range; a column's i64 accumulation is always
-    /// performed whole and in row order by one worker, so the result
-    /// is bit-identical at every width (tested at 1/2/4/7 threads).
-    pub fn gemv_with(&self, x: &[i32], pool: &Pool) -> Vec<i64> {
-        let mut y = vec![0i64; self.cols];
-        self.gemv_into_with(x, &mut y, pool);
-        y
-    }
-
-    /// GEMV into a caller-provided output buffer (overwrites `y`).
-    pub fn gemv_into(&self, x: &[i32], y: &mut [i64]) {
-        self.gemv_into_with(x, y, &Pool::from_env());
-    }
-
-    /// [`Self::gemv_into`] on an explicit pool: the output slice is
-    /// split into per-worker column chunks (disjoint `&mut` views into
-    /// the same buffer — no copies, no stitching).
-    pub fn gemv_into_with(&self, x: &[i32], y: &mut [i64], pool: &Pool) {
-        assert_eq!(x.len(), self.rows, "gemv dim mismatch");
-        assert_eq!(y.len(), self.cols, "gemv output dim mismatch");
-        let width = self.shard_width(pool);
-        if width <= 1 {
-            self.gemv_cols(x, 0, self.cols, y);
-            return;
-        }
-        let cols = self.cols;
-        std::thread::scope(|scope| {
-            let mut rest: &mut [i64] = y;
-            for w in 0..width {
-                let (lo, hi) = chunk_bounds(cols, width, w);
-                let (chunk, tail) = rest.split_at_mut(hi - lo);
-                rest = tail;
-                scope.spawn(move || self.gemv_cols(x, lo, hi, chunk));
-            }
-        });
-    }
-
-    /// Serial GEMV over columns `[c0, c1)` into `out` (`out[c - c0]` =
-    /// column `c`) — the one accumulation loop every GEMV path runs.
-    fn gemv_cols(&self, x: &[i32], c0: usize, c1: usize, out: &mut [i64]) {
-        debug_assert_eq!(out.len(), c1 - c0);
-        let wpc = self.words_per_col;
-        for (c, out) in (c0..c1).zip(out.iter_mut()) {
-            let base = c * wpc;
-            let pcol = &self.plus[base..base + wpc];
-            let mcol = &self.minus[base..base + wpc];
-            let mut acc = 0i64;
-            for (wi, (&p, &m)) in pcol.iter().zip(mcol).enumerate() {
-                let both = p | m;
-                if both == 0 {
-                    continue;
-                }
-                let row0 = wi << 6;
-                if both.count_ones() >= DENSE_WORD_CUTOVER {
-                    // dense word: stream every resident lane, branch-free
-                    // sign select (+1 / −1 / 0 as a two-bit difference)
-                    let lanes = &x[row0..(row0 + 64).min(self.rows)];
-                    for (i, &xv) in lanes.iter().enumerate() {
-                        let sign = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
-                        acc += sign * xv as i64;
-                    }
-                } else {
-                    // sparse word: touch only the set bits
-                    let mut pp = p;
-                    while pp != 0 {
-                        acc += x[row0 + pp.trailing_zeros() as usize] as i64;
-                        pp &= pp - 1;
-                    }
-                    let mut mm = m;
-                    while mm != 0 {
-                        acc -= x[row0 + mm.trailing_zeros() as usize] as i64;
-                        mm &= mm - 1;
-                    }
-                }
-            }
-            *out = acc;
-        }
-    }
-
-    /// Effective shard width for this matrix on `pool`: serial below
-    /// [`PAR_MIN_WEIGHTS`], else capped at one column per worker.
-    fn shard_width(&self, pool: &Pool) -> usize {
-        if self.rows * self.cols < PAR_MIN_WEIGHTS {
-            return 1;
-        }
-        pool.threads().min(self.cols).max(1)
+        KernelCtx::from_env().gemv(self, x)
     }
 
     /// Batched integer GEMM over activation rows, bit-identical to
-    /// mapping `ref_gemv` over `xs`. Shards output columns across the
-    /// process-default pool ([`Pool::from_env`]).
-    ///
-    /// The win over repeated `gemv` calls: each column word's bit
-    /// pattern is decoded ONCE into (row, sign) pairs and replayed
-    /// across the whole batch, so mask iteration amortizes over the
-    /// batch dimension (the LoRA merge, report, and KV-study paths all
-    /// push multiple activation rows through the same weights).
+    /// mapping `ref_gemv` over `xs`, on a process-default
+    /// [`KernelCtx`](super::KernelCtx). The batched kernel decodes
+    /// each weight word once and replays it across the whole batch;
+    /// the decode hot loop uses the flat-output variant
+    /// ([`KernelCtx::gemm_flat`](super::KernelCtx::gemm_flat)) instead.
     pub fn gemm<X: AsRef<[i32]> + Sync>(&self, xs: &[X]) -> Vec<Vec<i64>> {
-        self.gemm_with(xs, &Pool::from_env())
-    }
-
-    /// [`Self::gemm`] on an explicit pool. Workers own contiguous
-    /// column ranges of every batch row; per-column accumulation order
-    /// is exactly the serial kernel's, so results are bit-identical at
-    /// every width (tested at 1/2/4/7 threads).
-    pub fn gemm_with<X: AsRef<[i32]> + Sync>(&self, xs: &[X], pool: &Pool) -> Vec<Vec<i64>> {
-        for x in xs {
-            assert_eq!(x.as_ref().len(), self.rows, "gemm dim mismatch");
-        }
-        if xs.is_empty() {
-            return Vec::new();
-        }
-        let width = self.shard_width(pool);
-        if width <= 1 {
-            return self.gemm_cols(xs, 0, self.cols);
-        }
-        let cols = self.cols;
-        let parts = pool.run(width, |w| {
-            let (lo, hi) = chunk_bounds(cols, width, w);
-            self.gemm_cols(xs, lo, hi)
-        });
-        // stitch the per-worker column chunks back into full rows
-        let mut ys: Vec<Vec<i64>> = (0..xs.len()).map(|_| Vec::with_capacity(cols)).collect();
-        for part in parts {
-            for (y, chunk) in ys.iter_mut().zip(part) {
-                y.extend(chunk);
-            }
-        }
-        ys
-    }
-
-    /// Serial batched GEMM over columns `[c0, c1)`: returns
-    /// `[batch][c1 - c0]` partial rows — the one accumulation loop
-    /// every GEMM path runs.
-    fn gemm_cols<X: AsRef<[i32]>>(&self, xs: &[X], c0: usize, c1: usize) -> Vec<Vec<i64>> {
-        let mut ys = vec![vec![0i64; c1 - c0]; xs.len()];
-        let wpc = self.words_per_col;
-        // decoded (row, sign) scratch for one 64-row word
-        let mut rows_buf = [0usize; 64];
-        let mut sign_buf = [0i64; 64];
-        for c in c0..c1 {
-            let base = c * wpc;
-            let pcol = &self.plus[base..base + wpc];
-            let mcol = &self.minus[base..base + wpc];
-            for (wi, (&p, &m)) in pcol.iter().zip(mcol).enumerate() {
-                let both = p | m;
-                if both == 0 {
-                    continue;
-                }
-                let row0 = wi << 6;
-                if both.count_ones() >= DENSE_WORD_CUTOVER {
-                    let hi = (row0 + 64).min(self.rows);
-                    for (b, x) in xs.iter().enumerate() {
-                        let x = x.as_ref();
-                        let mut acc = 0i64;
-                        for (i, &xv) in x[row0..hi].iter().enumerate() {
-                            let sign = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
-                            acc += sign * xv as i64;
-                        }
-                        ys[b][c - c0] += acc;
-                    }
-                } else {
-                    let mut n = 0usize;
-                    let mut bits = both;
-                    while bits != 0 {
-                        let i = bits.trailing_zeros() as usize;
-                        rows_buf[n] = row0 + i;
-                        sign_buf[n] = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
-                        n += 1;
-                        bits &= bits - 1;
-                    }
-                    for (b, x) in xs.iter().enumerate() {
-                        let x = x.as_ref();
-                        let mut acc = 0i64;
-                        for k in 0..n {
-                            acc += sign_buf[k] * x[rows_buf[k]] as i64;
-                        }
-                        ys[b][c - c0] += acc;
-                    }
-                }
-            }
-        }
-        ys
+        KernelCtx::from_env().gemm(self, xs)
     }
 
     /// Extract a sub-matrix's trits (row-major, `[r0, r1) × [c0, c1)`) —
@@ -492,24 +325,19 @@ mod tests {
     }
 
     #[test]
-    fn gemv_into_reuses_buffer() {
-        let plane = BitplaneMatrix::from_trits(3, 2, &[1, -1, 0, 1, -1, 0]);
-        let mut y = vec![99i64; 2];
-        plane.gemv_into(&[2, 3, 5], &mut y);
-        assert_eq!(y, vec![2 - 5, -2 + 3]);
-    }
-
-    #[test]
     fn get_and_col_trits_match_source() {
         check(0xC01, 100, |g| {
             let rows = g.size(150);
             let cols = g.size(20);
             let trits = g.vec_trits(rows * cols, 0.4);
             let plane = BitplaneMatrix::from_trits(rows, cols, &trits);
+            let mut buf = vec![7i8; rows]; // stale junk must be overwritten
             for c in 0..cols {
                 let col = plane.col_trits(c);
+                plane.col_trits_into(c, &mut buf);
                 for r in 0..rows {
                     prop_assert_eq!(col[r], trits[r * cols + c]);
+                    prop_assert_eq!(buf[r], trits[r * cols + c]);
                 }
             }
             let r = g.usize(0, rows - 1);
@@ -578,74 +406,5 @@ mod tests {
     #[should_panic(expected = "dim mismatch")]
     fn dim_mismatch_panics() {
         BitplaneMatrix::from_trits(2, 2, &[0; 4]).gemv(&[1]);
-    }
-
-    /// A shape big enough (≥ PAR_MIN_WEIGHTS) that the pooled paths
-    /// genuinely fork workers instead of hitting the serial cutoff.
-    fn parallel_case() -> (BitplaneMatrix, Vec<i32>, Vec<Vec<i32>>) {
-        let mut rng = crate::util::rng::Rng::new(0x7AE);
-        let (rows, cols) = (1031, 130); // >64k weights, ∤64 rows, odd cols
-        let trits: Vec<Trit> = (0..rows * cols).map(|_| rng.trit(0.3)).collect();
-        let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
-        let xs: Vec<Vec<i32>> = (0..5)
-            .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
-            .collect();
-        (BitplaneMatrix::from_trits(rows, cols, &trits), x, xs)
-    }
-
-    #[test]
-    fn sharded_gemv_is_bit_identical_at_every_width() {
-        // DESIGN.md §12: each output column is accumulated whole by one
-        // worker, so sharding cannot change a single bit
-        let (plane, x, _) = parallel_case();
-        let serial = plane.gemv_with(&x, &Pool::serial());
-        for threads in [2usize, 4, 7, 64] {
-            let got = plane.gemv_with(&x, &Pool::new(threads));
-            assert_eq!(got, serial, "gemv diverged at {threads} threads");
-        }
-        // the into-buffer variant shards the same way
-        let mut y = vec![0i64; plane.cols()];
-        plane.gemv_into_with(&x, &mut y, &Pool::new(4));
-        assert_eq!(y, serial);
-    }
-
-    #[test]
-    fn sharded_gemm_is_bit_identical_at_every_width() {
-        let (plane, _, xs) = parallel_case();
-        let serial = plane.gemm_with(&xs, &Pool::serial());
-        for threads in [2usize, 4, 7] {
-            let got = plane.gemm_with(&xs, &Pool::new(threads));
-            assert_eq!(got, serial, "gemm diverged at {threads} threads");
-        }
-    }
-
-    #[test]
-    fn sharded_kernels_handle_degenerate_shapes() {
-        let pool = Pool::new(7);
-        // 0-row matrix: every column accumulates nothing
-        let zero_rows = BitplaneMatrix::from_trits(0, 5, &[]);
-        assert_eq!(zero_rows.gemv_with(&[], &pool), vec![0i64; 5]);
-        // 0-column matrix: empty output
-        let zero_cols = BitplaneMatrix::from_trits(4, 0, &[]);
-        assert!(zero_cols.gemv_with(&[1, 2, 3, 4], &pool).is_empty());
-        // 1-row matrix with far more workers than rows or columns
-        let one_row = BitplaneMatrix::from_trits(1, 3, &[1, -1, 0]);
-        assert_eq!(one_row.gemv_with(&[5], &pool), vec![5, -5, 0]);
-        assert_eq!(
-            one_row.gemm_with(&[vec![2], vec![-3]], &Pool::new(64)),
-            vec![vec![2, -2, 0], vec![-3, 3, 0]]
-        );
-    }
-
-    #[test]
-    fn small_matrices_stay_on_the_serial_path() {
-        // below PAR_MIN_WEIGHTS the pooled call must not fork (perf
-        // guard); behaviorally it is indistinguishable — assert the
-        // results anyway so the cutoff can never change semantics
-        let plane = BitplaneMatrix::from_trits(3, 2, &[1, -1, 0, 1, -1, 0]);
-        assert_eq!(plane.shard_width(&Pool::new(8)), 1);
-        assert_eq!(plane.gemv_with(&[2, 3, 5], &Pool::new(8)), plane.gemv(&[2, 3, 5]));
-        let (big, _, _) = parallel_case();
-        assert!(big.shard_width(&Pool::new(8)) > 1);
     }
 }

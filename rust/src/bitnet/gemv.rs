@@ -81,34 +81,20 @@ impl TernaryMatrix {
 
     /// Integer GEMV on the bitplane kernel — bit-identical to
     /// [`ref_gemv`] and the kernel every functional (non-event) host
-    /// path uses. Shards across the process-default pool
-    /// (`BITROM_THREADS`, serial by default).
+    /// path uses. Runs a process-default
+    /// [`KernelCtx`](super::KernelCtx) (`BITROM_THREADS`, serial by
+    /// default, auto path); callers that pick a pool, path, or tile
+    /// build their own context and pass [`Self::bitplanes`].
     pub fn gemv(&self, x: &[i32]) -> Vec<i64> {
         self.bitplanes().gemv(x)
-    }
-
-    /// [`Self::gemv`] sharded across an explicit worker pool —
-    /// bit-identical at every width (DESIGN.md §12).
-    pub fn gemv_with(&self, x: &[i32], pool: &crate::util::pool::Pool) -> Vec<i64> {
-        self.bitplanes().gemv_with(x, pool)
     }
 
     /// Batched integer GEMM on the bitplane kernel — bit-identical to
     /// mapping [`ref_gemv`] over the batch. Accepts any borrowable
     /// activation rows (`&[Vec<i32>]`, `&[&[i32]]`, …) — no copies.
-    /// Shards across the process-default pool like [`Self::gemv`].
+    /// Same process-default context as [`Self::gemv`].
     pub fn gemm<X: AsRef<[i32]> + Sync>(&self, xs: &[X]) -> Vec<Vec<i64>> {
         self.bitplanes().gemm(xs)
-    }
-
-    /// [`Self::gemm`] sharded across an explicit worker pool —
-    /// bit-identical at every width (DESIGN.md §12).
-    pub fn gemm_with<X: AsRef<[i32]> + Sync>(
-        &self,
-        xs: &[X],
-        pool: &crate::util::pool::Pool,
-    ) -> Vec<Vec<i64>> {
-        self.bitplanes().gemm_with(xs, pool)
     }
 
     /// One column (an output channel's fan-in weights), extracted from

@@ -1,0 +1,762 @@
+//! Kernel engine v2 — the unified entrypoint for every ternary
+//! GEMV/GEMM in the crate (DESIGN.md §17).
+//!
+//! A [`KernelCtx`] bundles the three knobs a matmul call used to take
+//! through six near-duplicate methods (`gemv`/`gemv_with`/`gemv_into`/
+//! `gemv_into_with`/`gemm`/`gemm_with`): the worker [`Pool`], the
+//! compute [`KernelPath`], and the column tile used by the batched
+//! kernels. New paths extend the enum instead of multiplying the
+//! method surface.
+//!
+//! Two compute paths, bit-identical by construction:
+//!
+//! * **Scalar** — the word-parallel sign-select loop: sparse words
+//!   iterate set bits (`trailing_zeros`), dense words stream all 64
+//!   lanes. The portable twin; also the fallback for activations that
+//!   do not fit in 8 bits.
+//! * **BitSerial** — SIMD-within-a-register over multiple u64 lanes:
+//!   each 64-row activation word is transposed once into eight u64
+//!   bit-lanes (two's-complement i8), and a dense weight word then
+//!   reduces to 16 AND+POPCNT ops instead of 64 multiply-adds:
+//!   `dot = Σ_b (popcnt(plus & lane_b) − popcnt(minus & lane_b)) · 2^b`
+//!   with the sign bit subtracted (`b = 7` weighs −128). On x86-64 the
+//!   hardware `popcnt` instruction is runtime-detected
+//!   (`is_x86_feature_detected!`) and the same loop body is
+//!   monomorphized behind `#[target_feature(enable = "popcnt")]`; the
+//!   portable build uses the SWAR `u64::count_ones`. Sparse words keep
+//!   the scalar set-bit iteration — zero-skip beats bit-slicing below
+//!   [`BITSERIAL_WORD_CUTOVER`] resident lanes.
+//!
+//! Every path accumulates in exact i64, so results are bit-identical
+//! to [`ref_gemv`](super::ref_gemv)/[`ref_gemm`](super::ref_gemm) and
+//! to each other — kernel path changes throughput, never results
+//! (property-tested across lane remainders, sparsities 0–1, and pool
+//! widths). The batched kernels additionally offer a flat row-major
+//! output ([`KernelCtx::gemm_flat`]) so the per-round decode hot loop
+//! reuses one buffer instead of churning `Vec<Vec<i64>>`.
+
+use super::bitplane::BitplaneMatrix;
+use crate::util::pool::{chunk_bounds, Pool};
+
+/// Above this many populated lanes in a 64-row word, the scalar dense
+/// sign-select pass beats per-set-bit iteration.
+const DENSE_WORD_CUTOVER: u32 = 32;
+
+/// Above this many populated lanes, the bit-serial popcount reduction
+/// (a fixed ~16 AND+POPCNT ops per word) beats set-bit iteration
+/// (~2 dependent ops per set bit).
+const BITSERIAL_WORD_CUTOVER: u32 = 12;
+
+/// Below this many weights a kernel stays serial no matter what width
+/// the caller's pool requests: a `thread::scope` fork costs tens of
+/// microseconds, which dwarfs a small GEMV. The cutoff only affects
+/// speed — sharding is bit-identical at any width.
+const PAR_MIN_WEIGHTS: usize = 64 * 1024;
+
+/// Default output-column tile of the batched kernels: 256 columns of
+/// plane words (2 planes × words/col × 8 B) stay L1/L2-resident while
+/// the whole batch streams through them.
+const DEFAULT_COL_TILE: usize = 256;
+
+/// Compute path selector for [`KernelCtx`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// Pick per call: bit-serial when every activation fits in i8
+    /// (the quantized `act_bits ≤ 8` serving path always does), the
+    /// scalar twin otherwise.
+    #[default]
+    Auto,
+    /// The portable word-parallel sign-select loop.
+    Scalar,
+    /// The multi-lane popcount engine (falls back to scalar when an
+    /// activation exceeds the i8 range — results are identical either
+    /// way, only throughput changes).
+    BitSerial,
+}
+
+impl KernelPath {
+    /// Parse a CLI/config spelling (`auto` | `scalar` | `bitserial`).
+    pub fn parse(s: &str) -> Option<KernelPath> {
+        match s {
+            "auto" => Some(KernelPath::Auto),
+            "scalar" => Some(KernelPath::Scalar),
+            "bitserial" => Some(KernelPath::BitSerial),
+            _ => None,
+        }
+    }
+
+    /// The canonical config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelPath::Auto => "auto",
+            KernelPath::Scalar => "scalar",
+            KernelPath::BitSerial => "bitserial",
+        }
+    }
+}
+
+/// The unified kernel entrypoint: pool width + compute path + column
+/// tile, applied uniformly to every GEMV/GEMM (module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCtx {
+    pool: Pool,
+    path: KernelPath,
+    col_tile: usize,
+}
+
+impl Default for KernelCtx {
+    fn default() -> Self {
+        KernelCtx::from_env()
+    }
+}
+
+impl KernelCtx {
+    /// Context on an explicit pool, auto path, default tile.
+    pub fn new(pool: Pool) -> Self {
+        KernelCtx {
+            pool,
+            path: KernelPath::Auto,
+            col_tile: DEFAULT_COL_TILE,
+        }
+    }
+
+    /// The always-serial context (width 1, auto path).
+    pub fn serial() -> Self {
+        KernelCtx::new(Pool::serial())
+    }
+
+    /// Context at the process-default width (`BITROM_THREADS`), on the
+    /// path named by `BITROM_KERNEL_PATH` when set (auto otherwise;
+    /// unknown names fall back to auto — an env twin must never turn a
+    /// working process into an error).
+    pub fn from_env() -> Self {
+        let ctx = KernelCtx::new(Pool::from_env());
+        match std::env::var("BITROM_KERNEL_PATH")
+            .ok()
+            .as_deref()
+            .and_then(KernelPath::parse)
+        {
+            Some(path) => ctx.with_path(path),
+            None => ctx,
+        }
+    }
+
+    /// Select the compute path (builder style).
+    pub fn with_path(mut self, path: KernelPath) -> Self {
+        self.path = path;
+        self
+    }
+
+    /// Override the batched kernels' column tile (clamped to ≥ 1;
+    /// tiling never changes results, only cache behavior).
+    pub fn with_col_tile(mut self, cols: usize) -> Self {
+        self.col_tile = cols.max(1);
+        self
+    }
+
+    /// The worker pool this context shards over.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// The configured compute path.
+    pub fn path(&self) -> KernelPath {
+        self.path
+    }
+
+    /// Integer GEMV `y[c] = Σ_r x[r]·w[r][c]`, exact i64 — bit-identical
+    /// to [`ref_gemv`](super::ref_gemv) on every path and pool width.
+    pub fn gemv(&self, w: &BitplaneMatrix, x: &[i32]) -> Vec<i64> {
+        let mut y = vec![0i64; w.cols()];
+        self.gemv_into(w, x, &mut y);
+        y
+    }
+
+    /// [`Self::gemv`] into a caller-provided buffer (overwrites `y`).
+    /// The output slice is split into per-worker column chunks —
+    /// disjoint `&mut` views, no copies, no stitching.
+    pub fn gemv_into(&self, w: &BitplaneMatrix, x: &[i32], y: &mut [i64]) {
+        assert_eq!(x.len(), w.rows(), "gemv dim mismatch");
+        assert_eq!(y.len(), w.cols(), "gemv output dim mismatch");
+        let bitserial = self.use_bitserial(std::slice::from_ref(&x));
+        let lanes = if bitserial { transpose_lanes(x) } else { Vec::new() };
+        let width = shard_width(w, &self.pool);
+        if width <= 1 {
+            gemv_cols(w, x, &lanes, bitserial, 0, w.cols(), y);
+            return;
+        }
+        let cols = w.cols();
+        let lanes = &lanes;
+        std::thread::scope(|scope| {
+            let mut rest: &mut [i64] = y;
+            for wk in 0..width {
+                let (lo, hi) = chunk_bounds(cols, width, wk);
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                scope.spawn(move || gemv_cols(w, x, lanes, bitserial, lo, hi, chunk));
+            }
+        });
+    }
+
+    /// Batched integer GEMM, bit-identical to mapping
+    /// [`ref_gemv`](super::ref_gemv) over `xs`. Allocates one nested
+    /// vector per batch row; the decode hot loop should prefer
+    /// [`Self::gemm_flat`].
+    pub fn gemm<X: AsRef<[i32]> + Sync>(&self, w: &BitplaneMatrix, xs: &[X]) -> Vec<Vec<i64>> {
+        let mut flat = Vec::new();
+        self.gemm_flat(w, xs, &mut flat);
+        let mut rows: Vec<Vec<i64>> = flat
+            .chunks(w.cols().max(1))
+            .take(xs.len())
+            .map(|r| r.to_vec())
+            .collect();
+        rows.resize(xs.len(), Vec::new()); // zero-column matrices: one empty row per batch entry
+        rows
+    }
+
+    /// Batched integer GEMM into a flat row-major buffer:
+    /// `out[b * w.cols() + c]` is batch row `b`, output column `c`.
+    /// `out` is resized to `xs.len() × w.cols()` and overwritten — the
+    /// per-round decode loop reuses one allocation across rounds.
+    ///
+    /// Workers own contiguous column ranges of every batch row
+    /// (cache-tiled by [`Self::with_col_tile`]); each output element is
+    /// accumulated in exact i64 by exactly one worker, so results are
+    /// bit-identical at every width, path, and tile.
+    pub fn gemm_flat<X: AsRef<[i32]> + Sync>(
+        &self,
+        w: &BitplaneMatrix,
+        xs: &[X],
+        out: &mut Vec<i64>,
+    ) {
+        for x in xs {
+            assert_eq!(x.as_ref().len(), w.rows(), "gemm dim mismatch");
+        }
+        let cols = w.cols();
+        out.clear();
+        out.resize(xs.len() * cols, 0);
+        if xs.is_empty() || cols == 0 {
+            return;
+        }
+        let bitserial = self.use_bitserial(xs);
+        let lanes: Vec<Vec<Lanes>> = if bitserial {
+            xs.iter().map(|x| transpose_lanes(x.as_ref())).collect()
+        } else {
+            Vec::new()
+        };
+        let width = if w.rows() * cols * xs.len() < PAR_MIN_WEIGHTS {
+            1
+        } else {
+            shard_width(w, &self.pool)
+        };
+        if width <= 1 {
+            let mut views: Vec<&mut [i64]> = out.chunks_mut(cols).collect();
+            gemm_cols(w, xs, &lanes, bitserial, 0, cols, self.col_tile, &mut views);
+            return;
+        }
+        // split each row-major output row at the worker chunk bounds,
+        // regrouping the disjoint &mut column views per worker
+        let bounds: Vec<(usize, usize)> =
+            (0..width).map(|wk| chunk_bounds(cols, width, wk)).collect();
+        let mut per_worker: Vec<Vec<&mut [i64]>> =
+            (0..width).map(|_| Vec::with_capacity(xs.len())).collect();
+        for row in out.chunks_mut(cols) {
+            let mut rest = row;
+            for (wk, &(lo, hi)) in bounds.iter().enumerate() {
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                per_worker[wk].push(chunk);
+            }
+        }
+        let (lanes, tile) = (&lanes, self.col_tile);
+        std::thread::scope(|scope| {
+            for (wk, mut views) in per_worker.into_iter().enumerate() {
+                let (lo, hi) = bounds[wk];
+                scope.spawn(move || {
+                    gemm_cols(w, xs, lanes, bitserial, lo, hi, tile, &mut views)
+                });
+            }
+        });
+    }
+
+    /// True when this call runs the bit-serial engine: path says so
+    /// (or Auto) and every activation of every row fits two's-complement
+    /// i8 — the range the lane transpose encodes exactly.
+    fn use_bitserial<X: AsRef<[i32]>>(&self, xs: &[X]) -> bool {
+        match self.path {
+            KernelPath::Scalar => false,
+            KernelPath::Auto | KernelPath::BitSerial => xs
+                .iter()
+                .all(|x| x.as_ref().iter().all(|&v| (-128..=127).contains(&v))),
+        }
+    }
+}
+
+/// Effective shard width for `w` on `pool`: serial below
+/// [`PAR_MIN_WEIGHTS`], else capped at one column per worker.
+fn shard_width(w: &BitplaneMatrix, pool: &Pool) -> usize {
+    if w.rows() * w.cols() < PAR_MIN_WEIGHTS {
+        return 1;
+    }
+    pool.threads().min(w.cols()).max(1)
+}
+
+/// Eight u64 bit-lanes of one 64-row activation word: `0[b]` bit `r`
+/// is bit `b` of `x[word*64 + r]` as two's-complement i8.
+type Lanes = [u64; 8];
+
+/// Transpose i8-range activations into per-word bit-lanes (done once
+/// per activation row, amortized over every output column).
+fn transpose_lanes(x: &[i32]) -> Vec<Lanes> {
+    let words = (x.len() + 63) / 64;
+    let mut out = vec![[0u64; 8]; words];
+    for (r, &v) in x.iter().enumerate() {
+        let mut byte = (v as i8) as u8;
+        let bit = (r & 63) as u32;
+        let lanes = &mut out[r >> 6];
+        for lane in lanes.iter_mut() {
+            *lane |= u64::from(byte & 1) << bit;
+            byte >>= 1;
+        }
+    }
+    out
+}
+
+/// Bit-serial dot product of one dense 64-row weight word against the
+/// eight activation bit-lanes: popcount sign-select per lane, powers
+/// of two recombined with the sign lane (`b = 7`) subtracted. Exact —
+/// each popcount difference is in `[-64, 64]`, the weighted sum in
+/// `[-2^14, 2^14]`.
+#[inline(always)]
+fn dot_word_lanes(p: u64, m: u64, lanes: &Lanes) -> i64 {
+    let mut acc = 0i64;
+    for (b, &lane) in lanes.iter().enumerate().take(7) {
+        let d = (p & lane).count_ones() as i64 - (m & lane).count_ones() as i64;
+        acc += d << b;
+    }
+    let d7 = (p & lanes[7]).count_ones() as i64 - (m & lanes[7]).count_ones() as i64;
+    acc - (d7 << 7)
+}
+
+/// Serial GEMV over columns `[c0, c1)` into `out` — the one
+/// accumulation loop every GEMV path runs. `lanes` is non-empty iff
+/// `bitserial`.
+fn gemv_cols(
+    w: &BitplaneMatrix,
+    x: &[i32],
+    lanes: &[Lanes],
+    bitserial: bool,
+    c0: usize,
+    c1: usize,
+    out: &mut [i64],
+) {
+    debug_assert_eq!(out.len(), c1 - c0);
+    #[cfg(target_arch = "x86_64")]
+    if bitserial && std::arch::is_x86_feature_detected!("popcnt") {
+        // SAFETY: the `popcnt` CPU feature was detected at runtime on
+        // this exact machine; the callee only requires that feature.
+        unsafe { gemv_cols_popcnt(w, x, lanes, c0, c1, out) };
+        return;
+    }
+    gemv_cols_body(w, x, lanes, bitserial, c0, c1, out);
+}
+
+/// [`gemv_cols_body`] monomorphized with the hardware `popcnt`
+/// instruction enabled (runtime-detected by the caller).
+///
+/// # Safety
+/// The CPU must support the `popcnt` feature.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn gemv_cols_popcnt(
+    w: &BitplaneMatrix,
+    x: &[i32],
+    lanes: &[Lanes],
+    c0: usize,
+    c1: usize,
+    out: &mut [i64],
+) {
+    gemv_cols_body(w, x, lanes, true, c0, c1, out);
+}
+
+#[inline(always)]
+fn gemv_cols_body(
+    w: &BitplaneMatrix,
+    x: &[i32],
+    lanes: &[Lanes],
+    bitserial: bool,
+    c0: usize,
+    c1: usize,
+    out: &mut [i64],
+) {
+    let rows = w.rows();
+    let dense_cutover = if bitserial {
+        BITSERIAL_WORD_CUTOVER
+    } else {
+        DENSE_WORD_CUTOVER
+    };
+    for (c, out) in (c0..c1).zip(out.iter_mut()) {
+        let (pcol, mcol) = w.col_words(c);
+        let mut acc = 0i64;
+        for (wi, (&p, &m)) in pcol.iter().zip(mcol).enumerate() {
+            let both = p | m;
+            if both == 0 {
+                continue;
+            }
+            let row0 = wi << 6;
+            if both.count_ones() >= dense_cutover {
+                if bitserial {
+                    acc += dot_word_lanes(p, m, &lanes[wi]);
+                } else {
+                    // dense word: stream every resident lane,
+                    // branch-free sign select
+                    let xw = &x[row0..(row0 + 64).min(rows)];
+                    for (i, &xv) in xw.iter().enumerate() {
+                        let sign = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
+                        acc += sign * xv as i64;
+                    }
+                }
+            } else {
+                // sparse word: touch only the set bits
+                let mut pp = p;
+                while pp != 0 {
+                    acc += x[row0 + pp.trailing_zeros() as usize] as i64;
+                    pp &= pp - 1;
+                }
+                let mut mm = m;
+                while mm != 0 {
+                    acc -= x[row0 + mm.trailing_zeros() as usize] as i64;
+                    mm &= mm - 1;
+                }
+            }
+        }
+        *out = acc;
+    }
+}
+
+/// Serial batched GEMM over columns `[c0, c1)` into per-row column
+/// views (`outs[b][c - c0]` = batch row `b`, column `c`) — the one
+/// accumulation loop every GEMM path runs. Columns are walked in
+/// `col_tile` blocks so a tile's plane words stay cache-resident while
+/// the whole batch streams through them; each weight word is decoded
+/// once and replayed across the batch.
+#[allow(clippy::too_many_arguments)]
+fn gemm_cols<X: AsRef<[i32]>>(
+    w: &BitplaneMatrix,
+    xs: &[X],
+    lanes: &[Vec<Lanes>],
+    bitserial: bool,
+    c0: usize,
+    c1: usize,
+    col_tile: usize,
+    outs: &mut [&mut [i64]],
+) {
+    debug_assert_eq!(outs.len(), xs.len());
+    #[cfg(target_arch = "x86_64")]
+    if bitserial && std::arch::is_x86_feature_detected!("popcnt") {
+        // SAFETY: the `popcnt` CPU feature was detected at runtime on
+        // this exact machine; the callee only requires that feature.
+        unsafe { gemm_cols_popcnt(w, xs, lanes, c0, c1, col_tile, outs) };
+        return;
+    }
+    gemm_cols_body(w, xs, lanes, bitserial, c0, c1, col_tile, outs);
+}
+
+/// [`gemm_cols_body`] monomorphized with the hardware `popcnt`
+/// instruction enabled (runtime-detected by the caller).
+///
+/// # Safety
+/// The CPU must support the `popcnt` feature.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn gemm_cols_popcnt<X: AsRef<[i32]>>(
+    w: &BitplaneMatrix,
+    xs: &[X],
+    lanes: &[Vec<Lanes>],
+    c0: usize,
+    c1: usize,
+    col_tile: usize,
+    outs: &mut [&mut [i64]],
+) {
+    gemm_cols_body(w, xs, lanes, true, c0, c1, col_tile, outs);
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn gemm_cols_body<X: AsRef<[i32]>>(
+    w: &BitplaneMatrix,
+    xs: &[X],
+    lanes: &[Vec<Lanes>],
+    bitserial: bool,
+    c0: usize,
+    c1: usize,
+    col_tile: usize,
+    outs: &mut [&mut [i64]],
+) {
+    let rows = w.rows();
+    let dense_cutover = if bitserial {
+        BITSERIAL_WORD_CUTOVER
+    } else {
+        DENSE_WORD_CUTOVER
+    };
+    // decoded (row, sign) scratch for one 64-row word
+    let mut rows_buf = [0usize; 64];
+    let mut sign_buf = [0i64; 64];
+    let mut tile0 = c0;
+    while tile0 < c1 {
+        let tile1 = (tile0 + col_tile).min(c1);
+        for c in tile0..tile1 {
+            let (pcol, mcol) = w.col_words(c);
+            for (wi, (&p, &m)) in pcol.iter().zip(mcol).enumerate() {
+                let both = p | m;
+                if both == 0 {
+                    continue;
+                }
+                let row0 = wi << 6;
+                if both.count_ones() >= dense_cutover {
+                    if bitserial {
+                        for (b, out) in outs.iter_mut().enumerate() {
+                            out[c - c0] += dot_word_lanes(p, m, &lanes[b][wi]);
+                        }
+                    } else {
+                        let hi = (row0 + 64).min(rows);
+                        for (b, out) in outs.iter_mut().enumerate() {
+                            let x = xs[b].as_ref();
+                            let mut acc = 0i64;
+                            for (i, &xv) in x[row0..hi].iter().enumerate() {
+                                let sign = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
+                                acc += sign * xv as i64;
+                            }
+                            out[c - c0] += acc;
+                        }
+                    }
+                } else {
+                    // decode the word's (row, sign) pairs once, replay
+                    // across the whole batch
+                    let mut n = 0usize;
+                    let mut bits = both;
+                    while bits != 0 {
+                        let i = bits.trailing_zeros() as usize;
+                        rows_buf[n] = row0 + i;
+                        sign_buf[n] = ((p >> i) & 1) as i64 - ((m >> i) & 1) as i64;
+                        n += 1;
+                        bits &= bits - 1;
+                    }
+                    for (b, out) in outs.iter_mut().enumerate() {
+                        let x = xs[b].as_ref();
+                        let mut acc = 0i64;
+                        for k in 0..n {
+                            acc += sign_buf[k] * x[rows_buf[k]] as i64;
+                        }
+                        out[c - c0] += acc;
+                    }
+                }
+            }
+        }
+        tile0 = tile1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ref_gemm, ref_gemv, TernaryMatrix};
+    use super::*;
+    use crate::util::check::check;
+    #[allow(unused_imports)]
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn ctx(path: KernelPath) -> KernelCtx {
+        KernelCtx::serial().with_path(path)
+    }
+
+    #[test]
+    fn paths_parse_and_roundtrip() {
+        for p in [KernelPath::Auto, KernelPath::Scalar, KernelPath::BitSerial] {
+            assert_eq!(KernelPath::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(KernelPath::parse("avx512"), None);
+        assert_eq!(KernelPath::default(), KernelPath::Auto);
+    }
+
+    #[test]
+    fn every_path_matches_reference_property() {
+        // SIMD ≡ scalar ≡ ref across random shapes (straddling word
+        // boundaries), full sparsity range, negative/zero activations
+        check(0x51D0, 120, |g| {
+            let rows = g.size(200);
+            let cols = g.size(48);
+            let trits = g.vec_trits(rows * cols, g.f64());
+            let x: Vec<i32> = (0..rows).map(|_| g.rng.i64(-128, 127) as i32).collect();
+            let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+            let want = ref_gemv(&x, &w);
+            for path in [KernelPath::Auto, KernelPath::Scalar, KernelPath::BitSerial] {
+                prop_assert_eq!(ctx(path).gemv(w.bitplanes(), &x), want.clone());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bitserial_exact_at_lane_remainders_and_sparsities() {
+        // rows exactly at, under, and over multiples of the 64-lane
+        // word width; sparsities from all-dense to all-zero
+        let mut rng = crate::util::rng::Rng::new(0xB5E);
+        for rows in [1usize, 63, 64, 65, 127, 128, 129, 192, 200] {
+            for p_zero in [0.0, 0.3, 0.7, 1.0] {
+                let cols = 9;
+                let trits: Vec<i8> = (0..rows * cols).map(|_| rng.trit(p_zero)).collect();
+                let x: Vec<i32> = (0..rows).map(|_| rng.i64(-128, 127) as i32).collect();
+                let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+                assert_eq!(
+                    ctx(KernelPath::BitSerial).gemv(w.bitplanes(), &x),
+                    ref_gemv(&x, &w),
+                    "rows {rows} p_zero {p_zero}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bitserial_covers_extreme_i8_values() {
+        // a fully dense 64-lane word (forced onto the popcount path)
+        // with ±127 and −128 exercising every bit-lane incl. the sign
+        let trits: Vec<i8> = (0..64).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let w = TernaryMatrix::from_trits(64, 1, &trits, 1.0);
+        let vals = [-128i32, 127, -1, 0, 1, -64, 64, 5];
+        let x: Vec<i32> = (0..64).map(|i| vals[i % vals.len()]).collect();
+        assert_eq!(
+            ctx(KernelPath::BitSerial).gemv(w.bitplanes(), &x),
+            ref_gemv(&x, &w)
+        );
+    }
+
+    #[test]
+    fn out_of_range_activations_fall_back_to_scalar() {
+        // the bit-serial request still computes the right answer for
+        // activations outside i8 — via the scalar twin
+        let mut rng = crate::util::rng::Rng::new(0xFA11);
+        let trits: Vec<i8> = (0..96 * 5).map(|_| rng.trit(0.2)).collect();
+        let w = TernaryMatrix::from_trits(96, 5, &trits, 1.0);
+        let x: Vec<i32> = (0..96).map(|_| rng.i64(-4000, 4000) as i32).collect();
+        for path in [KernelPath::Auto, KernelPath::BitSerial] {
+            assert_eq!(ctx(path).gemv(w.bitplanes(), &x), ref_gemv(&x, &w));
+        }
+    }
+
+    #[test]
+    fn gemm_flat_matches_nested_and_reference_property() {
+        check(0x6F1A, 80, |g| {
+            let rows = g.size(150);
+            let cols = g.size(40);
+            let trits = g.vec_trits(rows * cols, g.f64());
+            let batch = g.usize(1, 9);
+            let xs: Vec<Vec<i32>> = (0..batch)
+                .map(|_| (0..rows).map(|_| g.rng.i64(-128, 127) as i32).collect())
+                .collect();
+            let w = TernaryMatrix::from_trits(rows, cols, &trits, 1.0);
+            let want = ref_gemm(&xs, &w);
+            for path in [KernelPath::Scalar, KernelPath::BitSerial] {
+                let k = ctx(path);
+                prop_assert_eq!(k.gemm(w.bitplanes(), &xs), want.clone());
+                let mut flat = Vec::new();
+                k.gemm_flat(w.bitplanes(), &xs, &mut flat);
+                prop_assert_eq!(flat.len(), batch * cols);
+                for (b, row) in want.iter().enumerate() {
+                    prop_assert_eq!(&flat[b * cols..(b + 1) * cols], &row[..]);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_flat_reuses_the_buffer_across_shapes() {
+        let w1 = TernaryMatrix::from_trits(3, 2, &[1, -1, 0, 1, -1, 0], 1.0);
+        let mut flat = vec![99i64; 17]; // stale junk from a prior round
+        let k = KernelCtx::serial();
+        k.gemm_flat(w1.bitplanes(), &[vec![2, 3, 5]], &mut flat);
+        assert_eq!(flat, vec![2 - 5, -2 + 3]);
+        // empty batch leaves an empty buffer
+        k.gemm_flat(w1.bitplanes(), &Vec::<Vec<i32>>::new(), &mut flat);
+        assert!(flat.is_empty());
+    }
+
+    /// A shape big enough (≥ PAR_MIN_WEIGHTS) that the pooled paths
+    /// genuinely fork workers instead of hitting the serial cutoff.
+    fn parallel_case() -> (TernaryMatrix, Vec<i32>, Vec<Vec<i32>>) {
+        let mut rng = crate::util::rng::Rng::new(0x7AE);
+        let (rows, cols) = (1031, 130); // >64k weights, ∤64 rows, odd cols
+        let trits: Vec<i8> = (0..rows * cols).map(|_| rng.trit(0.3)).collect();
+        let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+        let xs: Vec<Vec<i32>> = (0..5)
+            .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
+            .collect();
+        (TernaryMatrix::from_trits(rows, cols, &trits, 1.0), x, xs)
+    }
+
+    #[test]
+    fn pool_width_never_changes_results_on_any_path() {
+        let (w, x, xs) = parallel_case();
+        for path in [KernelPath::Scalar, KernelPath::BitSerial] {
+            let serial = ctx(path);
+            let want_v = serial.gemv(w.bitplanes(), &x);
+            let mut want_m = Vec::new();
+            serial.gemm_flat(w.bitplanes(), &xs, &mut want_m);
+            for threads in [2usize, 4, 7, 64] {
+                let k = KernelCtx::new(Pool::new(threads)).with_path(path);
+                assert_eq!(k.gemv(w.bitplanes(), &x), want_v, "gemv {path:?} @ {threads}");
+                let mut y = vec![0i64; w.cols];
+                k.gemv_into(w.bitplanes(), &x, &mut y);
+                assert_eq!(y, want_v);
+                let mut flat = Vec::new();
+                k.gemm_flat(w.bitplanes(), &xs, &mut flat);
+                assert_eq!(flat, want_m, "gemm {path:?} @ {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_tiles_never_change_results() {
+        let (w, _, xs) = parallel_case();
+        let want = KernelCtx::serial().gemm(w.bitplanes(), &xs);
+        for tile in [1usize, 7, 64, 1000] {
+            let k = KernelCtx::new(Pool::new(4)).with_col_tile(tile);
+            assert_eq!(k.gemm(w.bitplanes(), &xs), want, "tile {tile}");
+        }
+        // tile 0 is clamped, not UB
+        assert_eq!(
+            KernelCtx::serial().with_col_tile(0).gemm(w.bitplanes(), &xs),
+            want
+        );
+    }
+
+    #[test]
+    fn degenerate_shapes_on_every_path() {
+        for path in [KernelPath::Scalar, KernelPath::BitSerial] {
+            let k = KernelCtx::new(Pool::new(7)).with_path(path);
+            let zero_rows = TernaryMatrix::from_trits(0, 5, &[], 1.0);
+            assert_eq!(k.gemv(zero_rows.bitplanes(), &[]), vec![0i64; 5]);
+            let zero_cols = TernaryMatrix::from_trits(4, 0, &[], 1.0);
+            assert!(k.gemv(zero_cols.bitplanes(), &[1, 2, 3, 4]).is_empty());
+            let one_row = TernaryMatrix::from_trits(1, 3, &[1, -1, 0], 1.0);
+            assert_eq!(k.gemv(one_row.bitplanes(), &[5]), vec![5, -5, 0]);
+            let mut flat = Vec::new();
+            k.gemm_flat(one_row.bitplanes(), &[vec![2], vec![-3]], &mut flat);
+            assert_eq!(flat, vec![2, -2, 0, -3, 3, 0]);
+        }
+    }
+
+    #[test]
+    fn lane_transpose_is_exact_two_s_complement() {
+        let x: Vec<i32> = vec![-128, -127, -1, 0, 1, 127, 42, -42];
+        let lanes = transpose_lanes(&x);
+        assert_eq!(lanes.len(), 1);
+        for (r, &v) in x.iter().enumerate() {
+            let mut got = 0u8;
+            for (b, &lane) in lanes[0].iter().enumerate() {
+                got |= (((lane >> r) & 1) as u8) << b;
+            }
+            assert_eq!(got as i8 as i32, v, "row {r}");
+        }
+    }
+}

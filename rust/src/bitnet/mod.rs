@@ -1,17 +1,20 @@
 //! BitNet ternary-weight substrate: trit types, packed storage, the
 //! absmean/absmax quantizers (bit-identical to `python/compile/quant.py`),
 //! the golden ternary GEMV the `cirom` macro simulator is verified
-//! against, and the word-parallel [`BitplaneMatrix`] kernel engine the
-//! host-side functional compute paths run on (bit-identical to
-//! `ref_gemv`, property-tested).
+//! against, the [`BitplaneMatrix`] compute view, and the kernel engine
+//! v2 behind [`KernelCtx`] — scalar and bit-serial popcount paths, all
+//! bit-identical to `ref_gemv`/`ref_gemm` (property-tested); kernel
+//! path changes throughput, never results.
 
 mod bitplane;
 mod gemv;
+pub mod kernel;
 pub mod pack;
 mod quant;
 
 pub use bitplane::BitplaneMatrix;
 pub use gemv::{ref_gemm, ref_gemv, TernaryMatrix};
+pub use kernel::{KernelCtx, KernelPath};
 pub use pack::{pack_trits, unpack_trits, PackedTrits};
 pub use quant::{absmax_quantize, absmean_ternary, QuantizedActs};
 

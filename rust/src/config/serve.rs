@@ -104,6 +104,19 @@ pub struct ServeConfig {
     /// through prefill when a slot frees. Recompute requires greedy
     /// decoding — the replay must re-derive the same tokens.
     pub preempt_policy: String,
+    /// Fused batched decode (DESIGN.md §17): when every slot in a
+    /// token round is decoding, the coordinator drives the whole batch
+    /// through one partition walk so each projection site runs a single
+    /// bitplane GEMM instead of per-slot GEMVs. Exact integer rows are
+    /// independent, so fusion changes throughput, never tokens. On by
+    /// default; `false` keeps the per-slot pool path.
+    pub fused_decode: bool,
+    /// Kernel engine path (`bitnet::KernelPath` names): `"auto"` (the
+    /// default, size-based heuristic), `"scalar"` (word-parallel
+    /// sign-select), or `"bitserial"` (popcount over activation bit
+    /// lanes). All paths are bit-identical to `ref_gemv` — the knob
+    /// changes throughput, never tokens.
+    pub kernel_path: String,
 }
 
 impl Default for ServeConfig {
@@ -134,6 +147,8 @@ impl Default for ServeConfig {
             prefix_cache: false,
             shards: 1,
             preempt_policy: "reload".into(),
+            fused_decode: true,
+            kernel_path: "auto".into(),
         }
     }
 }
@@ -215,6 +230,13 @@ impl ServeConfig {
             "preempt_policy must be \"reload\" or \"recompute\", got {:?}",
             self.preempt_policy
         );
+        // the kernel parser is the single source of truth for which
+        // engine paths exist
+        anyhow::ensure!(
+            crate::bitnet::KernelPath::parse(&self.kernel_path).is_some(),
+            "kernel_path must be \"auto\", \"scalar\" or \"bitserial\", got {:?}",
+            self.kernel_path
+        );
         if self.preempt_policy == "recompute" {
             // the replayed prefix must re-derive the exact tokens the
             // victim already emitted (invariant 11)
@@ -282,6 +304,8 @@ impl ServeConfig {
             ("prefix_cache", Json::Bool(self.prefix_cache)),
             ("shards", Json::num(self.shards as f64)),
             ("preempt_policy", Json::str(self.preempt_policy.clone())),
+            ("fused_decode", Json::Bool(self.fused_decode)),
+            ("kernel_path", Json::str(self.kernel_path.clone())),
         ])
     }
 
@@ -346,6 +370,15 @@ impl ServeConfig {
                 .get("preempt_policy")
                 .and_then(Json::as_str)
                 .unwrap_or(&d.preempt_policy)
+                .to_string(),
+            fused_decode: j
+                .get("fused_decode")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.fused_decode),
+            kernel_path: j
+                .get("kernel_path")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.kernel_path)
                 .to_string(),
         };
         cfg.validate()?;
@@ -452,9 +485,31 @@ mod tests {
             prefix_cache: true,
             shards: 2,
             preempt_policy: "recompute".into(),
+            fused_decode: false,
+            kernel_path: "bitserial".into(),
         };
         let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn kernel_knobs_validate_and_default_on() {
+        let c = ServeConfig::default();
+        assert!(c.fused_decode, "fused decode is the default engine");
+        assert_eq!(c.kernel_path, "auto");
+        // only the three named engine paths exist
+        let mut c = ServeConfig::default();
+        c.kernel_path = "simd".into();
+        assert!(c.validate().is_err());
+        for path in ["auto", "scalar", "bitserial"] {
+            c.kernel_path = path.into();
+            assert!(c.validate().is_ok(), "{path} is a real engine path");
+        }
+        // old configs without the fields parse to the fused auto engine
+        let j = Json::parse(r#"{"max_batches": 2}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert!(c.fused_decode);
+        assert_eq!(c.kernel_path, "auto");
     }
 
     #[test]

@@ -38,7 +38,7 @@
 //! [`TokenSink`] the round it is produced.
 //!
 //! [`runtime::InferenceBackend`]: crate::runtime::InferenceBackend
-//! [`advance_kv_clock_shard`]: crate::runtime::InferenceBackend::advance_kv_clock_shard
+//! [`advance_kv_clock_shard`]: crate::runtime::KvControl::advance_kv_clock_shard
 
 mod batcher;
 mod ingress;

@@ -8,10 +8,16 @@
 //! slot's chain of pipeline stages (embed → partitions 0..P−1) runs as
 //! one unit of work on the worker pool — the software twin of the
 //! hardware pipeline's skewed lanes, which likewise never share a
-//! sequence between stages concurrently. Everything order-sensitive
+//! sequence between stages concurrently. When every slot in a round is
+//! decoding and `ServeConfig::fused_decode` is on (the default), the
+//! coordinator instead walks the partition chain once with the whole
+//! batch via [`InferenceBackend::run_partition_decode_batch`], so each
+//! projection site runs one bitplane GEMM for all slots (DESIGN.md
+//! §17) — bit-identical to the per-slot path because exact integer
+//! GEMM rows are independent. Everything order-sensitive
 //! stays on the coordinator thread: admission, state creation and
 //! adapter binding, KV page *allocation* (via
-//! [`InferenceBackend::reserve_kv`], in slot order, so shared-tier
+//! [`KvControl::reserve_kv`], in slot order, so shared-tier
 //! placement is deterministic), the retention clock, sampling (a
 //! per-request Rng derived from the serve seed and the request id, so
 //! one request's token stream is independent of batching and arrival
@@ -44,11 +50,14 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::bitnet::KernelPath;
 use crate::config::ServeConfig;
 use crate::fault::{FaultKind, FaultPlan};
 use crate::kvcache::{KvError, KvStoreStats};
 use crate::lora::LoraServeStats;
-use crate::runtime::{InferenceBackend, Logits, SequenceState};
+use crate::runtime::{
+    DecodeEntry, InferenceBackend, KvControl, Logits, SequenceState, ServeTuning,
+};
 use crate::trace::Request;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
@@ -126,7 +135,7 @@ fn request_rng(seed: u64, id: u64) -> Rng {
 impl<B: InferenceBackend> Server<B> {
     /// Validate `serve` against the backend's limits and build the
     /// server (this sizes the backend's KV store for the deployment
-    /// via [`InferenceBackend::configure_kv`]).
+    /// via [`KvControl::configure_kv`]).
     pub fn new(backend: B, serve: ServeConfig) -> Result<Self> {
         serve.validate()?;
         anyhow::ensure!(
@@ -143,6 +152,11 @@ impl<B: InferenceBackend> Server<B> {
         // one width for the whole engine: the server's per-slot rounds
         // and the backend's sharded kernels (1 = the serial path)
         backend.set_threads(serve.resolved_threads());
+        // ... and one kernel path, validated above — engine choice
+        // changes throughput, never tokens (DESIGN.md §17)
+        let path = KernelPath::parse(&serve.kernel_path)
+            .expect("validate() accepted the kernel_path");
+        backend.set_kernel_path(path);
         Ok(Server { serve, backend })
     }
 
@@ -630,8 +644,13 @@ impl<B: InferenceBackend> Server<B> {
                 self.backend.reserve_kv(states[slot].as_mut().unwrap(), n_tokens)?;
             }
 
-            // per-slot round execution (embed + every partition stage)
-            // across the pool; each worker owns its slot's state
+            // round execution (embed + every partition stage). An
+            // all-decode round under `fused_decode` walks the partition
+            // chain once with the whole batch — one bitplane GEMM per
+            // projection site (DESIGN.md §17); any round containing a
+            // prefill, and every round with fusion off, runs per slot
+            // across the pool with each worker owning its slot's state.
+            // Both paths produce bit-identical hiddens and errors.
             let backend = &self.backend;
             let batcher_ref = &batcher;
             let bound_ref = &bound_prefix;
@@ -641,19 +660,32 @@ impl<B: InferenceBackend> Server<B> {
                 .filter(|(slot, s)| runnable.contains(slot) && s.is_some())
                 .map(|(slot, s)| (slot, s.as_mut().unwrap()))
                 .collect();
-            let round: Vec<(usize, Result<B::Hidden>, f64)> = pool.map(items, |(slot, state)| {
-                let t_op = Instant::now();
-                let sref = batcher_ref.slot(slot);
-                let prompt = if sref.state == SlotState::NeedsPrefill {
-                    // a bound shared prefix is already in the block
-                    // tables: prefill only the unshared tail
-                    Some(&sref.request.as_ref().unwrap().prompt[bound_ref[slot]..])
+            let all_decode = !items.is_empty()
+                && items
+                    .iter()
+                    .all(|(slot, _)| batcher_ref.slot(*slot).state != SlotState::NeedsPrefill);
+            let round: Vec<(usize, Result<B::Hidden>, f64)> =
+                if self.serve.fused_decode && all_decode {
+                    let batch: Vec<(usize, i32, &mut B::State)> = items
+                        .into_iter()
+                        .map(|(slot, state)| (slot, last_tok[slot], state))
+                        .collect();
+                    run_decode_round_fused(backend, n_parts, batch)
                 } else {
-                    None
+                    pool.map(items, |(slot, state)| {
+                        let t_op = Instant::now();
+                        let sref = batcher_ref.slot(slot);
+                        let prompt = if sref.state == SlotState::NeedsPrefill {
+                            // a bound shared prefix is already in the block
+                            // tables: prefill only the unshared tail
+                            Some(&sref.request.as_ref().unwrap().prompt[bound_ref[slot]..])
+                        } else {
+                            None
+                        };
+                        let h = run_slot_round(backend, n_parts, prompt, last_tok[slot], state);
+                        (slot, h, t_op.elapsed().as_secs_f64())
+                    })
                 };
-                let h = run_slot_round(backend, n_parts, prompt, last_tok[slot], state);
-                (slot, h, t_op.elapsed().as_secs_f64())
-            });
 
             // per-slot hidden activations for the head/sampling phase.
             // This is the failure interception point: with a fault plan
@@ -928,6 +960,78 @@ fn run_slot_round<B: InferenceBackend>(
     Ok(h)
 }
 
+/// One fused all-decode token round: embed every slot's seed token,
+/// then walk the partition chain once with the whole batch via
+/// [`InferenceBackend::run_partition_decode_batch`] — the backend runs
+/// one bitplane GEMM per projection site instead of per-slot GEMVs
+/// (DESIGN.md §17). A slot that errs at any stage drops out of the
+/// remaining stages and carries its error in the returned round,
+/// exactly like the per-slot path; the other slots' integers are
+/// untouched because exact GEMM rows are independent. Compute time is
+/// measured for the batch and attributed evenly across its slots.
+fn run_decode_round_fused<B: InferenceBackend>(
+    backend: &B,
+    n_parts: usize,
+    mut batch: Vec<(usize, i32, &mut B::State)>,
+) -> Vec<(usize, Result<B::Hidden>, f64)> {
+    let t_op = Instant::now();
+    let n = batch.len();
+    let mut out: Vec<Option<Result<B::Hidden>>> = (0..n).map(|_| None).collect();
+    // indices (into `batch`) still flowing through the stage chain,
+    // with their activations kept in lockstep
+    let mut alive: Vec<usize> = Vec::with_capacity(n);
+    let mut hs: Vec<B::Hidden> = Vec::with_capacity(n);
+    for (i, (_, tok, _)) in batch.iter().enumerate() {
+        match backend.embed_token(*tok) {
+            Ok(h) => {
+                alive.push(i);
+                hs.push(h);
+            }
+            Err(e) => out[i] = Some(Err(e)),
+        }
+    }
+    for part in 0..n_parts {
+        if alive.is_empty() {
+            break;
+        }
+        // re-borrow the surviving slots' states for this stage; `alive`
+        // is sorted, so one pass over the batch collects them in order
+        let mut entries: Vec<DecodeEntry<'_, B::State>> = Vec::with_capacity(alive.len());
+        let mut ai = 0;
+        for (i, (_, _, state)) in batch.iter_mut().enumerate() {
+            if ai < alive.len() && alive[ai] == i {
+                let pos = state.pos();
+                entries.push(DecodeEntry { state: &mut **state, pos });
+                ai += 1;
+            }
+        }
+        let results =
+            backend.run_partition_decode_batch(part, std::mem::take(&mut hs), &mut entries);
+        let mut next_alive = Vec::with_capacity(alive.len());
+        for (j, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(h) => {
+                    next_alive.push(alive[j]);
+                    hs.push(h);
+                }
+                Err(e) => out[alive[j]] = Some(Err(e)),
+            }
+        }
+        alive = next_alive;
+    }
+    for (i, h) in alive.into_iter().zip(hs) {
+        out[i] = Some(Ok(h));
+    }
+    let per_slot_s = t_op.elapsed().as_secs_f64() / n.max(1) as f64;
+    batch
+        .into_iter()
+        .zip(out)
+        .map(|((slot, _, _), h)| {
+            (slot, h.expect("every batched slot resolved to Ok or Err"), per_slot_s)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::ingress::VecSink;
@@ -1036,6 +1140,80 @@ mod tests {
         assert_eq!(k1.accesses.total_accesses(), k2.accesses.total_accesses());
         assert!(k2.kv_energy_j() > 0.0);
         assert!((k1.kv_energy_j() - k2.kv_energy_j()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fused_decode_rounds_match_the_per_slot_path() {
+        // DESIGN.md §17: fusing an all-decode round into one batched
+        // partition walk changes kernel shape, never tokens or KV
+        // traffic — exact integer GEMM rows are independent
+        let run = |fused: bool| {
+            let backend = HostBackend::new(micro(), 2).unwrap();
+            let serve = ServeConfig {
+                max_batches: 3,
+                prefill_len: 8,
+                max_seq: 32,
+                ondie_tokens: 8,
+                fused_decode: fused,
+                ..ServeConfig::default()
+            };
+            let mut server = Server::new(backend, serve).unwrap();
+            let reqs: Vec<Request> = (0..3)
+                .map(|i| Request {
+                    id: i,
+                    arrival_s: 0.0,
+                    prompt: vec![1 + i as i32, 2, 3],
+                    max_new_tokens: 6,
+                    adapter_id: None,
+                    priority: 0,
+                })
+                .collect();
+            server.run_trace(reqs).unwrap()
+        };
+        let (fused, mf) = run(true);
+        let (unfused, mu) = run(false);
+        assert_eq!(fused.len(), unfused.len());
+        for (a, b) in fused.iter().zip(&unfused) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "fusion changed request {}", a.id);
+        }
+        assert_eq!(mf.tokens_out, mu.tokens_out);
+        assert_eq!(
+            mf.kv.unwrap().accesses.total_accesses(),
+            mu.kv.unwrap().accesses.total_accesses(),
+            "fusion changed KV traffic"
+        );
+    }
+
+    #[test]
+    fn kernel_path_knob_never_changes_served_tokens() {
+        let run = |path: &str| {
+            let backend = HostBackend::new(micro(), 2).unwrap();
+            let serve = ServeConfig {
+                max_batches: 2,
+                prefill_len: 8,
+                max_seq: 32,
+                ondie_tokens: 8,
+                kernel_path: path.into(),
+                ..ServeConfig::default()
+            };
+            let mut server = Server::new(backend, serve).unwrap();
+            let reqs: Vec<Request> = (0..2)
+                .map(|i| Request {
+                    id: i,
+                    arrival_s: 0.0,
+                    prompt: vec![1 + i as i32, 2, 3],
+                    max_new_tokens: 5,
+                    adapter_id: None,
+                    priority: 0,
+                })
+                .collect();
+            let (done, _) = server.run_trace(reqs).unwrap();
+            done.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let auto = run("auto");
+        assert_eq!(run("scalar"), auto, "scalar path diverged");
+        assert_eq!(run("bitserial"), auto, "bit-serial path diverged");
     }
 
     #[test]

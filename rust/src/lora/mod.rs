@@ -9,7 +9,7 @@
 //!   [`LoraConfig::parse_placements`]).
 //! * [`AdapterRegistry`] — seeded, deterministic per-tenant adapter
 //!   weights served end-to-end by `runtime::HostBackend` (bound per
-//!   sequence via `runtime::InferenceBackend::bind_adapter`), with
+//!   sequence via `runtime::ServeTuning::bind_adapter`), with
 //!   residency/task-switch accounting against the tiered memory model
 //!   and measured MAC counters ([`LoraServeStats`]).
 //! * [`MergedProjection`] / [`apply_adapter_delta`] — the host compute
@@ -26,7 +26,7 @@ mod registry;
 
 pub use registry::{AdapterPair, AdapterRegistry, LoraServeStats};
 
-use crate::bitnet::{QuantizedActs, TernaryMatrix};
+use crate::bitnet::{KernelCtx, QuantizedActs, TernaryMatrix};
 use crate::config::ModelConfig;
 
 /// The seven adapter sites (paper Table II columns).
@@ -314,13 +314,17 @@ impl MergedProjection {
     /// dense f32.
     pub fn forward_batch(&self, acts: &[QuantizedActs]) -> Vec<Vec<f32>> {
         let batch: Vec<&[i32]> = acts.iter().map(|q| q.values.as_slice()).collect();
-        let base_int = self.base.gemm(&batch);
+        // flat row-major output: one integer buffer for the whole
+        // batch instead of a Vec per row
+        let mut flat: Vec<i64> = Vec::new();
+        KernelCtx::from_env().gemm_flat(self.base.bitplanes(), &batch, &mut flat);
+        let cols = self.base.cols;
         acts.iter()
-            .zip(base_int)
-            .map(|(q, yi)| {
-                let mut y: Vec<f32> = yi
-                    .into_iter()
-                    .map(|v| v as f32 * q.scale * self.base.scale)
+            .enumerate()
+            .map(|(i, q)| {
+                let mut y: Vec<f32> = flat[i * cols..(i + 1) * cols]
+                    .iter()
+                    .map(|&v| v as f32 * q.scale * self.base.scale)
                     .collect();
                 apply_adapter_delta(q, &self.a, &self.b, self.rank, self.alpha, &mut y);
                 y

@@ -20,7 +20,7 @@ use bitrom::report::{
     fig1a_report, fig5a_report, fig5b_report, fig5b_serving_report, gemv_perf_report,
     lora_serving_report, prefix_serving_report, table3_report,
 };
-use bitrom::runtime::{HostBackend, InferenceBackend, Manifest, ShardedBackend};
+use bitrom::runtime::{HostBackend, InferenceBackend, Manifest, ServeTuning, ShardedBackend};
 #[cfg(feature = "pjrt")]
 use bitrom::runtime::ModelExecutor;
 use bitrom::trace::{generate, TraceConfig};
@@ -127,6 +127,8 @@ fn serve_cfg(args: &Args) -> ServeConfig {
         prefix_cache: args.flag("prefix-cache"),
         shards: args.usize("shards"),
         preempt_policy: args.str("preempt-policy").to_string(),
+        fused_decode: !args.flag("unfused-decode"),
+        kernel_path: args.str("kernel-path").to_string(),
         ..ServeConfig::default()
     }
 }
@@ -223,6 +225,8 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("rate-limit", "0", "per-tenant request rate limit, req/s (with --listen; 0 = off)")
         .opt("trace-out", "", "export the request trace as NDJSON wire format to this file")
         .opt("trace-in", "", "replay requests from an NDJSON wire-format file instead of generating")
+        .opt("kernel-path", "auto", "bitplane path: auto, scalar or bitserial (tokens invariant)")
+        .flag("unfused-decode", "per-slot decode rounds instead of one fused partition walk")
         .flag("preempt", "preempt the lowest-priority slot under pressure (with --admit-pressure)")
         .flag("prefix-cache", "share full prompt-prefix KV blocks by content hash (DESIGN.md §15)")
         .flag("host", "serve on the offline HostBackend (no artifacts/PJRT needed)")
@@ -387,6 +391,7 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("adapter", "", "tenant adapter id to bind (--host; empty = base model)")
         .opt("adapters", "4", "tenant adapters fabricated when --adapter is set")
         .opt("threads", "0", "kernel worker threads (0 = BITROM_THREADS or serial)")
+        .opt("kernel-path", "auto", "bitplane engine path: auto, scalar or bitserial")
         .flag("host", "generate on the offline HostBackend");
     let args = p.parse_from(argv).map_err(anyhow::Error::msg)?;
     let prompt: Vec<i32> = args
@@ -407,6 +412,10 @@ fn cmd_generate(argv: Vec<String>) -> anyhow::Result<()> {
         }
         let backend = host_backend(&args, prompt.len() + args.usize("n"), &serve)?;
         backend.set_threads(args.usize("threads"));
+        let path = bitrom::bitnet::KernelPath::parse(args.str("kernel-path")).ok_or_else(|| {
+            anyhow::anyhow!("unknown kernel path {:?}", args.str("kernel-path"))
+        })?;
+        backend.set_kernel_path(path);
         let out = backend.generate_greedy_bound(&prompt, args.usize("n"), adapter)?;
         println!("prompt:    {prompt:?}");
         if let Some(id) = adapter {

@@ -1,14 +1,16 @@
 //! Host GEMV/GEMM kernel performance study: the per-trit base-3
-//! reference (`ref_gemv`) vs the word-parallel bitplane engine, at
-//! LLaMA-shaped projection sizes across sparsities.
+//! reference (`ref_gemv`) vs the bitplane engine's paths (the `auto`
+//! heuristic plus the explicit `scalar` sign-select and `bitserial`
+//! popcount engines — DESIGN.md §17), at LLaMA-shaped projection sizes
+//! across sparsities.
 //!
 //! This is the §Perf record for the host compute path (EXPERIMENTS.md):
 //! `bench_gemv` runs the same study and emits `BENCH_gemv.json` so the
 //! perf trajectory is tracked across PRs. Every timed point first
-//! asserts bit-exact agreement between the two kernels — a perf number
+//! asserts bit-exact agreement between all kernels — a perf number
 //! for a wrong result is worthless.
 
-use crate::bitnet::{ref_gemv, TernaryMatrix};
+use crate::bitnet::{ref_gemv, KernelCtx, KernelPath, TernaryMatrix};
 use crate::util::bench::{bench_config, Bench};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
@@ -26,8 +28,12 @@ pub struct GemvPerfPoint {
     pub sparsity: f64,
     /// Mean ns per reference GEMV.
     pub ref_ns: f64,
-    /// Mean ns per bitplane GEMV.
+    /// Mean ns per bitplane GEMV (the `auto` engine path).
     pub plane_ns: f64,
+    /// Mean ns per GEMV on the explicit scalar sign-select path.
+    pub scalar_ns: f64,
+    /// Mean ns per GEMV on the explicit bit-serial popcount path.
+    pub bitserial_ns: f64,
     /// Batch size used for the GEMM measurement.
     pub gemm_batch: usize,
     /// Mean ns per row of the batched bitplane GEMM.
@@ -43,6 +49,12 @@ impl GemvPerfPoint {
     /// Batched-GEMM per-row speedup over the reference kernel.
     pub fn gemm_speedup(&self) -> f64 {
         self.ref_ns / self.gemm_row_ns
+    }
+
+    /// Bit-serial popcount throughput relative to the scalar path
+    /// (>1 where the popcount engine wins at this shape/sparsity).
+    pub fn bitserial_vs_scalar(&self) -> f64 {
+        self.scalar_ns / self.bitserial_ns
     }
 }
 
@@ -67,14 +79,26 @@ pub fn gemv_perf_study(quick: bool) -> Vec<GemvPerfPoint> {
         for &s in sparsities {
             let w = TernaryMatrix::random(rows, cols, s, &mut rng);
             let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
-            // correctness gate before any timing
+            let scalar = KernelCtx::serial().with_path(KernelPath::Scalar);
+            let bitserial = KernelCtx::serial().with_path(KernelPath::BitSerial);
+            // correctness gate before any timing: every engine path
+            // agrees with the golden reference bit-exactly
+            let want = ref_gemv(&x, &w);
+            assert_eq!(w.gemv(&x), want, "auto diverged at {rows}x{cols} s={s}");
             assert_eq!(
-                w.gemv(&x),
-                ref_gemv(&x, &w),
-                "bitplane kernel diverged from reference at {rows}x{cols} s={s}"
+                scalar.gemv(w.bitplanes(), &x),
+                want,
+                "scalar diverged at {rows}x{cols} s={s}"
+            );
+            assert_eq!(
+                bitserial.gemv(w.bitplanes(), &x),
+                want,
+                "bitserial diverged at {rows}x{cols} s={s}"
             );
             let r_ref = bench.run("ref", || ref_gemv(&x, &w));
             let r_plane = bench.run("plane", || w.gemv(&x));
+            let r_scalar = bench.run("scalar", || scalar.gemv(w.bitplanes(), &x));
+            let r_bits = bench.run("bitserial", || bitserial.gemv(w.bitplanes(), &x));
             let batch: Vec<Vec<i32>> = (0..GEMM_BATCH)
                 .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
                 .collect();
@@ -85,6 +109,8 @@ pub fn gemv_perf_study(quick: bool) -> Vec<GemvPerfPoint> {
                 sparsity: s,
                 ref_ns: r_ref.mean_ns,
                 plane_ns: r_plane.mean_ns,
+                scalar_ns: r_scalar.mean_ns,
+                bitserial_ns: r_bits.mean_ns,
                 gemm_batch: GEMM_BATCH,
                 gemm_row_ns: r_gemm.mean_ns / GEMM_BATCH as f64,
             });
@@ -95,13 +121,16 @@ pub fn gemv_perf_study(quick: bool) -> Vec<GemvPerfPoint> {
 
 /// Render measured points as a table.
 pub fn gemv_perf_table(points: &[GemvPerfPoint]) -> String {
-    let mut t = Table::new("Host ternary GEMV — per-trit reference vs word-parallel bitplanes")
+    let mut t = Table::new("Host ternary GEMV — per-trit reference vs the bitplane engine paths")
         .header(&[
             "shape",
             "sparsity",
             "ref/gemv",
-            "bitplane/gemv",
+            "auto/gemv",
             "speedup",
+            "scalar",
+            "bitserial",
+            "bits/scalar",
             "gemm/row (b=8)",
             "gemm speedup",
         ]);
@@ -112,6 +141,9 @@ pub fn gemv_perf_table(points: &[GemvPerfPoint]) -> String {
             crate::util::bench::fmt_ns(p.ref_ns),
             crate::util::bench::fmt_ns(p.plane_ns),
             format!("{:.1}x", p.speedup()),
+            crate::util::bench::fmt_ns(p.scalar_ns),
+            crate::util::bench::fmt_ns(p.bitserial_ns),
+            format!("{:.2}x", p.bitserial_vs_scalar()),
             crate::util::bench::fmt_ns(p.gemm_row_ns),
             format!("{:.1}x", p.gemm_speedup()),
         ]);
@@ -158,19 +190,19 @@ pub fn gemm_threads_sweep(quick: bool) -> Vec<GemmThreadsPoint> {
     let batch: Vec<Vec<i32>> = (0..GEMM_BATCH)
         .map(|_| (0..rows).map(|_| rng.i64(-127, 127) as i32).collect())
         .collect();
-    let serial = w.gemm_with(&batch, &Pool::serial());
+    let serial = KernelCtx::serial().gemm(w.bitplanes(), &batch);
     THREADS_SWEEP
         .iter()
         .map(|&threads| {
-            let pool = Pool::new(threads);
+            let ctx = KernelCtx::new(Pool::new(threads));
             // correctness gate before any timing (invariant: sharding
             // is bit-identical at every width)
             assert_eq!(
-                w.gemm_with(&batch, &pool),
+                ctx.gemm(w.bitplanes(), &batch),
                 serial,
                 "sharded gemm diverged at {threads} threads"
             );
-            let r = bench.run(&format!("gemm_t{threads}"), || w.gemm_with(&batch, &pool));
+            let r = bench.run(&format!("gemm_t{threads}"), || ctx.gemm(w.bitplanes(), &batch));
             GemmThreadsPoint {
                 rows,
                 cols,
@@ -235,6 +267,10 @@ pub fn gemv_perf_json(
             format!("gemm_speedup/{}x{}/{}", p.rows, p.cols, p.sparsity),
             Json::num(p.gemm_speedup()),
         ));
+        gates.push((
+            format!("bitserial_vs_scalar/{}x{}/{}", p.rows, p.cols, p.sparsity),
+            Json::num(p.bitserial_vs_scalar()),
+        ));
     }
     for &t in &THREADS_SWEEP[1..] {
         if let Some(s) = threads_speedup(threads_points, t) {
@@ -261,6 +297,9 @@ pub fn gemv_perf_json(
                             ("sparsity", Json::num(p.sparsity)),
                             ("ref_ns", Json::num(p.ref_ns)),
                             ("bitplane_ns", Json::num(p.plane_ns)),
+                            ("scalar_ns", Json::num(p.scalar_ns)),
+                            ("bitserial_ns", Json::num(p.bitserial_ns)),
+                            ("bitserial_vs_scalar", Json::num(p.bitserial_vs_scalar())),
                             ("speedup", Json::num(p.speedup())),
                             ("gemm_row_ns", Json::num(p.gemm_row_ns)),
                             ("gemm_speedup", Json::num(p.gemm_speedup())),
@@ -301,6 +340,8 @@ mod tests {
             sparsity: 0.3,
             ref_ns: 8_000_000.0,
             plane_ns: 500_000.0,
+            scalar_ns: 600_000.0,
+            bitserial_ns: 300_000.0,
             gemm_batch: 8,
             gemm_row_ns: 400_000.0,
         }
@@ -311,6 +352,7 @@ mod tests {
         let p = fake_point();
         assert!((p.speedup() - 16.0).abs() < 1e-9);
         assert!((p.gemm_speedup() - 20.0).abs() < 1e-9);
+        assert!((p.bitserial_vs_scalar() - 2.0).abs() < 1e-9);
     }
 
     fn fake_threads_sweep() -> Vec<GemmThreadsPoint> {
@@ -341,6 +383,12 @@ mod tests {
         let gates = j.get("gates").unwrap();
         let g = gates.get("speedup/2048x2048/0.3").unwrap().as_f64().unwrap();
         assert!((g - 16.0).abs() < 1e-9);
+        let bs = gates
+            .get("bitserial_vs_scalar/2048x2048/0.3")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((bs - 2.0).abs() < 1e-9);
         let t4 = gates.get("gemm_threads_speedup_4v1").unwrap().as_f64().unwrap();
         assert!((t4 - 4.0).abs() < 1e-9, "ideal fake sweep scales linearly");
     }

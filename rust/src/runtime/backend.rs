@@ -20,6 +20,7 @@
 
 use anyhow::Result;
 
+use crate::bitnet::KernelPath;
 use crate::config::{ModelConfig, ServeConfig};
 use crate::kvcache::KvStoreStats;
 use crate::lora::LoraServeStats;
@@ -94,14 +95,173 @@ impl Logits {
     }
 }
 
+/// KV-store lifecycle control — the grouped surface for everything the
+/// serving coordinator does to a backend's (optional) tiered KV store:
+/// construction-time configuration, retention clocks, page
+/// reservation, preemption swap-out, prefix sharing, and measured
+/// stats (DESIGN.md §17). A required supertrait of
+/// [`InferenceBackend`] with [`Seq`](Self::Seq) pinned to the
+/// backend's `State`, so the former pile of ad-hoc hooks reads as one
+/// cohesive contract; every method keeps its no-op/miss default, so
+/// backends without a host-side store implement nothing beyond `Seq`.
+pub trait KvControl {
+    /// Per-sequence KV state this control surface mutates — always
+    /// the same type as [`InferenceBackend::State`] (the supertrait
+    /// bound enforces it).
+    type Seq: SequenceState;
+
+    /// Rebuild the backend's tiered KV store (if it has one) for a
+    /// serving deployment: on-die capacity, early-token threshold,
+    /// page size and quantization all come from the [`ServeConfig`].
+    /// The server calls this once at construction, before any state
+    /// exists. Backends with opaque device-side KV (the PJRT runtime)
+    /// keep the no-op default.
+    fn configure_kv(&self, _serve: &ServeConfig) -> Result<()> {
+        Ok(())
+    }
+
+    /// Advance the KV store's DR-eDRAM retention clock to `now_s`
+    /// (modeled hardware seconds). The serving loop calls this once
+    /// per token round; a stalled loop then surfaces retention
+    /// failures on the next KV read. No-op without a store.
+    fn advance_kv_clock(&self, _now_s: f64) {}
+
+    /// Advance one shard's DR-eDRAM retention clock independently
+    /// (shard-local retention storms, DESIGN.md §13 under §16). The
+    /// serving loop only calls this when
+    /// [`InferenceBackend::n_shards`] > 1; single-shard backends
+    /// default to the global clock.
+    fn advance_kv_clock_shard(&self, _shard: usize, now_s: f64) {
+        self.advance_kv_clock(now_s);
+    }
+
+    /// Pre-allocate KV pages for this sequence's next `n_tokens`
+    /// positions across every layer, deciding their tier placement
+    /// *now*. The serving loop calls this on the coordinator thread in
+    /// slot order before each token round, so shared-capacity
+    /// placement (and any eviction) is deterministic even when the
+    /// round's partition stages then run on worker threads — KV-store
+    /// *allocation* stays a coordinator-side mutation (DESIGN.md §12).
+    /// Backends without a host-side store keep the no-op default;
+    /// reserving never changes stored values or access counts.
+    fn reserve_kv(&self, _state: &mut Self::Seq, _n_tokens: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Measured KV-tier statistics (accesses, evictions, retention
+    /// health, energy), if this backend's KV lives in a
+    /// [`crate::kvcache::KvStore`]. `None` for backends whose KV is
+    /// opaque to the host.
+    fn kv_stats(&self) -> Option<KvStoreStats> {
+        None
+    }
+
+    /// Swap this sequence's KV out of the capacity-bounded on-die tier
+    /// to external memory, freeing on-die pages for other sequences
+    /// (preemption under memory pressure, DESIGN.md §13). Stored
+    /// values must be unchanged — a preempted sequence resumes from
+    /// the external tier with bit-identical KV, no recompute. Returns
+    /// the number of blocks demoted; backends without a tiered
+    /// host-side store keep the no-op default.
+    fn swap_out_kv(&self, _state: &mut Self::Seq) -> Result<u64> {
+        Ok(0)
+    }
+
+    /// Bind the longest shared KV prefix of `prompt` already published
+    /// in this backend's store into a *fresh* sequence (content-hash
+    /// full-block match, reference-counted — DESIGN.md §15). Returns
+    /// how many prompt tokens were bound; the caller prefills only the
+    /// unshared tail `prompt[bound..]`. Binding must never change
+    /// values — only which pages a sequence's tables point at — and at
+    /// most `prompt.len() - 1` tokens bind, so the sampled last prompt
+    /// token is always recomputed. Backends without a host-side store
+    /// keep the miss default.
+    fn bind_prefix_kv(&self, _state: &mut Self::Seq, _prompt: &[i32]) -> Result<usize> {
+        Ok(0)
+    }
+
+    /// Publish this sequence's full prompt-prefix blocks for reuse by
+    /// later sequences with the same (adapter, prompt-prefix) content.
+    /// Called by the coordinator in slot order after a prefill
+    /// completes; first writer wins, so registration order — and hence
+    /// sharing — is deterministic at any thread width. Backends
+    /// without a host-side store keep the no-op default.
+    fn register_prefix_kv(&self, _state: &mut Self::Seq, _prompt: &[i32]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Execution tuning and tenant-adapter control — kernel thread width,
+/// kernel path selection, LoRA adapter binds and stats (DESIGN.md
+/// §17). Like [`KvControl`] (which it extends, sharing
+/// [`Seq`](KvControl::Seq)), a required supertrait of
+/// [`InferenceBackend`]. Tuning must never change tokens — only
+/// throughput (DESIGN.md §12, §17).
+pub trait ServeTuning: KvControl {
+    /// Shard this backend's kernels across `threads` workers (0 keeps
+    /// the current width). The server calls this once at construction
+    /// with the deployment's resolved `ServeConfig::threads`; backends
+    /// without host-side kernels keep the no-op default. Width must
+    /// never change results — only speed (DESIGN.md §12).
+    fn set_threads(&self, _threads: usize) {}
+
+    /// Select the bitplane kernel path (`Auto`/`Scalar`/`BitSerial`)
+    /// for every subsequent projection this backend runs. All paths
+    /// are bit-identical to `ref_gemv` (DESIGN.md §17), so this — like
+    /// [`Self::set_threads`] — changes throughput, never results.
+    /// Backends without host-side kernels keep the no-op default.
+    fn set_kernel_path(&self, _path: KernelPath) {}
+
+    /// Bind a tenant's LoRA adapter (or `None` for the frozen base
+    /// model) to a fresh sequence, *before* its prefill runs — the
+    /// adapter shapes every projection the sequence executes, so a
+    /// late bind would split its KV history across tasks. Task
+    /// switching is reload-free by construction: nothing in this call
+    /// (or anywhere in the API) can move a base weight. The default
+    /// accepts only `None`; backends with an
+    /// [`crate::lora::AdapterRegistry`] override it.
+    fn bind_adapter(&self, _state: &mut Self::Seq, adapter: Option<u32>) -> Result<()> {
+        anyhow::ensure!(
+            adapter.is_none(),
+            "this backend serves no LoRA adapters (requested adapter {})",
+            adapter.unwrap_or_default()
+        );
+        Ok(())
+    }
+
+    /// Measured adapter-serving statistics (binds, cold-load
+    /// streaming, executed adapter/base MACs), if this backend serves
+    /// an [`crate::lora::AdapterRegistry`]. `None` otherwise.
+    fn lora_stats(&self) -> Option<LoraServeStats> {
+        None
+    }
+}
+
+/// One decoding sequence's slice of a fused decode round: its mutable
+/// KV state and the absolute position its next token writes at. The
+/// batched hook ([`InferenceBackend::run_partition_decode_batch`])
+/// takes these alongside the per-slot hidden activations so a backend
+/// can run one weight-amortized GEMM per projection site while still
+/// appending/attending each sequence's KV independently.
+pub struct DecodeEntry<'a, S> {
+    /// The sequence's KV state (mutated: one position appended).
+    pub state: &'a mut S,
+    /// Absolute position this token writes at (`state.pos()` at round
+    /// start).
+    pub pos: usize,
+}
+
 /// The execution contract the serving coordinator schedules onto.
 ///
 /// A backend is a *loaded model*: partitioned into
 /// [`n_partitions`](Self::n_partitions) pipeline stages, able to run
 /// one stage of one sequence's current token through itself, holding
 /// all weights resident for its whole lifetime (the weight reload-free
-/// premise — nothing in this API can move a weight).
-pub trait InferenceBackend {
+/// premise — nothing in this API can move a weight). Control-plane
+/// hooks live on the grouped supertraits [`KvControl`] (KV lifecycle)
+/// and [`ServeTuning`] (kernel/adapter tuning), both pinned to
+/// `Seq = State`; import those traits to call them.
+pub trait InferenceBackend: ServeTuning<Seq = <Self as InferenceBackend>::State> {
     /// Opaque per-sequence KV state. Backends choose their own tensor
     /// representation; the coordinator only tracks `pos`/`prompt_len`.
     type State: SequenceState;
@@ -129,22 +289,6 @@ pub trait InferenceBackend {
         false
     }
 
-    /// Rebuild the backend's tiered KV store (if it has one) for a
-    /// serving deployment: on-die capacity, early-token threshold,
-    /// page size and quantization all come from the [`ServeConfig`].
-    /// The server calls this once at construction, before any state
-    /// exists. Backends with opaque device-side KV (the PJRT runtime)
-    /// keep the no-op default.
-    fn configure_kv(&self, _serve: &ServeConfig) -> Result<()> {
-        Ok(())
-    }
-
-    /// Advance the KV store's DR-eDRAM retention clock to `now_s`
-    /// (modeled hardware seconds). The serving loop calls this once
-    /// per token round; a stalled loop then surfaces retention
-    /// failures on the next KV read. No-op without a store.
-    fn advance_kv_clock(&self, _now_s: f64) {}
-
     /// Number of model shards behind this backend (DESIGN.md §16).
     /// Single-instance backends report 1; the multi-shard
     /// [`ShardedBackend`](crate::runtime::ShardedBackend) reports its
@@ -153,100 +297,6 @@ pub trait InferenceBackend {
     /// change tokens — invariant 12.
     fn n_shards(&self) -> usize {
         1
-    }
-
-    /// Advance one shard's DR-eDRAM retention clock independently
-    /// (shard-local retention storms, DESIGN.md §13 under §16). The
-    /// serving loop only calls this when [`Self::n_shards`] > 1;
-    /// single-shard backends default to the global clock.
-    fn advance_kv_clock_shard(&self, _shard: usize, now_s: f64) {
-        self.advance_kv_clock(now_s);
-    }
-
-    /// Shard this backend's kernels across `threads` workers (0 keeps
-    /// the current width). The server calls this once at construction
-    /// with the deployment's resolved `ServeConfig::threads`; backends
-    /// without host-side kernels keep the no-op default. Width must
-    /// never change results — only speed (DESIGN.md §12).
-    fn set_threads(&self, _threads: usize) {}
-
-    /// Pre-allocate KV pages for this sequence's next `n_tokens`
-    /// positions across every layer, deciding their tier placement
-    /// *now*. The serving loop calls this on the coordinator thread in
-    /// slot order before each token round, so shared-capacity
-    /// placement (and any eviction) is deterministic even when the
-    /// round's partition stages then run on worker threads — KV-store
-    /// *allocation* stays a coordinator-side mutation (DESIGN.md §12).
-    /// Backends without a host-side store keep the no-op default;
-    /// reserving never changes stored values or access counts.
-    fn reserve_kv(&self, _state: &mut Self::State, _n_tokens: usize) -> Result<()> {
-        Ok(())
-    }
-
-    /// Measured KV-tier statistics (accesses, evictions, retention
-    /// health, energy), if this backend's KV lives in a
-    /// [`crate::kvcache::KvStore`]. `None` for backends whose KV is
-    /// opaque to the host.
-    fn kv_stats(&self) -> Option<KvStoreStats> {
-        None
-    }
-
-    /// Swap this sequence's KV out of the capacity-bounded on-die tier
-    /// to external memory, freeing on-die pages for other sequences
-    /// (preemption under memory pressure, DESIGN.md §13). Stored
-    /// values must be unchanged — a preempted sequence resumes from
-    /// the external tier with bit-identical KV, no recompute. Returns
-    /// the number of blocks demoted; backends without a tiered
-    /// host-side store keep the no-op default.
-    fn swap_out_kv(&self, _state: &mut Self::State) -> Result<u64> {
-        Ok(0)
-    }
-
-    /// Bind the longest shared KV prefix of `prompt` already published
-    /// in this backend's store into a *fresh* sequence (content-hash
-    /// full-block match, reference-counted — DESIGN.md §15). Returns
-    /// how many prompt tokens were bound; the caller prefills only the
-    /// unshared tail `prompt[bound..]`. Binding must never change
-    /// values — only which pages a sequence's tables point at — and at
-    /// most `prompt.len() - 1` tokens bind, so the sampled last prompt
-    /// token is always recomputed. Backends without a host-side store
-    /// keep the miss default.
-    fn bind_prefix_kv(&self, _state: &mut Self::State, _prompt: &[i32]) -> Result<usize> {
-        Ok(0)
-    }
-
-    /// Publish this sequence's full prompt-prefix blocks for reuse by
-    /// later sequences with the same (adapter, prompt-prefix) content.
-    /// Called by the coordinator in slot order after a prefill
-    /// completes; first writer wins, so registration order — and hence
-    /// sharing — is deterministic at any thread width. Backends
-    /// without a host-side store keep the no-op default.
-    fn register_prefix_kv(&self, _state: &mut Self::State, _prompt: &[i32]) -> Result<()> {
-        Ok(())
-    }
-
-    /// Bind a tenant's LoRA adapter (or `None` for the frozen base
-    /// model) to a fresh sequence, *before* its prefill runs — the
-    /// adapter shapes every projection the sequence executes, so a
-    /// late bind would split its KV history across tasks. Task
-    /// switching is reload-free by construction: nothing in this call
-    /// (or anywhere in the API) can move a base weight. The default
-    /// accepts only `None`; backends with an
-    /// [`crate::lora::AdapterRegistry`] override it.
-    fn bind_adapter(&self, _state: &mut Self::State, adapter: Option<u32>) -> Result<()> {
-        anyhow::ensure!(
-            adapter.is_none(),
-            "this backend serves no LoRA adapters (requested adapter {})",
-            adapter.unwrap_or_default()
-        );
-        Ok(())
-    }
-
-    /// Measured adapter-serving statistics (binds, cold-load
-    /// streaming, executed adapter/base MACs), if this backend serves
-    /// an [`crate::lora::AdapterRegistry`]. `None` otherwise.
-    fn lora_stats(&self) -> Option<LoraServeStats> {
-        None
     }
 
     /// Fresh (zeroed) per-sequence KV state.
@@ -277,6 +327,34 @@ pub trait InferenceBackend {
         pos: usize,
         state: &mut Self::State,
     ) -> Result<Self::Hidden>;
+
+    /// One partition's decode stage for a whole batch of sequences at
+    /// once — the fused-decode hook (DESIGN.md §17). `hs[i]` is
+    /// sequence `entries[i]`'s hidden activation; the result vector is
+    /// parallel to the inputs, with per-slot errors captured in place
+    /// (one sequence's retention failure must not poison the rest —
+    /// the caller drops failed slots from subsequent partitions).
+    ///
+    /// The default runs the per-slot [`Self::run_partition_decode`]
+    /// loop, so every backend is correct out of the box; backends with
+    /// host-side bitplane kernels override it to run **one GEMM per
+    /// projection site** across the batch (weight words decoded once,
+    /// reused for every row — the TOM/BitROM batch-amortization win).
+    /// Fusion must be bit-identical to the per-slot loop: projections
+    /// are exact integer ops and each row keeps its own quantization
+    /// scale, so batching can never change tokens.
+    fn run_partition_decode_batch(
+        &self,
+        part: usize,
+        hs: Vec<Self::Hidden>,
+        entries: &mut [DecodeEntry<'_, Self::State>],
+    ) -> Vec<Result<Self::Hidden>> {
+        assert_eq!(hs.len(), entries.len(), "fused decode batch mismatch");
+        hs.into_iter()
+            .zip(entries.iter_mut())
+            .map(|(h, e)| self.run_partition_decode(part, &h, e.pos, e.state))
+            .collect()
+    }
 
     /// LM head over prefill hidden states at prompt row `idx`.
     fn head_at(&self, h: &Self::Hidden, idx: usize) -> Result<Logits>;
@@ -400,6 +478,12 @@ mod tests {
         }
     }
 
+    impl KvControl for MockBackend {
+        type Seq = MockState;
+    }
+
+    impl ServeTuning for MockBackend {}
+
     impl InferenceBackend for MockBackend {
         type State = MockState;
         type Hidden = i64;
@@ -493,6 +577,36 @@ mod tests {
     }
 
     #[test]
+    fn default_batched_decode_is_the_per_slot_loop() {
+        // two sequences decoding in one round through the default
+        // batched hook must be indistinguishable from two independent
+        // per-slot calls: same hiddens, same KV writes, same order
+        let b = MockBackend::new();
+        let (mut s1, _) = b.prefill(&[1, 2]).unwrap();
+        let (mut s2, _) = b.prefill(&[4]).unwrap();
+        let (mut r1, _) = b.prefill(&[1, 2]).unwrap();
+        let (mut r2, _) = b.prefill(&[4]).unwrap();
+
+        // reference: per-slot loop
+        let a1 = b.run_partition_decode(0, &7, s1.pos, &mut s1).unwrap();
+        let a2 = b.run_partition_decode(0, &9, s2.pos, &mut s2).unwrap();
+
+        // batched hook (default implementation)
+        let p1 = r1.pos;
+        let p2 = r2.pos;
+        let mut entries = vec![
+            DecodeEntry { state: &mut r1, pos: p1 },
+            DecodeEntry { state: &mut r2, pos: p2 },
+        ];
+        let out = b.run_partition_decode_batch(0, vec![7, 9], &mut entries);
+        assert_eq!(out.len(), 2);
+        assert_eq!(*out[0].as_ref().unwrap(), a1);
+        assert_eq!(*out[1].as_ref().unwrap(), a2);
+        assert_eq!(r1.writes, s1.writes);
+        assert_eq!(r2.writes, s2.writes);
+    }
+
+    #[test]
     fn default_bind_accepts_only_the_base_model() {
         // a backend without adapter support must reject Some(_) loudly
         // instead of silently serving the base model for a tenant
@@ -509,5 +623,8 @@ mod tests {
         assert!(b.lora_stats().is_none());
         // no tiered host store: swapping out demotes nothing
         assert_eq!(b.swap_out_kv(&mut state).unwrap(), 0);
+        // tuning no-ops on a backend without host kernels
+        b.set_threads(4);
+        b.set_kernel_path(KernelPath::Scalar);
     }
 }

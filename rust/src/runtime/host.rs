@@ -31,7 +31,7 @@
 //!
 //! Multi-tenant LoRA serving ([`HostBackend::with_adapters`], DESIGN.md
 //! §11): a sequence bound to a tenant adapter via
-//! [`InferenceBackend::bind_adapter`] gets that tenant's rank-r f32
+//! [`ServeTuning::bind_adapter`] gets that tenant's rank-r f32
 //! deltas applied on top of the ternary base projections at the
 //! registry's placement sites — per sequence, so one batch freely
 //! mixes tenants. The base weights never move (task switching is
@@ -41,19 +41,26 @@
 //! The backend is `Sync` and its states are `Send` (DESIGN.md §12):
 //! the serving loop runs per-slot prefill/decode rounds on worker
 //! threads while admission, KV *allocation* (via
-//! [`InferenceBackend::reserve_kv`]), and sampling stay on the
-//! coordinator. Projections shard their output columns across the
-//! configured worker pool ([`InferenceBackend::set_threads`] /
-//! `BITROM_THREADS`); event and adapter counters are tallied per op
-//! and merged under a lock — all counters are commutative integer
-//! sums, so totals are bit-identical at every thread count.
+//! [`KvControl::reserve_kv`]), and sampling stay on the coordinator.
+//! Projections run through a [`KernelCtx`] (DESIGN.md §17) that shards
+//! output columns across the configured worker pool
+//! ([`ServeTuning::set_threads`] / `BITROM_THREADS`) on the configured
+//! kernel path ([`ServeTuning::set_kernel_path`]); event and adapter
+//! counters are tallied per op and merged under a lock — all counters
+//! are commutative integer sums, so totals are bit-identical at every
+//! thread count and kernel path. Fused batched decode
+//! ([`InferenceBackend::run_partition_decode_batch`]) runs one GEMM
+//! per projection site across a whole round's decode batch — weight
+//! words decoded once per site instead of once per slot — and is
+//! bit-identical to the per-slot loop (rows are independent in an
+//! exact integer GEMM and each row keeps its own quantization scale).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::bitnet::{absmax_quantize, QuantizedActs, TernaryMatrix};
+use crate::bitnet::{absmax_quantize, KernelCtx, KernelPath, QuantizedActs, TernaryMatrix};
 use crate::cirom::{EventCounters, MacroBank};
 use crate::config::{MacroGeometry, ModelConfig, ServeConfig};
 use crate::kvcache::{KvSeq, KvStore, KvStoreConfig, KvStoreStats};
@@ -61,7 +68,26 @@ use crate::lora::{apply_adapter_delta, AdapterRegistry, LoraServeStats, Proj};
 use crate::util::pool::{env_threads, Pool};
 use crate::util::rng::Rng;
 
-use super::backend::{InferenceBackend, Logits, SequenceState};
+use super::backend::{DecodeEntry, InferenceBackend, KvControl, Logits, SequenceState, ServeTuning};
+
+/// Lock-free [`KernelPath`] cell (the path is read per projection, so
+/// a mutex would serialize worker threads on a knob that never changes
+/// mid-serve).
+fn path_to_u8(p: KernelPath) -> u8 {
+    match p {
+        KernelPath::Auto => 0,
+        KernelPath::Scalar => 1,
+        KernelPath::BitSerial => 2,
+    }
+}
+
+fn path_from_u8(v: u8) -> KernelPath {
+    match v {
+        1 => KernelPath::Scalar,
+        2 => KernelPath::BitSerial,
+        _ => KernelPath::Auto,
+    }
+}
 
 /// One ternary projection: packed weights with the cached bitplane
 /// compute view, plus (event mode only) the macro-bank tiling.
@@ -169,7 +195,7 @@ pub struct HostBackend {
     /// any thread count (DESIGN.md §12).
     events: Option<Mutex<EventCounters>>,
     /// The tiered KV store every sequence's K/V rows live in. The
-    /// outer RwLock lets [`InferenceBackend::configure_kv`] swap in a
+    /// outer RwLock lets [`KvControl::configure_kv`] swap in a
     /// deployment-sized store; states keep an `Arc` to the store that
     /// allocated their pages, so a swap never orphans live sequences.
     store: RwLock<Arc<Mutex<KvStore>>>,
@@ -182,9 +208,13 @@ pub struct HostBackend {
     /// Kernel worker-pool width (1 = serial). Seeded from
     /// `BITROM_THREADS` at construction; the server overrides it with
     /// the deployment's `ServeConfig::threads` via
-    /// [`InferenceBackend::set_threads`]. Width changes speed, never
+    /// [`ServeTuning::set_threads`]. Width changes speed, never
     /// results.
     threads: AtomicUsize,
+    /// Encoded [`KernelPath`] every projection's [`KernelCtx`] uses
+    /// (see [`path_to_u8`]); set via [`ServeTuning::set_kernel_path`].
+    /// Path changes speed, never results (DESIGN.md §17).
+    kernel_path: AtomicU8,
     seed: u64,
 }
 
@@ -276,6 +306,7 @@ impl HostBackend {
             store: RwLock::new(Arc::new(Mutex::new(store))),
             lora,
             threads: AtomicUsize::new(env_threads()),
+            kernel_path: AtomicU8::new(path_to_u8(KernelPath::Auto)),
             model,
             seed,
         })
@@ -286,9 +317,20 @@ impl HostBackend {
         Pool::new(self.threads.load(Ordering::Relaxed))
     }
 
+    /// The [`KernelCtx`] every projection runs through: currently
+    /// configured pool width + kernel path (DESIGN.md §17).
+    fn ctx(&self) -> KernelCtx {
+        KernelCtx::new(self.pool()).with_path(self.kernel_path())
+    }
+
     /// Currently configured kernel worker count.
     pub fn threads(&self) -> usize {
         self.threads.load(Ordering::Relaxed)
+    }
+
+    /// Currently configured kernel compute path.
+    pub fn kernel_path(&self) -> KernelPath {
+        path_from_u8(self.kernel_path.load(Ordering::Relaxed))
     }
 
     /// The tenant adapter registry, if this backend serves adapters.
@@ -327,7 +369,7 @@ impl HostBackend {
         &self.head.w
     }
 
-    /// [`InferenceBackend::reserve_kv`] restricted to layers
+    /// [`KvControl::reserve_kv`] restricted to layers
     /// `[l0, l1)`: a shard of a sharded deployment reserves pages only
     /// for the layers it owns, so per-shard on-die capacity is spent
     /// only on that shard's KV. Same placement-determinism contract as
@@ -405,7 +447,7 @@ impl HostBackend {
                 ev.lock().expect("event counters poisoned").merge(&tally);
                 y
             }
-            _ => p.w.gemv_with(&acts.values, &self.pool()),
+            _ => self.ctx().gemv(p.w.bitplanes(), &acts.values),
         };
         let s = acts.scale * p.w.scale;
         y.into_iter().map(|v| v as f32 * s).collect()
@@ -423,20 +465,23 @@ impl HostBackend {
         self.project_rows_q(p, &qs)
     }
 
-    /// [`Self::project_rows`] over pre-quantized rows: batched
-    /// bitplane GEMM on the fast path, per-row event-counted GEMV in
-    /// event mode — rows are independent either way.
+    /// [`Self::project_rows`] over pre-quantized rows: batched flat
+    /// bitplane GEMM on the fast path (one allocation for the whole
+    /// batch, weight words decoded once per column tile), per-row
+    /// event-counted GEMV in event mode — rows are independent either
+    /// way.
     fn project_rows_q(&self, p: &Projection, qs: &[QuantizedActs]) -> Vec<Vec<f32>> {
         if self.events.is_some() {
             return qs.iter().map(|q| self.project_q(p, q)).collect();
         }
         let ints: Vec<&[i32]> = qs.iter().map(|q| q.values.as_slice()).collect();
-        p.w.gemm_with(&ints, &self.pool())
-            .into_iter()
+        let mut flat = Vec::new();
+        self.ctx().gemm_flat(p.w.bitplanes(), &ints, &mut flat);
+        flat.chunks(p.w.cols.max(1))
             .zip(qs)
             .map(|(y, q)| {
                 let s = q.scale * p.w.scale;
-                y.into_iter().map(|v| v as f32 * s).collect()
+                y.iter().map(|&v| v as f32 * s).collect()
             })
             .collect()
     }
@@ -475,6 +520,42 @@ impl HostBackend {
             apply_adapter_delta(q, &pair.a, &pair.b, reg.lora().rank, reg.alpha(), y);
         }
         reg.record_site_macs(xs.len() as u64, p.w.rows, p.w.cols);
+        ys
+    }
+
+    /// [`Self::project_rows_site`] for a batch that mixes tenants —
+    /// the fused-decode projection. One base GEMM covers every row;
+    /// rows whose own adapter places a delta at (`li`, `proj`) then
+    /// get it applied from their own quantized activations, exactly as
+    /// the per-slot path would. Per-row results (and per-row MAC
+    /// accounting totals) are bit-identical to calling
+    /// [`Self::project_rows_site`] once per row.
+    fn project_rows_sites(
+        &self,
+        p: &Projection,
+        xs: &[Vec<f32>],
+        li: usize,
+        proj: Proj,
+        adapters: &[Option<u32>],
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(xs.len(), adapters.len());
+        let reg = match &self.lora {
+            Some(reg) if adapters.iter().any(|a| a.is_some()) => reg,
+            _ => return self.project_rows(p, xs),
+        };
+        let qs: Vec<QuantizedActs> = xs
+            .iter()
+            .map(|x| absmax_quantize(x, self.model.act_bits))
+            .collect();
+        let mut ys = self.project_rows_q(p, &qs);
+        for ((q, y), ad) in qs.iter().zip(ys.iter_mut()).zip(adapters) {
+            let pair = match ad.and_then(|id| reg.site(id, li, proj)) {
+                Some(pair) => pair,
+                None => continue,
+            };
+            apply_adapter_delta(q, &pair.a, &pair.b, reg.lora().rank, reg.alpha(), y);
+            reg.record_site_macs(1, p.w.rows, p.w.cols);
+        }
         ys
     }
 
@@ -615,21 +696,8 @@ impl HostBackend {
     }
 }
 
-impl InferenceBackend for HostBackend {
-    type State = HostState;
-    /// Hidden activations: one `d_model` row per in-flight token
-    /// position (prefill carries the whole prompt, decode one row).
-    type Hidden = Vec<Vec<f32>>;
-
-    fn model(&self) -> &ModelConfig {
-        &self.model
-    }
-
-    /// Host prefill has no AOT shape bucket: anything up to the model's
-    /// context length embeds directly (no padding).
-    fn prefill_len(&self) -> usize {
-        self.model.max_seq
-    }
+impl KvControl for HostBackend {
+    type Seq = HostState;
 
     /// Swap in a deployment-sized store (on-die capacity, early-token
     /// threshold, page size, quantization from the [`ServeConfig`]).
@@ -648,14 +716,6 @@ impl InferenceBackend for HostBackend {
 
     fn kv_stats(&self) -> Option<KvStoreStats> {
         Some(self.kv_store().lock().expect("KV store lock poisoned").stats())
-    }
-
-    /// Shard kernels across `threads` workers (0 keeps the current
-    /// width; 1 is the serial path). Bit-identical at any width.
-    fn set_threads(&self, threads: usize) {
-        if threads >= 1 {
-            self.threads.store(threads, Ordering::Relaxed);
-        }
     }
 
     /// Pre-place the blocks for this sequence's next `n_tokens`
@@ -702,6 +762,23 @@ impl InferenceBackend for HostBackend {
         store.register_prefix(&state.kv, state.adapter, prompt);
         Ok(())
     }
+}
+
+impl ServeTuning for HostBackend {
+    /// Shard kernels across `threads` workers (0 keeps the current
+    /// width; 1 is the serial path). Bit-identical at any width.
+    fn set_threads(&self, threads: usize) {
+        if threads >= 1 {
+            self.threads.store(threads, Ordering::Relaxed);
+        }
+    }
+
+    /// Select the bitplane compute path every subsequent projection's
+    /// [`KernelCtx`] uses. Bit-identical on every path (DESIGN.md
+    /// §17) — only throughput changes.
+    fn set_kernel_path(&self, path: KernelPath) {
+        self.kernel_path.store(path_to_u8(path), Ordering::Relaxed);
+    }
 
     /// Point the sequence at a tenant adapter (validated against the
     /// registry, which also accounts the task switch: a cold load
@@ -724,6 +801,23 @@ impl InferenceBackend for HostBackend {
 
     fn lora_stats(&self) -> Option<LoraServeStats> {
         self.lora.as_ref().map(|reg| reg.stats())
+    }
+}
+
+impl InferenceBackend for HostBackend {
+    type State = HostState;
+    /// Hidden activations: one `d_model` row per in-flight token
+    /// position (prefill carries the whole prompt, decode one row).
+    type Hidden = Vec<Vec<f32>>;
+
+    fn model(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    /// Host prefill has no AOT shape bucket: anything up to the model's
+    /// context length embeds directly (no padding).
+    fn prefill_len(&self) -> usize {
+        self.model.max_seq
     }
 
     fn new_state(&self) -> Result<HostState> {
@@ -791,6 +885,123 @@ impl InferenceBackend for HostBackend {
             rows = self.layer_rows(li, &rows, state, pos, false)?;
         }
         Ok(rows)
+    }
+
+    /// Fused batched decode (DESIGN.md §17): one partition stage for a
+    /// whole round's decode batch, with **one flat GEMM per projection
+    /// site** across every still-alive slot — weight words are decoded
+    /// once per site instead of once per slot, the TOM/BitROM
+    /// batch-amortization win. KV append/gather and attention stay
+    /// per-slot (each sequence owns its block tables and attends over
+    /// its own context), as does error capture: a slot that fails
+    /// (e.g. a retention violation) gets its error recorded and drops
+    /// out of the remaining layers' batches, leaving every other
+    /// slot's integers untouched — rows of an exact integer GEMM are
+    /// independent, so fusion is bit-identical to the per-slot loop.
+    fn run_partition_decode_batch(
+        &self,
+        part: usize,
+        hs: Vec<Vec<Vec<f32>>>,
+        entries: &mut [DecodeEntry<'_, HostState>],
+    ) -> Vec<Result<Vec<Vec<f32>>>> {
+        assert_eq!(hs.len(), entries.len(), "fused decode batch mismatch");
+        if part >= self.n_partitions() {
+            return (0..entries.len())
+                .map(|_| Err(anyhow!("partition {part} out of range")))
+                .collect();
+        }
+        let n = hs.len();
+        let mut out: Vec<Option<Result<Vec<Vec<f32>>>>> = (0..n).map(|_| None).collect();
+        // alive[j] = slot index of batch row j
+        let mut alive: Vec<usize> = Vec::with_capacity(n);
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for (i, h) in hs.into_iter().enumerate() {
+            if h.len() != 1 {
+                out[i] = Some(Err(anyhow!("decode hidden must be a single row")));
+            } else if entries[i].pos >= self.model.max_seq {
+                out[i] = Some(Err(anyhow!("position {} past max_seq", entries[i].pos)));
+            } else {
+                alive.push(i);
+                rows.push(h.into_iter().next().expect("checked single row"));
+            }
+        }
+        let lpp = self.model.layers_per_partition();
+        for li in part * lpp..(part + 1) * lpp {
+            if alive.is_empty() {
+                break;
+            }
+            let layer = &self.layers[li];
+            let adapters: Vec<Option<u32>> =
+                alive.iter().map(|&i| entries[i].state.adapter).collect();
+            let xns: Vec<Vec<f32>> = rows.iter().map(|x| rmsnorm(x)).collect();
+            let q_rows = self.project_rows_sites(&layer.wq, &xns, li, Proj::Q, &adapters);
+            let k_rows = self.project_rows_sites(&layer.wk, &xns, li, Proj::K, &adapters);
+            let v_rows = self.project_rows_sites(&layer.wv, &xns, li, Proj::V, &adapters);
+            // per-slot KV append + retention-checked gather + attention;
+            // failed slots drop out of the rest of the partition
+            let mut next_alive = Vec::with_capacity(alive.len());
+            let mut kept_rows = Vec::with_capacity(alive.len());
+            let mut attns = Vec::with_capacity(alive.len());
+            for (j, &i) in alive.iter().enumerate() {
+                let e = &mut entries[i];
+                let pos = e.pos;
+                let st: &mut HostState = e.state;
+                assert_eq!(
+                    st.kv.len(li),
+                    pos,
+                    "KV append out of order in layer {li}"
+                );
+                let stored = (|| -> Result<()> {
+                    let mut store = st.store.lock().expect("KV store lock poisoned");
+                    // same error shape as the per-slot path: append
+                    // surfaces the typed KvError directly, the decode
+                    // gather adds the retention context
+                    store.append(&mut st.kv, li, &k_rows[j], &v_rows[j])?;
+                    store
+                        .gather(&st.kv, li, pos + 1, true, &mut st.kbuf, &mut st.vbuf)
+                        .context("DR-eDRAM retention violated during decode")?;
+                    Ok(())
+                })();
+                match stored {
+                    Ok(()) => {
+                        attns.push(self.attention(&q_rows[j], &st.kbuf, &st.vbuf, pos + 1));
+                        kept_rows.push(std::mem::take(&mut rows[j]));
+                        next_alive.push(i);
+                    }
+                    Err(err) => out[i] = Some(Err(err)),
+                }
+            }
+            alive = next_alive;
+            let adapters: Vec<Option<u32>> =
+                alive.iter().map(|&i| entries[i].state.adapter).collect();
+            let os = self.project_rows_sites(&layer.wo, &attns, li, Proj::O, &adapters);
+            let mut x1: Vec<Vec<f32>> = kept_rows
+                .iter()
+                .zip(&os)
+                .map(|(x, o)| x.iter().zip(o).map(|(a, b)| a + b).collect())
+                .collect();
+            let xn2: Vec<Vec<f32>> = x1.iter().map(|x| rmsnorm(x)).collect();
+            let gates = self.project_rows_sites(&layer.w_gate, &xn2, li, Proj::Gate, &adapters);
+            let ups = self.project_rows_sites(&layer.w_up, &xn2, li, Proj::Up, &adapters);
+            let acts: Vec<Vec<f32>> = gates
+                .iter()
+                .zip(&ups)
+                .map(|(g, u)| g.iter().zip(u).map(|(a, b)| silu(*a) * b).collect())
+                .collect();
+            let downs = self.project_rows_sites(&layer.w_down, &acts, li, Proj::Down, &adapters);
+            for (x, d) in x1.iter_mut().zip(&downs) {
+                for (xi, di) in x.iter_mut().zip(d) {
+                    *xi += di;
+                }
+            }
+            rows = x1;
+        }
+        for (j, &i) in alive.iter().enumerate() {
+            out[i] = Some(Ok(vec![std::mem::take(&mut rows[j])]));
+        }
+        out.into_iter()
+            .map(|o| o.expect("every fused-decode slot resolved"))
+            .collect()
     }
 
     fn head_at(&self, h: &Vec<Vec<f32>>, idx: usize) -> Result<Logits> {
@@ -1008,6 +1219,79 @@ mod tests {
                 "generation diverged at {threads} kernel threads"
             );
         }
+    }
+
+    #[test]
+    fn generation_is_invariant_to_kernel_path() {
+        // DESIGN.md §17: the kernel path changes throughput, never
+        // results — full generations on a model wide enough to hit the
+        // dense/bit-serial cutovers must be bit-identical
+        let prompt = [7, 3, 11];
+        let reference = HostBackend::new(wide(), 17).unwrap().generate_greedy(&prompt, 6).unwrap();
+        for path in [KernelPath::Scalar, KernelPath::BitSerial] {
+            let b = HostBackend::new(wide(), 17).unwrap();
+            b.set_kernel_path(path);
+            assert_eq!(b.kernel_path(), path);
+            assert_eq!(
+                b.generate_greedy(&prompt, 6).unwrap(),
+                reference,
+                "generation diverged on the {} kernel path",
+                path.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn fused_batched_decode_is_bit_identical_to_per_slot() {
+        // the fused hook runs one GEMM per projection site across the
+        // batch; every slot's tokens must match the per-slot loop
+        // exactly, including a mixed-tenant batch where adapter deltas
+        // apply per row
+        let b = HostBackend::with_adapters(micro(), 11, micro_registry(2, 99)).unwrap();
+        let prompts: [&[i32]; 4] = [&[1, 2, 3], &[30, 20], &[7], &[9, 4, 2, 30]];
+        let adapters = [None, Some(0), Some(1), None];
+
+        let run = |fused: bool| -> Vec<Vec<i32>> {
+            let mut states = Vec::new();
+            let mut tokens: Vec<Vec<i32>> = Vec::new();
+            for (p, &a) in prompts.iter().zip(&adapters) {
+                let (s, l) = b.prefill_bound(p, a).unwrap();
+                states.push(s);
+                tokens.push(vec![l.argmax() as i32]);
+            }
+            for _ in 0..5 {
+                if fused {
+                    let mut hs: Vec<_> = tokens
+                        .iter()
+                        .map(|t| b.embed_token(*t.last().unwrap()).unwrap())
+                        .collect();
+                    let poss: Vec<usize> = states.iter().map(|s| s.pos()).collect();
+                    for part in 0..b.n_partitions() {
+                        let mut entries: Vec<DecodeEntry<'_, HostState>> = states
+                            .iter_mut()
+                            .zip(&poss)
+                            .map(|(s, &pos)| DecodeEntry { state: s, pos })
+                            .collect();
+                        let outs = b.run_partition_decode_batch(part, hs, &mut entries);
+                        hs = outs.into_iter().map(|r| r.unwrap()).collect();
+                    }
+                    for ((s, t), h) in states.iter_mut().zip(tokens.iter_mut()).zip(&hs) {
+                        s.set_pos(s.pos() + 1);
+                        t.push(b.head_decode_logits(h).unwrap().argmax() as i32);
+                    }
+                } else {
+                    for (s, t) in states.iter_mut().zip(tokens.iter_mut()) {
+                        let l = b.decode_step(s, *t.last().unwrap()).unwrap();
+                        t.push(l.argmax() as i32);
+                    }
+                }
+            }
+            tokens
+        };
+
+        let per_slot = run(false);
+        let fused = run(true);
+        assert_eq!(fused, per_slot, "fused decode diverged from per-slot decode");
     }
 
     #[test]

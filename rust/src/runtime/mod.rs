@@ -11,8 +11,11 @@
 //!   attention, fabricated from a `ModelConfig` + seed; its KV lives
 //!   in the tiered quantized `kvcache::KvStore`, and it can serve a
 //!   multi-tenant `lora::AdapterRegistry` (per-sequence adapters bound
-//!   via [`InferenceBackend::bind_adapter`]). The whole serving stack
-//!   runs offline on it under tier-1.
+//!   via [`ServeTuning::bind_adapter`]). The whole serving stack
+//!   runs offline on it under tier-1. Control-plane hooks live on the
+//!   grouped [`KvControl`]/[`ServeTuning`] supertraits (DESIGN.md
+//!   §17); fused batched decode rides
+//!   [`InferenceBackend::run_partition_decode_batch`].
 //! * [`ShardedBackend`] (always built) — N same-seed [`HostBackend`]
 //!   shards behind the same contract (DESIGN.md §16):
 //!   pipeline-parallel partition ownership over per-shard KV stores
@@ -35,7 +38,10 @@ mod model_exec;
 #[cfg(feature = "pjrt")]
 mod tensor;
 
-pub use backend::{argmax_f32, top_k_f32, InferenceBackend, Logits, SequenceState};
+pub use backend::{
+    argmax_f32, top_k_f32, DecodeEntry, InferenceBackend, KvControl, Logits, SequenceState,
+    ServeTuning,
+};
 pub use host::{HostBackend, HostState};
 pub use manifest::{ArtifactInfo, Manifest};
 pub use sharding::{sharded_gemm, sharded_gemv, ShardPlan, ShardedBackend, ShardedState};

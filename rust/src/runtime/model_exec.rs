@@ -10,7 +10,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ModelConfig;
 
-use super::backend::{InferenceBackend, Logits, SequenceState};
+use super::backend::{InferenceBackend, KvControl, Logits, SequenceState, ServeTuning};
 use super::manifest::Manifest;
 use super::tensor::{i32_scalar, tokens_to_literal, TensorF32};
 
@@ -367,6 +367,18 @@ impl SequenceState for DecodeState {
         self.prompt_len = len;
     }
 }
+
+/// Device-side KV is opaque to the host (DESIGN.md §10), so every
+/// [`KvControl`] hook keeps its no-op/miss default — the executor only
+/// pins the sequence-state type.
+impl KvControl for ModelExecutor {
+    type Seq = DecodeState;
+}
+
+/// No host-side kernels or adapter registry to tune: the compiled
+/// artifacts fix both, so the [`ServeTuning`] defaults (no-op width
+/// and path setters, `None` adapter stats) are exactly right.
+impl ServeTuning for ModelExecutor {}
 
 /// The PJRT executor is the hardware-shaped implementation of the
 /// serving contract (DESIGN.md §9) — pure delegation to the inherent

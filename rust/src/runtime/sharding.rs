@@ -44,14 +44,14 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::bitnet::{absmax_quantize, TernaryMatrix};
+use crate::bitnet::{absmax_quantize, KernelCtx, KernelPath, TernaryMatrix};
 use crate::cirom::EventCounters;
 use crate::config::{ModelConfig, ServeConfig};
 use crate::kvcache::KvStoreStats;
 use crate::lora::LoraServeStats;
 use crate::util::pool::Pool;
 
-use super::backend::{InferenceBackend, Logits, SequenceState};
+use super::backend::{DecodeEntry, InferenceBackend, KvControl, Logits, SequenceState, ServeTuning};
 use super::host::{rmsnorm, HostBackend, HostState};
 
 /// Contiguous near-even assignment of `n_items` items to shards: the
@@ -125,7 +125,7 @@ pub fn sharded_gemv(x: &[i32], w: &TernaryMatrix, n_shards: usize, pool: &Pool) 
             continue;
         }
         let sub = w.submatrix(0, w.rows, c0, c1);
-        y.extend(sub.gemv_with(x, pool));
+        y.extend(KernelCtx::new(*pool).gemv(sub.bitplanes(), x));
     }
     y
 }
@@ -147,7 +147,7 @@ pub fn sharded_gemm(
             continue;
         }
         let sub = w.submatrix(0, w.rows, c0, c1);
-        for (row, part) in out.iter_mut().zip(sub.gemm_with(xs, pool)) {
+        for (row, part) in out.iter_mut().zip(KernelCtx::new(*pool).gemm(sub.bitplanes(), xs)) {
             row.extend(part);
         }
     }
@@ -266,7 +266,7 @@ impl ShardedBackend {
     }
 
     /// Per-shard measured KV-tier statistics, shard order. The merged
-    /// [`InferenceBackend::kv_stats`] view is the field-wise sum.
+    /// [`KvControl::kv_stats`] view is the field-wise sum.
     pub fn shard_kv_stats(&self) -> Vec<KvStoreStats> {
         self.shards
             .iter()
@@ -307,34 +307,19 @@ impl ShardedBackend {
     fn tp_head(&self, row: &[f32]) -> Logits {
         let xn = rmsnorm(row);
         let q = absmax_quantize(&xn, self.shards[0].model().act_bits);
-        let pool = Pool::new(self.shards[0].threads());
+        let ctx = KernelCtx::new(Pool::new(self.shards[0].threads()))
+            .with_path(self.shards[0].kernel_path());
         let mut data = Vec::with_capacity(self.shards[0].model().vocab_size);
         for w in self.head_cols.iter().flatten() {
             let s = q.scale * w.scale;
-            data.extend(w.gemv_with(&q.values, &pool).into_iter().map(|v| v as f32 * s));
+            data.extend(ctx.gemv(w.bitplanes(), &q.values).into_iter().map(|v| v as f32 * s));
         }
         Logits::new(data)
     }
 }
 
-impl InferenceBackend for ShardedBackend {
-    type State = ShardedState;
-    /// Hidden activations flow between partition stages exactly as on
-    /// a single [`HostBackend`] — the pipeline is sharded, not the
-    /// per-token dataflow.
-    type Hidden = Vec<Vec<f32>>;
-
-    fn model(&self) -> &ModelConfig {
-        self.shards[0].model()
-    }
-
-    fn prefill_len(&self) -> usize {
-        self.model().max_seq
-    }
-
-    fn n_shards(&self) -> usize {
-        self.shards.len()
-    }
+impl KvControl for ShardedBackend {
+    type Seq = ShardedState;
 
     /// Size every shard's store for the deployment: each shard gets
     /// the full configured on-die capacity for its own layers (one
@@ -388,12 +373,6 @@ impl InferenceBackend for ShardedBackend {
         Some(total)
     }
 
-    fn set_threads(&self, threads: usize) {
-        for s in &self.shards {
-            s.set_threads(threads);
-        }
-    }
-
     /// Reserve the round's pages on each shard for *its own* layer
     /// range only — placement stays a coordinator-side mutation
     /// (DESIGN.md §12) and no shard ever holds another's KV.
@@ -429,6 +408,23 @@ impl InferenceBackend for ShardedBackend {
     fn register_prefix_kv(&self, _state: &mut ShardedState, _prompt: &[i32]) -> Result<()> {
         Ok(())
     }
+}
+
+impl ServeTuning for ShardedBackend {
+    fn set_threads(&self, threads: usize) {
+        for s in &self.shards {
+            s.set_threads(threads);
+        }
+    }
+
+    /// Fan the kernel-path selection out to every shard (the
+    /// tensor-parallel head follows shard 0's path). Bit-identical on
+    /// every path at every shard count — DESIGN.md §17 × invariant 12.
+    fn set_kernel_path(&self, path: KernelPath) {
+        for s in &self.shards {
+            s.set_kernel_path(path);
+        }
+    }
 
     /// Bind the tenant's adapter on every shard (each shard executes
     /// its own layers' adapter sites, so each needs the binding; every
@@ -455,6 +451,26 @@ impl InferenceBackend for ShardedBackend {
             total.adapter_rows += st.adapter_rows;
         }
         Some(total)
+    }
+}
+
+impl InferenceBackend for ShardedBackend {
+    type State = ShardedState;
+    /// Hidden activations flow between partition stages exactly as on
+    /// a single [`HostBackend`] — the pipeline is sharded, not the
+    /// per-token dataflow.
+    type Hidden = Vec<Vec<f32>>;
+
+    fn model(&self) -> &ModelConfig {
+        self.shards[0].model()
+    }
+
+    fn prefill_len(&self) -> usize {
+        self.model().max_seq
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards.len()
     }
 
     fn new_state(&self) -> Result<ShardedState> {
@@ -502,6 +518,28 @@ impl InferenceBackend for ShardedBackend {
     ) -> Result<Vec<Vec<f32>>> {
         let s = self.parts.owner(part);
         self.shards[s].run_partition_decode(part, h, pos, &mut state.states[s])
+    }
+
+    /// Fused batched decode under sharding: the whole batch routes to
+    /// the shard owning `part` (each slot contributing its per-shard
+    /// state slice), so the owning shard runs its one-GEMM-per-site
+    /// fused stage exactly as an unsharded backend would — invariant
+    /// 12 composes with the fusion invariant (DESIGN.md §17).
+    fn run_partition_decode_batch(
+        &self,
+        part: usize,
+        hs: Vec<Vec<Vec<f32>>>,
+        entries: &mut [DecodeEntry<'_, ShardedState>],
+    ) -> Vec<Result<Vec<Vec<f32>>>> {
+        let s = self.parts.owner(part);
+        let mut inner: Vec<DecodeEntry<'_, HostState>> = entries
+            .iter_mut()
+            .map(|e| DecodeEntry {
+                state: &mut e.state.states[s],
+                pos: e.pos,
+            })
+            .collect();
+        self.shards[s].run_partition_decode_batch(part, hs, &mut inner)
     }
 
     /// Tensor-parallel head on the fast path; event mode delegates the

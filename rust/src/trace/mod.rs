@@ -24,7 +24,7 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Tenant LoRA adapter this request decodes under (`None` = the
     /// frozen base model). Bound per sequence before prefill via
-    /// `runtime::InferenceBackend::bind_adapter`.
+    /// `runtime::ServeTuning::bind_adapter`.
     pub adapter_id: Option<u32>,
     /// Priority class (higher = more urgent; 0 = the default class).
     /// Orders admission within a tenant queue and shields the request

@@ -4,7 +4,9 @@
 //! the `bitnet` kernels themselves, the `cirom` functional paths, and
 //! the LoRA merged-projection compute.
 
-use bitrom::bitnet::{absmax_quantize, ref_gemv, BitplaneMatrix, TernaryMatrix};
+use bitrom::bitnet::{
+    absmax_quantize, ref_gemv, BitplaneMatrix, KernelCtx, KernelPath, TernaryMatrix,
+};
 use bitrom::cirom::{BitRomMacro, EventCounters, MacroBank};
 use bitrom::config::MacroGeometry;
 use bitrom::lora::MergedProjection;
@@ -41,9 +43,54 @@ fn sharded_kernels_match_reference_at_every_width() {
         .collect();
     let want_gemm: Vec<Vec<i64>> = xs.iter().map(|r| ref_gemv(r, &w)).collect();
     for threads in [1usize, 2, 4, 7, 256] {
-        let pool = Pool::new(threads);
-        assert_eq!(w.gemv_with(&x, &pool), want, "gemv @ {threads} threads");
-        assert_eq!(w.gemm_with(&xs, &pool), want_gemm, "gemm @ {threads} threads");
+        let ctx = KernelCtx::new(Pool::new(threads));
+        assert_eq!(ctx.gemv(w.bitplanes(), &x), want, "gemv @ {threads} threads");
+        assert_eq!(ctx.gemm(w.bitplanes(), &xs), want_gemm, "gemm @ {threads} threads");
+    }
+}
+
+#[test]
+fn kernel_paths_match_reference_across_shapes_widths_and_sparsities() {
+    // DESIGN.md §17 at the integration level: every engine path ×
+    // pool width agrees bit-exactly with the golden reference on odd
+    // shapes (non-multiple-of-64 fan-ins hit the lane remainders)
+    let mut rng = Rng::new(0x51D);
+    for (rows, cols) in [(64, 17), (130, 33), (193, 65), (320, 48)] {
+        for sparsity in [0.0, 0.5, 0.95] {
+            let w = TernaryMatrix::random(rows, cols, sparsity, &mut rng);
+            let x: Vec<i32> = (0..rows).map(|_| rng.i64(-127, 127) as i32).collect();
+            let want = ref_gemv(&x, &w);
+            for path in [KernelPath::Auto, KernelPath::Scalar, KernelPath::BitSerial] {
+                for threads in [1usize, 3] {
+                    let ctx = KernelCtx::new(Pool::new(threads)).with_path(path);
+                    assert_eq!(
+                        ctx.gemv(w.bitplanes(), &x),
+                        want,
+                        "{path:?} @ {threads}t {rows}x{cols} s={sparsity}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_gemm_matches_nested_rows_on_every_path() {
+    let mut rng = Rng::new(0xF1A7);
+    let w = TernaryMatrix::random(150, 37, 0.4, &mut rng);
+    let xs: Vec<Vec<i32>> = (0..5)
+        .map(|_| (0..150).map(|_| rng.i64(-127, 127) as i32).collect())
+        .collect();
+    let want: Vec<Vec<i64>> = xs.iter().map(|r| ref_gemv(r, &w)).collect();
+    for path in [KernelPath::Auto, KernelPath::Scalar, KernelPath::BitSerial] {
+        let ctx = KernelCtx::serial().with_path(path);
+        assert_eq!(ctx.gemm(w.bitplanes(), &xs), want, "{path:?} nested");
+        let mut flat = Vec::new();
+        ctx.gemm_flat(w.bitplanes(), &xs, &mut flat);
+        let refit: Vec<&[i64]> = flat.chunks(37).collect();
+        for (b, row) in refit.iter().enumerate() {
+            assert_eq!(*row, &want[b][..], "{path:?} flat row {b}");
+        }
     }
 }
 

@@ -289,6 +289,50 @@ fn serving_is_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn fused_decode_is_bit_identical_to_per_slot_rounds_at_every_width() {
+    // DESIGN.md §17: the fused batched decode round (one partition walk
+    // over the whole batch) and the per-slot pool path must emit
+    // identical tokens and merge identical measured KV counters, at
+    // every worker-pool width and on every kernel path.
+    let run = |fused: bool, threads: usize, path: &str| {
+        let backend = HostBackend::new(ModelConfig::sim_tiny(), WEIGHT_SEED).unwrap();
+        let serve = ServeConfig {
+            max_batches: 4,
+            threads,
+            fused_decode: fused,
+            kernel_path: path.into(),
+            ..ServeConfig::default()
+        };
+        let mut server = Server::new(backend, serve).unwrap();
+        let (done, metrics) = server.run_trace(trace(8, 0.0, 19)).unwrap();
+        (by_id(done), metrics)
+    };
+    let (unfused, unfused_m) = run(false, 1, "auto");
+    let unfused_kv = unfused_m.kv.as_ref().unwrap();
+    let grid = [(1usize, "auto"), (2, "auto"), (4, "auto"), (1, "scalar"), (1, "bitserial")];
+    for (threads, path) in grid {
+        let (fused, fused_m) = run(true, threads, path);
+        assert_eq!(fused.len(), unfused.len());
+        for (a, b) in unfused.iter().zip(&fused) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "request {} diverged fused at {threads} threads on {path}",
+                a.id
+            );
+        }
+        assert_eq!(fused_m.tokens_out, unfused_m.tokens_out);
+        // the fused walk issues exactly the per-slot KV traffic
+        let kv = fused_m.kv.as_ref().unwrap();
+        assert_eq!(kv.accesses.ondie_reads, unfused_kv.accesses.ondie_reads, "t={threads}");
+        assert_eq!(kv.accesses.ondie_writes, unfused_kv.accesses.ondie_writes);
+        assert_eq!(kv.accesses.external_reads, unfused_kv.accesses.external_reads);
+        assert_eq!(kv.accesses.external_writes, unfused_kv.accesses.external_writes);
+        assert_eq!(kv.retention_failures, 0);
+    }
+}
+
+#[test]
 fn sampled_serving_is_bit_identical_across_thread_counts() {
     // top-k sampling draws from a per-request Rng (seeded from the
     // serve seed and the request id), so even non-greedy traces are

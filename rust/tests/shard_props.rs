@@ -26,7 +26,7 @@ use bitrom::coordinator::{CompletedRequest, ServeMetrics, Server};
 use bitrom::kvcache::KvStoreStats;
 use bitrom::lora::AdapterRegistry;
 use bitrom::runtime::{
-    sharded_gemm, sharded_gemv, HostBackend, InferenceBackend, ShardedBackend,
+    sharded_gemm, sharded_gemv, HostBackend, InferenceBackend, KvControl, ShardedBackend,
 };
 use bitrom::trace::{generate, Request, TraceConfig};
 use bitrom::util::check::check;
@@ -180,6 +180,71 @@ fn served_traces_are_bit_identical_across_shard_counts() {
                     m.lora
                 );
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_decode_is_bit_identical_across_shard_counts() {
+    // DESIGN.md §17 × invariant 12: the fused batched decode round —
+    // whole-batch partition calls routed to each partition's owning
+    // shard — must emit exactly the per-slot path's tokens at every
+    // shard count and pool width, with the same merged KV accounting.
+    check(0x5A04, fuzz_cases().min(3), |g| {
+        let model = ModelConfig::sim_tiny();
+        let trace_cfg = TraceConfig {
+            n_requests: 3 + g.size(4),
+            prompt_len_min: 2,
+            prompt_len_max: 2 + g.size(8),
+            gen_len_min: 2,
+            gen_len_max: 2 + g.size(6),
+            vocab_size: model.vocab_size,
+            arrival_rate: 0.0,
+            seed: g.rng.next_u64(),
+            ..TraceConfig::default()
+        };
+        let reqs = generate(&trace_cfg);
+        let serve = ServeConfig {
+            max_batches: 2 + g.usize(0, 2),
+            threads: 1 + g.usize(0, 3),
+            ..ServeConfig::default()
+        };
+        let (base_done, base_m, _) = run(
+            reqs.clone(),
+            ServeConfig {
+                shards: 1,
+                fused_decode: false,
+                ..serve.clone()
+            },
+        )
+        .map_err(|e| format!("unfused unsharded run: {e:#}"))?;
+        let base_kv = base_m.kv.ok_or("unsharded run must measure KV stats")?;
+        for shards in [1usize, 2, 3] {
+            let (done, m, _) = run(
+                reqs.clone(),
+                ServeConfig {
+                    shards,
+                    fused_decode: true,
+                    ..serve.clone()
+                },
+            )
+            .map_err(|e| format!("fused run at {shards} shards: {e:#}"))?;
+            prop_assert_eq!(done.len(), base_done.len());
+            for (a, b) in base_done.iter().zip(&done) {
+                prop_assert!(
+                    a.id == b.id && a.tokens == b.tokens,
+                    "request {} diverged fused at {shards} shards",
+                    a.id
+                );
+            }
+            // the fused walk issues exactly the per-slot KV traffic
+            let kv = m.kv.ok_or("sharded run must measure KV stats")?;
+            prop_assert_eq!(kv.accesses.ondie_reads, base_kv.accesses.ondie_reads);
+            prop_assert_eq!(kv.accesses.ondie_writes, base_kv.accesses.ondie_writes);
+            prop_assert_eq!(kv.accesses.external_reads, base_kv.accesses.external_reads);
+            prop_assert_eq!(kv.accesses.external_writes, base_kv.accesses.external_writes);
+            prop_assert_eq!(kv.retention_failures, 0u64);
         }
         Ok(())
     });
